@@ -1,0 +1,55 @@
+//! Quickstart: the smallest end-to-end WDMoE run.
+//!
+//! Loads the AOT artifacts (`make artifacts` first), binds them to the
+//! default wireless scenario, and pushes one batch of tokens through the
+//! full deployment split — attention/gate at the BS, expert FFNs on the
+//! simulated devices — under the paper's Algorithm-1 selection + optimal
+//! bandwidth allocation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use wdmoe::config::{PolicyKind, SystemConfig};
+use wdmoe::model::ServingModel;
+use wdmoe::moe::selection::make_policy;
+use wdmoe::wireless::bandwidth::OptimalAllocator;
+use wdmoe::workload::{Benchmark, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let cfg = SystemConfig::artifact_serving();
+    let mut model = ServingModel::load(artifacts, cfg)?;
+    println!(
+        "model: {:.1}M params, {} blocks, {} experts/block, J={} | platform: {}",
+        model.runtime().manifest.config.total_params as f64 / 1e6,
+        model.cfg.model.n_blocks,
+        model.cfg.model.n_experts,
+        model.seq_len(),
+        model.runtime().platform(),
+    );
+
+    // A PIQA-like batch of prompts.
+    let mut wl = WorkloadGen::new(0, model.vocab());
+    let batch = wl.batch(Benchmark::Piqa);
+    let ids: Vec<i32> = batch.token_ids.iter().copied().take(model.seq_len()).collect();
+    println!("batch: {} tokens from {} prompts", ids.len(), batch.prompt_lens.len());
+
+    // WDMoE: Algorithm-1 selection + P3-optimal bandwidth.
+    let mut policy = make_policy(PolicyKind::Wdmoe, &model.cfg.policy, model.cfg.n_devices(), 0);
+    let out = model.forward(&ids, policy.as_mut(), &OptimalAllocator::default())?;
+
+    println!(
+        "wireless latency (attention-waiting, paper Eq. 11): {:.2} ms across {} blocks",
+        out.report.total_waiting() * 1e3,
+        out.report.per_block.len()
+    );
+    println!(
+        "bandwidth split (MHz): {:?}",
+        out.bandwidth.iter().map(|b| (b / 1e6 * 10.0).round() / 10.0).collect::<Vec<_>>()
+    );
+    println!("PJRT compute: {:.0} ms (CPU interpret-mode, not a latency metric)", out.compute_ms);
+    let next = model.argmax_at(&out.logits, ids.len() - 1);
+    println!("next-token argmax at final position: {next}");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Wireless-scenario sweep — the Fig.-5-style bandwidth study plus a
+//! distance sweep the paper's intro motivates (devices far from the BS
+//! dominate attention waiting latency).
+//!
+//! Runs the analytic simulator at Mixtral scale (no artifacts needed):
+//!
+//! 1. latency vs total bandwidth for the four ablation arms;
+//! 2. latency vs the worst device's distance, showing how the optimal
+//!    allocator shields the system from a cell-edge straggler.
+//!
+//! ```bash
+//! cargo run --release --example wireless_sweep
+//! ```
+
+use wdmoe::config::SystemConfig;
+use wdmoe::coordinator::sim::{Simulator, Variant};
+
+fn main() {
+    let tokens = 4000; // ARC-C-scale batch
+
+    println!("== latency (ms/batch) vs total bandwidth, J={tokens} ==");
+    println!(
+        "{:>8}  {:>14} {:>14} {:>14} {:>14}",
+        "B (MHz)", "Mixtral", "w/o BW", "w/o select", "WDMoE"
+    );
+    for mhz in [20.0, 50.0, 100.0, 150.0, 200.0] {
+        let mut row = Vec::new();
+        for v in [
+            Variant::mixtral_based(),
+            Variant::wdmoe_no_bandwidth(),
+            Variant::wdmoe_no_selection(),
+            Variant::wdmoe_full(),
+        ] {
+            let mut cfg = SystemConfig::paper_simulation();
+            cfg.channel.total_bandwidth_hz = mhz * 1e6;
+            let mut sim = Simulator::new(cfg);
+            row.push(sim.run_variant(tokens, v).latency_ms());
+        }
+        println!(
+            "{:>8.0}  {:>14.1} {:>14.1} {:>14.1} {:>14.1}",
+            mhz, row[0], row[1], row[2], row[3]
+        );
+    }
+
+    println!("\n== latency vs cell-edge distance of the farthest device ==");
+    println!(
+        "{:>10}  {:>14} {:>14}  {:>8}",
+        "d_max (m)", "Mixtral", "WDMoE", "gain"
+    );
+    for d in [150.0, 250.0, 350.0, 500.0, 700.0] {
+        let mut lat = [0.0; 2];
+        for (i, v) in [Variant::mixtral_based(), Variant::wdmoe_full()].into_iter().enumerate() {
+            let mut cfg = SystemConfig::paper_simulation();
+            cfg.devices.last_mut().unwrap().distance_m = d;
+            let mut sim = Simulator::new(cfg);
+            lat[i] = sim.run_variant(tokens, v).latency_ms();
+        }
+        println!(
+            "{:>10.0}  {:>14.1} {:>14.1}  {:>7.1}%",
+            d,
+            lat[0],
+            lat[1],
+            (1.0 - lat[1] / lat[0]) * 100.0
+        );
+    }
+}

@@ -1,0 +1,162 @@
+"""AOT compile path: lower every model entry point to HLO text.
+
+Usage (from python/): ``python -m compile.aot --out ../artifacts``
+
+Emits, per entry point, ``<name>.hlo.txt`` (HLO *text*, NOT a serialized
+HloModuleProto: jax >= 0.5 writes protos with 64-bit instruction ids which
+xla_extension 0.5.1 rejects — `proto.id() <= INT_MAX`; the text parser
+reassigns ids and round-trips cleanly, see /opt/xla-example/README.md),
+plus:
+
+  weights.bin     all model weights, f32 little-endian, concatenated
+  manifest.json   model config, weight table (name/shape/offset), and the
+                  argument signature of every artifact
+
+The rust runtime (`rust/src/runtime/`) reads the manifest, maps weights out
+of weights.bin, compiles each .hlo.txt on the PJRT CPU client once, and
+serves from the compiled executables. Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def entry_points(cfg: M.ModelConfig) -> Dict[str, Tuple[Callable, List[jax.ShapeDtypeStruct]]]:
+    """Name -> (fn, example arg specs) for every AOT artifact."""
+    m, mh, n, j, v = cfg.d_model, cfg.d_hidden, cfg.n_experts, cfg.seq_len, cfg.vocab
+    f32 = jnp.float32
+    return {
+        "embed": (M.embed, [spec([j], jnp.int32), spec([v, m])]),
+        "attention": (
+            functools.partial(M.attention_block, num_heads=cfg.n_heads),
+            [spec([j, m]), spec([m]), spec([m, m]), spec([m, m]), spec([m, m]), spec([m, m])],
+        ),
+        "gate": (M.gate, [spec([j, m]), spec([m]), spec([m, n])]),
+        "expert": (M.expert, [spec([j, m]), spec([m, mh]), spec([m, mh]), spec([mh, m])]),
+        "expert_normed": (
+            M.expert_normed,
+            [spec([j, m]), spec([m]), spec([m, mh]), spec([m, mh]), spec([mh, m])],
+        ),
+        "experts_stacked": (
+            M.experts_stacked,
+            [spec([j, m]), spec([m]), spec([n, m, mh]), spec([n, m, mh]), spec([n, mh, m])],
+        ),
+        "combine": (M.combine, [spec([j, m]), spec([j, n], f32), spec([j, n], f32), spec([n, j, m])]),
+        "lm_head": (M.lm_head, [spec([j, m]), spec([m]), spec([v, m])]),
+    }
+
+
+def emit(cfg: M.ModelConfig, out_dir: str, seed: int = 0) -> dict:
+    """Lower all entry points + serialise weights. Returns the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    eps = entry_points(cfg)
+    artifacts = {}
+    for name, (fn, args) in eps.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+        }
+        print(f"  {name:14s} -> {path} ({len(text)} chars)")
+
+    weights = M.init_weights(cfg, seed=seed)
+    table = []
+    offset = 0
+    bin_path = os.path.join(out_dir, "weights.bin")
+    with open(bin_path, "wb") as f:
+        for key in sorted(weights):
+            arr = np.asarray(weights[key], dtype=np.float32)
+            f.write(arr.tobytes(order="C"))
+            table.append({"name": key, "shape": list(arr.shape), "offset": offset})
+            offset += arr.size
+    print(f"  weights.bin    -> {bin_path} ({offset * 4} bytes, {len(table)} tensors)")
+
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "d_hidden": cfg.d_hidden,
+            "n_experts": cfg.n_experts,
+            "n_heads": cfg.n_heads,
+            "n_blocks": cfg.n_blocks,
+            "seq_len": cfg.seq_len,
+            "top_k": cfg.top_k,
+            "seed": seed,
+            "total_params": cfg.total_params,
+        },
+        "artifacts": artifacts,
+        "weights": {"file": "weights.bin", "dtype": "f32", "tensors": table},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output dir (or a .hlo.txt path whose dir is used)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--vocab", type=int, default=None)
+    p.add_argument("--d-model", type=int, default=None)
+    p.add_argument("--d-hidden", type=int, default=None)
+    p.add_argument("--n-experts", type=int, default=None)
+    p.add_argument("--n-heads", type=int, default=None)
+    p.add_argument("--n-blocks", type=int, default=None)
+    p.add_argument("--seq-len", type=int, default=None)
+    args = p.parse_args()
+
+    out = args.out
+    if out.endswith(".hlo.txt"):  # Makefile passes the stamp file path
+        out = os.path.dirname(out)
+
+    overrides = {
+        k: v
+        for k, v in {
+            "vocab": args.vocab,
+            "d_model": args.d_model,
+            "d_hidden": args.d_hidden,
+            "n_experts": args.n_experts,
+            "n_heads": args.n_heads,
+            "n_blocks": args.n_blocks,
+            "seq_len": args.seq_len,
+        }.items()
+        if v is not None
+    }
+    cfg = M.ModelConfig(**overrides)
+    print(f"AOT: {cfg.total_params/1e6:.1f}M params -> {out}")
+    emit(cfg, out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

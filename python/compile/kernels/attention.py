@@ -1,0 +1,117 @@
+"""Pallas blocked causal attention kernel — the BS-side sequence hot-spot.
+
+The attention mechanism runs at the MEC server (paper §II-B) and is where
+the *attention waiting latency* accrues: the next block's attention cannot
+start until the slowest device returns its tokens (paper Fig. 3). The
+compute itself is a standard multi-head causal self-attention.
+
+TPU adaptation: the paper's substrate computes the full J×J score matrix on
+GPU. Here we use an online-softmax (flash-style) blocked kernel so the
+score matrix is never materialised in HBM:
+
+  * grid = (H, J/bq): one head and one query row-tile per step.
+  * keys/values for the whole (causal prefix of the) sequence stream
+    through VMEM in bk-sized column tiles inside a fori_loop, maintaining
+    the running max `mx`, normaliser `sm`, and accumulator `acc`.
+  * q/k/v tiles are MXU-shaped ([bq, hd] @ [hd, bk] with hd a multiple
+    of 8 and bq, bk multiples of 128 where the sequence allows).
+
+interpret=True — see moe_ffn.py. Projections (wq/wk/wv/wo) are left to XLA
+(plain dots fuse fine); the kernel covers the quadratic part.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, seq_len: int, causal: bool):
+    """One (head, query-tile) step of online-softmax attention.
+
+    q_ref: [bq, hd] query tile (pre-scaled by 1/sqrt(hd) at call site).
+    k_ref/v_ref: [J, hd] full per-head key/value (streamed in bk chunks).
+    o_ref: [bq, hd] output tile.
+    """
+    qi = pl.program_id(1)
+    bq, hd = q_ref.shape
+    q = q_ref[...]
+
+    nk = seq_len // bk
+
+    def body(kb, carry):
+        acc, mx, sm = carry
+        k = k_ref[pl.dslice(kb * bk, bk), :]            # [bk, hd]
+        v = v_ref[pl.dslice(kb * bk, bk), :]            # [bk, hd]
+        s = q @ k.T                                     # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        new_mx = jnp.maximum(mx, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - new_mx)                         # [bq, bk]
+        scale = jnp.exp(mx - new_mx)
+        new_sm = sm * scale + jnp.sum(p, axis=-1, keepdims=True)
+        new_acc = acc * scale + p @ v                   # [bq, hd]
+        return new_acc, new_mx, new_sm
+
+    acc0 = jnp.zeros((bq, hd), q.dtype)
+    mx0 = jnp.full((bq, 1), -1e30, q.dtype)
+    sm0 = jnp.zeros((bq, 1), q.dtype)
+    acc, _, sm = jax.lax.fori_loop(0, nk, body, (acc0, mx0, sm0))
+    o_ref[...] = acc / jnp.maximum(sm, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("num_heads", "bq", "bk", "causal"))
+def attention(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    num_heads: int,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+) -> jax.Array:
+    """Multi-head causal self-attention with a blocked-softmax core.
+
+    Args:
+      x: [J, m]; J % bq == 0 and J % bk == 0 (coordinator pads).
+      wq/wk/wv/wo: [m, m] projections.
+      num_heads: H; m % H == 0.
+
+    Returns:
+      [J, m] attention output (same contract as ref.attention).
+    """
+    j, m = x.shape
+    hd = m // num_heads
+    bq = min(bq, j)
+    bk = min(bk, j)
+    if j % bq or j % bk:
+        raise ValueError(f"J={j} must be a multiple of bq={bq} and bk={bk}")
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    # [H, J, hd] per-head projections — plain XLA dots.
+    q = (x @ wq).reshape(j, num_heads, hd).transpose(1, 0, 2) * scale
+    k = (x @ wk).reshape(j, num_heads, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(j, num_heads, hd).transpose(1, 0, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_mha_kernel, bk=bk, seq_len=j, causal=causal),
+        grid=(num_heads, j // bq),
+        in_specs=[
+            # None squeezes the head axis out of the kernel refs.
+            pl.BlockSpec((None, bq, hd), lambda h, i: (h, i, 0)),  # q tile
+            pl.BlockSpec((None, j, hd), lambda h, i: (h, 0, 0)),   # full k (streamed)
+            pl.BlockSpec((None, j, hd), lambda h, i: (h, 0, 0)),   # full v (streamed)
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_heads, j, hd), x.dtype),
+        interpret=True,
+    )(q, k, v)
+
+    return out.transpose(1, 0, 2).reshape(j, m) @ wo

@@ -1,0 +1,63 @@
+"""Pallas gating-network (router) kernel — the BS-side routing hot-spot.
+
+The gating network is a single linear projection followed by a softmax over
+experts (paper §II-A). On the BS this runs for every token of every MoE
+block, so it is fused into one Pallas kernel: logits, a numerically-stable
+row softmax, and (optionally) the top-k mask all stay in VMEM.
+
+The expert axis n is small (8 in the paper), far below one 128-lane tile,
+so the kernel tiles only the token axis: grid = (J / bj,), each step holding
+an x row-tile [bj, m], the whole router matrix [m, n] (n ≤ 128), and the
+[bj, n] logits in VMEM.
+
+interpret=True — see moe_ffn.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gating_kernel(x_ref, wg_ref, w_ref):
+    """One token-tile step: fused projection + stable softmax."""
+    logits = x_ref[...] @ wg_ref[...]                      # [bj, n]
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)   # stability
+    e = jnp.exp(z)
+    w_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bj",))
+def gating(x: jax.Array, wg: jax.Array, bj: int = 128) -> jax.Array:
+    """Router weights for each token.
+
+    Args:
+      x:  [J, m] token embeddings; J % bj must be 0 (coordinator pads).
+      wg: [m, n] router projection, n ≤ 128.
+      bj: token-rows per grid step.
+
+    Returns:
+      [J, n] softmax weights (rows sum to 1) — the w_j of paper Eq. (1).
+    """
+    j, m = x.shape
+    n = wg.shape[1]
+    bj = min(bj, j)
+    if j % bj:
+        raise ValueError(f"J={j} must be a multiple of bj={bj}")
+    if n > 128:
+        raise ValueError(f"n={n} experts exceeds one lane tile (128)")
+
+    return pl.pallas_call(
+        _gating_kernel,
+        grid=(j // bj,),
+        in_specs=[
+            pl.BlockSpec((bj, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bj, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, n), x.dtype),
+        interpret=True,
+    )(x, wg)

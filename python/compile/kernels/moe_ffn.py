@@ -1,0 +1,184 @@
+"""Pallas SwiGLU expert-FFN kernel — the device-side compute hot-spot.
+
+This is the computation every mobile device runs for every token routed to
+it (paper Fig. 2): ``y = w2(silu(w1 x) ⊙ w3 x)``, whose FLOP count is the
+paper's Eq. (5): ``L_comp = 4 m·mh + 2 mh·m + η·mh + mh``.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the paper's experts ran
+on GPU FFNs (threadblock tiling over HBM/shared-mem). Here the kernel is
+tiled for VMEM via BlockSpec:
+
+  * grid = (J / bj, mh / bh): each step holds an x row-tile [bj, m], a
+    column tile of w1 and w3 [m, bh], and a row tile of w2 [bh, m] in VMEM.
+  * the two up-projections and the SiLU gate are FUSED — the [bj, bh]
+    intermediate ``silu(a) ⊙ b`` lives only in VMEM/registers and never
+    round-trips to HBM (on GPU this is the shared-memory fusion the paper's
+    substrate, Mixtral's kernels, perform).
+  * the hidden dimension is the reduction axis for the down-projection, so
+    each grid step accumulates its partial ``(bj, m)`` product into the
+    output ref; the grid iterates hidden-tiles innermost for locality.
+  * tile sizes default to multiples of 128 to map onto the 128×128 MXU.
+
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls, so
+the kernel is validated in interpret mode and its TPU efficiency is
+estimated analytically (see vmem_bytes / mxu_flops below and
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class FfnTiling(NamedTuple):
+    """Block sizes for the fused SwiGLU kernel.
+
+    bj: token-rows per grid step (MXU sublane dim; multiple of 8, ideally 128)
+    bh: hidden-columns per grid step (MXU lane dim; multiple of 128)
+    """
+
+    bj: int = 128
+    bh: int = 128
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, *, nh_steps: int):
+    """Fused SwiGLU grid step.
+
+    Grid is (J/bj, mh/bh) with the hidden axis innermost. Each step computes
+    gate = silu(x·w1_tile) ⊙ (x·w3_tile)   -> [bj, bh]   (VMEM only)
+    and accumulates gate · w2_tile          -> [bj, m]
+    into o_ref. The first hidden step zero-initialises the accumulator.
+    """
+    h = pl.program_id(1)
+
+    x = x_ref[...]            # [bj, m]
+    a = x @ w1_ref[...]       # [bj, bh]
+    b = x @ w3_ref[...]       # [bj, bh]
+    gate = a * jax.nn.sigmoid(a) * b  # SiLU(a) ⊙ b, fused in VMEM
+    partial = gate @ w2_ref[...]      # [bj, m]
+
+    @pl.when(h == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(h != 0)
+    def _accum():
+        o_ref[...] += partial
+
+    del nh_steps  # part of the signature for cost introspection
+
+
+@functools.partial(jax.jit, static_argnames=("tiling",))
+def expert_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    tiling: FfnTiling = FfnTiling(),
+) -> jax.Array:
+    """SwiGLU expert FFN via the fused Pallas kernel.
+
+    Args:
+      x:  [J, m] tokens routed to this expert.
+      w1: [m, mh] gate projection.
+      w3: [m, mh] up projection.
+      w2: [mh, m] down projection.
+      tiling: VMEM block sizes; J % bj == 0 and mh % bh == 0 required
+        (the coordinator pads token batches to the tile boundary).
+
+    Returns:
+      [J, m] expert output.
+    """
+    j, m = x.shape
+    mh = w1.shape[1]
+    bj = min(tiling.bj, j)
+    bh = min(tiling.bh, mh)
+    if j % bj or mh % bh:
+        raise ValueError(f"J={j} must divide bj={bj} and mh={mh} divide bh={bh}")
+    grid = (j // bj, mh // bh)
+
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, nh_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bj, m), lambda i, h: (i, 0)),   # x row tile
+            pl.BlockSpec((m, bh), lambda i, h: (0, h)),   # w1 col tile
+            pl.BlockSpec((m, bh), lambda i, h: (0, h)),   # w3 col tile
+            pl.BlockSpec((bh, m), lambda i, h: (h, 0)),   # w2 row tile
+        ],
+        out_specs=pl.BlockSpec((bj, m), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, m), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w1, w3, w2)
+
+
+def auto_tiling(j: int, m: int, mh: int, vmem_budget: int = 14 * 1024 * 1024) -> FfnTiling:
+    """Largest MXU-aligned tiling whose working set fits the VMEM budget.
+
+    Fewer grid steps mean less loop overhead (interpret mode) and fewer
+    HBM↔VMEM round-trips of the x tile (TPU); the budget keeps the choice
+    honest for real hardware. Tries (bj, bh) from full-extent down in
+    multiples of 128 (J itself may be smaller than 128 for tiny configs).
+    """
+    def candidates(limit: int):
+        c = [limit] if limit % 128 == 0 else []
+        c += [b for b in range(limit - limit % 128, 127, -128)]
+        return c or [limit]
+
+    for bj in candidates(j):
+        if j % bj:
+            continue
+        for bh in candidates(mh):
+            if mh % bh:
+                continue
+            if vmem_bytes(m, mh, FfnTiling(bj, bh)) <= vmem_budget:
+                return FfnTiling(bj, bh)
+    return FfnTiling(min(128, j), min(128, mh))
+
+
+def vmem_bytes(m: int, mh: int, tiling: FfnTiling = FfnTiling(), dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM working set of the fused kernel, in bytes.
+
+    x tile [bj, m] + w1/w3 col tiles [m, bh]·2 + w2 row tile [bh, m]
+    + gate intermediate [bj, bh] + output accumulator [bj, m].
+    Used by the perf analysis to check the ≈16 MiB VMEM budget.
+    """
+    bj, bh = tiling.bj, tiling.bh
+    elems = bj * m + 2 * m * bh + bh * m + bj * bh + bj * m
+    return elems * dtype_bytes
+
+
+def flops(j: int, m: int, mh: int, eta: int = 7) -> int:
+    """FLOPs for J tokens — J × paper Eq. (5).
+
+    L_comp = 4·m·mh + 2·mh·m + η·mh + mh  per token:
+      4·m·mh  — the two up projections (each m·mh MACs = 2·m·mh FLOPs)
+      2·mh·m  — the down projection
+      η·mh    — the activation (η FLOPs/element; SiLU ≈ 7)
+      mh      — the element-wise gate multiply
+    """
+    per_token = 4 * m * mh + 2 * mh * m + eta * mh + mh
+    return j * per_token
+
+
+def mxu_utilization_estimate(m: int, mh: int, tiling: FfnTiling = FfnTiling()) -> float:
+    """Estimated MXU utilization of one grid step (analytic, not measured).
+
+    Fraction of the 128×128 systolic array covered by each matmul tile,
+    weighted by the FLOP share of the three matmuls. Interpret-mode wall
+    time is NOT a TPU proxy; this is the number reported in §Perf.
+    """
+    bj, bh = tiling.bj, tiling.bh
+    def tile_cover(rows: int, cols: int) -> float:
+        return min(rows, 128) / 128.0 * min(cols, 128) / 128.0
+    # up projections: [bj, m] @ [m, bh]; down: [bj, bh] @ [bh, m]
+    f_up = 2 * (2 * m * bh * bj)
+    f_down = 2 * bh * m * bj
+    u_up = tile_cover(bj, bh)
+    u_down = tile_cover(bj, min(m, 128))
+    return (f_up * u_up + f_down * u_down) / (f_up + f_down)

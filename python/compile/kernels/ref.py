@@ -1,0 +1,127 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only (no pallas, no custom calls). pytest
+compares kernel output against these oracles with `assert_allclose`; they
+are the single source of numerical truth for Layer 1.
+
+Shapes follow the paper's notation:
+  J  — number of tokens in the batch  (paper: total input tokens)
+  m  — token embedding dimension      (paper: m)
+  mh — expert FFN hidden dimension    (paper: m_h)
+  n  — number of experts              (paper: n)
+  H  — number of attention heads
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x: jax.Array) -> jax.Array:
+    """SiLU/swish activation: x * sigmoid(x)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+) -> jax.Array:
+    """SwiGLU expert FFN (paper Fig. 2, Mixtral-style).
+
+    y = (silu(x @ w1) * (x @ w3)) @ w2
+
+    Args:
+      x:  [J, m]  token embeddings.
+      w1: [m, mh] gate projection.
+      w3: [m, mh] up projection.
+      w2: [mh, m] down projection.
+
+    Returns:
+      [J, m] expert output, same shape as input (paper §III-A: "the output
+      tensor retains the same shape as the input tensor").
+    """
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def gating(x: jax.Array, wg: jax.Array) -> jax.Array:
+    """Gating network (router): softmax over expert logits.
+
+    Args:
+      x:  [J, m] token embeddings.
+      wg: [m, n] router projection.
+
+    Returns:
+      [J, n] per-token expert weights (rows sum to 1).
+    """
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def top_k_mask(w: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the top-k entries per row of w ([J, n])."""
+    # kth largest value per row; ties broaden the mask, which matches the
+    # renormalisation semantics used downstream.
+    kth = jnp.sort(w, axis=-1)[:, -k][:, None]
+    return w >= kth
+
+
+def moe_combine(w: jax.Array, mask: jax.Array, expert_outs: jax.Array) -> jax.Array:
+    """Combine expert outputs with masked, renormalised gate weights.
+
+    o_j = sum_k  w'_{j,k} * y_{j,k}           (paper Eq. (1))
+    with w' = (w * mask) / sum(w * mask).
+
+    Args:
+      w:           [J, n] gate weights.
+      mask:        [J, n] selection mask (float or bool).
+      expert_outs: [n, J, m] stacked per-expert outputs.
+
+    Returns:
+      [J, m] combined output.
+    """
+    wm = w * mask.astype(w.dtype)
+    wm = wm / jnp.maximum(wm.sum(axis=-1, keepdims=True), 1e-9)
+    return jnp.einsum("jn,njm->jm", wm, expert_outs)
+
+
+def attention(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    num_heads: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Multi-head (causal) self-attention, the BS-side module.
+
+    Args:
+      x:  [J, m] token embeddings.
+      wq, wk, wv, wo: [m, m] projections.
+      num_heads: H; m must be divisible by H.
+      causal: apply a lower-triangular mask (decoder-style).
+
+    Returns:
+      [J, m] attention output.
+    """
+    j, m = x.shape
+    hd = m // num_heads
+    q = (x @ wq).reshape(j, num_heads, hd).transpose(1, 0, 2)  # [H, J, hd]
+    k = (x @ wk).reshape(j, num_heads, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(j, num_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    if causal:
+        mask = jnp.tril(jnp.ones((j, j), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, jnp.asarray(-1e30, x.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v)  # [H, J, hd]
+    return out.transpose(1, 0, 2).reshape(j, m) @ wo
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis."""
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * scale * gamma

@@ -1,0 +1,107 @@
+"""AOT pipeline integrity: lowering, manifest, and weight serialisation.
+
+Checks the build-time contract consumed by the rust runtime: every entry
+point lowers to parseable HLO text with ENTRY + tuple root, the manifest
+indexes weights.bin correctly, and shapes agree between manifest and model.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelConfig(
+    vocab=64, d_model=16, d_hidden=32, n_experts=4, n_heads=2, n_blocks=2, seq_len=32
+)
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.emit(CFG, out, seed=0)
+    return out, manifest
+
+
+class TestLowering:
+    def test_all_entry_points_emitted(self, emitted):
+        out, manifest = emitted
+        expected = {
+            "embed",
+            "attention",
+            "gate",
+            "expert",
+            "expert_normed",
+            "experts_stacked",
+            "combine",
+            "lm_head",
+        }
+        assert set(manifest["artifacts"]) == expected
+        for name in expected:
+            assert os.path.exists(os.path.join(out, f"{name}.hlo.txt"))
+
+    def test_hlo_text_is_parseable_hlo(self, emitted):
+        out, manifest = emitted
+        for name, meta in manifest["artifacts"].items():
+            text = open(os.path.join(out, meta["file"])).read()
+            assert "ENTRY" in text, f"{name}: no ENTRY computation"
+            assert "HloModule" in text, f"{name}: not HLO text"
+
+    def test_return_tuple_lowering(self, emitted):
+        """Root must be a tuple — the rust side unwraps with to_tuple1."""
+        out, manifest = emitted
+        for name, meta in manifest["artifacts"].items():
+            text = open(os.path.join(out, meta["file"])).read()
+            entry = text.split("ENTRY")[-1]
+            root = [l for l in entry.splitlines() if "ROOT" in l]
+            assert root and "tuple(" in root[0].replace(") ", "("), (
+                f"{name}: ROOT is not a tuple: {root}"
+            )
+
+    def test_arg_signatures_match_model(self, emitted):
+        _, manifest = emitted
+        eps = aot.entry_points(CFG)
+        for name, meta in manifest["artifacts"].items():
+            want = [list(a.shape) for a in eps[name][1]]
+            got = [a["shape"] for a in meta["args"]]
+            assert got == want, f"{name}: {got} != {want}"
+
+
+class TestWeights:
+    def test_weights_roundtrip(self, emitted):
+        """weights.bin + manifest reconstructs init_weights exactly."""
+        out, manifest = emitted
+        blob = np.fromfile(os.path.join(out, "weights.bin"), dtype="<f4")
+        ref = M.init_weights(CFG, seed=0)
+        assert len(manifest["weights"]["tensors"]) == len(ref)
+        for t in manifest["weights"]["tensors"]:
+            size = int(np.prod(t["shape"]))
+            got = blob[t["offset"] : t["offset"] + size].reshape(t["shape"])
+            np.testing.assert_array_equal(got, np.asarray(ref[t["name"]]))
+
+    def test_offsets_contiguous_sorted(self, emitted):
+        _, manifest = emitted
+        off = 0
+        names = []
+        for t in manifest["weights"]["tensors"]:
+            assert t["offset"] == off
+            off += int(np.prod(t["shape"]))
+            names.append(t["name"])
+        assert names == sorted(names)
+
+    def test_manifest_config_roundtrip(self, emitted):
+        _, manifest = emitted
+        c = manifest["config"]
+        assert c["d_model"] == CFG.d_model
+        assert c["n_experts"] == CFG.n_experts
+        assert c["total_params"] == CFG.total_params
+
+    def test_manifest_json_valid(self, emitted):
+        out, _ = emitted
+        with open(os.path.join(out, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["weights"]["dtype"] == "f32"

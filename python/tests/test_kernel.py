@@ -1,0 +1,214 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+ref.py — the core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import gating as gate_k
+from compile.kernels import moe_ffn as ffn_k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+# Deadline off: first call per shape JIT-compiles, which trips hypothesis'
+# per-example timing otherwise.
+HSET = settings(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=0.1, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- moe_ffn
+
+
+class TestExpertFfn:
+    @HSET
+    @given(
+        j=st.sampled_from([8, 64, 128, 256]),
+        m=st.sampled_from([16, 64, 128]),
+        mh=st.sampled_from([32, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, j, m, mh, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        x = rand(ks[0], (j, m), 1.0)
+        w1, w3 = rand(ks[1], (m, mh)), rand(ks[2], (m, mh))
+        w2 = rand(ks[3], (mh, m))
+        got = ffn_k.expert_ffn(x, w1, w3, w2)
+        want = ref.expert_ffn(x, w1, w3, w2)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_multi_tile_accumulation(self):
+        """mh spanning several bh tiles exercises the accumulator path."""
+        ks = jax.random.split(jax.random.PRNGKey(7), 4)
+        j, m, mh = 128, 64, 512  # 4 hidden tiles at bh=128
+        x = rand(ks[0], (j, m), 1.0)
+        w1, w3, w2 = rand(ks[1], (m, mh)), rand(ks[2], (m, mh)), rand(ks[3], (mh, m))
+        got = ffn_k.expert_ffn(x, w1, w3, w2, tiling=ffn_k.FfnTiling(bj=64, bh=128))
+        np.testing.assert_allclose(got, ref.expert_ffn(x, w1, w3, w2), rtol=3e-5, atol=3e-5)
+
+    def test_bad_tiling_raises(self):
+        x = jnp.zeros((100, 16))
+        w = jnp.zeros((16, 96))
+        w2 = jnp.zeros((96, 16))
+        with pytest.raises(ValueError, match="must divide"):
+            ffn_k.expert_ffn(x, w, w, w2, tiling=ffn_k.FfnTiling(bj=64, bh=64))
+
+    def test_zero_input_gives_zero(self):
+        x = jnp.zeros((64, 32))
+        w1 = jnp.ones((32, 128)) * 0.1
+        w3 = jnp.ones((32, 128)) * 0.1
+        w2 = jnp.ones((128, 32)) * 0.1
+        out = ffn_k.expert_ffn(x, w1, w3, w2)
+        np.testing.assert_allclose(out, jnp.zeros_like(x), atol=1e-7)
+
+    def test_flops_matches_eq5(self):
+        """Eq. (5): L_comp = 4·m·mh + 2·mh·m + η·mh + mh per token."""
+        m, mh, eta = 256, 512, 7
+        assert ffn_k.flops(1, m, mh, eta) == 4 * m * mh + 2 * mh * m + eta * mh + mh
+        assert ffn_k.flops(10, m, mh, eta) == 10 * ffn_k.flops(1, m, mh, eta)
+
+    def test_vmem_budget(self):
+        """Default tiling for the shipped config fits a 16 MiB VMEM budget."""
+        assert ffn_k.vmem_bytes(256, 512) < 16 * 1024 * 1024
+
+    def test_mxu_estimate_full_tiles(self):
+        u = ffn_k.mxu_utilization_estimate(256, 512, ffn_k.FfnTiling(128, 128))
+        assert u == pytest.approx(1.0)
+        u_small = ffn_k.mxu_utilization_estimate(256, 512, ffn_k.FfnTiling(8, 128))
+        assert u_small < 0.1
+
+
+# ---------------------------------------------------------------- gating
+
+
+class TestGating:
+    @HSET
+    @given(
+        j=st.sampled_from([8, 64, 128, 256]),
+        m=st.sampled_from([16, 64, 256]),
+        n=st.sampled_from([2, 4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, j, m, n, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = rand(ks[0], (j, m), 1.0)
+        wg = rand(ks[1], (m, n))
+        got = gate_k.gating(x, wg)
+        np.testing.assert_allclose(got, ref.gating(x, wg), rtol=1e-5, atol=1e-6)
+
+    @HSET
+    @given(j=st.sampled_from([8, 128]), seed=st.integers(0, 2**31 - 1))
+    def test_rows_sum_to_one(self, j, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = rand(ks[0], (j, 32), 1.0)
+        wg = rand(ks[1], (32, 8))
+        w = gate_k.gating(x, wg)
+        np.testing.assert_allclose(w.sum(-1), np.ones(j), rtol=1e-5)
+        assert (np.asarray(w) >= 0).all()
+
+    def test_large_logits_stable(self):
+        """Softmax stability: huge logits must not produce NaN/inf."""
+        x = jnp.full((8, 16), 100.0)
+        wg = jnp.eye(16)[:, :8] * 100.0
+        w = gate_k.gating(x, wg)
+        assert np.isfinite(np.asarray(w)).all()
+
+    def test_too_many_experts_raises(self):
+        with pytest.raises(ValueError, match="exceeds"):
+            gate_k.gating(jnp.zeros((8, 16)), jnp.zeros((16, 200)))
+
+
+# ---------------------------------------------------------------- attention
+
+
+class TestAttention:
+    @HSET
+    @given(
+        j=st.sampled_from([64, 128, 256]),
+        m=st.sampled_from([32, 64]),
+        h=st.sampled_from([2, 4, 8]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, j, m, h, causal, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = rand(ks[0], (j, m), 1.0)
+        wq, wk, wv, wo = (rand(k, (m, m)) for k in ks[1:])
+        got = attn_k.attention(x, wq, wk, wv, wo, num_heads=h, bq=64, bk=64, causal=causal)
+        want = ref.attention(x, wq, wk, wv, wo, h, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_causality(self):
+        """Perturbing a future token must not change earlier outputs."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        j, m = 128, 32
+        x = rand(ks[0], (j, m), 1.0)
+        wq, wk, wv = (rand(k, (m, m)) for k in ks[1:4])
+        wo = jnp.eye(m)
+        base = attn_k.attention(x, wq, wk, wv, wo, num_heads=4, bq=64, bk=64)
+        x2 = x.at[-1].add(10.0)
+        pert = attn_k.attention(x2, wq, wk, wv, wo, num_heads=4, bq=64, bk=64)
+        np.testing.assert_allclose(base[:-1], pert[:-1], rtol=1e-5, atol=1e-5)
+
+    def test_single_tile(self):
+        ks = jax.random.split(jax.random.PRNGKey(4), 5)
+        j, m = 64, 64
+        x = rand(ks[0], (j, m), 1.0)
+        wq, wk, wv, wo = (rand(k, (m, m)) for k in ks[1:])
+        got = attn_k.attention(x, wq, wk, wv, wo, num_heads=8)
+        np.testing.assert_allclose(got, ref.attention(x, wq, wk, wv, wo, 8), rtol=3e-4, atol=3e-4)
+
+    def test_bad_tiles_raise(self):
+        with pytest.raises(ValueError, match="multiple"):
+            attn_k.attention(
+                jnp.zeros((100, 32)), *(jnp.zeros((32, 32)),) * 4, num_heads=4, bq=64, bk=64
+            )
+
+
+# ------------------------------------------------------------ combine/topk
+
+
+class TestCombine:
+    @HSET
+    @given(
+        j=st.sampled_from([4, 16, 64]),
+        n=st.sampled_from([4, 8]),
+        k=st.sampled_from([1, 2, 3]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_top_k_mask_selects_k(self, j, n, k, seed):
+        w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed), (j, n)), -1)
+        mask = ref.top_k_mask(w, k)
+        # Random gaussians make ties measure-zero: exactly k per row.
+        assert (np.asarray(mask).sum(-1) == k).all()
+        # Masked weights dominate unmasked ones per row.
+        wm = np.where(np.asarray(mask), np.asarray(w), np.inf).min(-1)
+        wu = np.where(~np.asarray(mask), np.asarray(w), -np.inf).max(-1)
+        assert (wm >= wu).all()
+
+    def test_combine_renormalises(self):
+        """With identical expert outputs, combine is mask-invariant."""
+        j, n, m = 8, 4, 16
+        w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (j, n)), -1)
+        y = jnp.broadcast_to(jnp.arange(m, dtype=jnp.float32), (n, j, m))
+        full = ref.moe_combine(w, jnp.ones((j, n)), y)
+        top1 = ref.moe_combine(w, ref.top_k_mask(w, 1), y)
+        np.testing.assert_allclose(full, top1, rtol=1e-5)
+
+    def test_combine_empty_mask_is_zero(self):
+        """A fully-dropped token contributes zero (guard against 0/0)."""
+        j, n, m = 4, 4, 8
+        w = jnp.full((j, n), 0.25)
+        y = jnp.ones((n, j, m))
+        out = ref.moe_combine(w, jnp.zeros((j, n)), y)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, np.zeros((j, m)), atol=1e-6)

@@ -1,0 +1,51 @@
+//! Bandwidth-allocation benchmarks — the P3 convex solver.
+//!
+//! The solver runs once per batch (paper §IV-B); at 32 blocks × 8 devices
+//! it must stay well under the batch's air-interface latency. Also
+//! benches the simplex projection primitive.
+
+use wdmoe::config::SystemConfig;
+use wdmoe::optim::{minimize_sum_max, project_simplex, PerBlockLoad, SolverOptions};
+use wdmoe::util::bench::{bench, default_budget};
+use wdmoe::util::Rng;
+use wdmoe::wireless::bandwidth::AllocationInput;
+use wdmoe::wireless::ChannelSimulator;
+
+fn main() {
+    let budget = default_budget();
+    let mut rng = Rng::seed_from_u64(0);
+
+    // Simplex projection across sizes.
+    for &n in &[8usize, 64, 1024] {
+        let v: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        bench(&format!("project_simplex/U={n}"), budget, || {
+            project_simplex(&v, 100e6)
+        });
+    }
+
+    // Full P3 solve on the paper fleet with 32 blocks of loads.
+    let cfg = SystemConfig::paper_simulation();
+    let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
+    let real = chan.expected_realization();
+    let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
+    let t_comp: Vec<f64> = cfg.devices.iter().map(|d| l_comp / d.compute_flops).collect();
+    for &blocks in &[1usize, 8, 32] {
+        let loads: Vec<PerBlockLoad> = (0..blocks)
+            .map(|i| PerBlockLoad {
+                tokens: (0..8).map(|k| 50.0 + ((i * 13 + k * 7) % 100) as f64).collect(),
+            })
+            .collect();
+        let input = AllocationInput {
+            channel_cfg: &cfg.channel,
+            realization: &real,
+            loads: &loads,
+            t_comp_per_token: &t_comp,
+            l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
+        };
+        let links = input.links();
+        let opts = SolverOptions::default();
+        bench(&format!("p3_solve/blocks={blocks}"), budget, || {
+            minimize_sum_max(&links, &loads, 100e6, &opts)
+        });
+    }
+}

@@ -1,0 +1,50 @@
+//! Channel-substrate benchmarks: fading draws, Shannon rates, latency
+//! evaluation — the innermost arithmetic of the simulator.
+
+use wdmoe::config::SystemConfig;
+use wdmoe::latency::TokenLatencies;
+use wdmoe::optim::PerBlockLoad;
+use wdmoe::util::bench::{bench, default_budget};
+use wdmoe::wireless::bandwidth::AllocationInput;
+use wdmoe::wireless::{shannon_rate, ChannelSimulator};
+
+fn main() {
+    let budget = default_budget();
+    let cfg = SystemConfig::paper_simulation();
+
+    bench("shannon_rate", budget, || {
+        shannon_rate(12.5e6, 10.0, 4.7e-9, 3.98e-21)
+    });
+
+    let mut fading = cfg.clone();
+    fading.channel.fading_blocks = 1;
+    let mut sim = ChannelSimulator::new(&fading.channel, &fading.devices, 0);
+    bench("fading_redraw/U=8", budget, || {
+        sim.advance_block();
+        sim.realization().gains[0].down
+    });
+
+    let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
+    let real = chan.expected_realization();
+    let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
+    let t_comp: Vec<f64> = cfg.devices.iter().map(|d| l_comp / d.compute_flops).collect();
+    let loads: Vec<PerBlockLoad> = vec![];
+    let input = AllocationInput {
+        channel_cfg: &cfg.channel,
+        realization: &real,
+        loads: &loads,
+        t_comp_per_token: &t_comp,
+        l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
+    };
+    let links = input.links();
+    let bw = vec![12.5e6; 8];
+    bench("token_latencies/U=8", budget, || {
+        TokenLatencies::from_links(&links, &bw)
+    });
+
+    let lat = TokenLatencies::from_links(&links, &bw);
+    let counts: Vec<f64> = (0..8).map(|k| 100.0 + k as f64).collect();
+    bench("block_latency/U=8", budget, || {
+        wdmoe::latency::block_latency(&lat, &counts)
+    });
+}

@@ -1,0 +1,39 @@
+//! End-to-end dispatch benchmarks: one full batch through the analytic
+//! simulator (gate → select → allocate → latency accounting, 32 blocks).
+//!
+//! These regenerate the cost behind every paper table: `repro table2`
+//! runs exactly this per (dataset × variant). Maps to paper Table II /
+//! Fig. 7 as the harness hot path.
+
+use wdmoe::config::SystemConfig;
+use wdmoe::coordinator::sim::{Simulator, Variant};
+use wdmoe::util::bench::{bench, default_budget};
+
+fn main() {
+    let budget = default_budget();
+    for &tokens in &[60usize, 4300] {
+        for (name, v) in [
+            ("mixtral", Variant::mixtral_based()),
+            ("wdmoe_no_bw", Variant::wdmoe_no_bandwidth()),
+            ("wdmoe_full", Variant::wdmoe_full()),
+        ] {
+            bench(&format!("sim_batch/{name}/J={tokens}"), budget, || {
+                let mut sim = Simulator::new(SystemConfig::paper_simulation());
+                sim.run_variant(tokens, v).latency_ms()
+            });
+        }
+    }
+
+    // Testbed batch (per-block fading + jitter).
+    bench("testbed_batch/J=120", budget, || {
+        let cfg = SystemConfig::paper_testbed();
+        let mut sim = wdmoe::testbed::TestbedSim::new(cfg.clone());
+        let mut p = wdmoe::moe::selection::make_policy(
+            wdmoe::config::PolicyKind::Testbed,
+            &cfg.policy,
+            4,
+            0,
+        );
+        sim.run_batch(120, p.as_mut()).mean_layer_ms
+    });
+}

@@ -1,0 +1,85 @@
+//! PJRT runtime benchmarks: artifact execution on the request path.
+//!
+//! Measures the per-call cost of each compiled entry point (literal
+//! upload + execute + download) and a whole serving forward pass. Skips
+//! gracefully when artifacts have not been built.
+
+use std::path::Path;
+use wdmoe::config::{PolicyKind, SystemConfig};
+use wdmoe::model::ServingModel;
+use wdmoe::moe::selection::make_policy;
+use wdmoe::runtime::Runtime;
+use wdmoe::util::bench::{bench, default_budget};
+use wdmoe::wireless::bandwidth::OptimalAllocator;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime bench skipped: run `make artifacts` first");
+        return;
+    }
+    let budget = default_budget();
+    let rt = Runtime::load(dir).expect("loading artifacts");
+    let c = rt.manifest.config.clone();
+
+    // Per-artifact execution.
+    let x = vec![0.05f32; c.seq_len * c.d_model];
+    let xl = Runtime::literal_f32(&x, &[c.seq_len, c.d_model]).unwrap();
+    let gamma = rt.weight_literal("blk0.moe.gamma").unwrap();
+    let wg = rt.weight_literal("blk0.moe.wg").unwrap();
+    bench("execute/gate", budget, || {
+        rt.execute("gate", &[&xl, &gamma, &wg]).unwrap()
+    });
+
+    let w1 = rt.weight_literal("blk0.expert0.w1").unwrap();
+    let w3 = rt.weight_literal("blk0.expert0.w3").unwrap();
+    let w2 = rt.weight_literal("blk0.expert0.w2").unwrap();
+    bench("execute/expert_normed", budget, || {
+        rt.execute("expert_normed", &[&xl, &gamma, &w1, &w3, &w2])
+            .unwrap()
+    });
+
+    // Fused all-experts path (one call vs n) — kept for comparison; the
+    // serving default is chosen from this measurement (EXPERIMENTS §Perf).
+    if rt.manifest.artifacts.contains_key("experts_stacked") {
+        let stack = |suffix: &str, a: usize, b: usize| {
+            let mut flat = Vec::new();
+            for e in 0..c.n_experts {
+                let (_, d) = rt.weights.get(&format!("blk0.expert{e}.{suffix}")).unwrap();
+                flat.extend_from_slice(d);
+            }
+            Runtime::literal_f32(&flat, &[c.n_experts, a, b]).unwrap()
+        };
+        let s1 = stack("w1", c.d_model, c.d_hidden);
+        let s3 = stack("w3", c.d_model, c.d_hidden);
+        let s2 = stack("w2", c.d_hidden, c.d_model);
+        bench("execute/experts_stacked(all-n)", budget, || {
+            rt.execute("experts_stacked", &[&xl, &gamma, &s1, &s3, &s2])
+                .unwrap()
+        });
+    }
+
+    let ag = rt.weight_literal("blk0.attn.gamma").unwrap();
+    let wq = rt.weight_literal("blk0.attn.wq").unwrap();
+    let wk = rt.weight_literal("blk0.attn.wk").unwrap();
+    let wv = rt.weight_literal("blk0.attn.wv").unwrap();
+    let wo = rt.weight_literal("blk0.attn.wo").unwrap();
+    bench("execute/attention", budget, || {
+        rt.execute("attention", &[&xl, &ag, &wq, &wk, &wv, &wo])
+            .unwrap()
+    });
+
+    // Literal construction overhead (host -> Literal).
+    bench("literal_f32/JxM", budget, || {
+        Runtime::literal_f32(&x, &[c.seq_len, c.d_model]).unwrap()
+    });
+
+    // Whole forward pass (all blocks, all experts, combine, lm_head).
+    let mut model = ServingModel::load(dir, SystemConfig::artifact_serving()).unwrap();
+    let ids: Vec<i32> = (0..c.seq_len as i32).map(|i| i % c.vocab as i32).collect();
+    let alloc = OptimalAllocator::default();
+    bench("serving_forward/full", std::time::Duration::from_secs(2), || {
+        let mut policy = make_policy(PolicyKind::Wdmoe, &model.cfg.policy, 8, 0);
+        model.forward(&ids, policy.as_mut(), &alloc).unwrap().compute_ms
+    });
+}

@@ -1,0 +1,51 @@
+//! Expert-selection policy benchmarks — the per-block hot path.
+//!
+//! L3 must not bottleneck dispatch: for ARC-C-scale batches (~4300
+//! tokens) the policy runs once per MoE block (32×/batch), so its cost
+//! must stay ≪ the millisecond-scale per-block air-interface latency.
+
+use wdmoe::config::PolicyConfig;
+use wdmoe::latency::TokenLatencies;
+use wdmoe::moe::selection::{
+    SelectionContext, SelectionPolicy, TestbedPolicy, VanillaTopK, WdmoePolicy,
+};
+use wdmoe::moe::GateWeights;
+use wdmoe::util::bench::{bench, default_budget};
+use wdmoe::workload::WorkloadGen;
+
+fn main() {
+    let budget = default_budget();
+    let u = 8;
+    let lat = TokenLatencies {
+        per_token: (0..u).map(|k| 1e-4 * (1.0 + k as f64)).collect(),
+    };
+    let online = vec![true; u];
+
+    for &tokens in &[256usize, 4300, 32000] {
+        let mut wl = WorkloadGen::new(0, 32000);
+        let gate = GateWeights::new(wl.synthetic_gate_weights(tokens, u, 1.5));
+        let ctx = SelectionContext {
+            latencies: &lat,
+            top_k: 2,
+            online: &online,
+        };
+
+        let mut v = VanillaTopK;
+        bench(&format!("vanilla_top2/J={tokens}"), budget, || {
+            v.select(&gate, &ctx)
+        });
+
+        let mut w = WdmoePolicy::new(PolicyConfig::default());
+        bench(&format!("wdmoe_alg1/J={tokens}"), budget, || {
+            w.select(&gate, &ctx)
+        });
+
+        let mut t = TestbedPolicy::new(PolicyConfig::default(), u);
+        for k in 0..u {
+            t.observe(k, lat.per_token[k]);
+        }
+        bench(&format!("testbed_alg2/J={tokens}"), budget, || {
+            t.select(&gate, &ctx)
+        });
+    }
+}

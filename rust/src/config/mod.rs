@@ -1,0 +1,520 @@
+//! Configuration system: every knob of the WDMoE stack, with JSON
+//! persistence (hand-rolled via [`crate::util::Json`]; the offline build
+//! environment has no serde/toml).
+//!
+//! A [`SystemConfig`] fully determines a run: the model dimensions (which
+//! set the paper's `m`, `m_h`, `n`, `I`), the wireless scenario (bandwidth,
+//! powers, carrier, noise, device distances), the device fleet (compute
+//! capacities `C_k`), the routing policy, and the workload. Presets match
+//! the paper's two experimental setups: [`SystemConfig::paper_simulation`]
+//! (Section V — 8 devices, Mixtral-scale model, 100 MHz) and
+//! [`SystemConfig::paper_testbed`] (Section VI — 4 Jetson-class devices
+//! over WiFi).
+
+mod presets; // preset constructors are inherent impls on SystemConfig
+
+use crate::util::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Model dimensions — mirrors `python/compile/model.py::ModelConfig`.
+///
+/// For *execution* (PJRT) these must match `artifacts/manifest.json`; for
+/// the *analytic* latency simulation they may instead be set to the
+/// paper's Mixtral-8x7B scale (see [`ModelDims::mixtral_8x7b`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    /// Vocabulary size (execution only).
+    pub vocab: usize,
+    /// Token embedding dimension — the paper's `m` (Eq. (4)).
+    pub d_model: usize,
+    /// Expert FFN hidden dimension — the paper's `m_h` (Eq. (5)).
+    pub d_hidden: usize,
+    /// Experts per MoE layer — the paper's `n`.
+    pub n_experts: usize,
+    /// Attention heads (execution only).
+    pub n_heads: usize,
+    /// Number of MoE blocks — the paper's `I`.
+    pub n_blocks: usize,
+    /// AOT-compiled token batch shape `J` (execution pads to this).
+    pub seq_len: usize,
+    /// Default routing fan-out (Mixtral uses top-2).
+    pub top_k: usize,
+}
+
+impl ModelDims {
+    /// The shipped AOT artifact configuration (~27.8M params).
+    pub fn artifact_default() -> Self {
+        Self {
+            vocab: 2048,
+            d_model: 256,
+            d_hidden: 512,
+            n_experts: 8,
+            n_heads: 8,
+            n_blocks: 8,
+            seq_len: 256,
+            top_k: 2,
+        }
+    }
+
+    /// Mixtral-8x7B dimensions — what the paper's latency model plugs into
+    /// Eqs. (4)–(5). Used by the analytic simulation behind every paper
+    /// table/figure; never executed on CPU.
+    pub fn mixtral_8x7b() -> Self {
+        Self {
+            vocab: 32000,
+            d_model: 4096,
+            d_hidden: 14336,
+            n_experts: 8,
+            n_heads: 32,
+            n_blocks: 32,
+            seq_len: 4096,
+            top_k: 2,
+        }
+    }
+
+    /// Communication payload per token in bits — paper Eq. (4):
+    /// `L_comm = eps * m` with `eps` the quantisation precision in bits.
+    pub fn l_comm_bits(&self, quant_bits: u32) -> f64 {
+        (quant_bits as f64) * (self.d_model as f64)
+    }
+
+    /// Expert FLOPs per token — paper Eq. (5):
+    /// `L_comp = 4 m m_h + 2 m_h m + eta m_h + m_h`.
+    pub fn l_comp_flops(&self, eta: f64) -> f64 {
+        let m = self.d_model as f64;
+        let mh = self.d_hidden as f64;
+        4.0 * m * mh + 2.0 * mh * m + eta * mh + mh
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("d_hidden", Json::Num(self.d_hidden as f64)),
+            ("n_experts", Json::Num(self.n_experts as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("n_blocks", Json::Num(self.n_blocks as f64)),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("top_k", Json::Num(self.top_k as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            d_hidden: j.get("d_hidden")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_blocks: j.get("n_blocks")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+        })
+    }
+}
+
+/// Wireless scenario parameters (paper §V-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelConfig {
+    /// Total bandwidth `B` in Hz (paper: 100 MHz).
+    pub total_bandwidth_hz: f64,
+    /// Carrier frequency in GHz (paper: 3.5 GHz).
+    pub carrier_ghz: f64,
+    /// BS transmit power in W (paper: 10 W).
+    pub bs_power_w: f64,
+    /// Device transmit power in W (paper: 0.2 W).
+    pub device_power_w: f64,
+    /// Noise power spectral density in dBm/Hz (3GPP thermal: -174).
+    pub noise_dbm_per_hz: f64,
+    /// Quantisation precision `eps` in bits/element (paper: fp16 = 16).
+    pub quant_bits: u32,
+    /// Block-fading coherence: how many MoE blocks share one fading draw.
+    /// 0 = static channel (fading drawn once per run).
+    pub fading_blocks: usize,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            total_bandwidth_hz: 100e6,
+            carrier_ghz: 3.5,
+            bs_power_w: 10.0,
+            device_power_w: 0.2,
+            noise_dbm_per_hz: -174.0,
+            quant_bits: 16,
+            fading_blocks: 0,
+        }
+    }
+}
+
+impl ChannelConfig {
+    /// Noise PSD `N_0` in W/Hz.
+    pub fn noise_w_per_hz(&self) -> f64 {
+        10f64.powf((self.noise_dbm_per_hz - 30.0) / 10.0)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_bandwidth_hz", Json::Num(self.total_bandwidth_hz)),
+            ("carrier_ghz", Json::Num(self.carrier_ghz)),
+            ("bs_power_w", Json::Num(self.bs_power_w)),
+            ("device_power_w", Json::Num(self.device_power_w)),
+            ("noise_dbm_per_hz", Json::Num(self.noise_dbm_per_hz)),
+            ("quant_bits", Json::Num(self.quant_bits as f64)),
+            ("fading_blocks", Json::Num(self.fading_blocks as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            total_bandwidth_hz: j.get("total_bandwidth_hz")?.as_f64()?,
+            carrier_ghz: j.get("carrier_ghz")?.as_f64()?,
+            bs_power_w: j.get("bs_power_w")?.as_f64()?,
+            device_power_w: j.get("device_power_w")?.as_f64()?,
+            noise_dbm_per_hz: j.get("noise_dbm_per_hz")?.as_f64()?,
+            quant_bits: j.get("quant_bits")?.as_usize()? as u32,
+            fading_blocks: j.get("fading_blocks")?.as_usize()?,
+        })
+    }
+}
+
+/// One mobile device hosting an expert (paper: device k hosts expert k of
+/// every MoE layer in the simulation setup).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Human-readable name ("jetson-agx-orin-0", …).
+    pub name: String,
+    /// Distance from the BS in metres (drives path loss).
+    pub distance_m: f64,
+    /// Compute capacity `C_k` in FLOP/s (paper Eq. (7)).
+    pub compute_flops: f64,
+    /// Multiplicative compute jitter stddev (0 = deterministic).
+    pub compute_jitter: f64,
+}
+
+impl DeviceConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("distance_m", Json::Num(self.distance_m)),
+            ("compute_flops", Json::Num(self.compute_flops)),
+            ("compute_jitter", Json::Num(self.compute_jitter)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            distance_m: j.get("distance_m")?.as_f64()?,
+            compute_flops: j.get("compute_flops")?.as_f64()?,
+            compute_jitter: j.get("compute_jitter")?.as_f64()?,
+        })
+    }
+}
+
+/// Expert-selection policy selector (see `moe::selection`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Plain top-k on gate weights — the "Mixtral-based method" baseline.
+    VanillaTopK,
+    /// Paper Algorithm 1: cosine-similarity threshold, WLR-guarded.
+    Wdmoe,
+    /// Paper Algorithm 2: latency-history-driven testbed policy.
+    Testbed,
+    /// Uniform-random k experts (sanity baseline for ablations).
+    Random,
+}
+
+impl PolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::VanillaTopK => "vanilla_top_k",
+            PolicyKind::Wdmoe => "wdmoe",
+            PolicyKind::Testbed => "testbed",
+            PolicyKind::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "vanilla_top_k" => PolicyKind::VanillaTopK,
+            "wdmoe" => PolicyKind::Wdmoe,
+            "testbed" => PolicyKind::Testbed,
+            "random" => PolicyKind::Random,
+            other => anyhow::bail!("unknown policy kind '{other}'"),
+        })
+    }
+}
+
+/// Bandwidth-allocation strategy selector (see `wireless::bandwidth`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocatorKind {
+    /// Even split `B_k = B/U` — the baseline.
+    Uniform,
+    /// Convex-optimal solution of problem P3 (min-max water filling).
+    Optimal,
+}
+
+impl AllocatorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AllocatorKind::Uniform => "uniform",
+            AllocatorKind::Optimal => "optimal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "uniform" => AllocatorKind::Uniform,
+            "optimal" => AllocatorKind::Optimal,
+            other => anyhow::bail!("unknown allocator kind '{other}'"),
+        })
+    }
+}
+
+/// Policy block of the config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyConfig {
+    pub selection: PolicyKind,
+    pub allocator: AllocatorKind,
+    /// Algorithm 1 initial cosine-similarity threshold (paper: 0.5).
+    pub theta_init: f64,
+    /// Algorithm 1 threshold increment per round (paper: 0.1).
+    pub theta_step: f64,
+    /// Algorithm 1 WLR guard factor (paper: 1.01).
+    pub wlr_guard: f64,
+    /// Algorithm 2 bottleneck trigger vs third quartile (paper: 1.5).
+    pub bottleneck_factor: f64,
+    /// Algorithm 2 low-weight drop fraction (paper: 1/5 of device mass).
+    pub drop_weight_frac: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self {
+            selection: PolicyKind::Wdmoe,
+            allocator: AllocatorKind::Optimal,
+            theta_init: 0.5,
+            theta_step: 0.1,
+            wlr_guard: 1.01,
+            bottleneck_factor: 1.5,
+            drop_weight_frac: 0.2,
+        }
+    }
+}
+
+impl PolicyConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("selection", Json::str(self.selection.as_str())),
+            ("allocator", Json::str(self.allocator.as_str())),
+            ("theta_init", Json::Num(self.theta_init)),
+            ("theta_step", Json::Num(self.theta_step)),
+            ("wlr_guard", Json::Num(self.wlr_guard)),
+            ("bottleneck_factor", Json::Num(self.bottleneck_factor)),
+            ("drop_weight_frac", Json::Num(self.drop_weight_frac)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            selection: PolicyKind::parse(j.get("selection")?.as_str()?)?,
+            allocator: AllocatorKind::parse(j.get("allocator")?.as_str()?)?,
+            theta_init: j.get("theta_init")?.as_f64()?,
+            theta_step: j.get("theta_step")?.as_f64()?,
+            wlr_guard: j.get("wlr_guard")?.as_f64()?,
+            bottleneck_factor: j.get("bottleneck_factor")?.as_f64()?,
+            drop_weight_frac: j.get("drop_weight_frac")?.as_f64()?,
+        })
+    }
+}
+
+/// The full system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub model: ModelDims,
+    pub channel: ChannelConfig,
+    pub devices: Vec<DeviceConfig>,
+    pub policy: PolicyConfig,
+    /// RNG seed for every stochastic element (fading, workload, jitter).
+    pub seed: u64,
+    /// FLOPs of the expert activation per hidden element (paper `eta`).
+    pub activation_eta: f64,
+}
+
+impl SystemConfig {
+    /// Number of devices `U`.
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("channel", self.channel.to_json()),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
+            ),
+            ("policy", self.policy.to_json()),
+            ("seed", Json::Num(self.seed as f64)),
+            ("activation_eta", Json::Num(self.activation_eta)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            model: ModelDims::from_json(j.get("model")?)?,
+            channel: ChannelConfig::from_json(j.get("channel")?)?,
+            devices: j
+                .get("devices")?
+                .as_arr()?
+                .iter()
+                .map(DeviceConfig::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            policy: PolicyConfig::from_json(j.get("policy")?)?,
+            seed: j.get("seed")?.as_u64()?,
+            activation_eta: j.get("activation_eta")?.as_f64()?,
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Write to a JSON file.
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Validate invariants that would otherwise surface as NaNs deep in
+    /// the latency model.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.devices.is_empty(), "at least one device required");
+        anyhow::ensure!(
+            self.model.n_experts == self.devices.len(),
+            "n_experts ({}) must equal device count ({}) — the paper places expert k on device k",
+            self.model.n_experts,
+            self.devices.len()
+        );
+        anyhow::ensure!(self.channel.total_bandwidth_hz > 0.0, "bandwidth must be positive");
+        anyhow::ensure!(self.model.top_k >= 1, "top_k must be >= 1");
+        anyhow::ensure!(
+            self.model.top_k <= self.model.n_experts,
+            "top_k exceeds expert count"
+        );
+        for d in &self.devices {
+            anyhow::ensure!(d.distance_m > 0.0, "{}: distance must be positive", d.name);
+            anyhow::ensure!(d.compute_flops > 0.0, "{}: compute must be positive", d.name);
+            anyhow::ensure!(
+                (0.0..1.0).contains(&d.compute_jitter),
+                "{}: jitter must be in [0,1)",
+                d.name
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l_comm_matches_eq4() {
+        let m = ModelDims::mixtral_8x7b();
+        assert_eq!(m.l_comm_bits(16), 16.0 * 4096.0);
+    }
+
+    #[test]
+    fn l_comp_matches_eq5() {
+        let m = ModelDims::mixtral_8x7b();
+        let (md, mh) = (4096.0, 14336.0);
+        let want = 4.0 * md * mh + 2.0 * mh * md + 7.0 * mh + mh;
+        assert_eq!(m.l_comp_flops(7.0), want);
+    }
+
+    #[test]
+    fn noise_psd_thermal() {
+        let c = ChannelConfig::default();
+        let n0 = c.noise_w_per_hz();
+        assert!((n0 - 3.981e-21).abs() / 3.981e-21 < 1e-3, "n0={n0}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            SystemConfig::paper_simulation(),
+            SystemConfig::paper_testbed(),
+            SystemConfig::artifact_serving(),
+        ] {
+            let j = cfg.to_json();
+            let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = crate::util::temp_dir("cfg");
+        let path = dir.join("config.json");
+        let cfg = SystemConfig::paper_testbed();
+        cfg.save_json(&path).unwrap();
+        let back = SystemConfig::from_json_file(&path).unwrap();
+        assert_eq!(cfg, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn presets_validate() {
+        SystemConfig::paper_simulation().validate().unwrap();
+        SystemConfig::paper_testbed().validate().unwrap();
+        SystemConfig::artifact_serving().validate().unwrap();
+    }
+
+    #[test]
+    fn kind_parsing_roundtrip() {
+        for k in [
+            PolicyKind::VanillaTopK,
+            PolicyKind::Wdmoe,
+            PolicyKind::Testbed,
+            PolicyKind::Random,
+        ] {
+            assert_eq!(PolicyKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(PolicyKind::parse("bogus").is_err());
+        for a in [AllocatorKind::Uniform, AllocatorKind::Optimal] {
+            assert_eq!(AllocatorKind::parse(a.as_str()).unwrap(), a);
+        }
+        assert!(AllocatorKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_mismatched_experts() {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.devices.pop();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_topk() {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.model.top_k = 99;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_distance() {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.devices[0].distance_m = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+}

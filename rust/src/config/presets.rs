@@ -1,0 +1,106 @@
+//! Config presets matching the paper's two experimental setups plus the
+//! locally-executable artifact configuration.
+
+use super::*;
+
+impl SystemConfig {
+    /// Section V simulation setup: 8 mobile devices, Mixtral-8x7B-scale
+    /// model, 100 MHz total bandwidth at 3.5 GHz, BS 10 W / device 0.2 W.
+    ///
+    /// The paper does not publish per-device distances or capacities; the
+    /// values here are chosen to span a realistic cell (50–350 m) and the
+    /// consumer-accelerator range the paper's testbed motivates (Jetson
+    /// Xavier NX ≈ 1 TFLOPS fp16-effective up to RTX-4070-Ti-class ≈ 20
+    /// TFLOPS effective). EXPERIMENTS.md records how the resulting
+    /// baseline latencies line up with Table II.
+    pub fn paper_simulation() -> Self {
+        let dists = [60.0, 95.0, 130.0, 170.0, 210.0, 255.0, 300.0, 350.0];
+        let flops = [20e12, 10e12, 15e12, 5e12, 10e12, 2e12, 5e12, 1e12];
+        let devices = dists
+            .iter()
+            .zip(flops.iter())
+            .enumerate()
+            .map(|(i, (&d, &c))| DeviceConfig {
+                name: format!("device-{i}"),
+                distance_m: d,
+                compute_flops: c,
+                compute_jitter: 0.0,
+            })
+            .collect();
+        Self {
+            model: ModelDims::mixtral_8x7b(),
+            channel: ChannelConfig::default(),
+            devices,
+            policy: PolicyConfig::default(),
+            seed: 0,
+            activation_eta: 7.0,
+        }
+    }
+
+    /// Section VI hardware testbed: 2× Jetson AGX Orin, 1× Jetson Xavier
+    /// NX, 1× RTX 4070 Ti PC, all within a 1.45 m × 0.8 m indoor area
+    /// around a WiFi AP (802.11ax). Four experts per device per layer in
+    /// the paper; here device k hosts expert k (n_experts = 4) which
+    /// preserves the load-balancing dynamics Algorithm 2 acts on.
+    pub fn paper_testbed() -> Self {
+        let devices = vec![
+            DeviceConfig {
+                name: "jetson-agx-orin-0".into(),
+                distance_m: 0.9,
+                compute_flops: 8e12,
+                compute_jitter: 0.15,
+            },
+            DeviceConfig {
+                name: "jetson-agx-orin-1".into(),
+                distance_m: 1.2,
+                compute_flops: 8e12,
+                compute_jitter: 0.15,
+            },
+            DeviceConfig {
+                name: "jetson-xavier-nx".into(),
+                distance_m: 0.7,
+                compute_flops: 1.5e12,
+                compute_jitter: 0.20,
+            },
+            DeviceConfig {
+                name: "rtx-4070-ti-pc".into(),
+                distance_m: 1.4,
+                compute_flops: 25e12,
+                compute_jitter: 0.10,
+            },
+        ];
+        let mut model = ModelDims::mixtral_8x7b();
+        model.n_experts = 4;
+        Self {
+            model,
+            channel: ChannelConfig {
+                // 802.11ax: 80 MHz channel, AP ~0.1 W, device ~0.05 W,
+                // 5 GHz band; short range keeps SNR high like real WiFi.
+                total_bandwidth_hz: 80e6,
+                carrier_ghz: 5.0,
+                bs_power_w: 0.1,
+                device_power_w: 0.05,
+                noise_dbm_per_hz: -174.0,
+                quant_bits: 16,
+                fading_blocks: 1,
+            },
+            devices,
+            policy: PolicyConfig {
+                selection: PolicyKind::Testbed,
+                allocator: AllocatorKind::Uniform, // testbed does no BW allocation (§VI-C)
+                ..PolicyConfig::default()
+            },
+            seed: 0,
+            activation_eta: 7.0,
+        }
+    }
+
+    /// Locally executable configuration matching the shipped AOT artifacts
+    /// (`artifacts/manifest.json`): ~27.8M-param model, 8 devices scaled so
+    /// per-token latencies stay in interactive range.
+    pub fn artifact_serving() -> Self {
+        let mut cfg = Self::paper_simulation();
+        cfg.model = ModelDims::artifact_default();
+        cfg
+    }
+}

@@ -1,0 +1,190 @@
+//! Dynamic request batching.
+//!
+//! The BS aggregates concurrent user prompts into token batches before
+//! walking them through the MoE blocks (the paper's `J` is "the total
+//! number of input tokens of all prompts at present", §II-A). The batcher
+//! greedily packs queued requests up to a token budget; a batch is also
+//! closed when the oldest request has waited past `max_wait`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Token budget per batch (the AOT artifact's padded `J` in execution
+    /// mode; unconstrained for the analytic sim).
+    pub max_tokens: usize,
+    /// Max prompts per batch.
+    pub max_prompts: usize,
+    /// Close a batch once the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_tokens: 256,
+            max_prompts: 64,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// A queued prompt.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub token_ids: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+/// Greedy FIFO token-budget batcher.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<QueuedRequest>,
+    next_id: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self {
+            cfg,
+            queue: VecDeque::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a prompt; returns its request id. Prompts longer than the
+    /// token budget are truncated to fit (the serving model's AOT shape
+    /// is fixed; long prompts would need a larger artifact).
+    pub fn push(&mut self, mut token_ids: Vec<i32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        token_ids.truncate(self.cfg.max_tokens);
+        self.queue.push_back(QueuedRequest {
+            id,
+            token_ids,
+            enqueued: Instant::now(),
+        });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether a batch should be closed now: budget fillable or timeout.
+    pub fn ready(&self) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        let tokens: usize = self.queue.iter().map(|r| r.token_ids.len()).sum();
+        tokens >= self.cfg.max_tokens
+            || self.queue.len() >= self.cfg.max_prompts
+            || self.queue.front().map_or(false, |r| r.enqueued.elapsed() >= self.cfg.max_wait)
+    }
+
+    /// Pop the next batch (FIFO, greedy under the token budget). Returns
+    /// `None` when the queue is empty. Always returns at least one
+    /// request if any are queued.
+    pub fn pop_batch(&mut self) -> Option<Vec<QueuedRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let mut batch = Vec::new();
+        let mut tokens = 0usize;
+        while let Some(front) = self.queue.front() {
+            let len = front.token_ids.len();
+            if !batch.is_empty()
+                && (tokens + len > self.cfg.max_tokens || batch.len() >= self.cfg.max_prompts)
+            {
+                break;
+            }
+            tokens += len;
+            batch.push(self.queue.pop_front().unwrap());
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_tokens: usize, max_prompts: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_tokens,
+            max_prompts,
+            max_wait: Duration::from_secs(3600),
+        }
+    }
+
+    #[test]
+    fn empty_queue_no_batch() {
+        let mut b = DynamicBatcher::new(cfg(100, 10));
+        assert!(b.pop_batch().is_none());
+        assert!(!b.ready());
+    }
+
+    #[test]
+    fn greedy_packs_under_budget() {
+        let mut b = DynamicBatcher::new(cfg(100, 10));
+        b.push(vec![0; 40]);
+        b.push(vec![0; 40]);
+        b.push(vec![0; 40]);
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2, "two 40-token prompts fit in 100");
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn oversized_prompt_truncated_not_stuck() {
+        let mut b = DynamicBatcher::new(cfg(50, 10));
+        b.push(vec![0; 500]);
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].token_ids.len(), 50);
+    }
+
+    #[test]
+    fn respects_max_prompts() {
+        let mut b = DynamicBatcher::new(cfg(1000, 3));
+        for _ in 0..5 {
+            b.push(vec![0; 10]);
+        }
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn fifo_ids_preserved() {
+        let mut b = DynamicBatcher::new(cfg(100, 10));
+        let a = b.push(vec![0; 10]);
+        let c = b.push(vec![0; 10]);
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch[0].id, a);
+        assert_eq!(batch[1].id, c);
+    }
+
+    #[test]
+    fn ready_on_budget_fill() {
+        let mut b = DynamicBatcher::new(cfg(20, 10));
+        b.push(vec![0; 10]);
+        assert!(!b.ready());
+        b.push(vec![0; 10]);
+        assert!(b.ready());
+    }
+
+    #[test]
+    fn ready_on_timeout() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_tokens: 1000,
+            max_prompts: 100,
+            max_wait: Duration::from_millis(0),
+        });
+        b.push(vec![0; 1]);
+        assert!(b.ready(), "zero max_wait means immediately ready");
+    }
+}

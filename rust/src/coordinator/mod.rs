@@ -1,0 +1,17 @@
+//! The WDMoE coordinator — the paper's Layer-3 system contribution.
+//!
+//! * [`sim`] — the analytic wireless simulator: walks a batch through all
+//!   `I` MoE blocks, running gate → selection policy → bandwidth
+//!   allocation → attention-waiting-latency accounting exactly as
+//!   §III–IV prescribe. Every paper table/figure harness runs on it.
+//! * [`batcher`] — dynamic request batching for the serving path.
+//! * [`router`] — request/response types and the async serving loop that
+//!   ties the batcher, the PJRT model and the policies together.
+
+pub mod batcher;
+pub mod router;
+pub mod sim;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use router::{InferenceRequest, InferenceResponse};
+pub use sim::{SimOutcome, Simulator, Variant};

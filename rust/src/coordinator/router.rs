@@ -1,0 +1,286 @@
+//! Request router: the serving front-end.
+//!
+//! Users submit prompts; the router batches them ([`DynamicBatcher`]),
+//! hands batches to a [`BatchEngine`] (the PJRT-backed serving model, or
+//! a simulator-backed engine in tests), and resolves each request with
+//! its completion plus the latency accounting of the batch it rode in.
+//!
+//! Concurrency model: a dedicated serving thread owns the engine (PJRT
+//! execution is synchronous); submission handles are cloneable and
+//! blocking-wait on a per-request channel. (The offline build environment
+//! has no tokio — see DESIGN.md §Substitutions — so the loop uses std
+//! threads and mpsc channels; the architecture is identical.)
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use crate::latency::LatencyReport;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+/// A user prompt entering the system.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub token_ids: Vec<i32>,
+}
+
+/// Per-prompt result.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    /// Argmax next-token prediction at the prompt's final position.
+    pub next_token: i32,
+    /// Simulated wireless latency of the batch this prompt rode in (ms).
+    pub batch_latency_ms: f64,
+    /// Wall-clock compute time of the batch (ms) — PJRT execution time,
+    /// kept separate from the simulated air-interface latency.
+    pub batch_compute_ms: f64,
+    /// How many prompts shared the batch.
+    pub batch_size: usize,
+}
+
+/// Outcome of running one batch through the engine.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Argmax next token per prompt.
+    pub next_tokens: Vec<i32>,
+    /// Simulated wireless latency report.
+    pub report: LatencyReport,
+    /// Wall-clock milliseconds spent in compute.
+    pub compute_ms: f64,
+}
+
+/// Anything that can execute a batch of prompts: the PJRT serving model,
+/// or an analytic-simulation engine.
+///
+/// Engines are constructed *inside* the serving thread (PJRT handles are
+/// not `Send`), so there is no `Send` bound here — `spawn_router` takes a
+/// sendable factory instead.
+pub trait BatchEngine {
+    /// `prompt_lens[i]` tokens of prompt i, concatenated in `token_ids`.
+    fn run_batch(&mut self, token_ids: &[i32], prompt_lens: &[usize]) -> anyhow::Result<BatchResult>;
+}
+
+struct Pending {
+    req: InferenceRequest,
+    resp: mpsc::Sender<anyhow::Result<InferenceResponse>>,
+}
+
+/// Handle for submitting requests to a running router.
+#[derive(Clone)]
+pub struct RouterHandle {
+    tx: mpsc::Sender<Pending>,
+}
+
+impl RouterHandle {
+    /// Submit a prompt and block until its response arrives.
+    pub fn infer(&self, req: InferenceRequest) -> anyhow::Result<InferenceResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Pending { req, resp: tx })
+            .map_err(|_| anyhow::anyhow!("router stopped"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("router dropped request"))?
+    }
+
+    /// Submit without waiting; returns the receiver for the response.
+    pub fn infer_async(
+        &self,
+        req: InferenceRequest,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<InferenceResponse>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Pending { req, resp: tx })
+            .map_err(|_| anyhow::anyhow!("router stopped"))?;
+        Ok(rx)
+    }
+}
+
+/// Spawn the serving loop on its own thread; returns a cloneable handle.
+/// The engine factory runs on the serving thread (PJRT clients are not
+/// `Send`). The loop exits when every handle has been dropped; a factory
+/// failure fails every request.
+pub fn spawn_router<E: BatchEngine>(
+    factory: impl FnOnce() -> anyhow::Result<E> + Send + 'static,
+    cfg: BatcherConfig,
+) -> RouterHandle {
+    let (tx, rx) = mpsc::channel::<Pending>();
+    let max_wait = cfg.max_wait;
+    thread::spawn(move || {
+        let mut engine = match factory() {
+            Ok(e) => e,
+            Err(e) => {
+                // Fail every request that ever arrives.
+                while let Ok(p) = rx.recv() {
+                    let _ = p.resp.send(Err(anyhow::anyhow!("engine init failed: {e}")));
+                }
+                return;
+            }
+        };
+        let mut batcher = DynamicBatcher::new(cfg);
+        let mut waiting: Vec<Pending> = Vec::new();
+        loop {
+            // Block for the first request (or exit when all senders drop).
+            if waiting.is_empty() {
+                match rx.recv() {
+                    Ok(p) => {
+                        batcher.push(p.req.token_ids.clone());
+                        waiting.push(p);
+                    }
+                    Err(_) => break,
+                }
+            }
+            // Drain more until the batcher is ready or max_wait elapses.
+            let deadline = Instant::now() + max_wait;
+            while !batcher.ready() {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(p) => {
+                        batcher.push(p.req.token_ids.clone());
+                        waiting.push(p);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            let Some(batch) = batcher.pop_batch() else {
+                continue;
+            };
+            let n = batch.len();
+            let token_ids: Vec<i32> = batch.iter().flat_map(|r| r.token_ids.clone()).collect();
+            let prompt_lens: Vec<usize> = batch.iter().map(|r| r.token_ids.len()).collect();
+            let result = engine.run_batch(&token_ids, &prompt_lens);
+            let to_resolve: Vec<Pending> = waiting.drain(..n).collect();
+            match result {
+                Ok(res) => {
+                    let lat_ms = res.report.total_waiting() * 1e3;
+                    for (i, p) in to_resolve.into_iter().enumerate() {
+                        let _ = p.resp.send(Ok(InferenceResponse {
+                            next_token: res.next_tokens.get(i).copied().unwrap_or(-1),
+                            batch_latency_ms: lat_ms,
+                            batch_compute_ms: res.compute_ms,
+                            batch_size: n,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    for p in to_resolve {
+                        let _ = p.resp.send(Err(anyhow::anyhow!("engine failed: {e}")));
+                    }
+                }
+            }
+        }
+    });
+    RouterHandle { tx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::{BlockLatency, LatencyReport};
+    use std::time::Duration;
+
+    /// Engine that echoes the first token of each prompt and reports a
+    /// fixed 1 ms of simulated latency.
+    struct EchoEngine;
+
+    impl BatchEngine for EchoEngine {
+        fn run_batch(
+            &mut self,
+            token_ids: &[i32],
+            prompt_lens: &[usize],
+        ) -> anyhow::Result<BatchResult> {
+            let mut next = Vec::new();
+            let mut off = 0;
+            for &l in prompt_lens {
+                next.push(token_ids[off]);
+                off += l;
+            }
+            let mut report = LatencyReport::default();
+            report.push(BlockLatency {
+                tokens_per_device: vec![1.0],
+                per_device: vec![1e-3],
+                waiting: 1e-3,
+                bottleneck: 0,
+            });
+            Ok(BatchResult {
+                next_tokens: next,
+                report,
+                compute_ms: 0.1,
+            })
+        }
+    }
+
+    /// Engine that always fails — error propagation test.
+    struct FailEngine;
+
+    impl BatchEngine for FailEngine {
+        fn run_batch(&mut self, _: &[i32], _: &[usize]) -> anyhow::Result<BatchResult> {
+            anyhow::bail!("boom")
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let h = spawn_router(|| Ok(EchoEngine), BatcherConfig::default());
+        let r = h
+            .infer(InferenceRequest {
+                token_ids: vec![7, 8, 9],
+            })
+            .unwrap();
+        assert_eq!(r.next_token, 7);
+        assert!((r.batch_latency_ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_requests_batched() {
+        let cfg = BatcherConfig {
+            max_tokens: 1000,
+            max_prompts: 64,
+            max_wait: Duration::from_millis(50),
+        };
+        let h = spawn_router(|| Ok(EchoEngine), cfg);
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(
+                h.infer_async(InferenceRequest {
+                    token_ids: vec![i, i],
+                })
+                .unwrap(),
+            );
+        }
+        let mut sizes = Vec::new();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.next_token, i as i32);
+            sizes.push(r.batch_size);
+        }
+        // at least some requests shared a batch
+        assert!(sizes.iter().any(|&s| s > 1), "no batching happened: {sizes:?}");
+    }
+
+    #[test]
+    fn engine_errors_propagate() {
+        let h = spawn_router(|| Ok(FailEngine), BatcherConfig::default());
+        let err = h
+            .infer(InferenceRequest { token_ids: vec![1] })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        // The router survives the failure and serves subsequent requests
+        // (FailEngine keeps failing, but responses keep coming).
+        let err2 = h
+            .infer(InferenceRequest { token_ids: vec![2] })
+            .unwrap_err();
+        assert!(err2.to_string().contains("engine failed"));
+    }
+
+    #[test]
+    fn requests_preserve_order_within_batch() {
+        let h = spawn_router(|| Ok(EchoEngine), BatcherConfig::default());
+        let rx1 = h.infer_async(InferenceRequest { token_ids: vec![1] }).unwrap();
+        let rx2 = h.infer_async(InferenceRequest { token_ids: vec![2] }).unwrap();
+        assert_eq!(rx1.recv().unwrap().unwrap().next_token, 1);
+        assert_eq!(rx2.recv().unwrap().unwrap().next_token, 2);
+    }
+}

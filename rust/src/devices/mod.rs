@@ -1,0 +1,186 @@
+//! Device fleet: the mobile devices hosting expert networks.
+//!
+//! Paper §II-B: each device is "equipped with at least one GPU" and runs
+//! the expert network(s) placed on it; device k hosts expert k of every
+//! MoE layer in the Section-V setup. The fleet tracks per-device compute
+//! capacity `C_k` (Eq. (7)), optional multiplicative compute jitter (the
+//! "variations in mobile device workloads" of §III-B), and an
+//! online/offline flag for failure-injection tests.
+
+use crate::config::DeviceConfig;
+use crate::util::Rng;
+
+/// Runtime state of one device.
+#[derive(Debug, Clone)]
+pub struct DeviceState {
+    pub cfg: DeviceConfig,
+    /// Device currently reachable; offline devices must receive no tokens.
+    pub online: bool,
+}
+
+/// The fleet of expert-hosting devices.
+pub struct Fleet {
+    devices: Vec<DeviceState>,
+    rng: Rng,
+}
+
+impl Fleet {
+    pub fn new(configs: &[DeviceConfig], seed: u64) -> Self {
+        Self {
+            devices: configs
+                .iter()
+                .map(|c| DeviceState {
+                    cfg: c.clone(),
+                    online: true,
+                })
+                .collect(),
+            rng: Rng::seed_from_u64(seed ^ 0x0dec_1ce5),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, k: usize) -> &DeviceState {
+        &self.devices[k]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DeviceState> {
+        self.devices.iter()
+    }
+
+    /// Mark a device offline (failure injection) or back online.
+    pub fn set_online(&mut self, k: usize, online: bool) {
+        self.devices[k].online = online;
+    }
+
+    pub fn online_mask(&self) -> Vec<bool> {
+        self.devices.iter().map(|d| d.online).collect()
+    }
+
+    pub fn n_online(&self) -> usize {
+        self.devices.iter().filter(|d| d.online).count()
+    }
+
+    /// Effective compute capacity for this block: `C_k` perturbed by the
+    /// configured jitter (clamped to stay positive). Offline devices
+    /// report zero capacity.
+    pub fn effective_flops(&mut self, k: usize) -> f64 {
+        let d = &self.devices[k];
+        if !d.online {
+            return 0.0;
+        }
+        if d.cfg.compute_jitter == 0.0 {
+            return d.cfg.compute_flops;
+        }
+        let z = self.rng.normal();
+        let d = &self.devices[k];
+        let factor = (1.0 + d.cfg.compute_jitter * z).max(0.2);
+        d.cfg.compute_flops * factor
+    }
+
+    /// Compute seconds per token for every device given `L_comp` FLOPs —
+    /// Eq. (7): `t_comp = L_comp / C_k`. Offline devices get `inf`.
+    pub fn t_comp_per_token(&mut self, l_comp_flops: f64) -> Vec<f64> {
+        (0..self.devices.len())
+            .map(|k| {
+                let c = self.effective_flops(k);
+                if c <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    l_comp_flops / c
+                }
+            })
+            .collect()
+    }
+
+    /// Deterministic (jitter-free, all-online assumed-capacity) variant
+    /// used by the paper-table harnesses.
+    pub fn t_comp_nominal(&self, l_comp_flops: f64) -> Vec<f64> {
+        self.devices
+            .iter()
+            .map(|d| {
+                if d.online {
+                    l_comp_flops / d.cfg.compute_flops
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn fleet() -> Fleet {
+        Fleet::new(&SystemConfig::paper_simulation().devices, 0)
+    }
+
+    #[test]
+    fn nominal_matches_eq7() {
+        let f = fleet();
+        let l = 1e9;
+        let t = f.t_comp_nominal(l);
+        for (k, d) in f.iter().enumerate() {
+            assert_eq!(t[k], l / d.cfg.compute_flops);
+        }
+    }
+
+    #[test]
+    fn zero_jitter_is_deterministic() {
+        let mut f = fleet();
+        let a = f.effective_flops(0);
+        let b = f.effective_flops(0);
+        assert_eq!(a, b);
+        assert_eq!(a, f.device(0).cfg.compute_flops);
+    }
+
+    #[test]
+    fn jitter_perturbs_but_stays_positive() {
+        let cfgs = SystemConfig::paper_testbed().devices;
+        let mut f = Fleet::new(&cfgs, 3);
+        let mut distinct = false;
+        let nominal = f.device(0).cfg.compute_flops;
+        let mut prev = f.effective_flops(0);
+        for _ in 0..100 {
+            let c = f.effective_flops(0);
+            assert!(c > 0.0);
+            if (c - prev).abs() > 1.0 {
+                distinct = true;
+            }
+            prev = c;
+        }
+        assert!(distinct, "jitter produced constant capacity {nominal}");
+    }
+
+    #[test]
+    fn offline_device_reports_zero_then_inf_latency() {
+        let mut f = fleet();
+        f.set_online(3, false);
+        assert_eq!(f.effective_flops(3), 0.0);
+        let t = f.t_comp_per_token(1e9);
+        assert!(t[3].is_infinite());
+        assert!(t[2].is_finite());
+        assert_eq!(f.n_online(), 7);
+        f.set_online(3, true);
+        assert_eq!(f.n_online(), 8);
+    }
+
+    #[test]
+    fn seeded_jitter_reproducible() {
+        let cfgs = SystemConfig::paper_testbed().devices;
+        let mut a = Fleet::new(&cfgs, 11);
+        let mut b = Fleet::new(&cfgs, 11);
+        for _ in 0..10 {
+            assert_eq!(a.effective_flops(2), b.effective_flops(2));
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Token-processing latency model — paper §III (Eqs. (4)–(11)).
+//!
+//! The model composes:
+//! * per-token communication latency `t_comm = L_comm/R_d + L_comm/R_u`
+//!   (Eq. (6)) — the token embedding crosses the air interface once each
+//!   way, with equal payload both directions (§III-A);
+//! * per-token computation latency `t_comp = L_comp / C_k` (Eq. (7));
+//! * per-device totals `t_k^i = q_k^i · t_{i,k}` (Eq. (10)) — every token
+//!   has the same size and FLOP count, so the device total is count ×
+//!   per-token latency;
+//! * the **attention waiting latency** `t^i = max_k t_k^i` (Eq. (11)) —
+//!   the next block's attention needs the full sequence, so the slowest
+//!   device gates the block boundary (Fig. 3).
+
+use crate::optim::solver::DeviceLink;
+use crate::wireless::rate::shannon_rate;
+
+/// Per-device, per-token latency vector for one MoE block — the
+/// `t_j^i = [t_{j,1}, …, t_{j,U}]` the selection policy consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenLatencies {
+    /// Seconds per token for each device (comm + comp), Eq. (8).
+    pub per_token: Vec<f64>,
+}
+
+impl TokenLatencies {
+    /// Evaluate Eq. (8) for every device at the given bandwidth split.
+    pub fn from_links(links: &[DeviceLink], bandwidth: &[f64]) -> Self {
+        assert_eq!(links.len(), bandwidth.len());
+        Self {
+            per_token: links
+                .iter()
+                .zip(bandwidth)
+                .map(|(l, &b)| l.t_per_token(b))
+                .collect(),
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.per_token.len()
+    }
+}
+
+/// Communication-only per-token latency, Eq. (6).
+pub fn t_comm_per_token(
+    l_comm_bits: f64,
+    b_hz: f64,
+    p_down: f64,
+    p_up: f64,
+    g_down: f64,
+    g_up: f64,
+    n0: f64,
+) -> f64 {
+    let rd = shannon_rate(b_hz, p_down, g_down, n0);
+    let ru = shannon_rate(b_hz, p_up, g_up, n0);
+    if rd <= 0.0 || ru <= 0.0 {
+        return f64::INFINITY;
+    }
+    l_comm_bits / rd + l_comm_bits / ru
+}
+
+/// Latency outcome of one MoE block under a given selection + allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockLatency {
+    /// Tokens assigned per device, `q_k^i` (Eq. (9)).
+    pub tokens_per_device: Vec<f64>,
+    /// Device completion times `t_k^i` (Eq. (10)).
+    pub per_device: Vec<f64>,
+    /// Attention waiting latency `t^i = max_k t_k^i` (Eq. (11)).
+    pub waiting: f64,
+    /// Index of the bottleneck device (argmax).
+    pub bottleneck: usize,
+}
+
+/// Compute Eqs. (9)–(11) for one block.
+///
+/// `counts[k]` is the number of tokens routed to device k; devices with
+/// zero tokens contribute zero latency even if their per-token latency is
+/// infinite (offline device with no load is harmless).
+pub fn block_latency(lat: &TokenLatencies, counts: &[f64]) -> BlockLatency {
+    assert_eq!(lat.n_devices(), counts.len(), "device arity mismatch");
+    let per_device: Vec<f64> = counts
+        .iter()
+        .zip(&lat.per_token)
+        .map(|(&q, &t)| if q > 0.0 { q * t } else { 0.0 })
+        .collect();
+    let (bottleneck, waiting) = per_device
+        .iter()
+        .copied()
+        .enumerate()
+        .fold((0usize, 0.0f64), |(bi, bv), (i, v)| {
+            if v > bv {
+                (i, v)
+            } else {
+                (bi, bv)
+            }
+        });
+    BlockLatency {
+        tokens_per_device: counts.to_vec(),
+        per_device,
+        waiting,
+        bottleneck,
+    }
+}
+
+/// Count tokens per device from a selection mask (J × U, row-major).
+/// `mask[j][k]` true ⇔ token j routed to device k — the `q_{j,k}^i` of the
+/// paper; returns `q_k^i = Σ_j q_{j,k}^i` (Eq. (9)).
+pub fn tokens_per_device(mask: &[Vec<bool>], n_devices: usize) -> Vec<f64> {
+    let mut counts = vec![0.0; n_devices];
+    for row in mask {
+        debug_assert_eq!(row.len(), n_devices);
+        for (k, &sel) in row.iter().enumerate() {
+            if sel {
+                counts[k] += 1.0;
+            }
+        }
+    }
+    counts
+}
+
+/// End-to-end latency report across all MoE blocks of one batch.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyReport {
+    pub per_block: Vec<BlockLatency>,
+}
+
+impl LatencyReport {
+    /// Total attention waiting latency `Σ_i t^i` — the P1 objective.
+    pub fn total_waiting(&self) -> f64 {
+        self.per_block.iter().map(|b| b.waiting).sum()
+    }
+
+    /// Total tokens transmitted (sum over blocks and devices) — the
+    /// network load the expert-selection policy reduces.
+    pub fn total_token_transmissions(&self) -> f64 {
+        self.per_block
+            .iter()
+            .map(|b| b.tokens_per_device.iter().sum::<f64>())
+            .sum()
+    }
+
+    pub fn push(&mut self, b: BlockLatency) {
+        self.per_block.push(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lat(v: &[f64]) -> TokenLatencies {
+        TokenLatencies {
+            per_token: v.to_vec(),
+        }
+    }
+
+    #[test]
+    fn eq6_comm_latency_symmetric_payload() {
+        // downlink and uplink carry the same L_comm (same tensor shape)
+        let t = t_comm_per_token(65536.0, 12.5e6, 10.0, 0.2, 1e-8, 1e-8, 3.98e-21);
+        assert!(t.is_finite() && t > 0.0);
+        // uplink slower than downlink (0.2 W vs 10 W) ⇒ total > 2× downlink-only
+        let rd = shannon_rate(12.5e6, 10.0, 1e-8, 3.98e-21);
+        assert!(t > 2.0 * 65536.0 / rd);
+    }
+
+    #[test]
+    fn eq10_scales_with_count() {
+        let l = lat(&[2e-3, 1e-3]);
+        let b = block_latency(&l, &[10.0, 50.0]);
+        assert_eq!(b.per_device[0], 10.0 * 2e-3);
+        assert_eq!(b.per_device[1], 50.0 * 1e-3);
+    }
+
+    #[test]
+    fn eq11_max_is_waiting() {
+        let l = lat(&[2e-3, 1e-3, 5e-3]);
+        let b = block_latency(&l, &[10.0, 10.0, 10.0]);
+        assert_eq!(b.waiting, 0.05);
+        assert_eq!(b.bottleneck, 2);
+    }
+
+    #[test]
+    fn zero_count_ignores_infinite_latency() {
+        let l = lat(&[1e-3, f64::INFINITY]);
+        let b = block_latency(&l, &[10.0, 0.0]);
+        assert_eq!(b.per_device[1], 0.0);
+        assert_eq!(b.waiting, 0.01);
+        assert_eq!(b.bottleneck, 0);
+    }
+
+    #[test]
+    fn empty_block_zero_waiting() {
+        let l = lat(&[1e-3, 2e-3]);
+        let b = block_latency(&l, &[0.0, 0.0]);
+        assert_eq!(b.waiting, 0.0);
+    }
+
+    #[test]
+    fn mask_counting_matches_eq9() {
+        let mask = vec![
+            vec![true, false, true],
+            vec![true, true, false],
+            vec![false, false, true],
+        ];
+        assert_eq!(tokens_per_device(&mask, 3), vec![2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn report_total_is_sum_of_maxima() {
+        let l = lat(&[1e-3, 2e-3]);
+        let mut r = LatencyReport::default();
+        r.push(block_latency(&l, &[5.0, 5.0])); // waiting = 0.01
+        r.push(block_latency(&l, &[10.0, 1.0])); // waiting = 0.01
+        assert!((r.total_waiting() - 0.02).abs() < 1e-12);
+        assert_eq!(r.total_token_transmissions(), 21.0);
+    }
+}

@@ -1,0 +1,57 @@
+//! # WDMoE — Wireless Distributed Mixture of Experts for LLMs
+//!
+//! Rust coordinator (Layer 3) of the three-layer reproduction of
+//! *"WDMoE: Wireless Distributed Mixture of Experts for Large Language
+//! Models"* (Xue et al., 2024).
+//!
+//! The paper deploys an MoE LLM across a wireless edge network: the
+//! attention mechanism and the gating network run on the MEC server at the
+//! base station (BS), while each MoE layer's expert FFNs are distributed
+//! over mobile devices reached through fading wireless links. This crate
+//! implements the paper's system contribution:
+//!
+//! * [`wireless`] — the channel substrate: 3GPP-style path loss, Rayleigh
+//!   block fading, Shannon rates (paper Eqs. (2)–(3)), and bandwidth
+//!   allocators (uniform and the convex-optimal solution of problem P3).
+//! * [`devices`] — the heterogeneous device fleet (compute capacity `C_k`,
+//!   expert placement, jitter/failure injection).
+//! * [`latency`] — the token-latency model: communication (Eq. (6)),
+//!   computation (Eq. (7)), and the *attention waiting latency*
+//!   `t^i = max_k q_k^i t_{i,k}` (Eqs. (9)–(11)).
+//! * [`moe`] — gate-weight handling, the weight-to-latency ratio
+//!   (WLR, Eq. (12)) and the expert-selection policies: vanilla top-k
+//!   (the Mixtral baseline), the paper's Algorithm 1 (cosine-similarity
+//!   threshold, WLR-guarded), and Algorithm 2 (the hardware-testbed
+//!   history-driven policy).
+//! * [`coordinator`] — request router, dynamic batcher, and the
+//!   block-by-block dispatch loop that walks tokens through
+//!   attention → gate → (devices) experts → combine.
+//! * [`runtime`] — PJRT execution of the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text → compile once → execute on the
+//!   request path; python never runs at serving time).
+//! * [`workload`] — synthetic benchmark workload generators calibrated to
+//!   the paper's eight evaluation datasets.
+//! * [`testbed`] — the Section-VI hardware-testbed simulation (measured
+//!   latency history, Algorithm 2, WiFi-like channel process).
+//! * [`metrics`] — latency recording and the table/figure formatting used
+//!   by the `repro` binary.
+//!
+//! See `DESIGN.md` for the per-experiment index and substitution notes,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod util;
+pub mod devices;
+pub mod latency;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod testbed;
+pub mod wireless;
+pub mod workload;
+
+pub use config::SystemConfig;

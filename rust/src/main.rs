@@ -1,0 +1,244 @@
+//! `repro` — the WDMoE command-line entry point.
+//!
+//! ```text
+//! repro [--out DIR] [--artifacts DIR] [--config FILE.json] [--quick]
+//!       [--seed N] <command> [command options]
+//!
+//! commands:
+//!   serve [--requests N] [--benchmark NAME] [--policy P]
+//!                 end-to-end serving: PJRT compute + wireless sim
+//!   config [simulation|testbed|serving]
+//!                 print a preset SystemConfig as JSON
+//!   fig5 fig6 fig7 fig8 fig10 table1 table2 table3 table4
+//!                 regenerate one paper table/figure
+//!   all           regenerate everything
+//! ```
+//!
+//! (Arg parsing is hand-rolled; clap is unavailable in the offline build
+//! environment — DESIGN.md §Substitutions.)
+
+use std::path::PathBuf;
+use wdmoe::config::{PolicyKind, SystemConfig};
+use wdmoe::coordinator::batcher::BatcherConfig;
+use wdmoe::coordinator::router::{spawn_router, InferenceRequest};
+use wdmoe::model::{ServingEngine, ServingModel};
+use wdmoe::moe::selection::make_policy;
+use wdmoe::repro::{self, ReproContext};
+use wdmoe::wireless::bandwidth::{BandwidthAllocator, OptimalAllocator, UniformAllocator};
+use wdmoe::workload::{Benchmark, WorkloadGen};
+
+const USAGE: &str = "\
+repro — WDMoE: Wireless Distributed Mixture of Experts (reproduction CLI)
+
+USAGE: repro [GLOBAL OPTIONS] <COMMAND> [COMMAND OPTIONS]
+
+GLOBAL OPTIONS:
+  --out DIR          output directory for CSVs        [results]
+  --artifacts DIR    AOT artifacts (make artifacts)   [artifacts]
+  --config FILE      SystemConfig JSON override
+  --quick            coarser sweeps, single batch per point
+  --seed N           base RNG seed                    [0]
+
+COMMANDS:
+  serve [--requests N] [--benchmark NAME] [--policy vanilla|wdmoe|testbed|random]
+  config [simulation|testbed|serving]
+  fig5 | fig6 | fig7 | fig8 | fig10
+  table1 | table2 | table3 | table4
+  ablate        design-decision ablations (allocation granularity, bias, theta)
+  all
+";
+
+struct Args {
+    out: PathBuf,
+    artifacts: PathBuf,
+    config: Option<PathBuf>,
+    quick: bool,
+    seed: u64,
+    cmd: String,
+    rest: Vec<String>,
+}
+
+fn parse_args() -> anyhow::Result<Args> {
+    let mut out = PathBuf::from("results");
+    let mut artifacts = PathBuf::from("artifacts");
+    let mut config = None;
+    let mut quick = false;
+    let mut seed = 0u64;
+    let mut cmd = None;
+    let mut rest = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut take = |name: &str| -> anyhow::Result<String> {
+            it.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
+        };
+        match a.as_str() {
+            "--out" => out = PathBuf::from(take("--out")?),
+            "--artifacts" => artifacts = PathBuf::from(take("--artifacts")?),
+            "--config" => config = Some(PathBuf::from(take("--config")?)),
+            "--quick" => quick = true,
+            "--seed" => seed = take("--seed")?.parse()?,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other if cmd.is_none() && !other.starts_with('-') => cmd = Some(other.to_string()),
+            other if cmd.is_some() => rest.push(other.to_string()),
+            other => anyhow::bail!("unknown option {other}\n{USAGE}"),
+        }
+    }
+    Ok(Args {
+        out,
+        artifacts,
+        config,
+        quick,
+        seed,
+        cmd: cmd.ok_or_else(|| anyhow::anyhow!("no command given\n{USAGE}"))?,
+        rest,
+    })
+}
+
+fn rest_opt(rest: &[String], key: &str) -> Option<String> {
+    rest.iter()
+        .position(|a| a == key)
+        .and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
+    Ok(match s.to_lowercase().as_str() {
+        "vanilla" | "topk" | "mixtral" => PolicyKind::VanillaTopK,
+        "wdmoe" | "alg1" => PolicyKind::Wdmoe,
+        "testbed" | "alg2" => PolicyKind::Testbed,
+        "random" => PolicyKind::Random,
+        other => anyhow::bail!("unknown policy {other}"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args()?;
+    let ctx = ReproContext {
+        out_dir: args.out.clone(),
+        artifacts_dir: Some(args.artifacts.clone()),
+        quick: args.quick,
+        seed: args.seed,
+    };
+    match args.cmd.as_str() {
+        "config" => {
+            let preset = args.rest.first().map(|s| s.as_str()).unwrap_or("simulation");
+            let cfg = match preset {
+                "simulation" => SystemConfig::paper_simulation(),
+                "testbed" => SystemConfig::paper_testbed(),
+                "serving" => SystemConfig::artifact_serving(),
+                other => anyhow::bail!("unknown preset {other}"),
+            };
+            println!("{}", cfg.to_json().to_string());
+        }
+        "serve" => {
+            let requests: usize = rest_opt(&args.rest, "--requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(16);
+            let bench_name =
+                rest_opt(&args.rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
+            let bench = Benchmark::from_name(&bench_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
+            let kind = parse_policy(
+                &rest_opt(&args.rest, "--policy").unwrap_or_else(|| "wdmoe".to_string()),
+            )?;
+            let cfg = match &args.config {
+                Some(p) => SystemConfig::from_json_file(p)?,
+                None => SystemConfig::artifact_serving(),
+            };
+            serve(&args.artifacts, cfg, bench, kind, requests, args.seed)?;
+        }
+        "fig5" => drop(repro::fig5(&ctx)?),
+        "fig6" => drop(repro::fig6(&ctx)?),
+        "fig7" => drop(repro::fig7(&ctx)?),
+        "fig8" => drop(repro::fig8(&ctx)?),
+        "fig10" => drop(repro::fig10(&ctx)?),
+        "table1" => drop(repro::capability::table1(&ctx)?),
+        "table2" => drop(repro::table2(&ctx)?),
+        "table3" => drop(repro::capability::table3(&ctx)?),
+        "table4" => drop(repro::table4(&ctx)?),
+        "ablate" => repro::ablations::all(&ctx)?,
+        "all" => repro::all(&ctx)?,
+        other => anyhow::bail!("unknown command {other}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// End-to-end serving: router + batcher + PJRT model + wireless sim.
+fn serve(
+    artifacts: &PathBuf,
+    cfg: SystemConfig,
+    bench: Benchmark,
+    kind: PolicyKind,
+    requests: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let n_dev = cfg.n_devices();
+    let policy = make_policy(kind, &cfg.policy, n_dev, seed);
+    let allocator: Box<dyn BandwidthAllocator> = match kind {
+        PolicyKind::VanillaTopK | PolicyKind::Random => Box::new(UniformAllocator),
+        _ => Box::new(OptimalAllocator::default()),
+    };
+    // The AOT seq_len/vocab come from the manifest the model will load.
+    let manifest = wdmoe::runtime::Manifest::load(artifacts)?;
+    let seq_len = manifest.config.seq_len;
+    let vocab = manifest.config.vocab;
+    println!(
+        "serving {} ({:.1}M params), policy={}, {} devices",
+        artifacts.display(),
+        manifest.config.total_params as f64 / 1e6,
+        kind.as_str(),
+        n_dev
+    );
+    let artifacts_cl = artifacts.clone();
+    let handle = spawn_router(
+        move || {
+            let model = ServingModel::load(&artifacts_cl, cfg)?;
+            Ok(ServingEngine {
+                model,
+                policy,
+                allocator,
+            })
+        },
+        BatcherConfig {
+            max_tokens: seq_len,
+            max_prompts: 64,
+            max_wait: std::time::Duration::from_millis(10),
+        },
+    );
+    let mut wl = WorkloadGen::new(seed, vocab);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..requests {
+        let batch = wl.batch(bench);
+        let len = batch.prompt_lens[0].min(seq_len);
+        let ids = batch.token_ids[..len].to_vec();
+        rxs.push(handle.infer_async(InferenceRequest { token_ids: ids })?);
+    }
+    let mut sim_lat = wdmoe::metrics::Summary::new();
+    let mut compute = wdmoe::metrics::Summary::new();
+    for rx in rxs {
+        let r = rx.recv()??;
+        sim_lat.record(r.batch_latency_ms);
+        compute.record(r.batch_compute_ms);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests in {wall:.2}s wall ({:.1} req/s)",
+        requests as f64 / wall
+    );
+    println!(
+        "simulated wireless latency/batch: mean {:.2} ms  p50 {:.2}  p95 {:.2}",
+        sim_lat.mean(),
+        sim_lat.percentile(50.0),
+        sim_lat.percentile(95.0)
+    );
+    println!(
+        "PJRT compute/batch: mean {:.1} ms  p95 {:.1} ms",
+        compute.mean(),
+        compute.percentile(95.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,220 @@
+//! Metrics: latency recording, summary statistics, and the table/figure
+//! formatting shared by the `repro` harnesses.
+
+/// Online summary of a scalar series (latencies, loads, …).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.values.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Percentile with linear interpolation, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (p / 100.0) * (v.len() as f64 - 1.0);
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+        }
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+/// A rendered results table: the `repro` harness prints these in the same
+/// row/column layout as the paper and also dumps CSV next to them.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Formatting precision per value.
+    pub precision: usize,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            precision: 1,
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) -> &mut Self {
+        assert_eq!(values.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push((label.to_string(), values));
+        self
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        let col_w = self
+            .columns
+            .iter()
+            .map(|c| c.len().max(12))
+            .collect::<Vec<_>>();
+        out.push_str(&format!("{:label_w$}", ""));
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            out.push_str(&format!("{c:>w$}  ", w = w));
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{label:label_w$}"));
+            for (v, w) in vals.iter().zip(&col_w) {
+                out.push_str(&format!("{v:>w$.p$}  ", w = w, p = self.precision));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("label,{}\n", self.columns.join(",")));
+        for (label, vals) in &self.rows {
+            let vs: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&format!("{label},{}\n", vs.join(",")));
+        }
+        out
+    }
+
+    /// Write CSV into `dir/<slug>.csv` (slug from the title).
+    pub fn write_csv(&self, dir: &std::path::Path) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = dir.join(format!("{slug}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_stats() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.record(v);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.count(), 4);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        for v in [10.0, 20.0, 30.0, 40.0] {
+            s.record(v);
+        }
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 40.0);
+        assert_eq!(s.percentile(50.0), 25.0);
+        assert_eq!(s.percentile(75.0), 32.5);
+    }
+
+    #[test]
+    fn empty_summary_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("Latency/batch (ms)", &["ARC-E", "ARC-C"]);
+        t.row("Mixtral-based", vec![532.8, 1625.0]);
+        t.row("WDMoE", vec![468.3, 1228.0]);
+        let text = t.render();
+        assert!(text.contains("Mixtral-based"));
+        assert!(text.contains("ARC-C"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("label,ARC-E,ARC-C\n"));
+        assert!(csv.contains("WDMoE,468.3,1228\n"));
+    }
+
+    #[test]
+    fn table_csv_roundtrip_to_disk() {
+        let dir = crate::util::temp_dir("csv");
+        let mut t = Table::new("Fig 5", &["x"]);
+        t.row("r", vec![1.0]);
+        let p = t.write_csv(&dir).unwrap();
+        assert!(p.exists());
+        assert!(std::fs::read_to_string(p).unwrap().contains("r,1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("x", vec![1.0]);
+    }
+}

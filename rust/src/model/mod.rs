@@ -1,0 +1,487 @@
+//! The serving model: orchestrates AOT artifacts through the WDMoE
+//! deployment split.
+//!
+//! Per MoE block the coordinator executes exactly the paper's data flow
+//! (Fig. 4): **attention at the BS** → **gate at the BS** → expert
+//! selection (policy) → **expert FFNs on the devices** (simulated air
+//! interface, real PJRT compute) → **combine at the BS** (Eq. (1)).
+//! Simulated wireless latency (what the paper measures) and wall-clock
+//! compute time (CPU PJRT, reported separately) never mix.
+
+use crate::config::SystemConfig;
+use crate::coordinator::router::{BatchEngine, BatchResult};
+use crate::devices::Fleet;
+use crate::latency::{block_latency, LatencyReport, TokenLatencies};
+use crate::moe::selection::{SelectionContext, SelectionPolicy};
+use crate::moe::{GateWeights, Selection};
+use crate::optim::PerBlockLoad;
+use crate::runtime::Runtime;
+use crate::wireless::bandwidth::{AllocationInput, BandwidthAllocator};
+use crate::wireless::ChannelSimulator;
+use std::path::Path;
+use std::time::Instant;
+
+/// Cached per-block weight literals (built once at load).
+struct BlockWeights {
+    attn: [xla::Literal; 5],    // gamma, wq, wk, wv, wo
+    gate: [xla::Literal; 2],    // gamma, wg
+    experts: Vec<[xla::Literal; 3]>, // per expert: w1, w3, w2
+    /// Stacked expert weights [n,m,mh]×2 + [n,mh,m] for the fused
+    /// `experts_stacked` entry point (one PJRT call per block).
+    experts_stacked: Option<[xla::Literal; 3]>,
+}
+
+/// Result of one forward pass.
+pub struct ForwardOutcome {
+    /// Row-major logits `[seq_len, vocab]`.
+    pub logits: Vec<f32>,
+    /// Simulated wireless latency (the paper's metric).
+    pub report: LatencyReport,
+    /// Final bandwidth allocation.
+    pub bandwidth: Vec<f64>,
+    /// Per-block selections.
+    pub selections: Vec<Selection>,
+    /// Wall-clock PJRT compute milliseconds.
+    pub compute_ms: f64,
+}
+
+/// The PJRT-backed WDMoE model.
+pub struct ServingModel {
+    rt: Runtime,
+    pub cfg: SystemConfig,
+    channel: ChannelSimulator,
+    fleet: Fleet,
+    emb: xla::Literal,
+    final_gamma: xla::Literal,
+    blocks: Vec<BlockWeights>,
+    /// Use the per-expert path and skip experts with no routed tokens.
+    /// Default false: the fused `experts_stacked` call is faster on CPU
+    /// PJRT (one launch, XLA-internal parallelism) even though it always
+    /// computes all n experts; identical output because combine masks.
+    pub skip_unrouted_experts: bool,
+}
+
+impl ServingModel {
+    /// Load artifacts and bind them to a wireless scenario. The model
+    /// dimensions of `cfg` are overwritten from the manifest so the
+    /// latency model (`L_comm`, `L_comp`) matches what actually executes.
+    pub fn load(artifacts_dir: &Path, mut cfg: SystemConfig) -> anyhow::Result<Self> {
+        let rt = Runtime::load(artifacts_dir)?;
+        let m = &rt.manifest.config;
+        cfg.model.vocab = m.vocab;
+        cfg.model.d_model = m.d_model;
+        cfg.model.d_hidden = m.d_hidden;
+        cfg.model.n_heads = m.n_heads;
+        cfg.model.n_blocks = m.n_blocks;
+        cfg.model.seq_len = m.seq_len;
+        cfg.model.top_k = m.top_k;
+        anyhow::ensure!(
+            m.n_experts == cfg.devices.len(),
+            "artifact has {} experts but config has {} devices",
+            m.n_experts,
+            cfg.devices.len()
+        );
+        cfg.model.n_experts = m.n_experts;
+        cfg.validate()?;
+
+        let emb = rt.weight_literal("emb")?;
+        let final_gamma = rt.weight_literal("final.gamma")?;
+        let mut blocks = Vec::with_capacity(m.n_blocks);
+        for i in 0..m.n_blocks {
+            let attn = [
+                rt.weight_literal(&format!("blk{i}.attn.gamma"))?,
+                rt.weight_literal(&format!("blk{i}.attn.wq"))?,
+                rt.weight_literal(&format!("blk{i}.attn.wk"))?,
+                rt.weight_literal(&format!("blk{i}.attn.wv"))?,
+                rt.weight_literal(&format!("blk{i}.attn.wo"))?,
+            ];
+            let gate = [
+                rt.weight_literal(&format!("blk{i}.moe.gamma"))?,
+                rt.weight_literal(&format!("blk{i}.moe.wg"))?,
+            ];
+            let experts = (0..m.n_experts)
+                .map(|e| {
+                    Ok([
+                        rt.weight_literal(&format!("blk{i}.expert{e}.w1"))?,
+                        rt.weight_literal(&format!("blk{i}.expert{e}.w3"))?,
+                        rt.weight_literal(&format!("blk{i}.expert{e}.w2"))?,
+                    ])
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            // Stacked weights for the fused path (when the artifact set
+            // includes it — older artifact dirs may not).
+            let experts_stacked = if rt.manifest.artifacts.contains_key("experts_stacked") {
+                let stack = |suffix: &str, a: usize, b: usize| -> anyhow::Result<xla::Literal> {
+                    let mut flat = Vec::with_capacity(m.n_experts * a * b);
+                    for e in 0..m.n_experts {
+                        let (_, data) = rt.weights.get(&format!("blk{i}.expert{e}.{suffix}"))?;
+                        flat.extend_from_slice(data);
+                    }
+                    Runtime::literal_f32(&flat, &[m.n_experts, a, b])
+                };
+                Some([
+                    stack("w1", m.d_model, m.d_hidden)?,
+                    stack("w3", m.d_model, m.d_hidden)?,
+                    stack("w2", m.d_hidden, m.d_model)?,
+                ])
+            } else {
+                None
+            };
+            blocks.push(BlockWeights { attn, gate, experts, experts_stacked });
+        }
+        let channel = ChannelSimulator::new(&cfg.channel, &cfg.devices, cfg.seed);
+        let fleet = Fleet::new(&cfg.devices, cfg.seed);
+        Ok(Self {
+            rt,
+            cfg,
+            channel,
+            fleet,
+            emb,
+            final_gamma,
+            blocks,
+            skip_unrouted_experts: true, // fused path measured slower (EXPERIMENTS.md §Perf)
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.cfg.model.seq_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.model.vocab
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Pad (with 0) or truncate ids to the AOT sequence length.
+    pub fn pad_ids(&self, ids: &[i32]) -> Vec<i32> {
+        let j = self.seq_len();
+        let mut v = ids.to_vec();
+        v.truncate(j);
+        v.resize(j, 0);
+        v
+    }
+
+    /// One forward pass under a selection policy + bandwidth allocator.
+    pub fn forward(
+        &mut self,
+        token_ids: &[i32],
+        policy: &mut dyn SelectionPolicy,
+        allocator: &dyn BandwidthAllocator,
+    ) -> anyhow::Result<ForwardOutcome> {
+        let t0 = Instant::now();
+        let j = self.seq_len();
+        let md = self.cfg.model.clone();
+        let u = md.n_experts;
+        let n_active = token_ids.len().min(j).max(1);
+
+        // Wireless context (mean channel; see coordinator::sim for fading).
+        let realization = self.channel.expected_realization();
+        let l_comp = md.l_comp_flops(self.cfg.activation_eta);
+        let l_comm = md.l_comm_bits(self.cfg.channel.quant_bits);
+        let t_comp = self.fleet.t_comp_nominal(l_comp);
+        let online = self.fleet.online_mask();
+        let total_bw = self.cfg.channel.total_bandwidth_hz;
+        let uniform_bw = vec![total_bw / u as f64; u];
+        let empty: Vec<PerBlockLoad> = vec![];
+        let input = AllocationInput {
+            channel_cfg: &self.cfg.channel,
+            realization: &realization,
+            loads: &empty,
+            t_comp_per_token: &t_comp,
+            l_comm_bits: l_comm,
+        };
+        let links = input.links();
+        let est = TokenLatencies::from_links(&links, &uniform_bw);
+
+        // Embed.
+        let ids = self.pad_ids(token_ids);
+        let ids_l = Runtime::literal_i32(&ids, &[j])?;
+        let mut x = self.rt.execute("embed", &[&ids_l, &self.emb])?;
+
+        let mut selections: Vec<Selection> = Vec::with_capacity(md.n_blocks);
+        let mut loads: Vec<PerBlockLoad> = Vec::with_capacity(md.n_blocks);
+
+        for blk in &self.blocks {
+            // Attention at the BS.
+            let h = self.rt.execute(
+                "attention",
+                &[
+                    &x,
+                    &blk.attn[0],
+                    &blk.attn[1],
+                    &blk.attn[2],
+                    &blk.attn[3],
+                    &blk.attn[4],
+                ],
+            )?;
+
+            // Gate at the BS.
+            let g = self
+                .rt
+                .execute("gate", &[&h, &blk.gate[0], &blk.gate[1]])?;
+            let gflat = g.to_vec::<f32>()?;
+            // Only the real (unpadded) tokens participate in routing
+            // decisions; padded tokens ride along with expert 0 at zero
+            // weight (they are masked out of every latency count).
+            let gate_w = GateWeights::from_flat(&gflat, j, u);
+            let ctx = SelectionContext {
+                latencies: &est,
+                top_k: md.top_k,
+                online: &online,
+            };
+            let mut sel = policy.select(&gate_w, &ctx);
+            // Zero out padding rows so they don't count as traffic.
+            for row in n_active..j {
+                for k in 0..u {
+                    sel.mask[row][k] = false;
+                    sel.weights[row][k] = 0.0;
+                }
+            }
+
+            // Expert FFNs on the devices. Fused path: all n experts in
+            // one PJRT call (XLA parallelises internally; 1 roundtrip vs
+            // n). The per-expert path remains for selective execution
+            // (`skip_unrouted_experts`) and artifact sets without the
+            // fused entry point.
+            let counts = sel.tokens_per_device();
+            let s_l = match (&blk.experts_stacked, self.skip_unrouted_experts) {
+                (Some(st), false) => self.rt.execute(
+                    "experts_stacked",
+                    &[&h, &blk.gate[0], &st[0], &st[1], &st[2]],
+                )?,
+                _ => {
+                    let mut stacked = vec![0.0f32; u * j * md.d_model];
+                    for (e, ew) in blk.experts.iter().enumerate() {
+                        if self.skip_unrouted_experts && counts[e] == 0.0 {
+                            continue; // masked to zero in combine anyway
+                        }
+                        let y = self.rt.execute(
+                            "expert_normed",
+                            &[&h, &blk.gate[0], &ew[0], &ew[1], &ew[2]],
+                        )?;
+                        let yv = y.to_vec::<f32>()?;
+                        stacked[e * j * md.d_model..(e + 1) * j * md.d_model]
+                            .copy_from_slice(&yv);
+                    }
+                    Runtime::literal_f32(&stacked, &[u, j, md.d_model])?
+                }
+            };
+
+            // Combine at the BS (padding rows keep mask 0 → residual only).
+            let w_l = Runtime::literal_f32(&sel.weights_flat_f32(), &[j, u])?;
+            let m_l = Runtime::literal_f32(&sel.mask_flat_f32(), &[j, u])?;
+            x = self.rt.execute("combine", &[&h, &w_l, &m_l, &s_l])?;
+
+            loads.push(PerBlockLoad { tokens: counts });
+            selections.push(sel);
+            self.channel.advance_block();
+        }
+
+        // LM head.
+        let logits_l = self
+            .rt
+            .execute("lm_head", &[&x, &self.final_gamma, &self.emb])?;
+        let logits = logits_l.to_vec::<f32>()?;
+
+        // Per-block bandwidth allocation + latency accounting (paper
+        // Eqs. (9)–(11); Fig. 4's dynamic re-allocation each block).
+        let mut report = LatencyReport::default();
+        let mut bandwidth = vec![0.0; u];
+        for load in &loads {
+            let block_loads = [load.clone()];
+            let input = AllocationInput {
+                channel_cfg: &self.cfg.channel,
+                realization: &realization,
+                loads: &block_loads,
+                t_comp_per_token: &t_comp,
+                l_comm_bits: l_comm,
+            };
+            let bw = allocator.allocate(&input, total_bw);
+            let final_lat = TokenLatencies::from_links(&links, &bw);
+            report.push(block_latency(&final_lat, &load.tokens));
+            for k in 0..u {
+                if load.tokens[k] > 0.0 {
+                    policy.observe(k, final_lat.per_token[k]);
+                }
+                bandwidth[k] += bw[k] / loads.len().max(1) as f64;
+            }
+        }
+
+        Ok(ForwardOutcome {
+            logits,
+            report,
+            bandwidth,
+            selections,
+            compute_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Argmax over the vocab at one sequence position.
+    pub fn argmax_at(&self, logits: &[f32], pos: usize) -> i32 {
+        let v = self.vocab();
+        let row = &logits[pos * v..(pos + 1) * v];
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+}
+
+/// A [`BatchEngine`] binding a model to a fixed policy + allocator so the
+/// router can drive it.
+pub struct ServingEngine {
+    pub model: ServingModel,
+    pub policy: Box<dyn SelectionPolicy>,
+    pub allocator: Box<dyn BandwidthAllocator>,
+}
+
+impl BatchEngine for ServingEngine {
+    fn run_batch(&mut self, token_ids: &[i32], prompt_lens: &[usize]) -> anyhow::Result<BatchResult> {
+        let out = self
+            .model
+            .forward(token_ids, self.policy.as_mut(), self.allocator.as_ref())?;
+        // Next-token prediction at each prompt's final position.
+        let mut next = Vec::with_capacity(prompt_lens.len());
+        let mut off = 0usize;
+        for &l in prompt_lens {
+            let pos = (off + l).min(self.model.seq_len()) - 1;
+            next.push(self.model.argmax_at(&out.logits, pos));
+            off += l;
+        }
+        Ok(BatchResult {
+            next_tokens: next,
+            report: out.report,
+            compute_ms: out.compute_ms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyKind, SystemConfig};
+    use crate::moe::selection::make_policy;
+    use crate::wireless::bandwidth::{OptimalAllocator, UniformAllocator};
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn model() -> Option<ServingModel> {
+        let dir = artifacts_dir()?;
+        Some(ServingModel::load(&dir, SystemConfig::artifact_serving()).unwrap())
+    }
+
+    fn ids(n: usize, seed: u64) -> Vec<i32> {
+        (0..n).map(|i| ((i as u64 * 2654435761 + seed * 97) % 2048) as i32).collect()
+    }
+
+    #[test]
+    fn forward_produces_finite_logits_and_latency() {
+        let Some(mut m) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut policy = make_policy(PolicyKind::Wdmoe, &m.cfg.policy, 8, 0);
+        let out = m
+            .forward(&ids(100, 1), policy.as_mut(), &OptimalAllocator::default())
+            .unwrap();
+        assert_eq!(out.logits.len(), m.seq_len() * m.vocab());
+        assert!(out.logits.iter().all(|f| f.is_finite()));
+        assert!(out.report.total_waiting() > 0.0);
+        assert_eq!(out.selections.len(), m.cfg.model.n_blocks);
+        assert_eq!(out.bandwidth.len(), 8);
+    }
+
+    #[test]
+    fn skip_unrouted_experts_is_output_invariant() {
+        let Some(mut m) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let toks = ids(64, 2);
+        m.skip_unrouted_experts = true;
+        let mut p1 = make_policy(PolicyKind::VanillaTopK, &m.cfg.policy, 8, 0);
+        let a = m.forward(&toks, p1.as_mut(), &UniformAllocator).unwrap();
+        m.skip_unrouted_experts = false;
+        let mut p2 = make_policy(PolicyKind::VanillaTopK, &m.cfg.policy, 8, 0);
+        let b = m.forward(&toks, p2.as_mut(), &UniformAllocator).unwrap();
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            assert!((x - y).abs() < 1e-4, "skip optimisation changed output");
+        }
+    }
+
+    #[test]
+    fn policies_agree_on_argmax_mostly() {
+        // The paper's robustness premise, measured on the real model:
+        // WDMoE selection vs vanilla top-2 should agree on most argmax
+        // next-token predictions.
+        let Some(mut m) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let toks = ids(200, 3);
+        let mut pv = make_policy(PolicyKind::VanillaTopK, &m.cfg.policy, 8, 0);
+        let base = m.forward(&toks, pv.as_mut(), &UniformAllocator).unwrap();
+        let mut pw = make_policy(PolicyKind::Wdmoe, &m.cfg.policy, 8, 0);
+        let wd = m.forward(&toks, pw.as_mut(), &OptimalAllocator::default()).unwrap();
+        let agree = (0..200)
+            .filter(|&p| m.argmax_at(&base.logits, p) == m.argmax_at(&wd.logits, p))
+            .count();
+        // Random-init logits are flat over 2048 classes, so argmax is a
+        // pessimistic bound (trained models would be near 100%); also
+        // check the distributional shift directly via logit cosine.
+        assert!(
+            agree >= 90,
+            "argmax agreement too low: {agree}/200 (routing robustness)"
+        );
+        let cos: f64 = (0..200)
+            .map(|p| {
+                let v = m.vocab();
+                let a = &base.logits[p * v..(p + 1) * v];
+                let b = &wd.logits[p * v..(p + 1) * v];
+                let dot: f64 = a.iter().zip(b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+                let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                dot / (na * nb)
+            })
+            .sum::<f64>()
+            / 200.0;
+        assert!(cos > 0.95, "logit cosine too low: {cos:.4}");
+    }
+
+    #[test]
+    fn wdmoe_latency_below_vanilla_on_real_gates() {
+        let Some(mut m) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let toks = ids(256, 4);
+        let mut pv = make_policy(PolicyKind::VanillaTopK, &m.cfg.policy, 8, 0);
+        let base = m.forward(&toks, pv.as_mut(), &UniformAllocator).unwrap();
+        let mut pw = make_policy(PolicyKind::Wdmoe, &m.cfg.policy, 8, 0);
+        let wd = m.forward(&toks, pw.as_mut(), &OptimalAllocator::default()).unwrap();
+        assert!(
+            wd.report.total_waiting() < base.report.total_waiting(),
+            "WDMoE {} should beat vanilla {}",
+            wd.report.total_waiting(),
+            base.report.total_waiting()
+        );
+    }
+
+    #[test]
+    fn pad_ids_handles_short_and_long() {
+        let Some(m) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.pad_ids(&[1, 2]).len(), m.seq_len());
+        assert_eq!(m.pad_ids(&vec![1; 10_000]).len(), m.seq_len());
+    }
+}

@@ -1,0 +1,256 @@
+//! Gate-weight containers and top-k utilities.
+
+/// Router output for one MoE block: `w_{j,k}` per token per expert
+/// (paper §II-A; rows are softmax distributions over the n experts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateWeights {
+    /// J × n, row-major.
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl GateWeights {
+    pub fn new(weights: Vec<Vec<f64>>) -> Self {
+        debug_assert!(weights.iter().all(|r| r.len() == weights[0].len()));
+        Self { weights }
+    }
+
+    /// Build from a flat row-major f32 buffer (the PJRT gate output).
+    pub fn from_flat(flat: &[f32], n_tokens: usize, n_experts: usize) -> Self {
+        assert_eq!(flat.len(), n_tokens * n_experts);
+        Self {
+            weights: (0..n_tokens)
+                .map(|j| {
+                    flat[j * n_experts..(j + 1) * n_experts]
+                        .iter()
+                        .map(|&w| w as f64)
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.weights.first().map_or(0, |r| r.len())
+    }
+
+    /// Indices of the top-k experts of token `j`, best first.
+    pub fn top_k(&self, j: usize, k: usize) -> Vec<usize> {
+        let row = &self.weights[j];
+        if k == 1 || k == 2 {
+            // Hot path (Mixtral top-2): single pass, no allocation churn.
+            let mut best = 0usize;
+            for (i, &w) in row.iter().enumerate() {
+                if w > row[best] {
+                    best = i;
+                }
+            }
+            if k == 1 {
+                return vec![best];
+            }
+            let mut second = usize::MAX;
+            for (i, &w) in row.iter().enumerate() {
+                if i != best && (second == usize::MAX || w > row[second]) {
+                    second = i;
+                }
+            }
+            return if second == usize::MAX {
+                vec![best]
+            } else {
+                vec![best, second]
+            };
+        }
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// An expert selection `Q^i` for one block: mask + the effective weights
+/// (gate weights zeroed where dropped; renormalisation happens in the
+/// combine artifact, matching Eq. (1) with the adjusted weights).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    /// `q_{j,k}` — J × n boolean routing matrix.
+    pub mask: Vec<Vec<bool>>,
+    /// Effective weights after selection (0 where dropped).
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl Selection {
+    /// Top-k selection from gate weights — the Mixtral baseline.
+    pub fn top_k(gate: &GateWeights, k: usize) -> Self {
+        let n = gate.n_experts();
+        let mut mask = vec![vec![false; n]; gate.n_tokens()];
+        let mut weights = vec![vec![0.0; n]; gate.n_tokens()];
+        for j in 0..gate.n_tokens() {
+            for &e in &gate.top_k(j, k) {
+                mask[j][e] = true;
+                weights[j][e] = gate.weights[j][e];
+            }
+        }
+        Self { mask, weights }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.mask.len()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.mask.first().map_or(0, |r| r.len())
+    }
+
+    /// Experts currently selected for token `j`.
+    pub fn selected(&self, j: usize) -> Vec<usize> {
+        (0..self.n_experts()).filter(|&k| self.mask[j][k]).collect()
+    }
+
+    /// Number of experts selected for token `j`.
+    pub fn fanout(&self, j: usize) -> usize {
+        self.mask[j].iter().filter(|&&b| b).count()
+    }
+
+    /// Drop expert `k` for token `j` ("assigning a weight of zero to that
+    /// expert", §IV-A). Refuses to violate constraint (16): every token
+    /// keeps at least one expert. Returns whether the drop happened.
+    pub fn drop_expert(&mut self, j: usize, k: usize) -> bool {
+        if !self.mask[j][k] || self.fanout(j) <= 1 {
+            return false;
+        }
+        self.mask[j][k] = false;
+        self.weights[j][k] = 0.0;
+        true
+    }
+
+    /// The lowest-weight currently-selected expert of token `j`.
+    pub fn weakest_expert(&self, j: usize) -> Option<usize> {
+        self.selected(j)
+            .into_iter()
+            .min_by(|&a, &b| self.weights[j][a].partial_cmp(&self.weights[j][b]).unwrap())
+    }
+
+    /// Token counts per device — Eq. (9).
+    pub fn tokens_per_device(&self) -> Vec<f64> {
+        crate::latency::tokens_per_device(&self.mask, self.n_experts())
+    }
+
+    /// Invariant check: constraint (16) — every token on ≥1 device, and
+    /// weights are zero exactly off the mask.
+    pub fn validate(&self) -> Result<(), String> {
+        for j in 0..self.n_tokens() {
+            if self.fanout(j) == 0 {
+                return Err(format!("token {j} has no expert (constraint 16)"));
+            }
+            for k in 0..self.n_experts() {
+                if !self.mask[j][k] && self.weights[j][k] != 0.0 {
+                    return Err(format!("token {j}: weight off-mask at expert {k}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flatten the mask to f32 row-major — the `combine` artifact input.
+    pub fn mask_flat_f32(&self) -> Vec<f32> {
+        self.mask
+            .iter()
+            .flat_map(|row| row.iter().map(|&b| if b { 1.0 } else { 0.0 }))
+            .collect()
+    }
+
+    /// Flatten effective weights to f32 row-major.
+    pub fn weights_flat_f32(&self) -> Vec<f32> {
+        self.weights
+            .iter()
+            .flat_map(|row| row.iter().map(|&w| w as f32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate() -> GateWeights {
+        GateWeights::new(vec![
+            vec![0.4, 0.3, 0.2, 0.1],
+            vec![0.1, 0.1, 0.1, 0.7],
+            vec![0.25, 0.25, 0.25, 0.25],
+        ])
+    }
+
+    #[test]
+    fn top_k_orders_by_weight() {
+        let g = gate();
+        assert_eq!(g.top_k(0, 2), vec![0, 1]);
+        assert_eq!(g.top_k(1, 2), vec![3, 0]);
+        assert_eq!(g.top_k(1, 1), vec![3]);
+    }
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let flat: Vec<f32> = vec![0.1, 0.9, 0.8, 0.2];
+        let g = GateWeights::from_flat(&flat, 2, 2);
+        assert_eq!(g.n_tokens(), 2);
+        assert!((g.weights[0][1] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn selection_top2_masks_and_weights() {
+        let s = Selection::top_k(&gate(), 2);
+        assert_eq!(s.selected(0), vec![0, 1]);
+        assert_eq!(s.weights[0][2], 0.0);
+        assert_eq!(s.weights[0][0], 0.4);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn drop_respects_constraint_16() {
+        let mut s = Selection::top_k(&gate(), 2);
+        assert!(s.drop_expert(0, 1));
+        assert_eq!(s.fanout(0), 1);
+        // cannot drop the last expert
+        assert!(!s.drop_expert(0, 0));
+        assert_eq!(s.fanout(0), 1);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn drop_unselected_is_noop() {
+        let mut s = Selection::top_k(&gate(), 2);
+        assert!(!s.drop_expert(0, 3));
+    }
+
+    #[test]
+    fn weakest_expert_is_lowest_weight_selected() {
+        let s = Selection::top_k(&gate(), 2);
+        assert_eq!(s.weakest_expert(0), Some(1));
+        assert_eq!(s.weakest_expert(1), Some(0));
+    }
+
+    #[test]
+    fn token_counts_match_mask() {
+        let s = Selection::top_k(&gate(), 2);
+        let c = s.tokens_per_device();
+        // token0 -> {0,1}, token1 -> {3,0}, token2 -> top2 of uniform = first two by sort order
+        assert_eq!(c.iter().sum::<f64>(), 6.0);
+    }
+
+    #[test]
+    fn flat_f32_shapes() {
+        let s = Selection::top_k(&gate(), 2);
+        assert_eq!(s.mask_flat_f32().len(), 12);
+        assert_eq!(s.weights_flat_f32().len(), 12);
+    }
+
+    #[test]
+    fn validate_catches_empty_token() {
+        let mut s = Selection::top_k(&gate(), 1);
+        s.mask[1] = vec![false; 4];
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! MoE routing: gate weights, the weight-to-latency ratio, and the
+//! expert-selection policies (the lower level of the bilevel problem).
+
+pub mod gate;
+pub mod selection;
+pub mod stats;
+pub mod wlr;
+
+pub use gate::{GateWeights, Selection};
+pub use selection::{
+    RandomPolicy, SelectionContext, SelectionPolicy, TestbedPolicy, VanillaTopK, WdmoePolicy,
+};
+pub use wlr::{device_wlr, total_wlr};

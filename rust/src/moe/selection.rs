@@ -1,0 +1,577 @@
+//! Expert-selection policies — the lower level of the bilevel problem.
+//!
+//! * [`VanillaTopK`] — plain top-k on gate weights; the paper's
+//!   "Mixtral-based method" baseline.
+//! * [`WdmoePolicy`] — paper **Algorithm 1**: starting from top-2, drop
+//!   the lowest-weight expert of tokens whose weight/latency cosine
+//!   similarity falls below an escalating threshold θ, guarded by the
+//!   total WLR (stop once WLR has improved by the configured factor).
+//! * [`TestbedPolicy`] — paper **Algorithm 2** (§VI-C): predict per-device
+//!   completion times from measured latency history, identify the
+//!   bottleneck device (`> bottleneck_factor ×` third quartile), and shed
+//!   its lowest-weight tokens up to the computed drop budget.
+//! * [`RandomPolicy`] — uniform-random k experts; ablation sanity floor.
+
+use super::gate::{GateWeights, Selection};
+use super::wlr::total_wlr;
+use crate::config::PolicyConfig;
+use crate::latency::TokenLatencies;
+use crate::util::Rng;
+
+/// Everything a policy may consult when selecting experts.
+pub struct SelectionContext<'a> {
+    /// Per-device per-token latency estimates under *uniform* bandwidth —
+    /// §IV-A: the BS "computes the latency based on (8), assuming
+    /// bandwidth is evenly distributed".
+    pub latencies: &'a TokenLatencies,
+    /// Default routing fan-out (Mixtral: 2).
+    pub top_k: usize,
+    /// Devices currently online; offline devices must receive no tokens.
+    pub online: &'a [bool],
+}
+
+/// An expert-selection policy.
+pub trait SelectionPolicy: Send {
+    fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection;
+    fn name(&self) -> &'static str;
+    /// Feed back a measured per-token latency for device `k` (Algorithm 2
+    /// history; no-op for the other policies).
+    fn observe(&mut self, _device: usize, _latency_per_token: f64) {}
+}
+
+/// Re-route tokens away from offline devices: any token whose selected
+/// expert is offline falls back to its best online expert.
+fn enforce_online(sel: &mut Selection, gate: &GateWeights, online: &[bool]) {
+    let n = sel.n_experts();
+    for j in 0..sel.n_tokens() {
+        for k in 0..n {
+            if sel.mask[j][k] && !online[k] {
+                sel.mask[j][k] = false;
+                sel.weights[j][k] = 0.0;
+            }
+        }
+        if sel.fanout(j) == 0 {
+            // fall back to the best online expert (constraint 16)
+            if let Some(best) = (0..n)
+                .filter(|&k| online[k])
+                .max_by(|&a, &b| gate.weights[j][a].partial_cmp(&gate.weights[j][b]).unwrap())
+            {
+                sel.mask[j][best] = true;
+                sel.weights[j][best] = gate.weights[j][best];
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- VanillaTopK
+
+/// Plain top-k routing — the Mixtral baseline.
+pub struct VanillaTopK;
+
+impl SelectionPolicy for VanillaTopK {
+    fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection {
+        let mut sel = Selection::top_k(gate, ctx.top_k);
+        enforce_online(&mut sel, gate, ctx.online);
+        sel
+    }
+    fn name(&self) -> &'static str {
+        "vanilla-topk"
+    }
+}
+
+// ------------------------------------------------------------ WdmoePolicy
+
+/// Paper Algorithm 1.
+pub struct WdmoePolicy {
+    cfg: PolicyConfig,
+}
+
+impl WdmoePolicy {
+    pub fn new(cfg: PolicyConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Cosine similarity between a token's gate-weight vector and the
+    /// per-device latency vector (paper Eq. (18)). Both vectors are
+    /// non-negative, so the value lies in [0, 1].
+    pub fn cosine(weights: &[f64], lat: &[f64]) -> f64 {
+        let dot: f64 = weights.iter().zip(lat).map(|(w, t)| w * t).sum();
+        let nw: f64 = weights.iter().map(|w| w * w).sum::<f64>().sqrt();
+        let nt: f64 = lat.iter().map(|t| t * t).sum::<f64>().sqrt();
+        if nw == 0.0 || nt == 0.0 || !nt.is_finite() {
+            return 0.0;
+        }
+        dot / (nw * nt)
+    }
+}
+
+impl SelectionPolicy for WdmoePolicy {
+    fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection {
+        // Line 2: start from top-2 (the trained router's own choice).
+        let mut sel = Selection::top_k(gate, ctx.top_k.max(2));
+        enforce_online(&mut sel, gate, ctx.online);
+
+        // Line 3: initial WLR under the starting selection.
+        let wlr_hat = total_wlr(&sel, ctx.latencies);
+        if wlr_hat <= 0.0 {
+            return sel; // degenerate (all latencies infinite / no tokens)
+        }
+
+        // Token latency vectors are identical across tokens (t_{i,j,k} =
+        // t_{i,k}, §III-B), and neither the gate weights nor the latency
+        // estimate changes between θ rounds — precompute each token's
+        // cosine once (the dominant cost at MMLU-scale batches).
+        let lat = &ctx.latencies.per_token;
+        let cos: Vec<f64> = (0..sel.n_tokens())
+            .map(|j| Self::cosine(&gate.weights[j], lat))
+            .collect();
+
+        // Lines 4–10: escalate θ until total WLR clears the guard.
+        let mut theta = self.cfg.theta_init;
+        loop {
+            for j in 0..sel.n_tokens() {
+                if sel.fanout(j) <= 1 {
+                    continue; // constraint (16)
+                }
+                if cos[j] <= theta {
+                    if let Some(weak) = sel.weakest_expert(j) {
+                        sel.drop_expert(j, weak);
+                    }
+                }
+            }
+            let wlr = total_wlr(&sel, ctx.latencies);
+            if wlr > self.cfg.wlr_guard * wlr_hat {
+                break; // WLR objective met
+            }
+            theta += self.cfg.theta_step;
+            if theta > 1.0 {
+                break; // cosine of non-negative vectors never exceeds 1
+            }
+        }
+        debug_assert!(sel.validate().is_ok());
+        sel
+    }
+    fn name(&self) -> &'static str {
+        "wdmoe-alg1"
+    }
+}
+
+// ----------------------------------------------------------- TestbedPolicy
+
+/// Paper Algorithm 2 — latency-history-driven selection for the testbed.
+pub struct TestbedPolicy {
+    cfg: PolicyConfig,
+    /// Running mean latency per token per device (Eq. (30)).
+    mean_lat: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl TestbedPolicy {
+    pub fn new(cfg: PolicyConfig, n_devices: usize) -> Self {
+        Self {
+            cfg,
+            mean_lat: vec![0.0; n_devices],
+            counts: vec![0; n_devices],
+        }
+    }
+
+    /// Mean observed latency per token; falls back to the analytic
+    /// estimate when no history exists yet (cold start).
+    fn lat_estimate(&self, ctx: &SelectionContext<'_>) -> Vec<f64> {
+        (0..self.mean_lat.len())
+            .map(|k| {
+                if self.counts[k] > 0 {
+                    self.mean_lat[k]
+                } else {
+                    ctx.latencies.per_token[k]
+                }
+            })
+            .collect()
+    }
+
+    /// Third quartile (linear interpolation) of a sample.
+    pub fn third_quartile(values: &[f64]) -> f64 {
+        assert!(!values.is_empty());
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = 0.75 * (v.len() as f64 - 1.0);
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+        }
+    }
+}
+
+impl SelectionPolicy for TestbedPolicy {
+    fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection {
+        // Line 1: Q ← Top-K(w), K = 2.
+        let mut sel = Selection::top_k(gate, ctx.top_k.max(2));
+        enforce_online(&mut sel, gate, ctx.online);
+        let u = sel.n_experts();
+
+        // Lines 4–7: predict per-device completion times t̂_k = t̄_k · J_k.
+        let lat = self.lat_estimate(ctx);
+        let counts = sel.tokens_per_device();
+        let pred: Vec<f64> = (0..u).map(|k| lat[k] * counts[k]).collect();
+
+        // Line 8: bottleneck device.
+        let khat = pred
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap_or(0);
+
+        // §VI-C: act only when the bottleneck exceeds 1.5× the third
+        // quartile of the *other* devices' predicted latencies (with a
+        // handful of devices, an inclusive quartile is dragged up by the
+        // bottleneck itself and the trigger never fires).
+        let rest: Vec<f64> = pred
+            .iter()
+            .enumerate()
+            .filter(|&(k, _)| k != khat)
+            .map(|(_, &v)| v)
+            .collect();
+        if rest.is_empty() {
+            return sel;
+        }
+        let q3 = Self::third_quartile(&rest);
+        if !(pred[khat] > self.cfg.bottleneck_factor * q3) || lat[khat] <= 0.0 {
+            return sel;
+        }
+
+        // Line 9 / Eq. (32): J_drop = floor((t̂_k̂ − t̂_q3) / t̄_k̂).
+        let j_drop = ((pred[khat] - q3) / lat[khat]).floor() as usize;
+        if j_drop == 0 {
+            return sel;
+        }
+
+        // Lines 10–15: candidate tokens on the bottleneck device whose
+        // weight is below drop_weight_frac × the device's routed mass.
+        let device_mass: f64 = (0..sel.n_tokens())
+            .filter(|&j| sel.mask[j][khat])
+            .map(|j| sel.weights[j][khat])
+            .sum();
+        let thresh = self.cfg.drop_weight_frac * device_mass;
+        let mut candidates: Vec<(usize, f64)> = (0..sel.n_tokens())
+            .filter(|&j| sel.mask[j][khat] && sel.fanout(j) > 1)
+            .filter(|&j| sel.weights[j][khat] < thresh)
+            .map(|j| (j, sel.weights[j][khat]))
+            .collect();
+
+        // Lines 16–21: drop the J_drop smallest-weight candidates (all of
+        // them if fewer qualify).
+        candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for &(j, _) in candidates.iter().take(j_drop) {
+            sel.drop_expert(j, khat);
+        }
+        debug_assert!(sel.validate().is_ok());
+        sel
+    }
+
+    fn name(&self) -> &'static str {
+        "wdmoe-alg2-testbed"
+    }
+
+    /// Update the running mean (Eq. (30)) with a measured per-token latency.
+    fn observe(&mut self, device: usize, latency_per_token: f64) {
+        if !latency_per_token.is_finite() {
+            return;
+        }
+        let c = self.counts[device] as f64;
+        self.mean_lat[device] = (self.mean_lat[device] * c + latency_per_token) / (c + 1.0);
+        self.counts[device] += 1;
+    }
+}
+
+// ------------------------------------------------------------ RandomPolicy
+
+/// Uniform-random k online experts per token — ablation floor.
+pub struct RandomPolicy {
+    rng: Rng,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::seed_from_u64(seed ^ 0x5e1ec7),
+        }
+    }
+}
+
+impl SelectionPolicy for RandomPolicy {
+    fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection {
+        let n = gate.n_experts();
+        let online: Vec<usize> = (0..n).filter(|&k| ctx.online[k]).collect();
+        let mut mask = vec![vec![false; n]; gate.n_tokens()];
+        let mut weights = vec![vec![0.0; n]; gate.n_tokens()];
+        for j in 0..gate.n_tokens() {
+            let mut pool = online.clone();
+            for _ in 0..ctx.top_k.min(pool.len()) {
+                let i = self.rng.below(pool.len());
+                let k = pool.swap_remove(i);
+                mask[j][k] = true;
+                weights[j][k] = gate.weights[j][k];
+            }
+        }
+        Selection { mask, weights }
+    }
+    fn name(&self) -> &'static str {
+        "random-k"
+    }
+}
+
+/// Instantiate a policy from config.
+pub fn make_policy(
+    kind: crate::config::PolicyKind,
+    cfg: &PolicyConfig,
+    n_devices: usize,
+    seed: u64,
+) -> Box<dyn SelectionPolicy> {
+    use crate::config::PolicyKind::*;
+    match kind {
+        VanillaTopK => Box::new(self::VanillaTopK),
+        Wdmoe => Box::new(WdmoePolicy::new(cfg.clone())),
+        Testbed => Box::new(TestbedPolicy::new(cfg.clone(), n_devices)),
+        Random => Box::new(RandomPolicy::new(seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(rows: Vec<Vec<f64>>) -> GateWeights {
+        GateWeights::new(rows)
+    }
+
+    fn ctx<'a>(lat: &'a TokenLatencies, online: &'a [bool]) -> SelectionContext<'a> {
+        SelectionContext {
+            latencies: lat,
+            top_k: 2,
+            online,
+        }
+    }
+
+    fn uniform_gate(j: usize, n: usize) -> GateWeights {
+        // Slightly perturbed so top-k is deterministic but non-degenerate.
+        GateWeights::new(
+            (0..j)
+                .map(|jj| {
+                    (0..n)
+                        .map(|k| 1.0 / n as f64 + 1e-3 * (((jj * 7 + k * 3) % n) as f64))
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn vanilla_selects_exactly_top_k() {
+        let g = gate(vec![vec![0.4, 0.3, 0.2, 0.1]; 5]);
+        let lat = TokenLatencies { per_token: vec![1e-3; 4] };
+        let online = vec![true; 4];
+        let mut p = VanillaTopK;
+        let s = p.select(&g, &ctx(&lat, &online));
+        for j in 0..5 {
+            assert_eq!(s.selected(j), vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn vanilla_avoids_offline_devices() {
+        let g = gate(vec![vec![0.4, 0.3, 0.2, 0.1]; 3]);
+        let lat = TokenLatencies { per_token: vec![1e-3; 4] };
+        let online = vec![false, true, true, true];
+        let mut p = VanillaTopK;
+        let s = p.select(&g, &ctx(&lat, &online));
+        for j in 0..3 {
+            assert!(!s.mask[j][0], "token {j} routed to offline device");
+            assert!(s.fanout(j) >= 1);
+        }
+    }
+
+    #[test]
+    fn cosine_bounds_and_alignment() {
+        let w = [0.9, 0.05, 0.05];
+        let aligned = [0.9, 0.05, 0.05];
+        let anti = [0.05, 0.9, 0.9];
+        let ca = WdmoePolicy::cosine(&w, &aligned);
+        let cb = WdmoePolicy::cosine(&w, &anti);
+        assert!(ca > 0.99 && ca <= 1.0 + 1e-12);
+        assert!(cb < ca && cb >= 0.0);
+    }
+
+    #[test]
+    fn cosine_degenerate_zero() {
+        assert_eq!(WdmoePolicy::cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+        assert_eq!(WdmoePolicy::cosine(&[1.0, 1.0], &[f64::INFINITY, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn alg1_drops_experts_for_misaligned_tokens() {
+        // Weight mass on fast devices, latency mass on slow ones ⇒ low
+        // cosine ⇒ Algorithm 1 sheds the weak expert of each token.
+        let g = gate(vec![vec![0.6, 0.35, 0.025, 0.025]; 16]);
+        let lat = TokenLatencies {
+            per_token: vec![1e-4, 1e-4, 50e-3, 50e-3],
+        };
+        let online = vec![true; 4];
+        let mut p = WdmoePolicy::new(PolicyConfig::default());
+        let s = p.select(&g, &ctx(&lat, &online));
+        let fan: usize = (0..16).map(|j| s.fanout(j)).sum();
+        assert!(
+            fan < 32,
+            "expected some drops below top-2 fanout, got {fan}"
+        );
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn alg1_keeps_top2_for_aligned_tokens() {
+        // Weights aligned with latency (both mass on device 0) ⇒ cosine
+        // near 1 ⇒ no drops below θ escalation except at the very top.
+        let g = gate(vec![vec![0.97, 0.01, 0.01, 0.01]; 8]);
+        let lat = TokenLatencies {
+            per_token: vec![50e-3, 1e-4, 1e-4, 1e-4],
+        };
+        let online = vec![true; 4];
+        let mut p = WdmoePolicy::new(PolicyConfig {
+            wlr_guard: 1e9, // never satisfied -> escalates θ to the cap
+            ..PolicyConfig::default()
+        });
+        let s = p.select(&g, &ctx(&lat, &online));
+        // θ caps at 1.0 and cosine ≈ 1 > θ is false at the last round;
+        // tokens may drop at θ=1.0. What must hold: constraint (16).
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn alg1_never_violates_constraint_16() {
+        let g = uniform_gate(64, 8);
+        let lat = TokenLatencies {
+            per_token: (0..8).map(|k| 1e-4 * (k + 1) as f64).collect(),
+        };
+        let online = vec![true; 8];
+        let mut p = WdmoePolicy::new(PolicyConfig::default());
+        let s = p.select(&g, &ctx(&lat, &online));
+        for j in 0..64 {
+            assert!(s.fanout(j) >= 1);
+        }
+    }
+
+    #[test]
+    fn alg1_reduces_load_vs_vanilla() {
+        let g = uniform_gate(128, 8);
+        let lat = TokenLatencies {
+            per_token: vec![1e-4, 2e-4, 1e-3, 5e-3, 1e-2, 2e-2, 5e-2, 1e-1],
+        };
+        let online = vec![true; 8];
+        let mut v = VanillaTopK;
+        let mut w = WdmoePolicy::new(PolicyConfig::default());
+        let sv = v.select(&g, &ctx(&lat, &online));
+        let sw = w.select(&g, &ctx(&lat, &online));
+        let load = |s: &Selection| s.tokens_per_device().iter().sum::<f64>();
+        assert!(
+            load(&sw) <= load(&sv),
+            "Alg1 load {} should not exceed vanilla {}",
+            load(&sw),
+            load(&sv)
+        );
+    }
+
+    #[test]
+    fn third_quartile_interpolates() {
+        assert_eq!(TestbedPolicy::third_quartile(&[1.0, 2.0, 3.0, 4.0]), 3.25);
+        assert_eq!(TestbedPolicy::third_quartile(&[5.0]), 5.0);
+        assert_eq!(TestbedPolicy::third_quartile(&[1.0, 1.0, 1.0, 10.0]), 3.25);
+    }
+
+    #[test]
+    fn alg2_sheds_load_from_bottleneck() {
+        let n = 4;
+        // Device 3 is 100× slower — becomes the predicted bottleneck.
+        let mut p = TestbedPolicy::new(PolicyConfig::default(), n);
+        for _ in 0..8 {
+            p.observe(0, 1e-4);
+            p.observe(1, 1e-4);
+            p.observe(2, 1e-4);
+            p.observe(3, 1e-2);
+        }
+        // Tokens spread weight so device 3 is in many top-2 sets with a
+        // small weight (droppable).
+        let g = GateWeights::new(
+            (0..32)
+                .map(|j| {
+                    let main = j % 3;
+                    let mut row = vec![0.02; n];
+                    row[main] = 0.78;
+                    row[3] = 0.18;
+                    row
+                })
+                .collect(),
+        );
+        let lat = TokenLatencies { per_token: vec![1e-4; n] };
+        let online = vec![true; n];
+        let before = Selection::top_k(&g, 2).tokens_per_device()[3];
+        let s = p.select(&g, &ctx(&lat, &online));
+        let after = s.tokens_per_device()[3];
+        assert!(
+            after < before,
+            "bottleneck load should drop: {before} -> {after}"
+        );
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn alg2_noop_when_balanced() {
+        let n = 4;
+        let mut p = TestbedPolicy::new(PolicyConfig::default(), n);
+        for k in 0..n {
+            p.observe(k, 1e-4);
+        }
+        let g = uniform_gate(32, n);
+        let lat = TokenLatencies { per_token: vec![1e-4; n] };
+        let online = vec![true; n];
+        let s = p.select(&g, &ctx(&lat, &online));
+        let v = Selection::top_k(&g, 2);
+        assert_eq!(s.mask, v.mask, "balanced fleet must keep vanilla top-2");
+    }
+
+    #[test]
+    fn alg2_history_mean_update() {
+        let mut p = TestbedPolicy::new(PolicyConfig::default(), 2);
+        p.observe(0, 1.0);
+        p.observe(0, 3.0);
+        assert_eq!(p.mean_lat[0], 2.0);
+        p.observe(0, f64::INFINITY); // ignored
+        assert_eq!(p.mean_lat[0], 2.0);
+        assert_eq!(p.counts[0], 2);
+    }
+
+    #[test]
+    fn random_policy_respects_k_and_online() {
+        let g = uniform_gate(64, 8);
+        let lat = TokenLatencies { per_token: vec![1e-4; 8] };
+        let online = vec![true, true, false, true, true, true, true, true];
+        let mut p = RandomPolicy::new(0);
+        let s = p.select(&g, &ctx(&lat, &online));
+        for j in 0..64 {
+            assert_eq!(s.fanout(j), 2);
+            assert!(!s.mask[j][2]);
+        }
+    }
+
+    #[test]
+    fn make_policy_dispatches() {
+        use crate::config::PolicyKind;
+        let cfg = PolicyConfig::default();
+        assert_eq!(make_policy(PolicyKind::VanillaTopK, &cfg, 4, 0).name(), "vanilla-topk");
+        assert_eq!(make_policy(PolicyKind::Wdmoe, &cfg, 4, 0).name(), "wdmoe-alg1");
+        assert_eq!(make_policy(PolicyKind::Testbed, &cfg, 4, 0).name(), "wdmoe-alg2-testbed");
+        assert_eq!(make_policy(PolicyKind::Random, &cfg, 4, 0).name(), "random-k");
+    }
+}

@@ -1,0 +1,131 @@
+//! Routing statistics — the §V-D deployment insight (paper Fig. 8).
+//!
+//! Fig. 8 plots, per MoE layer, "the maximum ratio of the same expert
+//! selection in one batch": the share of tokens whose *selected expert
+//! set* coincides with the most common selected set. High values mean
+//! co-deploying those experts on one device would cut duplicate token
+//! transmissions (§V-D).
+
+use super::gate::Selection;
+use std::collections::HashMap;
+
+/// Fraction of tokens sharing the most frequent expert-selection set.
+pub fn max_same_selection_ratio(sel: &Selection) -> f64 {
+    if sel.n_tokens() == 0 {
+        return 0.0;
+    }
+    let mut counts: HashMap<Vec<usize>, usize> = HashMap::new();
+    for j in 0..sel.n_tokens() {
+        *counts.entry(sel.selected(j)).or_insert(0) += 1;
+    }
+    let max = counts.values().copied().max().unwrap_or(0);
+    max as f64 / sel.n_tokens() as f64
+}
+
+/// Full histogram of expert-selection sets (set → token count), sorted
+/// descending — used by the Fig. 8 harness for its per-layer breakdown.
+pub fn selection_histogram(sel: &Selection) -> Vec<(Vec<usize>, usize)> {
+    let mut counts: HashMap<Vec<usize>, usize> = HashMap::new();
+    for j in 0..sel.n_tokens() {
+        *counts.entry(sel.selected(j)).or_insert(0) += 1;
+    }
+    let mut v: Vec<(Vec<usize>, usize)> = counts.into_iter().collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1));
+    v
+}
+
+/// Expert-pair co-selection: for top-2 routing, how often each unordered
+/// pair appears; the §V-D placement hint ("deploy the two most frequently
+/// selected expert networks for the same token" together).
+pub fn pair_frequencies(sel: &Selection) -> Vec<((usize, usize), usize)> {
+    let mut counts: HashMap<(usize, usize), usize> = HashMap::new();
+    for j in 0..sel.n_tokens() {
+        let sset = sel.selected(j);
+        for a in 0..sset.len() {
+            for b in (a + 1)..sset.len() {
+                let key = (sset[a].min(sset[b]), sset[a].max(sset[b]));
+                *counts.entry(key).or_insert(0) += 1;
+            }
+        }
+    }
+    let mut v: Vec<((usize, usize), usize)> = counts.into_iter().collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::gate::GateWeights;
+
+    fn sel_from_masks(masks: Vec<Vec<bool>>) -> Selection {
+        let n = masks[0].len();
+        let weights = masks
+            .iter()
+            .map(|row| row.iter().map(|&b| if b { 0.5 } else { 0.0 }).collect())
+            .collect();
+        let _ = n;
+        Selection { mask: masks, weights }
+    }
+
+    #[test]
+    fn all_same_selection_ratio_one() {
+        let s = sel_from_masks(vec![vec![true, true, false, false]; 10]);
+        assert_eq!(max_same_selection_ratio(&s), 1.0);
+    }
+
+    #[test]
+    fn distinct_selections_ratio_fraction() {
+        let s = sel_from_masks(vec![
+            vec![true, true, false, false],
+            vec![true, true, false, false],
+            vec![false, false, true, true],
+            vec![false, true, true, false],
+        ]);
+        assert_eq!(max_same_selection_ratio(&s), 0.5);
+    }
+
+    #[test]
+    fn empty_selection_zero() {
+        let s = Selection {
+            mask: vec![],
+            weights: vec![],
+        };
+        assert_eq!(max_same_selection_ratio(&s), 0.0);
+    }
+
+    #[test]
+    fn histogram_sorted_and_complete() {
+        let s = sel_from_masks(vec![
+            vec![true, true],
+            vec![true, true],
+            vec![true, false],
+        ]);
+        let h = selection_histogram(&s);
+        assert_eq!(h[0], (vec![0, 1], 2));
+        assert_eq!(h[1], (vec![0], 1));
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn pair_frequencies_counts_unordered() {
+        let g = GateWeights::new(vec![
+            vec![0.5, 0.4, 0.1],
+            vec![0.4, 0.5, 0.1],
+            vec![0.1, 0.5, 0.4],
+        ]);
+        let s = Selection::top_k(&g, 2);
+        let pf = pair_frequencies(&s);
+        assert_eq!(pf[0], ((0, 1), 2));
+        assert_eq!(pf[1], ((1, 2), 1));
+    }
+
+    #[test]
+    fn mixed_fanout_handled() {
+        // top-1 tokens contribute no pairs but count in the histogram
+        let s = sel_from_masks(vec![vec![true, false], vec![true, true]]);
+        assert_eq!(pair_frequencies(&s), vec![((0, 1), 1)]);
+        assert_eq!(selection_histogram(&s).len(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Weight-to-latency ratio (WLR) — paper Eq. (12).
+//!
+//! `WLR_k^i = (Σ_j q_{j,k}^i w_{j,k}^i) / t_k^i` quantifies, from device
+//! k's perspective, how much routing weight it delivers per second of
+//! completion time. The lower-level problem P2 maximises `Σ_i Σ_k WLR_k^i`;
+//! Algorithm 1 uses the total WLR as the guard that stops threshold
+//! escalation.
+
+use super::gate::Selection;
+use crate::latency::TokenLatencies;
+
+/// `WLR_k` for a single device in one block. Devices with no tokens have
+/// zero completion time; their WLR is defined as 0 (they deliver no
+/// weight and consume no time).
+pub fn device_wlr(sel: &Selection, lat: &TokenLatencies, k: usize) -> f64 {
+    let weight_sum: f64 = (0..sel.n_tokens())
+        .filter(|&j| sel.mask[j][k])
+        .map(|j| sel.weights[j][k])
+        .sum();
+    let count = sel
+        .mask
+        .iter()
+        .filter(|row| row[k])
+        .count() as f64;
+    if count == 0.0 {
+        return 0.0;
+    }
+    let t_k = count * lat.per_token[k]; // Eq. (10)
+    if t_k <= 0.0 || !t_k.is_finite() {
+        return 0.0;
+    }
+    weight_sum / t_k
+}
+
+/// `Σ_k WLR_k^i` for one block.
+pub fn total_wlr(sel: &Selection, lat: &TokenLatencies) -> f64 {
+    (0..sel.n_experts()).map(|k| device_wlr(sel, lat, k)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::gate::GateWeights;
+
+    fn setup() -> (Selection, TokenLatencies) {
+        let gate = GateWeights::new(vec![
+            vec![0.5, 0.3, 0.2],
+            vec![0.2, 0.6, 0.2],
+        ]);
+        let sel = Selection::top_k(&gate, 2);
+        let lat = TokenLatencies {
+            per_token: vec![1e-3, 2e-3, 4e-3],
+        };
+        (sel, lat)
+    }
+
+    #[test]
+    fn wlr_matches_hand_computation() {
+        let (sel, lat) = setup();
+        // device 0: tokens {0 (w=.5), 1 (w=.2)} -> t_0 = 2 * 1e-3
+        let w0 = device_wlr(&sel, &lat, 0);
+        assert!((w0 - 0.7 / 2e-3).abs() < 1e-9);
+        // device 1: tokens {0 (.3), 1 (.6)} -> t_1 = 2 * 2e-3
+        let w1 = device_wlr(&sel, &lat, 1);
+        assert!((w1 - 0.9 / 4e-3).abs() < 1e-9);
+        // device 2: no tokens after top-2
+        assert_eq!(device_wlr(&sel, &lat, 2), 0.0);
+    }
+
+    #[test]
+    fn total_is_sum() {
+        let (sel, lat) = setup();
+        let t = total_wlr(&sel, &lat);
+        let s: f64 = (0..3).map(|k| device_wlr(&sel, &lat, k)).sum();
+        assert_eq!(t, s);
+    }
+
+    #[test]
+    fn dropping_slow_low_weight_token_raises_wlr() {
+        // Token with tiny weight on a slow device: removing it should
+        // increase that device's WLR (the Algorithm-1 premise).
+        let gate = GateWeights::new(vec![
+            vec![0.55, 0.45],
+            vec![0.95, 0.05],
+        ]);
+        let mut sel = Selection::top_k(&gate, 2);
+        let lat = TokenLatencies {
+            per_token: vec![1e-3, 8e-3],
+        };
+        let before = device_wlr(&sel, &lat, 1);
+        assert!(sel.drop_expert(1, 1)); // token 1 drops expert 1 (w=0.05)
+        let after = device_wlr(&sel, &lat, 1);
+        assert!(after > before, "WLR should rise: {before} -> {after}");
+    }
+
+    #[test]
+    fn infinite_latency_device_has_zero_wlr() {
+        let (sel, _) = setup();
+        let lat = TokenLatencies {
+            per_token: vec![f64::INFINITY, 1e-3, 1e-3],
+        };
+        assert_eq!(device_wlr(&sel, &lat, 0), 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Convex optimization toolkit for the upper-level problem P3.
+//!
+//! P3 minimises total attention waiting latency
+//! `sum_i t^i(B)`, `t^i(B) = max_k f_k^i(B_k)` over the bandwidth simplex
+//! `{B : sum_k B_k = B, B_k >= 0}`. The paper proves each `f_k^i` convex in
+//! `B_k` (its §IV-B) and solves P3 with SciPy's SLSQP; we solve the same
+//! program with a smoothed projected-gradient method:
+//!
+//! * the pointwise max is smoothed by a log-sum-exp with annealed
+//!   temperature (a standard smooth-minimax scheme; as τ→0 the smoothed
+//!   objective converges to the true one uniformly within τ·log U);
+//! * iterates are projected onto the scaled simplex with the O(U log U)
+//!   Euclidean projection of Duchi et al.;
+//! * a final exact-objective polish accepts only true descent.
+//!
+//! Tests validate against brute-force grid search (U=2,3) and check the
+//! water-filling optimality condition (active `f_k` equalised) on larger
+//! fleets.
+
+pub mod simplex;
+pub mod solver;
+
+pub use simplex::project_simplex;
+pub use solver::{minimize_sum_max, PerBlockLoad, SolverOptions, SolverResult};

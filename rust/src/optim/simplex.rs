@@ -1,0 +1,111 @@
+//! Euclidean projection onto the scaled probability simplex.
+
+/// Project `v` onto `{x : sum x_i = total, x_i >= 0}` in Euclidean norm.
+///
+/// Duchi, Shalev-Shwartz, Singer, Chandra (ICML'08): sort, find the
+/// largest `rho` with `v_(rho) - theta > 0`, clip. O(U log U).
+pub fn project_simplex(v: &[f64], total: f64) -> Vec<f64> {
+    assert!(total > 0.0, "simplex scale must be positive");
+    assert!(!v.is_empty(), "cannot project an empty vector");
+    let mut u: Vec<f64> = v.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut theta = 0.0;
+    let mut rho = 0;
+    for (i, &ui) in u.iter().enumerate() {
+        css += ui;
+        let t = (css - total) / (i as f64 + 1.0);
+        if ui - t > 0.0 {
+            theta = t;
+            rho = i + 1;
+        }
+    }
+    debug_assert!(rho >= 1);
+    v.iter().map(|&x| (x - theta).max(0.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn assert_on_simplex(x: &[f64], total: f64) {
+        let s: f64 = x.iter().sum();
+        assert!((s - total).abs() < 1e-9 * total.max(1.0), "sum={s}");
+        assert!(x.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn already_feasible_is_fixed_point() {
+        let v = vec![0.25, 0.25, 0.5];
+        let p = project_simplex(&v, 1.0);
+        for (a, b) in v.iter().zip(&p) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn uniform_from_equal_inputs() {
+        let p = project_simplex(&[5.0, 5.0, 5.0, 5.0], 100e6);
+        assert_on_simplex(&p, 100e6);
+        for &x in &p {
+            assert!((x - 25e6).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn negative_entries_clipped() {
+        let p = project_simplex(&[-1.0, 0.0, 3.0], 1.0);
+        assert_on_simplex(&p, 1.0);
+        assert_eq!(p[0], 0.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let p = project_simplex(&[42.0], 7.0);
+        assert_eq!(p, vec![7.0]);
+    }
+
+    // Property tests (hand-rolled; proptest unavailable offline): random
+    // inputs across sizes and scales.
+    #[test]
+    fn prop_output_feasible() {
+        let mut rng = Rng::seed_from_u64(0);
+        for case in 0..500 {
+            let n = 1 + rng.below(15);
+            let v: Vec<f64> = (0..n).map(|_| rng.range_f64(-1e3, 1e3)).collect();
+            let total = 10f64.powf(rng.range_f64(-3.0, 9.0));
+            let p = project_simplex(&v, total);
+            assert_on_simplex(&p, total);
+            let _ = case;
+        }
+    }
+
+    #[test]
+    fn prop_projection_is_closest() {
+        // The projection must beat structured feasible candidates and
+        // random feasible points.
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..300 {
+            let n = 2 + rng.below(4);
+            let v: Vec<f64> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            let p = project_simplex(&v, 1.0);
+            let dist = |x: &[f64]| -> f64 {
+                x.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum()
+            };
+            let dp = dist(&p);
+            let uniform = vec![1.0 / n as f64; n];
+            assert!(dp <= dist(&uniform) + 1e-9);
+            for i in 0..n {
+                let mut vertex = vec![0.0; n];
+                vertex[i] = 1.0;
+                assert!(dp <= dist(&vertex) + 1e-9);
+            }
+            // random feasible point via normalised exponentials
+            let mut q: Vec<f64> = (0..n).map(|_| -rng.f64().max(1e-12).ln()).collect();
+            let s: f64 = q.iter().sum();
+            q.iter_mut().for_each(|x| *x /= s);
+            assert!(dp <= dist(&q) + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Ablations for the design decisions DESIGN.md calls out — beyond the
+//! paper's own Fig. 7 arms:
+//!
+//! 1. **per-block vs global bandwidth allocation** — the interpretation
+//!    note behind our P3 implementation (global allocation cannot track
+//!    per-block hot experts);
+//! 2. **router popularity-bias sensitivity** — how the headline reduction
+//!    depends on trained-router load imbalance (the one free calibration
+//!    parameter);
+//! 3. **Algorithm-1 threshold schedule** — θ_init / WLR-guard sweep, the
+//!    latency-vs-fidelity trade-off the paper discusses in §IV-A.
+
+use super::ReproContext;
+use crate::config::SystemConfig;
+use crate::coordinator::sim::{Simulator, Variant};
+use crate::metrics::Table;
+use crate::optim::{minimize_sum_max, SolverOptions};
+use crate::wireless::bandwidth::AllocationInput;
+use crate::wireless::ChannelSimulator;
+
+/// Ablation 1: re-run the ARC-C-scale batch with one global allocation
+/// (solve P3 over all 32 blocks jointly) vs the per-block default.
+pub fn global_vs_per_block(ctx: &ReproContext) -> anyhow::Result<Table> {
+    let tokens = 3600;
+    let mut t = Table::new(
+        "Ablation — bandwidth allocation granularity (ARC-C scale, ms)",
+        &["latency_ms", "reduction_vs_uniform_pct"],
+    );
+    // Uniform baseline + per-block optimal from the standard simulator.
+    let mut sim = Simulator::new(SystemConfig::paper_simulation());
+    let uni = sim.run_variant(tokens, Variant::mixtral_based());
+    let mut sim = Simulator::new(SystemConfig::paper_simulation());
+    let per_block = sim.run_variant(tokens, Variant::wdmoe_no_selection());
+
+    // Global: take the per-block loads the vanilla policy produced and
+    // solve one joint P3, then re-price every block at that split.
+    let mut sim = Simulator::new(SystemConfig::paper_simulation());
+    let base = sim.run_variant(tokens, Variant::mixtral_based());
+    let cfg = SystemConfig::paper_simulation();
+    let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, cfg.seed);
+    let real = chan.expected_realization();
+    let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
+    let t_comp: Vec<f64> = cfg.devices.iter().map(|d| l_comp / d.compute_flops).collect();
+    let loads: Vec<crate::optim::PerBlockLoad> = base
+        .report
+        .per_block
+        .iter()
+        .map(|b| crate::optim::PerBlockLoad {
+            tokens: b.tokens_per_device.clone(),
+        })
+        .collect();
+    let input = AllocationInput {
+        channel_cfg: &cfg.channel,
+        realization: &real,
+        loads: &loads,
+        t_comp_per_token: &t_comp,
+        l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
+    };
+    let links = input.links();
+    let global = minimize_sum_max(&links, &loads, cfg.channel.total_bandwidth_hz, &SolverOptions::default());
+    let global_ms = global.objective * 1e3;
+
+    let red = |ms: f64| (1.0 - ms / uni.latency_ms()) * 100.0;
+    t.row("uniform (baseline)", vec![uni.latency_ms(), 0.0]);
+    t.row("global P3 (one split for all blocks)", vec![global_ms, red(global_ms)]);
+    t.row("per-block P3 (ours / paper Fig. 4)", vec![per_block.latency_ms(), red(per_block.latency_ms())]);
+    ctx.emit(&t)?;
+    Ok(t)
+}
+
+/// Ablation 2: headline reduction vs router popularity bias.
+pub fn bias_sensitivity(ctx: &ReproContext) -> anyhow::Result<Table> {
+    let tokens = 3600;
+    let mut t = Table::new(
+        "Ablation — WDMoE reduction vs router load-imbalance bias",
+        &["baseline_ms", "wdmoe_ms", "reduction_pct"],
+    );
+    for bias in [0.0, 0.2, 0.4, 0.6, 0.8] {
+        let run = |v: Variant| {
+            let mut sim = Simulator::new(SystemConfig::paper_simulation());
+            sim.gate_bias = bias;
+            sim.run_variant(tokens, v).latency_ms()
+        };
+        let m = run(Variant::mixtral_based());
+        let w = run(Variant::wdmoe_full());
+        t.row(&format!("bias={bias:.1}"), vec![m, w, (1.0 - w / m) * 100.0]);
+    }
+    ctx.emit(&t)?;
+    Ok(t)
+}
+
+/// Ablation 3: Algorithm-1 θ_init sweep — load shed vs latency.
+pub fn theta_sweep(ctx: &ReproContext) -> anyhow::Result<Table> {
+    let tokens = 3600;
+    let mut t = Table::new(
+        "Ablation — Algorithm 1 threshold schedule (theta_init)",
+        &["latency_ms", "transmissions", "wlr_total"],
+    );
+    for theta in [0.3, 0.5, 0.7, 0.9] {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.policy.theta_init = theta;
+        let mut sim = Simulator::new(cfg);
+        let out = sim.run_variant(tokens, Variant::wdmoe_full());
+        t.row(
+            &format!("theta={theta:.1}"),
+            vec![
+                out.latency_ms(),
+                out.report.total_token_transmissions(),
+                out.wlr_total,
+            ],
+        );
+    }
+    ctx.emit(&t)?;
+    Ok(t)
+}
+
+/// All three ablations (CLI `repro ablate`).
+pub fn all(ctx: &ReproContext) -> anyhow::Result<()> {
+    global_vs_per_block(ctx)?;
+    bias_sensitivity(ctx)?;
+    theta_sweep(ctx)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ReproContext {
+        ReproContext {
+            out_dir: crate::util::temp_dir("ablate"),
+            artifacts_dir: None,
+            quick: true,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn per_block_beats_global_beats_uniform() {
+        let t = global_vs_per_block(&ctx()).unwrap();
+        let uni = t.rows[0].1[0];
+        let global = t.rows[1].1[0];
+        let per_block = t.rows[2].1[0];
+        assert!(global <= uni, "global P3 must not lose to uniform");
+        assert!(
+            per_block < global,
+            "per-block allocation must beat global ({per_block} vs {global})"
+        );
+    }
+
+    #[test]
+    fn reduction_grows_with_bias() {
+        let t = bias_sensitivity(&ctx()).unwrap();
+        let first = t.rows.first().unwrap().1[2];
+        let last = t.rows.last().unwrap().1[2];
+        assert!(
+            last > first,
+            "more load imbalance should grow the allocation win ({first} -> {last})"
+        );
+    }
+
+    #[test]
+    fn higher_theta_sheds_more_load() {
+        let t = theta_sweep(&ctx()).unwrap();
+        let tx_low = t.rows.first().unwrap().1[1];
+        let tx_high = t.rows.last().unwrap().1[1];
+        assert!(
+            tx_high <= tx_low,
+            "higher theta must not increase transmissions ({tx_low} -> {tx_high})"
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Capability probes — paper Tables I and III.
+//!
+//! The paper scores Mixtral-with-WDMoE-routing on eight public benchmarks
+//! (OpenCompass). We cannot re-run 47B-parameter Mixtral; what the tables
+//! actually establish is that **WDMoE's latency-aware selection does not
+//! degrade model capability vs vanilla top-2 routing**. That claim is
+//! measurable on our AOT model directly: run the same token batches
+//! through the PJRT model under both routings and measure (a) argmax
+//! next-token agreement and (b) mean KL divergence of the output
+//! distributions. Agreement ≈ 100% and KL ≈ 0 reproduce "no capability
+//! deterioration"; the paper's absolute benchmark scores are printed
+//! alongside as the published reference.
+
+use super::ReproContext;
+use crate::config::{PolicyKind, SystemConfig};
+use crate::metrics::Table;
+use crate::model::ServingModel;
+use crate::moe::selection::make_policy;
+use crate::wireless::bandwidth::{OptimalAllocator, UniformAllocator};
+use crate::workload::{Benchmark, WorkloadGen};
+
+/// Paper Table I reference scores (%): rows are models, columns the eight
+/// benchmarks in paper order.
+pub const TABLE1_PAPER: [(&str, [f64; 8]); 6] = [
+    //                 MMLU  PIQA  ARC-E ARC-C Heval GSM8K BoolQ MBPP
+    ("Llama 2 7B", [46.8, 78.3, 56.1, 40.3, 12.8, 16.7, 74.9, 14.8]),
+    ("Llama 2 13B", [55.0, 79.8, 71.8, 60.3, 18.9, 29.6, 82.4, 26.8]),
+    ("Llama 2 70B", [69.7, 82.5, 85.9, 78.3, 26.2, 63.5, 87.7, 39.6]),
+    ("Mistral 7B-v0.1", [64.1, 81.6, 83.6, 74.2, 22.6, 47.5, 84.1, 32.0]),
+    ("Mixtral 8x7B-Instruct", [70.9, 83.2, 92.8, 84.8, 47.6, 70.0, 88.72, 35.2]),
+    ("WDMoE (paper)", [68.98, 83.2, 92.8, 86.78, 48.17, 71.29, 88.87, 35.2]),
+];
+
+/// Paper Table III reference (testbed accuracy, %).
+pub const TABLE3_PAPER: [(&str, [f64; 4]); 2] = [
+    ("Mixtral", [92.42, 86.1, 37.8, 83.41]),
+    ("WDMoE-testbed", [92.95, 87.12, 38.8, 83.51]),
+];
+
+/// Outcome of comparing a policy against the vanilla top-2 baseline.
+///
+/// Note on metrics: our AOT model is random-init, so its logits are flat
+/// across the vocabulary and argmax is hypersensitive — argmax agreement
+/// is a pessimistic lower bound. KL divergence and logit cosine measure
+/// the actual distributional shift (a trained model's peaked logits would
+/// push argmax agreement toward 100% at the same KL).
+pub struct ProbeResult {
+    /// Fraction of positions whose argmax next-token matches baseline.
+    pub argmax_agreement: f64,
+    /// Fraction of positions where the policies' top-5 sets intersect.
+    pub top5_overlap: f64,
+    /// Mean KL(baseline ‖ policy) over positions (nats).
+    pub mean_kl: f64,
+    /// Mean cosine similarity between logit vectors.
+    pub logit_cosine: f64,
+}
+
+fn top_k_set(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+fn cosine32(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+fn softmax(row: &[f32]) -> Vec<f64> {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = row.iter().map(|&l| ((l as f64) - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / sum).collect()
+}
+
+/// Compare `policy_kind` (+ optimal bandwidth) against vanilla top-2
+/// (+ uniform bandwidth) on `n_batches` of `bench`-scale token batches.
+pub fn probe(
+    model: &mut ServingModel,
+    bench: Benchmark,
+    policy_kind: PolicyKind,
+    seed: u64,
+    n_batches: usize,
+) -> anyhow::Result<ProbeResult> {
+    let vocab = model.vocab();
+    let j = model.seq_len();
+    // Salt the workload seed per benchmark so each row probes distinct
+    // token streams.
+    let salt = Benchmark::ALL.iter().position(|&b| b == bench).unwrap_or(0) as u64;
+    let mut wl = WorkloadGen::new(seed ^ (salt.wrapping_mul(0x9E37_79B9)), vocab);
+    let mut agree = 0usize;
+    let mut top5 = 0usize;
+    let mut total = 0usize;
+    let mut kl_sum = 0.0f64;
+    let mut cos_sum = 0.0f64;
+    for _ in 0..n_batches {
+        let batch = wl.batch(bench);
+        let ids: Vec<i32> = batch.token_ids.iter().copied().take(j).collect();
+        let n_active = ids.len().min(j);
+        let mut pv = make_policy(PolicyKind::VanillaTopK, &model.cfg.policy, model.cfg.n_devices(), seed);
+        let base = model.forward(&ids, pv.as_mut(), &UniformAllocator)?;
+        let mut pp = make_policy(policy_kind, &model.cfg.policy, model.cfg.n_devices(), seed);
+        let out = model.forward(&ids, pp.as_mut(), &OptimalAllocator::default())?;
+        for pos in 0..n_active {
+            let a = model.argmax_at(&base.logits, pos);
+            let b = model.argmax_at(&out.logits, pos);
+            if a == b {
+                agree += 1;
+            }
+            let rb = &base.logits[pos * vocab..(pos + 1) * vocab];
+            let ro = &out.logits[pos * vocab..(pos + 1) * vocab];
+            let sb = top_k_set(rb, 5);
+            let so = top_k_set(ro, 5);
+            if sb.iter().any(|x| so.contains(x)) {
+                top5 += 1;
+            }
+            cos_sum += cosine32(rb, ro);
+            total += 1;
+            let p = softmax(rb);
+            let q = softmax(ro);
+            kl_sum += p
+                .iter()
+                .zip(&q)
+                .map(|(&pi, &qi)| if pi > 0.0 { pi * (pi / qi.max(1e-12)).ln() } else { 0.0 })
+                .sum::<f64>();
+        }
+    }
+    Ok(ProbeResult {
+        argmax_agreement: agree as f64 / total as f64,
+        top5_overlap: top5 as f64 / total as f64,
+        mean_kl: kl_sum / total as f64,
+        logit_cosine: cos_sum / total as f64,
+    })
+}
+
+fn load_model(ctx: &ReproContext) -> Option<ServingModel> {
+    let dir = ctx.artifacts_dir.clone()?;
+    match ServingModel::load(&dir, SystemConfig::artifact_serving()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("capability probe skipped (artifacts unavailable): {e}");
+            None
+        }
+    }
+}
+
+/// Table I: capability under WDMoE routing (Algorithm 1).
+pub fn table1(ctx: &ReproContext) -> anyhow::Result<Table> {
+    let mut ref_t = Table::new(
+        "Table I — benchmark scores, paper reference (%)",
+        &["MMLU", "PIQA", "ARC-E", "ARC-C", "Humaneval", "GSM-8K", "BoolQ", "MBPP"],
+    );
+    for (label, vals) in TABLE1_PAPER {
+        ref_t.row(label, vals.to_vec());
+    }
+    ctx.emit(&ref_t)?;
+
+    let mut t = Table::new(
+        "Table I — measured routing fidelity: WDMoE (Alg 1) vs vanilla top-2",
+        &["argmax_agreement_pct", "top5_overlap_pct", "mean_kl_nats", "logit_cosine"],
+    );
+    t.precision = 4;
+    if let Some(mut model) = load_model(ctx) {
+        for bench in Benchmark::ALL {
+            let r = probe(&mut model, bench, PolicyKind::Wdmoe, ctx.seed, 1)?;
+            t.row(
+                bench.name(),
+                vec![
+                    r.argmax_agreement * 100.0,
+                    r.top5_overlap * 100.0,
+                    r.mean_kl,
+                    r.logit_cosine,
+                ],
+            );
+        }
+    } else {
+        println!("(Table I measurement skipped: build artifacts with `make artifacts`)");
+    }
+    ctx.emit(&t)?;
+    Ok(t)
+}
+
+/// Table III: capability under the testbed policy (Algorithm 2).
+pub fn table3(ctx: &ReproContext) -> anyhow::Result<Table> {
+    let mut ref_t = Table::new(
+        "Table III — testbed accuracy, paper reference (%)",
+        &["ARC-E", "ARC-C", "MBPP", "PIQA"],
+    );
+    for (label, vals) in TABLE3_PAPER {
+        ref_t.row(label, vals.to_vec());
+    }
+    ctx.emit(&ref_t)?;
+
+    let mut t = Table::new(
+        "Table III — measured routing fidelity: WDMoE-testbed (Alg 2) vs vanilla top-2",
+        &["argmax_agreement_pct", "top5_overlap_pct", "mean_kl_nats", "logit_cosine"],
+    );
+    t.precision = 4;
+    if let Some(mut model) = load_model(ctx) {
+        for bench in [
+            Benchmark::ArcEasy,
+            Benchmark::ArcChallenge,
+            Benchmark::Mbpp,
+            Benchmark::Piqa,
+        ] {
+            let r = probe(&mut model, bench, PolicyKind::Testbed, ctx.seed, 1)?;
+            t.row(
+                bench.name(),
+                vec![
+                    r.argmax_agreement * 100.0,
+                    r.top5_overlap * 100.0,
+                    r.mean_kl,
+                    r.logit_cosine,
+                ],
+            );
+        }
+    } else {
+        println!("(Table III measurement skipped: build artifacts with `make artifacts`)");
+    }
+    ctx.emit(&t)?;
+    Ok(t)
+}

@@ -1,0 +1,238 @@
+//! Artifact manifest + weight-blob loading.
+//!
+//! `python/compile/aot.py` writes `manifest.json` (model config, artifact
+//! arg signatures, weight table) and `weights.bin` (all weights, f32
+//! little-endian, concatenated in manifest order). This module is the
+//! rust-side reader; shapes here are the single source of truth for the
+//! execute-path literals.
+
+use crate::util::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Model config block of the manifest (mirrors python ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_hidden: usize,
+    pub n_experts: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub seq_len: usize,
+    pub top_k: usize,
+    pub seed: u64,
+    pub total_params: u64,
+}
+
+/// One artifact's argument signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactArg {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub args: Vec<ArtifactArg>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsBlock {
+    pub file: String,
+    pub dtype: String,
+    pub tensors: Vec<WeightEntry>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub weights: WeightsBlock,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {} — run `make artifacts` first: {e}",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let c = j.get("config")?;
+        let config = ManifestConfig {
+            vocab: c.get("vocab")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            d_hidden: c.get("d_hidden")?.as_usize()?,
+            n_experts: c.get("n_experts")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            n_blocks: c.get("n_blocks")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            top_k: c.get("top_k")?.as_usize()?,
+            seed: c.get("seed")?.as_u64()?,
+            total_params: c.get("total_params")?.as_u64()?,
+        };
+        let mut artifacts = HashMap::new();
+        for (name, entry) in j.get("artifacts")?.as_obj()? {
+            let args = entry
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArtifactArg {
+                        shape: a.get("shape")?.as_usize_vec()?,
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    file: entry.get("file")?.as_str()?.to_string(),
+                    args,
+                },
+            );
+        }
+        let w = j.get("weights")?;
+        let tensors = w
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(WeightEntry {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: t.get("shape")?.as_usize_vec()?,
+                    offset: t.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let m = Manifest {
+            config,
+            artifacts,
+            weights: WeightsBlock {
+                file: w.get("file")?.as_str()?.to_string(),
+                dtype: w.get("dtype")?.as_str()?.to_string(),
+                tensors,
+            },
+        };
+        anyhow::ensure!(m.weights.dtype == "f32", "unsupported weight dtype");
+        Ok(m)
+    }
+}
+
+/// All model weights, loaded from `weights.bin` and indexed by name.
+pub struct WeightStore {
+    tensors: HashMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl WeightStore {
+    pub fn load(dir: &Path, manifest: &Manifest) -> anyhow::Result<Self> {
+        let path = dir.join(&manifest.weights.file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weights.bin not a multiple of 4 bytes");
+        let blob: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut tensors = HashMap::new();
+        for t in &manifest.weights.tensors {
+            let size: usize = t.shape.iter().product();
+            anyhow::ensure!(
+                t.offset + size <= blob.len(),
+                "{}: offset {} + size {} exceeds blob {}",
+                t.name,
+                t.offset,
+                size,
+                blob.len()
+            );
+            tensors.insert(
+                t.name.clone(),
+                (t.shape.clone(), blob[t.offset..t.offset + size].to_vec()),
+            );
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<(&[usize], &[f32])> {
+        self.tensors
+            .get(name)
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+            .ok_or_else(|| anyhow::anyhow!("weight {name} not in manifest"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Repo-level artifacts (built by `make artifacts`); tests that need
+    /// them are skipped gracefully when absent.
+    pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.d_model, 256);
+        assert!(m.artifacts.contains_key("expert"));
+        assert!(m.artifacts.contains_key("gate"));
+        // expert args: x, w1, w3, w2
+        let e = &m.artifacts["expert"];
+        assert_eq!(e.args.len(), 4);
+        assert_eq!(e.args[0].shape, vec![m.config.seq_len, m.config.d_model]);
+    }
+
+    #[test]
+    fn weights_load_and_param_count_matches() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let w = WeightStore::load(&dir, &m).unwrap();
+        assert_eq!(w.len(), m.weights.tensors.len());
+        let total: usize = m
+            .weights
+            .tensors
+            .iter()
+            .map(|t| t.shape.iter().product::<usize>())
+            .sum();
+        assert_eq!(total as u64, m.config.total_params);
+        let (shape, data) = w.get("emb").unwrap();
+        assert_eq!(shape, &[m.config.vocab, m.config.d_model]);
+        assert_eq!(data.len(), m.config.vocab * m.config.d_model);
+        assert!(w.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute on the request
+//! path. Python is never invoked here — the HLO text produced by
+//! `python/compile/aot.py` is the only interface between the layers.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** (not serialized
+//! proto — xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids),
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`, unwrap the 1-tuple root.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, WeightStore};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled-artifact registry bound to one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load the manifest and weights and compile every artifact on the
+    /// CPU PJRT client. Compilation happens once, here; the request path
+    /// only executes.
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = WeightStore::load(artifacts_dir, &manifest)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.artifacts {
+            let path = artifacts_dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Self {
+            client,
+            executables,
+            manifest,
+            weights,
+            dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute an artifact with the given literals; returns the unwrapped
+    /// single output (all entry points lower with `return_tuple=True`).
+    /// Accepts owned or borrowed literals (`&[Literal]` / `&[&Literal]`)
+    /// so cached weight literals can be reused without copying.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> anyhow::Result<xla::Literal> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?;
+        let expected = &self.manifest.artifacts[name].args;
+        anyhow::ensure!(
+            args.len() == expected.len(),
+            "{name}: got {} args, artifact takes {}",
+            args.len(),
+            expected.len()
+        );
+        let out = exe
+            .execute(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e:?}"))?;
+        out.to_tuple1()
+            .map_err(|e| anyhow::anyhow!("{name}: unwrapping tuple: {e:?}"))
+    }
+
+    /// Build an f32 literal of the given shape from a flat slice.
+    pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {shape:?} != data len {}", data.len());
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+    }
+
+    /// Build an i32 literal of the given shape.
+    pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {shape:?} != data len {}", data.len());
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+    }
+
+    /// Literal for a named weight tensor.
+    pub fn weight_literal(&self, name: &str) -> anyhow::Result<xla::Literal> {
+        let (shape, data) = self.weights.get(name)?;
+        Self::literal_f32(data, shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn literal_builders_validate_shape() {
+        assert!(Runtime::literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = Runtime::literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let i = Runtime::literal_i32(&[1, 2], &[2]).unwrap();
+        assert_eq!(i.element_count(), 2);
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_expert() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(!rt.platform().is_empty());
+        let c = &rt.manifest.config;
+        let x = vec![0.1f32; c.seq_len * c.d_model];
+        let xl = Runtime::literal_f32(&x, &[c.seq_len, c.d_model]).unwrap();
+        let w1 = rt.weight_literal("blk0.expert0.w1").unwrap();
+        let w3 = rt.weight_literal("blk0.expert0.w3").unwrap();
+        let w2 = rt.weight_literal("blk0.expert0.w2").unwrap();
+        let out = rt.execute("expert", &[xl, w1, w3, w2]).unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), c.seq_len * c.d_model);
+        assert!(v.iter().all(|f| f.is_finite()));
+        // non-degenerate output
+        assert!(v.iter().any(|&f| f.abs() > 1e-8));
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        let Err(err) = rt.execute::<xla::Literal>("expert", &[]) else {
+            panic!("arity mismatch must fail");
+        };
+        assert!(err.to_string().contains("args"));
+        assert!(rt.execute::<xla::Literal>("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn gate_rows_sum_to_one() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        let c = &rt.manifest.config;
+        let x = vec![0.05f32; c.seq_len * c.d_model];
+        let xl = Runtime::literal_f32(&x, &[c.seq_len, c.d_model]).unwrap();
+        let gamma = rt.weight_literal("blk0.moe.gamma").unwrap();
+        let wg = rt.weight_literal("blk0.moe.wg").unwrap();
+        let out = rt.execute("gate", &[xl, gamma, wg]).unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), c.seq_len * c.n_experts);
+        for j in 0..c.seq_len {
+            let s: f32 = v[j * c.n_experts..(j + 1) * c.n_experts].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {j} sums to {s}");
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Hardware-testbed simulation — paper Section VI.
+//!
+//! The paper's testbed: four heterogeneous devices (2× Jetson AGX Orin,
+//! Jetson Xavier NX, RTX-4070-Ti PC) around a WiFi AP, running Algorithm 2
+//! with *measured* latency history instead of channel-state optimization
+//! ("without estimating channel conditions, predicting transmission rates,
+//! or allocating communication bandwidth", §VI-C).
+//!
+//! Our substitute (DESIGN.md): the same fleet with published-TFLOPS
+//! capacities, per-block Rayleigh fading at 5 GHz/80 MHz WiFi-like
+//! parameters, and multiplicative compute jitter — producing the latency
+//! variance Algorithm 2's history estimator is designed to absorb.
+
+use crate::config::SystemConfig;
+use crate::devices::Fleet;
+use crate::latency::{block_latency, BlockLatency, TokenLatencies};
+use crate::moe::selection::{SelectionContext, SelectionPolicy};
+use crate::moe::GateWeights;
+use crate::wireless::ChannelSimulator;
+use crate::workload::WorkloadGen;
+
+/// Outcome of one batch on the testbed: per-block (per-layer) latencies,
+/// matching Fig. 10's "latency per batch in a layer".
+#[derive(Debug, Clone)]
+pub struct TestbedOutcome {
+    pub per_block: Vec<BlockLatency>,
+    /// Mean per-layer attention waiting latency (ms) — Fig. 10's y-axis.
+    pub mean_layer_ms: f64,
+    pub max_layer_ms: f64,
+    pub min_layer_ms: f64,
+    /// Total tokens transmitted (load metric).
+    pub transmissions: f64,
+}
+
+/// The testbed simulator: per-block fading + compute jitter, uniform
+/// bandwidth, measured-latency feedback into the policy.
+pub struct TestbedSim {
+    pub cfg: SystemConfig,
+    channel: ChannelSimulator,
+    fleet: Fleet,
+    gates: WorkloadGen,
+    pub gate_sharpness: f64,
+}
+
+impl TestbedSim {
+    /// Build from the Section-VI preset (or any config with fading/jitter).
+    pub fn new(mut cfg: SystemConfig) -> Self {
+        if cfg.channel.fading_blocks == 0 {
+            cfg.channel.fading_blocks = 1; // testbed always sees variation
+        }
+        cfg.validate().expect("invalid testbed config");
+        let channel = ChannelSimulator::new(&cfg.channel, &cfg.devices, cfg.seed);
+        let fleet = Fleet::new(&cfg.devices, cfg.seed);
+        let gates = WorkloadGen::new(cfg.seed.wrapping_add(2), cfg.model.vocab);
+        Self {
+            cfg,
+            channel,
+            fleet,
+            gates,
+            gate_sharpness: 1.5,
+        }
+    }
+
+    pub fn paper() -> Self {
+        Self::new(SystemConfig::paper_testbed())
+    }
+
+    /// Reseed (the paper runs "three experiments ... under the same
+    /// environmental settings", Table IV).
+    pub fn with_seed(mut cfg: SystemConfig, seed: u64) -> Self {
+        cfg.seed = seed;
+        Self::new(cfg)
+    }
+
+    /// Access the fleet (failure injection in demos/tests).
+    pub fn fleet_mut(&mut self) -> &mut Fleet {
+        &mut self.fleet
+    }
+
+    /// Run one batch of `n_tokens` through all blocks.
+    ///
+    /// Per block: draw the fading + jitter realization, compute the true
+    /// per-token latencies under the uniform split, let the policy select
+    /// (it sees only its history + the cold-start estimate), measure, and
+    /// feed the measurement back (`observe`, Eq. (30)).
+    pub fn run_batch(
+        &mut self,
+        n_tokens: usize,
+        policy: &mut dyn SelectionPolicy,
+    ) -> TestbedOutcome {
+        let u = self.cfg.n_devices();
+        let blocks = self.cfg.model.n_blocks;
+        let l_comp = self.cfg.model.l_comp_flops(self.cfg.activation_eta);
+        let l_comm = self.cfg.model.l_comm_bits(self.cfg.channel.quant_bits);
+        let total_bw = self.cfg.channel.total_bandwidth_hz;
+        let uniform = vec![total_bw / u as f64; u];
+        let online = self.fleet.online_mask();
+
+        let mut per_block = Vec::with_capacity(blocks);
+        let mut transmissions = 0.0;
+        for _ in 0..blocks {
+            // True (this block's) conditions — hidden from the policy.
+            let realization = self.channel.realization().clone();
+            let t_comp = self.fleet.t_comp_per_token(l_comp); // jittered
+            let input = crate::wireless::bandwidth::AllocationInput {
+                channel_cfg: &self.cfg.channel,
+                realization: &realization,
+                loads: &[],
+                t_comp_per_token: &t_comp,
+                l_comm_bits: l_comm,
+            };
+            let links = input.links();
+            let truth = TokenLatencies::from_links(&links, &uniform);
+
+            // Cold-start estimate: nominal (jitter-free) mean-channel view.
+            let nominal_t_comp = self.fleet.t_comp_nominal(l_comp);
+            let mean_real = self.channel.expected_realization();
+            let est_input = crate::wireless::bandwidth::AllocationInput {
+                channel_cfg: &self.cfg.channel,
+                realization: &mean_real,
+                loads: &[],
+                t_comp_per_token: &nominal_t_comp,
+                l_comm_bits: l_comm,
+            };
+            let est = TokenLatencies::from_links(&est_input.links(), &uniform);
+
+            let gate = GateWeights::new(self.gates.synthetic_gate_weights(
+                n_tokens,
+                u,
+                self.gate_sharpness,
+            ));
+            let ctx = SelectionContext {
+                latencies: &est,
+                top_k: self.cfg.model.top_k,
+                online: &online,
+            };
+            let sel = policy.select(&gate, &ctx);
+            let counts = sel.tokens_per_device();
+            let bl = block_latency(&truth, &counts);
+            // Feedback: the server records measured per-token latency.
+            for k in 0..u {
+                if counts[k] > 0.0 {
+                    policy.observe(k, truth.per_token[k]);
+                }
+            }
+            transmissions += counts.iter().sum::<f64>();
+            per_block.push(bl);
+            self.channel.advance_block();
+        }
+
+        let ms: Vec<f64> = per_block.iter().map(|b| b.waiting * 1e3).collect();
+        let mean = ms.iter().sum::<f64>() / ms.len() as f64;
+        TestbedOutcome {
+            mean_layer_ms: mean,
+            max_layer_ms: ms.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            min_layer_ms: ms.iter().copied().fold(f64::INFINITY, f64::min),
+            per_block,
+            transmissions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyConfig, PolicyKind};
+    use crate::moe::selection::make_policy;
+
+    fn run(policy_kind: PolicyKind, seed: u64, tokens: usize, batches: usize) -> f64 {
+        let mut cfg = SystemConfig::paper_testbed();
+        cfg.seed = seed;
+        let mut sim = TestbedSim::new(cfg.clone());
+        let mut policy = make_policy(policy_kind, &cfg.policy, cfg.n_devices(), seed);
+        let mut total = 0.0;
+        for _ in 0..batches {
+            total += sim.run_batch(tokens, policy.as_mut()).mean_layer_ms;
+        }
+        total / batches as f64
+    }
+
+    #[test]
+    fn testbed_runs_and_reports() {
+        let mut sim = TestbedSim::paper();
+        let mut p = make_policy(
+            PolicyKind::Testbed,
+            &PolicyConfig::default(),
+            4,
+            0,
+        );
+        let out = sim.run_batch(500, p.as_mut());
+        assert_eq!(out.per_block.len(), 32);
+        assert!(out.mean_layer_ms > 0.0);
+        assert!(out.max_layer_ms >= out.mean_layer_ms);
+        assert!(out.min_layer_ms <= out.mean_layer_ms);
+    }
+
+    #[test]
+    fn alg2_beats_vanilla_on_average() {
+        // The Section-VI headline: WDMoE-testbed (Alg 2) reduces latency
+        // vs the Mixtral-based method. Averaged over several batches so
+        // the history estimator has warmed up.
+        let v = run(PolicyKind::VanillaTopK, 1, 600, 6);
+        let t = run(PolicyKind::Testbed, 1, 600, 6);
+        assert!(
+            t < v,
+            "Alg2 mean layer latency {t:.2}ms should beat vanilla {v:.2}ms"
+        );
+    }
+
+    #[test]
+    fn latency_variance_exists() {
+        // Fig. 10 shades a min–max band: fading+jitter must make layers differ.
+        let mut sim = TestbedSim::paper();
+        let mut p = make_policy(PolicyKind::VanillaTopK, &PolicyConfig::default(), 4, 0);
+        let out = sim.run_batch(400, p.as_mut());
+        assert!(out.max_layer_ms > out.min_layer_ms * 1.05);
+    }
+
+    #[test]
+    fn seeds_reproduce() {
+        let a = run(PolicyKind::Testbed, 7, 300, 2);
+        let b = run(PolicyKind::Testbed, 7, 300, 2);
+        assert_eq!(a, b);
+        let c = run(PolicyKind::Testbed, 8, 300, 2);
+        assert_ne!(a, c);
+    }
+}

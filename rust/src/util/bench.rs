@@ -1,0 +1,95 @@
+//! Micro-benchmark harness — replaces `criterion` (unavailable offline).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary built on this:
+//! warm-up, then timed iterations until a wall-clock budget is spent,
+//! reporting mean / p50 / p95 per-iteration time with a black-box guard
+//! against dead-code elimination.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10}   p50 {:>10}   p95 {:>10}   ({} iters)",
+            self.name,
+            Self::fmt_ns(self.mean_ns),
+            Self::fmt_ns(self.p50_ns),
+            Self::fmt_ns(self.p95_ns),
+            self.iterations
+        );
+    }
+}
+
+/// Time `f` repeatedly for ~`budget` (after one warm-up call) and report.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    black_box(f()); // warm-up (fills caches, triggers lazy init)
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples_ns.len() < 5 {
+        let t0 = Instant::now();
+        black_box(f());
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if samples_ns.len() >= 100_000 {
+            break;
+        }
+    }
+    let mut sorted = samples_ns.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iterations: samples_ns.len(),
+        mean_ns: samples_ns.iter().sum::<f64>() / samples_ns.len() as f64,
+        p50_ns: pct(0.50),
+        p95_ns: pct(0.95),
+    };
+    r.report();
+    r
+}
+
+/// Default per-benchmark budget, overridable via WDMOE_BENCH_MS.
+pub fn default_budget() -> Duration {
+    let ms = std::env::var("WDMOE_BENCH_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(300);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(10), || {
+            (0..100).sum::<u64>()
+        });
+        assert!(r.iterations >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+}

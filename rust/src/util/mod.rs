@@ -1,0 +1,41 @@
+//! Self-contained utilities replacing crates unavailable in the offline
+//! build environment (see DESIGN.md §Substitutions): a seeded PRNG
+//! (`rand`), a minimal JSON parser/writer (`serde_json`), a temp-dir
+//! helper (`tempfile`), and a micro-benchmark timer (`criterion`).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique, created temp directory (best-effort cleanup is the caller's
+/// business; tests leave them under the system temp dir).
+pub fn temp_dir(prefix: &str) -> PathBuf {
+    let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("wdmoe-{prefix}-{pid}-{n}"));
+    std::fs::create_dir_all(&dir).expect("creating temp dir");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temp_dirs_unique_and_exist() {
+        let a = temp_dir("t");
+        let b = temp_dir("t");
+        assert_ne!(a, b);
+        assert!(a.exists() && b.exists());
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+}

@@ -1,0 +1,174 @@
+//! Bandwidth allocation strategies — the upper level of the paper's
+//! bilevel optimization.
+//!
+//! [`UniformAllocator`] is the baseline the paper calls "the Mixtral-based
+//! method ... allocates bandwidth evenly"; [`OptimalAllocator`] solves
+//! problem P3 with the convex solver in [`crate::optim`].
+
+use crate::config::ChannelConfig;
+use crate::optim::solver::DeviceLink;
+use crate::optim::{minimize_sum_max, PerBlockLoad, SolverOptions};
+use crate::wireless::channel::ChannelRealization;
+
+/// Context handed to an allocator: everything Eq. (19) needs.
+#[derive(Debug, Clone)]
+pub struct AllocationInput<'a> {
+    pub channel_cfg: &'a ChannelConfig,
+    pub realization: &'a ChannelRealization,
+    /// Token counts `q_k^i` per block per device (the expert selection).
+    pub loads: &'a [PerBlockLoad],
+    /// Compute seconds per token per device (`L_comp / C_k`).
+    pub t_comp_per_token: &'a [f64],
+    /// Payload per token per direction in bits (`L_comm = eps·m`, Eq. (4)).
+    pub l_comm_bits: f64,
+}
+
+impl AllocationInput<'_> {
+    /// Number of devices `U`.
+    pub fn n_devices(&self) -> usize {
+        self.realization.gains.len()
+    }
+
+    /// Assemble per-device [`DeviceLink`]s for the solver / latency model.
+    pub fn links(&self) -> Vec<DeviceLink> {
+        let n0 = self.channel_cfg.noise_w_per_hz();
+        self.realization
+            .gains
+            .iter()
+            .zip(self.t_comp_per_token)
+            .map(|(g, &tc)| DeviceLink {
+                p_down: self.channel_cfg.bs_power_w,
+                p_up: self.channel_cfg.device_power_w,
+                g_down: g.down,
+                g_up: g.up,
+                n0,
+                l_comm_bits: self.l_comm_bits,
+                t_comp_per_token: tc,
+            })
+            .collect()
+    }
+}
+
+/// Bandwidth allocator interface.
+pub trait BandwidthAllocator: Send + Sync {
+    /// Split `total_hz` across the devices; returns `B_k` summing to total.
+    fn allocate(&self, input: &AllocationInput<'_>, total_hz: f64) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+}
+
+/// Even split `B_k = B/U` — paper baseline.
+pub struct UniformAllocator;
+
+impl BandwidthAllocator for UniformAllocator {
+    fn allocate(&self, input: &AllocationInput<'_>, total_hz: f64) -> Vec<f64> {
+        let u = input.n_devices();
+        vec![total_hz / u as f64; u]
+    }
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Convex-optimal allocation (problem P3).
+pub struct OptimalAllocator {
+    pub opts: SolverOptions,
+}
+
+impl Default for OptimalAllocator {
+    fn default() -> Self {
+        Self {
+            opts: SolverOptions::default(),
+        }
+    }
+}
+
+impl BandwidthAllocator for OptimalAllocator {
+    fn allocate(&self, input: &AllocationInput<'_>, total_hz: f64) -> Vec<f64> {
+        let links = input.links();
+        minimize_sum_max(&links, input.loads, total_hz, &self.opts).bandwidth
+    }
+    fn name(&self) -> &'static str {
+        "optimal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::optim::solver::exact_objective;
+    use crate::wireless::channel::ChannelSimulator;
+
+    fn setup() -> (SystemConfig, ChannelRealization, Vec<f64>) {
+        let cfg = SystemConfig::paper_simulation();
+        let sim = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
+        let real = sim.expected_realization();
+        let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
+        let t_comp: Vec<f64> = cfg.devices.iter().map(|d| l_comp / d.compute_flops).collect();
+        (cfg, real, t_comp)
+    }
+
+    #[test]
+    fn uniform_splits_evenly() {
+        let (cfg, real, t_comp) = setup();
+        let loads = vec![PerBlockLoad { tokens: vec![10.0; 8] }];
+        let input = AllocationInput {
+            channel_cfg: &cfg.channel,
+            realization: &real,
+            loads: &loads,
+            t_comp_per_token: &t_comp,
+            l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
+        };
+        let b = UniformAllocator.allocate(&input, 100e6);
+        assert_eq!(b.len(), 8);
+        for &bk in &b {
+            assert!((bk - 12.5e6).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn optimal_beats_uniform_on_paper_fleet() {
+        let (cfg, real, t_comp) = setup();
+        let loads: Vec<PerBlockLoad> = (0..4)
+            .map(|i| PerBlockLoad {
+                tokens: (0..8).map(|k| (20 + (i * 3 + k * 5) % 40) as f64).collect(),
+            })
+            .collect();
+        let input = AllocationInput {
+            channel_cfg: &cfg.channel,
+            realization: &real,
+            loads: &loads,
+            t_comp_per_token: &t_comp,
+            l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
+        };
+        let links = input.links();
+        let b_uni = UniformAllocator.allocate(&input, 100e6);
+        let b_opt = OptimalAllocator::default().allocate(&input, 100e6);
+        let o_uni = exact_objective(&links, &loads, &b_uni);
+        let o_opt = exact_objective(&links, &loads, &b_opt);
+        assert!(
+            o_opt < o_uni * 0.8,
+            "optimal {o_opt} vs uniform {o_uni}: expected >20% gain on heterogeneous fleet"
+        );
+    }
+
+    #[test]
+    fn far_device_gets_more_bandwidth() {
+        // With equal loads, the distance-350m device needs more spectrum
+        // than the 60m one to equalise latency.
+        let (cfg, real, t_comp) = setup();
+        let loads = vec![PerBlockLoad { tokens: vec![50.0; 8] }];
+        let input = AllocationInput {
+            channel_cfg: &cfg.channel,
+            realization: &real,
+            loads: &loads,
+            t_comp_per_token: &t_comp,
+            l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
+        };
+        let b = OptimalAllocator::default().allocate(&input, 100e6);
+        assert!(
+            b[7] > b[0],
+            "far device should get more bandwidth: {b:?}"
+        );
+    }
+}

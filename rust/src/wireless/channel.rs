@@ -1,0 +1,214 @@
+//! Channel model: 3GPP-style path loss + Rayleigh block fading.
+//!
+//! Paper §V-A: "We consider Rayleigh fading channels with a mean
+//! `10^{-PL(d)/20}`, where the path loss is
+//! `PL(d) (dB) = 32.4 + 20 log10(f_carrier) + 20 log10(d)`", with the
+//! carrier in GHz and the distance in metres (3GPP TR 38.901 free-space
+//! form). The fading amplitude is Rayleigh with the stated mean; the power
+//! gain fed into the Shannon rate is the squared amplitude.
+
+use crate::config::{ChannelConfig, DeviceConfig};
+use crate::util::Rng;
+
+/// Free-space path loss in dB (paper §V-A).
+pub fn path_loss_db(distance_m: f64, carrier_ghz: f64) -> f64 {
+    32.4 + 20.0 * carrier_ghz.log10() + 20.0 * distance_m.log10()
+}
+
+/// Mean fading amplitude for a device at `distance_m` — `10^{-PL/20}`.
+pub fn mean_amplitude(distance_m: f64, carrier_ghz: f64) -> f64 {
+    10f64.powf(-path_loss_db(distance_m, carrier_ghz) / 20.0)
+}
+
+/// Up/downlink power gains for one device in one coherence interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkGains {
+    /// `g_{BS,k}` — downlink power gain.
+    pub down: f64,
+    /// `g_{k,BS}` — uplink power gain.
+    pub up: f64,
+}
+
+/// One realization of the fading process across the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelRealization {
+    pub gains: Vec<LinkGains>,
+}
+
+impl ChannelRealization {
+    pub fn n_devices(&self) -> usize {
+        self.gains.len()
+    }
+}
+
+/// Seeded Rayleigh block-fading simulator.
+///
+/// `fading_blocks` in [`ChannelConfig`] sets the coherence length in MoE
+/// blocks: 0 means one draw for the whole run (static channel — what the
+/// paper's deterministic latency tables assume); k > 0 redraws every k
+/// blocks (used for fading ablations and the testbed's channel variation).
+pub struct ChannelSimulator {
+    cfg: ChannelConfig,
+    mean_amp: Vec<f64>,
+    rng: Rng,
+    current: ChannelRealization,
+    blocks_since_draw: usize,
+}
+
+impl ChannelSimulator {
+    pub fn new(cfg: &ChannelConfig, devices: &[DeviceConfig], seed: u64) -> Self {
+        let mean_amp: Vec<f64> = devices
+            .iter()
+            .map(|d| mean_amplitude(d.distance_m, cfg.carrier_ghz))
+            .collect();
+        let mut rng = Rng::seed_from_u64(seed);
+        let current = Self::draw(&mean_amp, &mut rng);
+        Self {
+            cfg: cfg.clone(),
+            mean_amp,
+            rng,
+            current,
+            blocks_since_draw: 0,
+        }
+    }
+
+    fn draw(mean_amp: &[f64], rng: &mut Rng) -> ChannelRealization {
+        let gains = mean_amp
+            .iter()
+            .map(|&mu| {
+                let ad = rng.rayleigh_with_mean(mu);
+                let au = rng.rayleigh_with_mean(mu);
+                LinkGains {
+                    down: ad * ad,
+                    up: au * au,
+                }
+            })
+            .collect();
+        ChannelRealization { gains }
+    }
+
+    /// The realization in effect for the current MoE block.
+    pub fn realization(&self) -> &ChannelRealization {
+        &self.current
+    }
+
+    /// Advance one MoE block; redraws fading at coherence boundaries.
+    pub fn advance_block(&mut self) {
+        if self.cfg.fading_blocks == 0 {
+            return; // static channel
+        }
+        self.blocks_since_draw += 1;
+        if self.blocks_since_draw >= self.cfg.fading_blocks {
+            self.current = Self::draw(&self.mean_amp, &mut self.rng);
+            self.blocks_since_draw = 0;
+        }
+    }
+
+    /// Deterministic expected-gain realization (no fading): power gain
+    /// `E[a]^2` per link. Used by the paper-table harnesses, which model
+    /// the channel through its mean as the paper's closed-form latencies do.
+    pub fn expected_realization(&self) -> ChannelRealization {
+        let gains = self
+            .mean_amp
+            .iter()
+            .map(|&mu| LinkGains {
+                down: mu * mu,
+                up: mu * mu,
+            })
+            .collect();
+        ChannelRealization { gains }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn sim(seed: u64) -> ChannelSimulator {
+        let cfg = SystemConfig::paper_simulation();
+        ChannelSimulator::new(&cfg.channel, &cfg.devices, seed)
+    }
+
+    #[test]
+    fn path_loss_reference_value() {
+        // 3.5 GHz, 100 m: 32.4 + 10.88 + 40.0 = 83.28 dB
+        let pl = path_loss_db(100.0, 3.5);
+        assert!((pl - 83.28).abs() < 0.01, "pl={pl}");
+    }
+
+    #[test]
+    fn path_loss_monotone_in_distance() {
+        assert!(path_loss_db(200.0, 3.5) > path_loss_db(100.0, 3.5));
+        assert!(path_loss_db(100.0, 5.0) > path_loss_db(100.0, 3.5));
+    }
+
+    #[test]
+    fn rayleigh_mean_matches_target() {
+        // Monte-Carlo: sample mean amplitude ≈ 10^{-PL/20}.
+        let mu = mean_amplitude(100.0, 3.5);
+        let mut rng = Rng::seed_from_u64(42);
+        let n = 200_000;
+        let sum: f64 = (0..n)
+            .map(|_| rng.rayleigh_with_mean(mu))
+            .sum();
+        let got = sum / n as f64;
+        assert!(
+            (got - mu).abs() / mu < 0.01,
+            "mean amp {got} vs target {mu}"
+        );
+    }
+
+    #[test]
+    fn gains_positive_and_ordered_by_distance_in_expectation() {
+        let s = sim(0);
+        let exp = s.expected_realization();
+        // devices are ordered by increasing distance in the preset
+        for w in exp.gains.windows(2) {
+            assert!(w[0].down > w[1].down);
+        }
+        for g in &exp.gains {
+            assert!(g.down > 0.0 && g.up > 0.0);
+        }
+    }
+
+    #[test]
+    fn static_channel_never_redraws() {
+        let mut s = sim(1);
+        let before = s.realization().clone();
+        for _ in 0..64 {
+            s.advance_block();
+        }
+        assert_eq!(&before, s.realization());
+    }
+
+    #[test]
+    fn fading_redraws_at_coherence_boundary() {
+        let cfg = SystemConfig::paper_simulation();
+        let mut ch = cfg.channel.clone();
+        ch.fading_blocks = 2;
+        let mut s = ChannelSimulator::new(&ch, &cfg.devices, 7);
+        let first = s.realization().clone();
+        s.advance_block();
+        assert_eq!(&first, s.realization(), "redraw before coherence end");
+        s.advance_block();
+        assert_ne!(&first, s.realization(), "no redraw at coherence end");
+    }
+
+    #[test]
+    fn seeded_determinism() {
+        let a = sim(9).realization().clone();
+        let b = sim(9).realization().clone();
+        assert_eq!(a, b);
+        let c = sim(10).realization().clone();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uplink_downlink_independent() {
+        let s = sim(3);
+        for g in &s.realization().gains {
+            assert_ne!(g.up, g.down);
+        }
+    }
+}

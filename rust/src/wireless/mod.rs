@@ -1,0 +1,11 @@
+//! Wireless substrate: path loss, Rayleigh fading, Shannon rates, and
+//! bandwidth allocation — the physics behind paper Eqs. (2)–(3) and the
+//! upper-level optimization P3.
+
+pub mod bandwidth;
+pub mod channel;
+pub mod rate;
+
+pub use bandwidth::{BandwidthAllocator, OptimalAllocator, UniformAllocator};
+pub use channel::{ChannelRealization, ChannelSimulator, LinkGains};
+pub use rate::shannon_rate;

@@ -1,0 +1,103 @@
+//! Shannon-capacity link rates — paper Eqs. (2) and (3).
+
+/// Achievable rate in bit/s over a bandwidth `b_hz` link:
+///
+/// `R = B · log2(1 + P·g / (N0·B))`   (paper Eqs. (2)/(3))
+///
+/// * `b_hz` — allocated bandwidth `B_k` (Hz)
+/// * `power_w` — transmit power `P` (W)
+/// * `gain` — channel power gain `g` (linear, dimensionless)
+/// * `n0_w_per_hz` — noise PSD `N_0` (W/Hz)
+///
+/// Returns 0 for zero bandwidth — the true limit: B·log2(1+c/B) → 0 as
+/// B→0+, since the log grows only logarithmically in 1/B.
+pub fn shannon_rate(b_hz: f64, power_w: f64, gain: f64, n0_w_per_hz: f64) -> f64 {
+    if b_hz <= 0.0 {
+        return 0.0;
+    }
+    let snr = power_w * gain / (n0_w_per_hz * b_hz);
+    b_hz * (1.0 + snr).log2()
+}
+
+/// Derivative dR/dB — used by the bandwidth optimiser's gradients.
+///
+/// `R'(B) = log2(1 + c/B) - (c / ln2) / (B + c)` with `c = P·g/N0`
+/// (paper Eq. (28) rearranged). Positive and decreasing: R is increasing
+/// and concave in B.
+pub fn shannon_rate_deriv(b_hz: f64, power_w: f64, gain: f64, n0_w_per_hz: f64) -> f64 {
+    let c = power_w * gain / n0_w_per_hz; // Hz
+    if b_hz <= 0.0 {
+        return f64::INFINITY;
+    }
+    (1.0 + c / b_hz).log2() - c / std::f64::consts::LN_2 / (b_hz + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N0: f64 = 3.98e-21;
+
+    #[test]
+    fn zero_bandwidth_zero_rate() {
+        assert_eq!(shannon_rate(0.0, 10.0, 1e-9, N0), 0.0);
+    }
+
+    #[test]
+    fn rate_increasing_in_bandwidth() {
+        let mut prev = 0.0;
+        for b in [1e6, 5e6, 10e6, 50e6, 100e6] {
+            let r = shannon_rate(b, 10.0, 1e-9, N0);
+            assert!(r > prev, "rate not increasing at B={b}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn rate_concave_in_bandwidth() {
+        // midpoint test: R((a+b)/2) >= (R(a)+R(b))/2
+        let (a, b) = (5e6, 80e6);
+        let ra = shannon_rate(a, 10.0, 1e-9, N0);
+        let rb = shannon_rate(b, 10.0, 1e-9, N0);
+        let rm = shannon_rate((a + b) / 2.0, 10.0, 1e-9, N0);
+        assert!(rm >= (ra + rb) / 2.0);
+    }
+
+    #[test]
+    fn rate_increasing_in_power_and_gain() {
+        let base = shannon_rate(10e6, 1.0, 1e-9, N0);
+        assert!(shannon_rate(10e6, 2.0, 1e-9, N0) > base);
+        assert!(shannon_rate(10e6, 1.0, 2e-9, N0) > base);
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        let (p, g) = (10.0, 1e-9);
+        for b in [1e6, 12.5e6, 60e6] {
+            let h = b * 1e-6;
+            let fd = (shannon_rate(b + h, p, g, N0) - shannon_rate(b - h, p, g, N0)) / (2.0 * h);
+            let an = shannon_rate_deriv(b, p, g, N0);
+            assert!(
+                (fd - an).abs() / fd.abs() < 1e-4,
+                "B={b}: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn deriv_positive_decreasing() {
+        let (p, g) = (10.0, 1e-9);
+        let d1 = shannon_rate_deriv(1e6, p, g, N0);
+        let d2 = shannon_rate_deriv(50e6, p, g, N0);
+        assert!(d1 > d2 && d2 > 0.0);
+    }
+
+    #[test]
+    fn realistic_cell_edge_rate_sane() {
+        // 12.5 MHz slice, 10 W BS, 100 m path loss at 3.5 GHz.
+        let pl_db = 32.4 + 20.0 * 3.5f64.log10() + 20.0 * 100f64.log10();
+        let g = 10f64.powf(-pl_db / 10.0);
+        let r = shannon_rate(12.5e6, 10.0, g, N0);
+        assert!(r > 50e6 && r < 1e9, "rate {r} outside sane range");
+    }
+}

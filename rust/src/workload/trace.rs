@@ -1,0 +1,80 @@
+//! Workload trace record/replay: persist generated batches as JSON so a
+//! run can be replayed bit-identically (e.g. to compare policies on the
+//! exact same token stream, as the paper's ablations require).
+
+use super::Batch;
+use crate::util::Json;
+use std::path::Path;
+
+/// A recorded sequence of batches.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub batches: Vec<Batch>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, batch: Batch) {
+        self.batches.push(batch);
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let j = Json::obj(vec![(
+            "batches",
+            Json::Arr(self.batches.iter().map(|b| b.to_json()).collect()),
+        )]);
+        std::fs::write(path, j.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        Ok(Self {
+            batches: j
+                .get("batches")?
+                .as_arr()?
+                .iter()
+                .map(Batch::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        })
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.batches.iter().map(|b| b.total_tokens()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Benchmark, WorkloadGen};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut gen = WorkloadGen::new(0, 2048);
+        let mut trace = Trace::new();
+        trace.record(gen.batch(Benchmark::Piqa));
+        trace.record(gen.batch(Benchmark::Mbpp));
+        let dir = crate::util::temp_dir("trace");
+        let path = dir.join("trace.json");
+        trace.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.batches.len(), 2);
+        assert_eq!(back.total_tokens(), trace.total_tokens());
+        assert_eq!(back.batches[0].prompt_lens, trace.batches[0].prompt_lens);
+        assert_eq!(back.batches[1].token_ids, trace.batches[1].token_ids);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Trace::load(Path::new("/nonexistent/trace.json")).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Cross-module integration tests: the full analytic pipeline, paper-
+//! shape invariants, failure injection, and trace replay. PJRT-dependent
+//! paths live in `serving.rs`.
+
+use wdmoe::config::{PolicyKind, SystemConfig};
+use wdmoe::coordinator::sim::{Simulator, Variant};
+use wdmoe::metrics::Summary;
+use wdmoe::moe::stats::{max_same_selection_ratio, pair_frequencies};
+use wdmoe::testbed::TestbedSim;
+use wdmoe::workload::trace::Trace;
+use wdmoe::workload::{Benchmark, WorkloadGen};
+
+/// The paper's headline: WDMoE reduces latency by ~40–47% vs the
+/// Mixtral-based method across all eight datasets. Require a clear win
+/// (>25%) on every dataset in our substrate.
+#[test]
+fn headline_latency_reduction_on_every_dataset() {
+    for bench in Benchmark::ALL {
+        let mut wl = WorkloadGen::new(1, 32000);
+        let tokens = wl.batch(bench).total_tokens();
+        let base = Simulator::new(SystemConfig::paper_simulation())
+            .run_variant(tokens, Variant::mixtral_based())
+            .latency_ms();
+        let ours = Simulator::new(SystemConfig::paper_simulation())
+            .run_variant(tokens, Variant::wdmoe_full())
+            .latency_ms();
+        let red = (1.0 - ours / base) * 100.0;
+        // Small batches (Humaneval: ~60 tokens) leave less headroom for
+        // load-balancing — the win shrinks but must persist.
+        let floor = if tokens < 500 { 12.0 } else { 25.0 };
+        assert!(
+            red > floor,
+            "{}: only {red:.1}% reduction ({base:.1} -> {ours:.1} ms)",
+            bench.name()
+        );
+    }
+}
+
+/// Table-II shape: the four arms are ordered, and bandwidth allocation
+/// contributes more than expert selection (paper §V-C: 36.59% vs 6.89%).
+#[test]
+fn ablation_lever_ordering() {
+    let run = |v: Variant| {
+        Simulator::new(SystemConfig::paper_simulation())
+            .run_variant(4300, v)
+            .latency_ms()
+    };
+    let mixtral = run(Variant::mixtral_based());
+    let no_bw = run(Variant::wdmoe_no_bandwidth());
+    let no_sel = run(Variant::wdmoe_no_selection());
+    let full = run(Variant::wdmoe_full());
+    let sel_gain = 1.0 - no_bw / mixtral;
+    let bw_gain = 1.0 - no_sel / mixtral;
+    assert!(sel_gain > 0.0, "selection alone must help");
+    assert!(bw_gain > sel_gain, "bandwidth lever must dominate (paper §V-C)");
+    assert!(full <= no_sel * 1.02 && full <= no_bw);
+}
+
+/// Fig.-5 shape: monotone decreasing latency in bandwidth; WDMoE below
+/// baseline everywhere; the gap narrows in relative terms at very high
+/// bandwidth only if comm stops dominating (not asserted — just monotone).
+#[test]
+fn latency_monotone_in_bandwidth() {
+    let mut prev_m = f64::INFINITY;
+    let mut prev_w = f64::INFINITY;
+    for mhz in [20.0, 60.0, 100.0, 140.0, 180.0] {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.channel.total_bandwidth_hz = mhz * 1e6;
+        let m = Simulator::new(cfg.clone())
+            .run_variant(2000, Variant::mixtral_based())
+            .latency_ms();
+        let w = Simulator::new(cfg)
+            .run_variant(2000, Variant::wdmoe_full())
+            .latency_ms();
+        assert!(m < prev_m && w < prev_w, "not monotone at {mhz} MHz");
+        assert!(w < m, "WDMoE above baseline at {mhz} MHz");
+        prev_m = m;
+        prev_w = w;
+    }
+}
+
+/// Fig.-8 shape: identical-selection ratios are substantial (the paper
+/// reports >25% pair overlap in most layers) and bounded by 1.
+#[test]
+fn selection_overlap_statistics() {
+    let mut sim = Simulator::new(SystemConfig::paper_simulation());
+    let out = sim.run_variant(4000, Variant::wdmoe_full());
+    for (i, sel) in out.selections.iter().enumerate() {
+        let r = max_same_selection_ratio(sel);
+        assert!((0.0..=1.0).contains(&r), "layer {i}: ratio {r}");
+        // 8 experts -> 28 possible top-2 pairs; with 4000 tokens the top
+        // pair should be well above the uniform 1/28 floor.
+        assert!(r > 1.0 / 28.0, "layer {i}: ratio {r} below uniform floor");
+        let pf = pair_frequencies(sel);
+        assert!(!pf.is_empty());
+    }
+}
+
+/// Latency scales ~linearly with token volume under a fixed variant
+/// (every token has the same size/FLOPs — paper §III-B).
+#[test]
+fn latency_scales_linearly_in_tokens() {
+    let lat = |j: usize| {
+        Simulator::new(SystemConfig::paper_simulation())
+            .run_variant(j, Variant::mixtral_based())
+            .latency_ms()
+    };
+    let l1 = lat(1000);
+    let l2 = lat(2000);
+    let ratio = l2 / l1;
+    assert!(
+        (1.7..=2.3).contains(&ratio),
+        "latency should ~double with tokens: {l1} -> {l2} (ratio {ratio})"
+    );
+}
+
+/// Failure injection mid-run: the simulator keeps serving with a device
+/// down; latency stays finite; the offline device receives nothing.
+#[test]
+fn device_failure_mid_run() {
+    let mut sim = Simulator::new(SystemConfig::paper_simulation());
+    let before = sim.run_variant(800, Variant::wdmoe_full());
+    sim.fleet_mut().set_online(5, false);
+    let after = sim.run_variant(800, Variant::wdmoe_full());
+    assert!(after.latency_ms().is_finite());
+    for sel in &after.selections {
+        assert_eq!(sel.tokens_per_device()[5], 0.0);
+    }
+    // Losing a device changes latency but keeps it in a sane band —
+    // note it can *improve*: device 5 is a 2-TFLOPS cell-edge straggler,
+    // and rerouting its tokens to faster devices is exactly what the
+    // paper's load-balancing intuition predicts.
+    assert!(after.latency_ms() > before.latency_ms() * 0.2);
+    assert!(after.latency_ms() < before.latency_ms() * 5.0);
+    // Recovery.
+    sim.fleet_mut().set_online(5, true);
+    let recovered = sim.run_variant(800, Variant::wdmoe_full());
+    assert!(recovered.selections.iter().any(|s| s.tokens_per_device()[5] > 0.0));
+}
+
+/// Testbed (Alg 2) with all-equal devices stays at vanilla behaviour but
+/// heterogeneity opens a gap — the §VI premise.
+#[test]
+fn testbed_gap_requires_heterogeneity() {
+    // Homogeneous fleet: Alg 2 ≈ vanilla.
+    let mut cfg = SystemConfig::paper_testbed();
+    for d in &mut cfg.devices {
+        d.compute_flops = 8e12;
+        d.distance_m = 1.0;
+        d.compute_jitter = 0.0;
+    }
+    cfg.channel.fading_blocks = 0;
+    let run = |cfg: &SystemConfig, kind: PolicyKind| {
+        let mut sim = TestbedSim::with_seed(cfg.clone(), 3);
+        let mut p = wdmoe::moe::selection::make_policy(kind, &cfg.policy, 4, 3);
+        let mut total = 0.0;
+        for _ in 0..4 {
+            total += sim.run_batch(200, p.as_mut()).mean_layer_ms;
+        }
+        total
+    };
+    let v = run(&cfg, PolicyKind::VanillaTopK);
+    let t = run(&cfg, PolicyKind::Testbed);
+    assert!(
+        (t - v).abs() / v < 0.15,
+        "homogeneous fleet: Alg2 {t} should track vanilla {v}"
+    );
+
+    // Heterogeneous fleet: Alg 2 must win on average.
+    let cfg = SystemConfig::paper_testbed();
+    let v = run(&cfg, PolicyKind::VanillaTopK);
+    let t = run(&cfg, PolicyKind::Testbed);
+    assert!(t < v, "heterogeneous fleet: Alg2 {t} should beat vanilla {v}");
+}
+
+/// Trace record/replay produces identical simulated latency.
+#[test]
+fn trace_replay_reproduces_latency() {
+    let dir = wdmoe::util::temp_dir("itrace");
+    let path = dir.join("trace.json");
+    let mut wl = WorkloadGen::new(5, 32000);
+    let mut trace = Trace::new();
+    for _ in 0..3 {
+        trace.record(wl.batch(Benchmark::ArcChallenge));
+    }
+    trace.save(&path).unwrap();
+    let replay = Trace::load(&path).unwrap();
+    assert_eq!(trace, replay);
+
+    let run = |t: &Trace| -> Vec<f64> {
+        t.batches
+            .iter()
+            .map(|b| {
+                Simulator::new(SystemConfig::paper_simulation())
+                    .run_variant(b.total_tokens(), Variant::wdmoe_full())
+                    .latency_ms()
+            })
+            .collect()
+    };
+    assert_eq!(run(&trace), run(&replay));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Seed sweep: the WDMoE win is robust across random channel/workload
+/// seeds, not an artifact of seed 0.
+#[test]
+fn reduction_robust_across_seeds() {
+    let mut reductions = Summary::new();
+    for seed in 0..6u64 {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.seed = seed;
+        let m = Simulator::new(cfg.clone())
+            .run_variant(2000, Variant::mixtral_based())
+            .latency_ms();
+        let w = Simulator::new(cfg)
+            .run_variant(2000, Variant::wdmoe_full())
+            .latency_ms();
+        reductions.record((1.0 - w / m) * 100.0);
+    }
+    assert!(
+        reductions.min() > 20.0,
+        "worst-seed reduction {:.1}% too small",
+        reductions.min()
+    );
+}
+
+/// Fading channel: turning fading on changes latency but keeps the
+/// WDMoE advantage.
+#[test]
+fn fading_preserves_advantage() {
+    let mut cfg = SystemConfig::paper_simulation();
+    cfg.channel.fading_blocks = 4;
+    let mut sim_m = Simulator::new(cfg.clone());
+    sim_m.fading = true;
+    let m = sim_m.run_variant(1500, Variant::mixtral_based()).latency_ms();
+    let mut sim_w = Simulator::new(cfg);
+    sim_w.fading = true;
+    let w = sim_w.run_variant(1500, Variant::wdmoe_full()).latency_ms();
+    assert!(w < m, "WDMoE {w} should beat Mixtral {m} under fading");
+}

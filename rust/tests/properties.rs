@@ -1,0 +1,261 @@
+//! Hand-rolled property tests (proptest is unavailable offline): random
+//! inputs sweep the invariants that the unit tests pin at single points.
+
+use wdmoe::config::{PolicyConfig, PolicyKind, SystemConfig};
+use wdmoe::latency::{block_latency, TokenLatencies};
+use wdmoe::moe::selection::{make_policy, SelectionContext};
+use wdmoe::moe::{total_wlr, GateWeights, Selection};
+use wdmoe::optim::solver::{exact_objective, DeviceLink};
+use wdmoe::optim::{minimize_sum_max, PerBlockLoad, SolverOptions};
+use wdmoe::util::{Json, Rng};
+
+fn random_gate(rng: &mut Rng, j: usize, n: usize) -> GateWeights {
+    GateWeights::new(
+        (0..j)
+            .map(|_| {
+                let logits: Vec<f64> = (0..n).map(|_| 1.5 * rng.normal()).collect();
+                let m = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                let e: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+                let s: f64 = e.iter().sum();
+                e.iter().map(|x| x / s).collect()
+            })
+            .collect(),
+    )
+}
+
+/// Every policy, on random gates/latencies: constraint (16) holds, masks
+/// and weights are consistent, offline devices receive nothing.
+#[test]
+fn prop_policies_produce_valid_selections() {
+    let mut rng = Rng::seed_from_u64(10);
+    for case in 0..60 {
+        let n = 2 + rng.below(7); // 2..8 experts
+        let j = 1 + rng.below(64);
+        let gate = random_gate(&mut rng, j, n);
+        let lat = TokenLatencies {
+            per_token: (0..n).map(|_| 10f64.powf(rng.range_f64(-5.0, -1.0))).collect(),
+        };
+        let mut online = vec![true; n];
+        if n > 2 {
+            online[rng.below(n)] = false; // one device down
+        }
+        let top_k = 1 + rng.below(2.min(n - 1).max(1));
+        let ctx = SelectionContext {
+            latencies: &lat,
+            top_k,
+            online: &online,
+        };
+        for kind in [
+            PolicyKind::VanillaTopK,
+            PolicyKind::Wdmoe,
+            PolicyKind::Testbed,
+            PolicyKind::Random,
+        ] {
+            let mut p = make_policy(kind, &PolicyConfig::default(), n, case as u64);
+            let sel = p.select(&gate, &ctx);
+            sel.validate().unwrap_or_else(|e| panic!("case {case} {kind:?}: {e}"));
+            for jj in 0..j {
+                for k in 0..n {
+                    if !online[k] {
+                        assert!(!sel.mask[jj][k], "case {case} {kind:?}: offline device used");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Algorithm 1 never selects outside the vanilla top-2 set (it only
+/// *drops* experts) and never increases any device's token count.
+#[test]
+fn prop_alg1_is_subset_of_top2() {
+    let mut rng = Rng::seed_from_u64(11);
+    for case in 0..40 {
+        let n = 4 + rng.below(5);
+        let j = 8 + rng.below(100);
+        let gate = random_gate(&mut rng, j, n);
+        let lat = TokenLatencies {
+            per_token: (0..n).map(|_| 10f64.powf(rng.range_f64(-5.0, -2.0))).collect(),
+        };
+        let online = vec![true; n];
+        let ctx = SelectionContext {
+            latencies: &lat,
+            top_k: 2,
+            online: &online,
+        };
+        let mut p = make_policy(PolicyKind::Wdmoe, &PolicyConfig::default(), n, case as u64);
+        let sel = p.select(&gate, &ctx);
+        let top2 = Selection::top_k(&gate, 2);
+        for jj in 0..j {
+            for k in 0..n {
+                assert!(
+                    !sel.mask[jj][k] || top2.mask[jj][k],
+                    "case {case}: Alg1 routed token {jj} to non-top2 expert {k}"
+                );
+            }
+        }
+        let c_sel = sel.tokens_per_device();
+        let c_top = top2.tokens_per_device();
+        for k in 0..n {
+            assert!(c_sel[k] <= c_top[k], "case {case}: load grew on device {k}");
+        }
+    }
+}
+
+/// Algorithm 1's WLR guard: the final selection's total WLR is never
+/// below the vanilla top-2 WLR (dropping only happens when it pays).
+#[test]
+fn prop_alg1_wlr_never_degrades() {
+    let mut rng = Rng::seed_from_u64(12);
+    for case in 0..40 {
+        let n = 4 + rng.below(5);
+        let j = 8 + rng.below(80);
+        let gate = random_gate(&mut rng, j, n);
+        let lat = TokenLatencies {
+            per_token: (0..n).map(|_| 10f64.powf(rng.range_f64(-5.0, -2.0))).collect(),
+        };
+        let online = vec![true; n];
+        let ctx = SelectionContext {
+            latencies: &lat,
+            top_k: 2,
+            online: &online,
+        };
+        let mut p = make_policy(PolicyKind::Wdmoe, &PolicyConfig::default(), n, case as u64);
+        let sel = p.select(&gate, &ctx);
+        let base = total_wlr(&Selection::top_k(&gate, 2), &lat);
+        let got = total_wlr(&sel, &lat);
+        assert!(
+            got >= base * 0.999,
+            "case {case}: WLR degraded {base} -> {got}"
+        );
+    }
+}
+
+/// P3 solver: never worse than uniform, always feasible, on random
+/// fleets/loads.
+#[test]
+fn prop_solver_never_worse_than_uniform() {
+    let mut rng = Rng::seed_from_u64(13);
+    for case in 0..30 {
+        let u = 2 + rng.below(7);
+        let links: Vec<DeviceLink> = (0..u)
+            .map(|_| {
+                let pl_db = rng.range_f64(60.0, 100.0);
+                let g = 10f64.powf(-pl_db / 10.0);
+                DeviceLink {
+                    p_down: 10.0,
+                    p_up: 0.2,
+                    g_down: g,
+                    g_up: g * rng.range_f64(0.5, 1.5),
+                    n0: 3.98e-21,
+                    l_comm_bits: 65536.0,
+                    t_comp_per_token: 10f64.powf(rng.range_f64(-5.0, -3.0)),
+                }
+            })
+            .collect();
+        let blocks = 1 + rng.below(6);
+        let loads: Vec<PerBlockLoad> = (0..blocks)
+            .map(|_| PerBlockLoad {
+                tokens: (0..u).map(|_| (rng.below(200)) as f64).collect(),
+            })
+            .collect();
+        let total = 100e6;
+        let r = minimize_sum_max(&links, &loads, total, &SolverOptions::default());
+        let sum: f64 = r.bandwidth.iter().sum();
+        assert!((sum - total).abs() < 1.0, "case {case}: infeasible sum {sum}");
+        assert!(r.bandwidth.iter().all(|&b| b >= 0.0));
+        let uniform = vec![total / u as f64; u];
+        let o_uni = exact_objective(&links, &loads, &uniform);
+        assert!(
+            r.objective <= o_uni * 1.0 + 1e-12,
+            "case {case}: solver {} worse than uniform {}",
+            r.objective,
+            o_uni
+        );
+    }
+}
+
+/// Latency model: waiting latency is monotone in per-device counts.
+#[test]
+fn prop_waiting_monotone_in_load() {
+    let mut rng = Rng::seed_from_u64(14);
+    for _ in 0..50 {
+        let u = 2 + rng.below(7);
+        let lat = TokenLatencies {
+            per_token: (0..u).map(|_| 10f64.powf(rng.range_f64(-5.0, -2.0))).collect(),
+        };
+        let counts: Vec<f64> = (0..u).map(|_| rng.below(100) as f64).collect();
+        let base = block_latency(&lat, &counts).waiting;
+        let mut more = counts.clone();
+        let k = rng.below(u);
+        more[k] += 1.0 + rng.below(50) as f64;
+        let grown = block_latency(&lat, &more).waiting;
+        assert!(grown >= base, "adding load reduced waiting: {base} -> {grown}");
+    }
+}
+
+/// JSON fuzz: random values roundtrip exactly.
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => {
+                // exact-roundtrip doubles: small integers + dyadic fractions
+                let v = rng.below(4000) as f64 - 2000.0;
+                Json::Num(v / 8.0)
+            }
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(format!("{s}\"\\\n\té"))
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let m = (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect();
+                Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::seed_from_u64(15);
+    for case in 0..300 {
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(j, back, "case {case} roundtrip mismatch: {text}");
+    }
+}
+
+/// Simulator invariant fuzz: random configs keep latency positive,
+/// finite, and WDMoE ≤ Mixtral-based.
+#[test]
+fn prop_sim_invariants_random_configs() {
+    let mut rng = Rng::seed_from_u64(16);
+    for case in 0..10 {
+        let mut cfg = SystemConfig::paper_simulation();
+        cfg.seed = case;
+        cfg.channel.total_bandwidth_hz = rng.range_f64(20e6, 200e6);
+        for d in &mut cfg.devices {
+            d.distance_m = rng.range_f64(30.0, 600.0);
+            d.compute_flops = 10f64.powf(rng.range_f64(12.0, 13.5));
+        }
+        let tokens = 100 + rng.below(3000);
+        let m = wdmoe::coordinator::sim::Simulator::new(cfg.clone())
+            .run_variant(tokens, wdmoe::coordinator::sim::Variant::mixtral_based())
+            .latency_ms();
+        let w = wdmoe::coordinator::sim::Simulator::new(cfg)
+            .run_variant(tokens, wdmoe::coordinator::sim::Variant::wdmoe_full())
+            .latency_ms();
+        assert!(m.is_finite() && m > 0.0);
+        assert!(w.is_finite() && w > 0.0);
+        assert!(w <= m * 1.001, "case {case}: WDMoE {w} above baseline {m}");
+    }
+}

@@ -1,0 +1,106 @@
+//! PJRT serving-path integration tests (need `make artifacts`; skip
+//! gracefully otherwise): router + batcher + model end to end, and
+//! numerical parity of the orchestrated block path.
+
+use std::path::{Path, PathBuf};
+use wdmoe::config::{PolicyKind, SystemConfig};
+use wdmoe::coordinator::batcher::BatcherConfig;
+use wdmoe::coordinator::router::{spawn_router, InferenceRequest};
+use wdmoe::model::{ServingEngine, ServingModel};
+use wdmoe::moe::selection::make_policy;
+use wdmoe::wireless::bandwidth::{OptimalAllocator, UniformAllocator};
+use wdmoe::workload::{Benchmark, WorkloadGen};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn router_serves_pjrt_model_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = SystemConfig::artifact_serving();
+    let n_dev = cfg.n_devices();
+    let policy = make_policy(PolicyKind::Wdmoe, &cfg.policy, n_dev, 0);
+    let handle = spawn_router(
+        move || {
+            let model = ServingModel::load(&dir, cfg)?;
+            Ok(ServingEngine {
+                model,
+                policy,
+                allocator: Box::new(OptimalAllocator::default()),
+            })
+        },
+        BatcherConfig {
+            max_tokens: 256,
+            max_prompts: 8,
+            max_wait: std::time::Duration::from_millis(5),
+        },
+    );
+    let mut wl = WorkloadGen::new(0, 2048);
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let b = wl.batch(Benchmark::Mbpp);
+        let len = b.prompt_lens[0].min(64);
+        rxs.push(
+            handle
+                .infer_async(InferenceRequest {
+                    token_ids: b.token_ids[..len].to_vec(),
+                })
+                .unwrap(),
+        );
+    }
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert!((0..2048).contains(&r.next_token), "token out of vocab");
+        assert!(r.batch_latency_ms > 0.0);
+        assert!(r.batch_compute_ms > 0.0);
+        assert!(r.batch_size >= 1);
+    }
+}
+
+/// Forward under identical policy+seed is deterministic (PJRT CPU).
+#[test]
+fn forward_deterministic() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut model = ServingModel::load(&dir, SystemConfig::artifact_serving()).unwrap();
+    let ids: Vec<i32> = (0..200).map(|i| (i * 31) % 2048).collect();
+    let mut p1 = make_policy(PolicyKind::VanillaTopK, &model.cfg.policy, 8, 0);
+    let a = model.forward(&ids, p1.as_mut(), &UniformAllocator).unwrap();
+    let mut p2 = make_policy(PolicyKind::VanillaTopK, &model.cfg.policy, 8, 0);
+    let b = model.forward(&ids, p2.as_mut(), &UniformAllocator).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(
+        a.report.total_waiting(),
+        b.report.total_waiting()
+    );
+}
+
+/// The capability probe of Table I, asserted as an invariant: WDMoE
+/// routing keeps argmax agreement high and KL low vs vanilla top-2.
+#[test]
+fn routing_fidelity_invariant() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut model = ServingModel::load(&dir, SystemConfig::artifact_serving()).unwrap();
+    let r = wdmoe::repro::capability::probe(&mut model, Benchmark::Piqa, PolicyKind::Wdmoe, 0, 1)
+        .unwrap();
+    // Random-init logits are flat, so argmax is pessimistic; KL and
+    // cosine carry the real signal (see capability.rs docs).
+    assert!(
+        r.argmax_agreement > 0.45,
+        "agreement {:.3} too low",
+        r.argmax_agreement
+    );
+    assert!(r.top5_overlap > 0.9, "top5 overlap {:.3} too low", r.top5_overlap);
+    assert!(r.mean_kl < 0.05, "mean KL {:.4} too high", r.mean_kl);
+    assert!(r.logit_cosine > 0.95, "logit cosine {:.4} too low", r.logit_cosine);
+}
