@@ -1,0 +1,45 @@
+//! Cluster DES benchmarks: event-loop throughput, placement
+//! optimization, and replica dispatch — the hot paths behind
+//! `repro cluster`.
+
+use wdmoe::cluster::{ClusterSim, Dispatcher, Placement};
+use wdmoe::config::{ClusterConfig, DispatchKind};
+use wdmoe::util::bench::{bench, default_budget};
+use wdmoe::workload::{ArrivalProcess, Benchmark};
+
+fn main() {
+    let budget = default_budget();
+
+    // Full DES run: 60 requests x 8 blocks through a 2-cell cluster.
+    for (name, dispatch, cache) in [
+        ("cluster_run/static_cache1", DispatchKind::Static, 1),
+        ("cluster_run/load_aware_cache2", DispatchKind::LoadAware, 2),
+    ] {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 8;
+        cfg.dispatch = dispatch;
+        cfg.cache_capacity = cache;
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(60, Benchmark::Piqa, 0);
+        bench(name, budget, || {
+            let mut sim = ClusterSim::new(cfg.clone()).unwrap();
+            sim.run(&arrivals).completed
+        });
+    }
+
+    // Placement optimizer on a heterogeneous 16-device fleet.
+    let t: Vec<f64> = (0..16).map(|k| 2e-5 * (1.0 + k as f64)).collect();
+    let load = vec![1.0; 16];
+    bench("placement_optimize/16dev_cache4", budget, || {
+        Placement::optimize(16, &t, &load, 4).experts_per_device()
+    });
+
+    // Dispatch decision on a backlogged fleet.
+    let d = Dispatcher::new(DispatchKind::LoadAware);
+    let busy: Vec<u64> = (0..16).map(|k| k as u64 * 1_000_000).collect();
+    let online = vec![true; 16];
+    let replicas: Vec<usize> = (0..16).collect();
+    bench("dispatch_choose/16_replicas", budget, || {
+        d.choose(&replicas, 40.0, 500_000, &busy, &t, &online)
+    });
+}

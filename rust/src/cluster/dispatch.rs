@@ -1,0 +1,126 @@
+//! Replica dispatch: which device serves an expert's token group.
+//!
+//! Once the selection policy has fixed `q_e` tokens for expert `e` in a
+//! block, the BS must pick one of the expert's replicas. The load-aware
+//! dispatcher minimises the *predicted completion instant* — queue
+//! backlog plus the Eq. (9)–(10) service time `q_e · t_k` — which is the
+//! per-expert analogue of minimising the block's attention waiting
+//! latency (Eq. (11)) given current queue state. The static dispatcher
+//! always uses the home replica, reproducing the paper's fixed
+//! expert-per-device assignment as a baseline.
+
+use super::event::{nanos_from_secs, Nanos};
+use crate::config::DispatchKind;
+
+/// Replica chooser. Stateless: queue state is passed per call so the
+/// simulator remains the single owner of device state.
+#[derive(Debug, Clone, Copy)]
+pub struct Dispatcher {
+    pub kind: DispatchKind,
+}
+
+impl Dispatcher {
+    pub fn new(kind: DispatchKind) -> Self {
+        Self { kind }
+    }
+
+    /// Pick the serving device for `tokens` tokens of one expert.
+    ///
+    /// * `replicas` — candidate devices (home first);
+    /// * `busy_until[k]` — instant device `k`'s FIFO queue drains;
+    /// * `t_per_token[k]` — service seconds per token on device `k`;
+    /// * `online[k]` — device availability.
+    ///
+    /// Returns `None` when no replica is online.
+    pub fn choose(
+        &self,
+        replicas: &[usize],
+        tokens: f64,
+        now: Nanos,
+        busy_until: &[Nanos],
+        t_per_token: &[f64],
+        online: &[bool],
+    ) -> Option<usize> {
+        match self.kind {
+            // First online replica in replica order — the home replica
+            // whenever it is up.
+            DispatchKind::Static => replicas.iter().copied().find(|&k| online[k]),
+            DispatchKind::LoadAware => {
+                let mut best: Option<(Nanos, usize)> = None;
+                for k in replicas.iter().copied().filter(|&k| online[k]) {
+                    if !t_per_token[k].is_finite() {
+                        continue;
+                    }
+                    let start = busy_until[k].max(now);
+                    let finish =
+                        start.saturating_add(nanos_from_secs(tokens * t_per_token[k]));
+                    // Strict < keeps ties on the lower device index
+                    // (candidates iterate in replica order, home first).
+                    let better = match best {
+                        None => true,
+                        Some((bf, bk)) => finish < bf || (finish == bf && k < bk),
+                    };
+                    if better {
+                        best = Some((finish, k));
+                    }
+                }
+                best.map(|(_, k)| k)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ONLINE4: [bool; 4] = [true; 4];
+
+    #[test]
+    fn static_dispatch_picks_home() {
+        let d = Dispatcher::new(DispatchKind::Static);
+        let k = d.choose(&[2, 0, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4);
+        assert_eq!(k, Some(2), "static picks the home (first) online replica");
+        let offline_home = [false, true, true, false];
+        let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &offline_home);
+        assert_eq!(k, Some(1), "falls back to the next replica in order");
+    }
+
+    #[test]
+    fn load_aware_prefers_faster_idle_device() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        let t = [1e-3, 1e-5, 1e-4, 1e-2];
+        let k = d.choose(&[0, 1, 3], 10.0, 0, &[0; 4], &t, &ONLINE4);
+        assert_eq!(k, Some(1));
+    }
+
+    #[test]
+    fn load_aware_avoids_backlogged_device() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        let t = [1e-5, 1e-4, 1.0, 1.0];
+        // Device 0 is 10x faster but its queue drains a full second from
+        // now; device 1 finishes sooner.
+        let busy = [1_000_000_000, 0, 0, 0];
+        let k = d.choose(&[0, 1], 100.0, 0, &busy, &t, &ONLINE4);
+        assert_eq!(k, Some(1));
+    }
+
+    #[test]
+    fn offline_replicas_are_skipped() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        let online = [false, true, true, true];
+        let k = d.choose(&[0, 2], 5.0, 0, &[0; 4], &[1e-3; 4], &online);
+        assert_eq!(k, Some(2));
+        let none = d.choose(&[0], 5.0, 0, &[0; 4], &[1e-3; 4], &online);
+        assert_eq!(none, None);
+        let s = Dispatcher::new(DispatchKind::Static);
+        assert_eq!(s.choose(&[0], 5.0, 0, &[0; 4], &[1e-3; 4], &online), None);
+    }
+
+    #[test]
+    fn ties_break_to_lower_device_index() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4);
+        assert_eq!(k, Some(1));
+    }
+}

@@ -1,0 +1,174 @@
+//! Deterministic discrete-event core: virtual time + event heap.
+//!
+//! Events are ordered by `(time, insertion sequence)`, so two events at
+//! the same virtual instant fire in the order they were scheduled — the
+//! whole simulation is a pure function of its inputs and seeds. Time is
+//! integer nanoseconds ([`Nanos`]): total order, no float-comparison
+//! pitfalls in the heap. The queue advances a shared
+//! [`VirtualClock`] as it pops, so components holding a clone of the
+//! clock (e.g. a [`crate::coordinator::batcher::DynamicBatcher`]) observe
+//! simulation time for free.
+
+use crate::util::clock::VirtualClock;
+use std::cmp::Ordering;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Nanos = u64;
+
+/// Convert seconds (must be finite and non-negative) to [`Nanos`].
+pub fn nanos_from_secs(s: f64) -> Nanos {
+    assert!(s.is_finite() && s >= 0.0, "bad virtual duration {s}");
+    (s * 1e9).round() as Nanos
+}
+
+/// Convert [`Nanos`] back to seconds.
+pub fn secs_from_nanos(n: Nanos) -> f64 {
+    n as f64 / 1e9
+}
+
+struct Scheduled<E> {
+    at: Nanos,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// The event queue driving one simulation run.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    next_seq: u64,
+    clock: VirtualClock,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new(clock: VirtualClock) -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            clock,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Nanos {
+        self.clock.nanos()
+    }
+
+    /// Schedule `event` at absolute virtual time `at`. Scheduling in the
+    /// past is a logic error (would break causality).
+    pub fn schedule_at(&mut self, at: Nanos, event: E) {
+        debug_assert!(at >= self.now(), "event scheduled in the past");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Scheduled { at, seq, event }));
+    }
+
+    /// Schedule `event` `delay` after the current virtual time.
+    pub fn schedule_in(&mut self, delay: Nanos, event: E) {
+        let at = self.now().saturating_add(delay);
+        self.schedule_at(at, event);
+    }
+
+    /// Pop the earliest event, advancing the virtual clock to its time.
+    pub fn pop(&mut self) -> Option<(Nanos, E)> {
+        let Reverse(s) = self.heap.pop()?;
+        self.clock.advance_to_nanos(s.at);
+        Some((s.at, s.event))
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn next_time(&self) -> Option<Nanos> {
+        self.heap.peek().map(|Reverse(s)| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new(VirtualClock::new());
+        q.schedule_at(30, "c");
+        q.schedule_at(10, "a");
+        q.schedule_at(20, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new(VirtualClock::new());
+        q.schedule_at(5, 1);
+        q.schedule_at(5, 2);
+        q.schedule_at(5, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn pop_advances_shared_clock() {
+        let clock = VirtualClock::new();
+        let mut q = EventQueue::new(clock.clone());
+        q.schedule_at(1_000_000, ());
+        assert_eq!(clock.nanos(), 0);
+        q.pop();
+        assert_eq!(clock.nanos(), 1_000_000);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let clock = VirtualClock::new();
+        let mut q = EventQueue::new(clock.clone());
+        q.schedule_at(100, "first");
+        q.pop();
+        q.schedule_in(50, "second");
+        assert_eq!(q.pop(), Some((150, "second")));
+    }
+
+    #[test]
+    fn unit_conversions_roundtrip() {
+        assert_eq!(nanos_from_secs(1.5), 1_500_000_000);
+        assert_eq!(secs_from_nanos(2_000_000_000), 2.0);
+        assert_eq!(nanos_from_secs(0.0), 0);
+    }
+
+    #[test]
+    fn empty_queue_reports_empty() {
+        let mut q = EventQueue::<u8>::new(VirtualClock::new());
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.next_time(), None);
+        assert_eq!(q.pop(), None);
+    }
+}

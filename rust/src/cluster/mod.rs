@@ -1,0 +1,67 @@
+//! # `cluster` — discrete-event multi-cell serving simulation
+//!
+//! The paper's analysis (§III–§IV) and [`crate::coordinator::sim`]
+//! evaluate **one** base station serving **one** batch at a time. The
+//! north-star — sustained traffic from many users — needs the opposite
+//! view: requests arrive while others are in flight, queue at devices,
+//! and contend for compute and spectrum. This subsystem models that as a
+//! deterministic discrete-event simulation (DES).
+//!
+//! ## Event model
+//!
+//! Virtual time is integer nanoseconds on a shared
+//! [`crate::util::clock::VirtualClock`]; the [`event::EventQueue`] orders
+//! events by `(time, insertion seq)` so simultaneous events fire in
+//! scheduling order and every run is a pure function of config + seeds.
+//! Two event kinds drive the simulation:
+//!
+//! * **`Arrive(req)`** — an open-loop arrival
+//!   ([`crate::workload::ArrivalProcess`]: Poisson or trace replay). The
+//!   request is assigned to a cell round-robin and its first MoE block is
+//!   dispatched immediately.
+//! * **`BlockDone(req)`** — the Eq. (11) attention barrier of one block
+//!   cleared. The request either advances to its next block (dispatching
+//!   more device work) or, after block `I`, completes and records its
+//!   end-to-end latency.
+//!
+//! Dispatching a block is synchronous bookkeeping: the cell's gate draws
+//! weights, the selection policy (Algorithm 1 / top-k / Algorithm 2)
+//! picks experts, and each selected expert's token group is routed by the
+//! [`dispatch::Dispatcher`] to one replica. Token groups join that
+//! device's FIFO queue (`busy_until[k]`): service starts when the queue
+//! drains and lasts `q_e · t_k` seconds (Eqs. (8)–(10) under the cell's
+//! uniform bandwidth share). The block's completion — the max over its
+//! groups' finish instants — becomes the next `BlockDone` event. Waiting
+//! time and utilization therefore *emerge* from load; nothing is assumed.
+//!
+//! ## Replication and placement
+//!
+//! Each cell owns a [`placement::Placement`]: experts may live on several
+//! devices, bounded by a per-device cache capacity (the paper's §I
+//! "limited computing and caching resources", Eq. (7)). The greedy
+//! optimizer replicates experts homed on slow/far devices onto fast ones;
+//! the load-aware dispatcher then picks, per block, the replica with the
+//! earliest predicted completion given current backlog. Cache capacity 1
+//! (or [`crate::config::DispatchKind::Static`]) reproduces the paper's
+//! fixed expert-per-device assignment as a baseline.
+//!
+//! ## Entry points
+//!
+//! * [`sim::ClusterSim`] — build from a [`crate::config::ClusterConfig`],
+//!   feed an arrival stream, get a [`sim::ClusterOutcome`] (throughput,
+//!   steady-state p50/p95/p99 latency, per-device utilization).
+//! * [`sim::arrival_rate_sweep`] — the `repro cluster` CLI command: sweep
+//!   Poisson arrival rates and emit the summary + utilization CSVs.
+//!
+//! Follow-ons tracked in ROADMAP.md: admission control, inter-cell
+//! handover, an energy model, autoscaling of replicas.
+
+pub mod dispatch;
+pub mod event;
+pub mod placement;
+pub mod sim;
+
+pub use dispatch::Dispatcher;
+pub use event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+pub use placement::Placement;
+pub use sim::{arrival_rate_sweep, ClusterOutcome, ClusterSim, SweepPoint, SweepResult};

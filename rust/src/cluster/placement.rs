@@ -1,0 +1,266 @@
+//! Expert replication and placement under per-device cache capacity.
+//!
+//! The paper's §V setup pins expert `k` to device `k`. At serving scale
+//! that makes the slowest / farthest device a permanent straggler: every
+//! block's attention waits on it (Eq. (11)). Devices can typically cache
+//! more than one expert's weights, so the cluster lets each expert live
+//! on several devices — bounded by a per-device cache capacity — and the
+//! dispatcher picks a replica per block ([`crate::cluster::dispatch`]).
+//!
+//! [`Placement::optimize`] is a greedy balancer: starting from the
+//! round-robin home placement, it repeatedly replicates the heaviest
+//! expert hosted on the projected-slowest device onto the device whose
+//! projected completion time it improves most, until cache slots run out
+//! or no strict improvement remains. Projected load assumes each
+//! expert's tokens split evenly across its replicas — the dispatcher's
+//! steady-state behaviour under balanced queues.
+
+use anyhow::Result;
+
+/// An expert→devices map for one cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// `replicas[e]` — devices hosting expert `e` (home replica first).
+    replicas: Vec<Vec<usize>>,
+    n_devices: usize,
+    cache_capacity: usize,
+}
+
+impl Placement {
+    /// Round-robin home placement, no replication: expert `e` on device
+    /// `e % n_devices`. Requires enough total cache slots.
+    pub fn home(n_experts: usize, n_devices: usize, cache_capacity: usize) -> Self {
+        assert!(n_devices > 0 && cache_capacity > 0);
+        assert!(
+            n_experts <= n_devices * cache_capacity,
+            "{n_experts} experts exceed {n_devices}x{cache_capacity} cache slots"
+        );
+        Self {
+            replicas: (0..n_experts).map(|e| vec![e % n_devices]).collect(),
+            n_devices,
+            cache_capacity,
+        }
+    }
+
+    /// Greedy replication on top of the home placement.
+    ///
+    /// * `t_per_token[k]` — per-token service seconds on device `k`
+    ///   (comm + comp under the cell's uniform bandwidth share, Eq. (8));
+    /// * `expected_load[e]` — relative token mass routed to expert `e`
+    ///   (uniform when unknown).
+    pub fn optimize(
+        n_experts: usize,
+        t_per_token: &[f64],
+        expected_load: &[f64],
+        cache_capacity: usize,
+    ) -> Self {
+        let n_devices = t_per_token.len();
+        assert_eq!(expected_load.len(), n_experts, "load arity mismatch");
+        let mut p = Self::home(n_experts, n_devices, cache_capacity);
+        if cache_capacity == 1 {
+            return p; // no free slots beyond homes
+        }
+
+        // Projected completion seconds per device if each expert's load
+        // splits evenly across its current replicas.
+        let projected = |p: &Placement| -> Vec<f64> {
+            let mut load = vec![0.0f64; n_devices];
+            for (e, reps) in p.replicas.iter().enumerate() {
+                let share = expected_load[e] / reps.len() as f64;
+                for &k in reps {
+                    load[k] += share * t_per_token[k];
+                }
+            }
+            load
+        };
+
+        let free_slots = n_devices * cache_capacity - n_experts;
+        for _ in 0..free_slots {
+            let proj = projected(&p);
+            let worst = proj
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            // Heaviest per-replica expert on the worst device.
+            let Some(expert) = (0..n_experts)
+                .filter(|&e| p.replicas[e].contains(&worst))
+                .max_by(|&a, &b| {
+                    let la = expected_load[a] / p.replicas[a].len() as f64;
+                    let lb = expected_load[b] / p.replicas[b].len() as f64;
+                    la.partial_cmp(&lb).unwrap()
+                })
+            else {
+                break; // worst device hosts nothing (all load elsewhere)
+            };
+            // Best target: free cache slot, not already a replica, and
+            // the lowest projected completion after taking its share.
+            let hosted = p.experts_per_device();
+            let new_reps = (p.replicas[expert].len() + 1) as f64;
+            let target = (0..n_devices)
+                .filter(|&k| hosted[k] < cache_capacity && !p.replicas[expert].contains(&k))
+                .min_by(|&a, &b| {
+                    let ca = proj[a] + expected_load[expert] / new_reps * t_per_token[a];
+                    let cb = proj[b] + expected_load[expert] / new_reps * t_per_token[b];
+                    ca.partial_cmp(&cb).unwrap()
+                });
+            let Some(target) = target else { break };
+            // Only accept strict improvement of the bottleneck.
+            let mut cand = p.clone();
+            cand.replicas[expert].push(target);
+            let new_proj = projected(&cand);
+            let new_max = new_proj.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let old_max = proj.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if new_max >= old_max {
+                break;
+            }
+            p = cand;
+        }
+        p
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn cache_capacity(&self) -> usize {
+        self.cache_capacity
+    }
+
+    /// Devices hosting expert `e` (home first).
+    pub fn replicas(&self, e: usize) -> &[usize] {
+        &self.replicas[e]
+    }
+
+    /// Experts cached per device.
+    pub fn experts_per_device(&self) -> Vec<usize> {
+        let mut n = vec![0usize; self.n_devices];
+        for reps in &self.replicas {
+            for &k in reps {
+                n[k] += 1;
+            }
+        }
+        n
+    }
+
+    /// Check every invariant: each expert hosted at least once, device
+    /// indices valid, no duplicate replicas, cache capacity respected.
+    pub fn validate(&self) -> Result<()> {
+        for (e, reps) in self.replicas.iter().enumerate() {
+            anyhow::ensure!(!reps.is_empty(), "expert {e} has no replica");
+            for &k in reps {
+                anyhow::ensure!(k < self.n_devices, "expert {e}: bad device {k}");
+            }
+            let mut sorted = reps.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            anyhow::ensure!(
+                sorted.len() == reps.len(),
+                "expert {e}: duplicate replicas {reps:?}"
+            );
+        }
+        for (k, &n) in self.experts_per_device().iter().enumerate() {
+            anyhow::ensure!(
+                n <= self.cache_capacity,
+                "device {k} hosts {n} experts, cache is {}",
+                self.cache_capacity
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn home_is_identity_when_square() {
+        let p = Placement::home(8, 8, 1);
+        p.validate().unwrap();
+        for e in 0..8 {
+            assert_eq!(p.replicas(e), &[e]);
+        }
+        assert_eq!(p.experts_per_device(), vec![1; 8]);
+    }
+
+    #[test]
+    fn home_wraps_when_more_experts_than_devices() {
+        let p = Placement::home(8, 4, 2);
+        p.validate().unwrap();
+        assert_eq!(p.replicas(5), &[1]);
+        assert_eq!(p.experts_per_device(), vec![2; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache slots")]
+    fn home_rejects_infeasible() {
+        let _ = Placement::home(9, 4, 2);
+    }
+
+    #[test]
+    fn optimize_with_capacity_one_is_home() {
+        let t = vec![1e-3; 8];
+        let load = vec![1.0; 8];
+        assert_eq!(
+            Placement::optimize(8, &t, &load, 1),
+            Placement::home(8, 8, 1)
+        );
+    }
+
+    #[test]
+    fn optimize_replicates_slow_homes_onto_fast_devices() {
+        // Device 3 is 20x slower: its home expert must gain a replica on
+        // some faster device.
+        let t = vec![1e-4, 1e-4, 1e-4, 2e-3];
+        let load = vec![1.0; 4];
+        let p = Placement::optimize(4, &t, &load, 2);
+        p.validate().unwrap();
+        assert!(
+            p.replicas(3).len() >= 2,
+            "slow-homed expert not replicated: {:?}",
+            p.replicas(3)
+        );
+        assert!(p.replicas(3).iter().any(|&k| k != 3));
+    }
+
+    #[test]
+    fn optimize_respects_capacity_on_heterogeneous_fleet() {
+        let t = vec![5e-5, 1e-4, 3e-4, 1e-3, 2e-3, 5e-3];
+        let load = vec![3.0, 1.0, 1.0, 1.0, 2.0, 1.0];
+        for cap in 1..=4 {
+            let p = Placement::optimize(6, &t, &load, cap);
+            p.validate().unwrap();
+            assert!(p.experts_per_device().iter().all(|&n| n <= cap));
+        }
+    }
+
+    #[test]
+    fn optimize_reduces_projected_bottleneck() {
+        let t = vec![1e-4, 1e-4, 1e-3, 5e-3];
+        let load = vec![1.0; 4];
+        let proj = |p: &Placement| -> f64 {
+            let mut dev = vec![0.0f64; 4];
+            for e in 0..4 {
+                let share = 1.0 / p.replicas(e).len() as f64;
+                for &k in p.replicas(e) {
+                    dev[k] += share * t[k];
+                }
+            }
+            dev.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        };
+        let home = Placement::home(4, 4, 3);
+        let opt = Placement::optimize(4, &t, &load, 3);
+        assert!(
+            proj(&opt) < proj(&home),
+            "optimized {} vs home {}",
+            proj(&opt),
+            proj(&home)
+        );
+    }
+}

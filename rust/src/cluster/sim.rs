@@ -1,0 +1,516 @@
+//! The multi-cell discrete-event serving simulator.
+//!
+//! Requests arrive open-loop (Poisson or trace replay), are assigned to a
+//! cell round-robin, and walk the model's `I` MoE blocks one by one. Per
+//! block the cell's gate draws weights, the configured selection policy
+//! picks experts (Algorithm 1 / top-k / …), and the dispatcher routes
+//! each selected expert's token group to one of its replicas. Token
+//! groups join that device's FIFO queue; the block completes when its
+//! last group finishes (the Eq. (11) attention barrier), at which point
+//! the next block starts. Queueing delay, utilization and tail latency
+//! all *emerge* from contention between in-flight requests — nothing is
+//! assumed.
+
+use super::dispatch::Dispatcher;
+use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+use super::placement::Placement;
+use crate::config::ClusterConfig;
+use crate::devices::Fleet;
+use crate::latency::TokenLatencies;
+use crate::metrics::{SteadyState, Summary, Table, Utilization};
+use crate::moe::selection::{make_policy, SelectionContext, SelectionPolicy};
+use crate::moe::GateWeights;
+use crate::optim::PerBlockLoad;
+use crate::util::clock::VirtualClock;
+use crate::wireless::bandwidth::AllocationInput;
+use crate::wireless::ChannelSimulator;
+use crate::workload::{ArrivalProcess, Benchmark, WorkloadGen};
+
+/// One cell's runtime state: fleet, placement, policy and FIFO queues.
+struct Cell {
+    /// Per-device service seconds per token (comm + comp, Eq. (8)) under
+    /// the cell's uniform bandwidth share.
+    t_per_token: Vec<f64>,
+    placement: Placement,
+    policy: Box<dyn SelectionPolicy>,
+    gates: WorkloadGen,
+    /// Instant each device's FIFO queue drains.
+    busy_until: Vec<Nanos>,
+    busy: Vec<Utilization>,
+    online: Vec<bool>,
+}
+
+enum Event {
+    Arrive(usize),
+    BlockDone(usize),
+}
+
+struct ReqState {
+    tokens: usize,
+    cell: usize,
+    arrived: Nanos,
+    next_block: usize,
+}
+
+/// Result of one simulation run (all arrivals drained).
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub arrived: usize,
+    pub completed: usize,
+    pub arrived_tokens: u64,
+    pub completed_tokens: u64,
+    /// Requests still in flight when the event queue drained (0 by
+    /// construction for finite arrival streams — the conservation law).
+    pub in_flight: usize,
+    /// Virtual time of the last event.
+    pub makespan_s: f64,
+    /// End-to-end request latency (ms), recorded in completion order.
+    pub latency_ms: SteadyState,
+    /// `utilization[cell][device]` — busy fraction of the makespan.
+    pub utilization: Vec<Vec<f64>>,
+}
+
+impl ClusterOutcome {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.makespan_s
+        }
+    }
+
+    /// Steady-state latency summary (warm-up discarded).
+    pub fn steady_latency(&self) -> Summary {
+        self.latency_ms.steady()
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.steady_latency().percentile(50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.steady_latency().percentile(95.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.steady_latency().percentile(99.0)
+    }
+
+    /// All per-device utilizations, cells concatenated.
+    pub fn flat_utilization(&self) -> Vec<f64> {
+        self.utilization.iter().flatten().copied().collect()
+    }
+}
+
+/// The simulator. Build fresh per run: [`ClusterSim::run`] consumes the
+/// arrival stream once and leaves queues drained.
+pub struct ClusterSim {
+    cfg: ClusterConfig,
+    cells: Vec<Cell>,
+    dispatcher: Dispatcher,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ClusterConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let n_experts = cfg.model.n_experts;
+        let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
+        let mut cells = Vec::with_capacity(cfg.cells.len());
+        for (ci, cell_cfg) in cfg.cells.iter().enumerate() {
+            let n_dev = cell_cfg.n_devices();
+            let chan = ChannelSimulator::new(
+                &cell_cfg.channel,
+                &cell_cfg.devices,
+                cfg.seed.wrapping_add(ci as u64),
+            );
+            let realization = chan.expected_realization();
+            let fleet = Fleet::new(&cell_cfg.devices, cfg.seed);
+            let t_comp = fleet.t_comp_nominal(l_comp);
+            let dummy_loads: Vec<PerBlockLoad> = vec![];
+            let input = AllocationInput {
+                channel_cfg: &cell_cfg.channel,
+                realization: &realization,
+                loads: &dummy_loads,
+                t_comp_per_token: &t_comp,
+                l_comm_bits: cfg.model.l_comm_bits(cell_cfg.channel.quant_bits),
+            };
+            let share = cell_cfg.channel.total_bandwidth_hz / n_dev as f64;
+            let t_per_token: Vec<f64> =
+                input.links().iter().map(|l| l.t_per_token(share)).collect();
+            let placement = if cfg.cache_capacity == 1 {
+                Placement::home(n_experts, n_dev, 1)
+            } else {
+                // Popularity bias shifts per block, so the static
+                // optimizer assumes uniform expert load and balances on
+                // device speed.
+                let uniform_load = vec![1.0; n_experts];
+                Placement::optimize(n_experts, &t_per_token, &uniform_load, cfg.cache_capacity)
+            };
+            placement.validate()?;
+            cells.push(Cell {
+                t_per_token,
+                placement,
+                policy: make_policy(
+                    cfg.policy.selection,
+                    &cfg.policy,
+                    n_experts,
+                    cfg.seed.wrapping_add(ci as u64),
+                ),
+                gates: WorkloadGen::new(
+                    cfg.seed.wrapping_add(0xce11).wrapping_add(ci as u64),
+                    cfg.model.vocab,
+                ),
+                busy_until: vec![0; n_dev],
+                busy: vec![Utilization::default(); n_dev],
+                online: vec![true; n_dev],
+            });
+        }
+        let dispatcher = Dispatcher::new(cfg.dispatch);
+        Ok(Self {
+            cfg,
+            cells,
+            dispatcher,
+        })
+    }
+
+    /// Expert placement of one cell (inspection / tests).
+    pub fn placement(&self, cell: usize) -> &Placement {
+        &self.cells[cell].placement
+    }
+
+    /// Per-device service seconds per token in one cell.
+    pub fn t_per_token(&self, cell: usize) -> &[f64] {
+        &self.cells[cell].t_per_token
+    }
+
+    /// Failure injection: mark a device (un)available for future
+    /// dispatches. Work already queued on it still completes.
+    pub fn set_device_online(&mut self, cell: usize, device: usize, online: bool) {
+        self.cells[cell].online[device] = online;
+    }
+
+    /// Run the arrival stream to drain and report.
+    pub fn run(&mut self, arrivals: &[crate::workload::Arrival]) -> ClusterOutcome {
+        let n_blocks = self.cfg.model.n_blocks;
+        let n_cells = self.cells.len();
+        let clock = VirtualClock::new();
+        let mut queue: EventQueue<Event> = EventQueue::new(clock.clone());
+        let mut states: Vec<ReqState> = arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, a)| ReqState {
+                tokens: a.tokens.max(1),
+                cell: i % n_cells,
+                arrived: nanos_from_secs(a.time_s),
+                next_block: 0,
+            })
+            .collect();
+        for (i, st) in states.iter().enumerate() {
+            queue.schedule_at(st.arrived, Event::Arrive(i));
+        }
+
+        let mut arrived = 0usize;
+        let mut completed = 0usize;
+        let mut arrived_tokens = 0u64;
+        let mut completed_tokens = 0u64;
+        let mut latency_ms = SteadyState::new(self.cfg.warmup_frac);
+
+        while let Some((now, ev)) = queue.pop() {
+            let i = match ev {
+                Event::Arrive(i) => {
+                    arrived += 1;
+                    arrived_tokens += states[i].tokens as u64;
+                    i
+                }
+                Event::BlockDone(i) => {
+                    states[i].next_block += 1;
+                    if states[i].next_block >= n_blocks {
+                        completed += 1;
+                        completed_tokens += states[i].tokens as u64;
+                        latency_ms.record(secs_from_nanos(now - states[i].arrived) * 1e3);
+                        continue;
+                    }
+                    i
+                }
+            };
+            let block_end = self.start_block(&states[i], now);
+            queue.schedule_at(block_end, Event::BlockDone(i));
+        }
+
+        let makespan_s = secs_from_nanos(clock.nanos());
+        let utilization = self
+            .cells
+            .iter()
+            .map(|c| c.busy.iter().map(|u| u.fraction(makespan_s)).collect())
+            .collect();
+        ClusterOutcome {
+            arrived,
+            completed,
+            arrived_tokens,
+            completed_tokens,
+            in_flight: arrived - completed,
+            makespan_s,
+            latency_ms,
+            utilization,
+        }
+    }
+
+    /// Dispatch one block of one request; returns the block's completion
+    /// instant (the Eq. (11) barrier over its token groups).
+    fn start_block(&mut self, st: &ReqState, now: Nanos) -> Nanos {
+        let n_experts = self.cfg.model.n_experts;
+        let cell = &mut self.cells[st.cell];
+        let gate = GateWeights::new(cell.gates.synthetic_gate_weights_biased(
+            st.tokens,
+            n_experts,
+            self.cfg.gate_sharpness,
+            self.cfg.gate_bias,
+        ));
+        // Per-expert latency estimate (best online replica) and liveness.
+        let mut est = vec![f64::INFINITY; n_experts];
+        let mut online = vec![false; n_experts];
+        for e in 0..n_experts {
+            for &k in cell.placement.replicas(e) {
+                if cell.online[k] {
+                    online[e] = true;
+                    if cell.t_per_token[k] < est[e] {
+                        est[e] = cell.t_per_token[k];
+                    }
+                }
+            }
+        }
+        let lat = TokenLatencies { per_token: est };
+        let ctx = SelectionContext {
+            latencies: &lat,
+            top_k: self.cfg.model.top_k,
+            online: &online,
+        };
+        let sel = cell.policy.select(&gate, &ctx);
+        let counts = sel.tokens_per_device();
+
+        let mut block_end = now;
+        for (e, &q) in counts.iter().enumerate() {
+            if q <= 0.0 {
+                continue;
+            }
+            let Some(k) = self.dispatcher.choose(
+                cell.placement.replicas(e),
+                q,
+                now,
+                &cell.busy_until,
+                &cell.t_per_token,
+                &cell.online,
+            ) else {
+                continue; // no online replica: tokens dropped by selection
+            };
+            let service_s = q * cell.t_per_token[k];
+            let start = cell.busy_until[k].max(now);
+            let done = start.saturating_add(nanos_from_secs(service_s));
+            cell.busy_until[k] = done;
+            cell.busy[k].add_busy(service_s);
+            cell.policy.observe(e, cell.t_per_token[k]);
+            if done > block_end {
+                block_end = done;
+            }
+        }
+        block_end
+    }
+}
+
+/// One point of an arrival-rate sweep.
+pub struct SweepPoint {
+    pub rate_rps: f64,
+    pub outcome: ClusterOutcome,
+}
+
+/// Sweep output: per-rate outcomes plus rendered tables (the `repro
+/// cluster` CSVs).
+pub struct SweepResult {
+    pub points: Vec<SweepPoint>,
+    pub summary: Table,
+    pub utilization: Table,
+}
+
+/// Sweep Poisson arrival rate over a fresh simulator per point and
+/// tabulate throughput, steady-state latency percentiles and per-device
+/// utilization.
+pub fn arrival_rate_sweep(
+    cfg: &ClusterConfig,
+    rates_rps: &[f64],
+    requests: usize,
+    bench: Benchmark,
+    seed: u64,
+) -> anyhow::Result<SweepResult> {
+    cfg.validate()?;
+    anyhow::ensure!(requests > 0, "need at least one request");
+    let mut summary = Table::new(
+        &format!("Cluster arrival-rate sweep — {}", bench.name()),
+        &[
+            "rate_rps",
+            "throughput_rps",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "mean_ms",
+            "util_mean",
+            "util_max",
+        ],
+    );
+    summary.precision = 3;
+    let dev_names: Vec<String> = cfg
+        .cells
+        .iter()
+        .flat_map(|c| c.devices.iter().map(|d| d.name.clone()))
+        .collect();
+    let dev_cols: Vec<&str> = dev_names.iter().map(String::as_str).collect();
+    let mut util_t = Table::new("Cluster per-device utilization", &dev_cols);
+    util_t.precision = 3;
+
+    let mut points = Vec::with_capacity(rates_rps.len());
+    for (ri, &rate) in rates_rps.iter().enumerate() {
+        let mut sim = ClusterSim::new(cfg.clone())?;
+        let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
+            requests,
+            bench,
+            seed.wrapping_add(ri as u64 * 7919),
+        );
+        let out = sim.run(&arrivals);
+        let s = out.steady_latency();
+        let util = out.flat_utilization();
+        let util_mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
+        let util_max = util.iter().cloned().fold(0.0f64, f64::max);
+        summary.row(
+            &format!("rate={rate}"),
+            vec![
+                rate,
+                out.throughput_rps(),
+                s.percentile(50.0),
+                s.percentile(95.0),
+                s.percentile(99.0),
+                s.mean(),
+                util_mean,
+                util_max,
+            ],
+        );
+        util_t.row(&format!("rate={rate}"), util);
+        points.push(SweepPoint {
+            rate_rps: rate,
+            outcome: out,
+        });
+    }
+    Ok(SweepResult {
+        points,
+        summary,
+        utilization: util_t,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, DispatchKind};
+
+    fn small_cfg() -> ClusterConfig {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.model.n_blocks = 8; // keep tests fast
+        cfg
+    }
+
+    fn run_with(cfg: ClusterConfig, rate: f64, n: usize, seed: u64) -> ClusterOutcome {
+        let mut sim = ClusterSim::new(cfg).unwrap();
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: rate }.generate(n, Benchmark::Piqa, seed);
+        sim.run(&arrivals)
+    }
+
+    #[test]
+    fn drains_and_conserves_requests_and_tokens() {
+        let out = run_with(small_cfg(), 1.0, 40, 0);
+        assert_eq!(out.arrived, 40);
+        assert_eq!(out.completed, 40);
+        assert_eq!(out.in_flight, 0);
+        assert_eq!(out.arrived_tokens, out.completed_tokens);
+        assert!(out.makespan_s > 0.0);
+        assert!(out.throughput_rps() > 0.0);
+        assert_eq!(out.latency_ms.total_count(), 40);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_with(small_cfg(), 2.0, 30, 3);
+        let b = run_with(small_cfg(), 2.0, 30, 3);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
+        assert_eq!(a.utilization, b.utilization);
+    }
+
+    #[test]
+    fn latency_grows_with_load() {
+        // At 0.2 rps requests never overlap; at 20 rps the inter-arrival
+        // gap is far below the per-request service time, so queues must
+        // form and p95 latency must rise clearly.
+        let lo = run_with(small_cfg(), 0.2, 60, 1);
+        let hi = run_with(small_cfg(), 20.0, 60, 1);
+        assert!(
+            hi.steady_latency().percentile(95.0) > lo.steady_latency().percentile(95.0),
+            "p95 {} <= {}",
+            hi.steady_latency().percentile(95.0),
+            lo.steady_latency().percentile(95.0)
+        );
+    }
+
+    #[test]
+    fn utilization_bounded_and_nonzero() {
+        let out = run_with(small_cfg(), 2.0, 40, 2);
+        let util = out.flat_utilization();
+        assert!(!util.is_empty());
+        for &u in &util {
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
+        }
+        assert!(util.iter().any(|&u| u > 0.0));
+    }
+
+    #[test]
+    fn multi_cell_spreads_requests() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 4;
+        let mut sim = ClusterSim::new(cfg).unwrap();
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 2.0 }.generate(30, Benchmark::Piqa, 0);
+        let out = sim.run(&arrivals);
+        assert_eq!(out.completed, 30);
+        assert_eq!(out.utilization.len(), 2);
+        // both cells did work
+        for cell_util in &out.utilization {
+            assert!(cell_util.iter().any(|&u| u > 0.0), "idle cell");
+        }
+    }
+
+    #[test]
+    fn offline_device_work_reroutes_to_replicas() {
+        let mut cfg = small_cfg();
+        cfg.cache_capacity = 2;
+        cfg.dispatch = DispatchKind::LoadAware;
+        let mut sim = ClusterSim::new(cfg).unwrap();
+        // Find a device hosting a replicated expert and kill it.
+        sim.set_device_online(0, 7, false);
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 1.0 }.generate(20, Benchmark::Piqa, 4);
+        let out = sim.run(&arrivals);
+        assert_eq!(out.completed, 20);
+        assert_eq!(out.utilization[0][7], 0.0, "offline device served work");
+    }
+
+    #[test]
+    fn sweep_emits_consistent_tables() {
+        let cfg = small_cfg();
+        let r = arrival_rate_sweep(&cfg, &[0.5, 2.0], 24, Benchmark::Piqa, 0).unwrap();
+        assert_eq!(r.points.len(), 2);
+        assert_eq!(r.summary.rows.len(), 2);
+        assert_eq!(r.utilization.rows.len(), 2);
+        assert_eq!(r.utilization.columns.len(), 8);
+        for p in &r.points {
+            assert_eq!(p.outcome.completed, 24);
+        }
+    }
+}

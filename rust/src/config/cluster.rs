@@ -1,0 +1,335 @@
+//! Cluster-serving configuration: multiple cells, expert replication and
+//! sustained open-loop traffic (the substrate of [`crate::cluster`]).
+//!
+//! A [`ClusterConfig`] describes a small edge deployment: `n` cells, each
+//! a BS with its own device fleet, channel scenario and bandwidth budget;
+//! a shared MoE model; a per-device expert cache capacity (how many
+//! experts' weights a device can hold — the paper's §I "limited computing
+//! and caching resources" constraint, Eq. (7)); and the dispatch policy
+//! that picks among expert replicas at serving time.
+
+use super::{ChannelConfig, DeviceConfig, ModelDims, PolicyConfig};
+use crate::util::Json;
+use anyhow::Result;
+
+/// How the BS picks among the replicas of a selected expert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchKind {
+    /// Minimise predicted completion time (queue backlog + Eq. (9)–(11)
+    /// service) over the expert's online replicas.
+    LoadAware,
+    /// Always the expert's home replica — the no-replication baseline's
+    /// behaviour even when replicas exist.
+    Static,
+}
+
+impl DispatchKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DispatchKind::LoadAware => "load_aware",
+            DispatchKind::Static => "static",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "load_aware" | "loadaware" => DispatchKind::LoadAware,
+            "static" | "home" => DispatchKind::Static,
+            other => anyhow::bail!("unknown dispatch kind '{other}'"),
+        })
+    }
+}
+
+/// One cell: a BS with its own channel scenario and device fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellConfig {
+    pub name: String,
+    pub channel: ChannelConfig,
+    pub devices: Vec<DeviceConfig>,
+}
+
+impl CellConfig {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("channel", self.channel.to_json()),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            channel: ChannelConfig::from_json(j.get("channel")?)?,
+            devices: j
+                .get("devices")?
+                .as_arr()?
+                .iter()
+                .map(DeviceConfig::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// Full multi-cell serving configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub model: ModelDims,
+    pub cells: Vec<CellConfig>,
+    pub policy: PolicyConfig,
+    /// Experts a device can cache (1 = no replication).
+    pub cache_capacity: usize,
+    /// Replica-choice policy at dispatch time.
+    pub dispatch: DispatchKind,
+    /// Fraction of completed requests discarded as warm-up before
+    /// steady-state latency percentiles are computed.
+    pub warmup_frac: f64,
+    /// Synthetic-router concentration (see `WorkloadGen`).
+    pub gate_sharpness: f64,
+    /// Per-block expert-popularity bias std (trained-router imbalance).
+    pub gate_bias: f64,
+    /// FLOPs of the expert activation per hidden element (paper `eta`).
+    pub activation_eta: f64,
+    /// RNG seed for every stochastic element (arrivals, gating).
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Two-cell edge deployment: each cell reuses the §V fleet shape
+    /// (50–350 m, 1–20 TFLOPS) with slightly different geometry, Mixtral
+    /// dims, 100 MHz per cell and a 2-expert cache per device.
+    pub fn edge_default() -> Self {
+        let base = super::SystemConfig::paper_simulation();
+        let devices = base
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceConfig {
+                name: format!("cell0-dev{i}"),
+                distance_m: d.distance_m,
+                compute_flops: d.compute_flops,
+                compute_jitter: 0.0,
+            })
+            .collect();
+        let cfg = Self {
+            model: ModelDims::mixtral_8x7b(),
+            cells: vec![CellConfig {
+                name: "cell-0".to_string(),
+                channel: base.channel.clone(),
+                devices,
+            }],
+            policy: PolicyConfig::default(),
+            cache_capacity: 2,
+            dispatch: DispatchKind::LoadAware,
+            warmup_frac: 0.2,
+            gate_sharpness: 1.5,
+            gate_bias: 0.4,
+            activation_eta: 7.0,
+            seed: 0,
+        };
+        cfg.with_n_cells(2)
+    }
+
+    /// Single-cell variant of [`Self::edge_default`] (tests, benches).
+    pub fn single_cell() -> Self {
+        Self::edge_default().with_n_cells(1)
+    }
+
+    /// Grow (or shrink) to `n` cells. Extra cells are synthesized from
+    /// cell 0's template with the preset naming convention and a 15 m
+    /// geometry shift per cell, so every cell sees a different channel.
+    pub fn with_n_cells(mut self, n: usize) -> Self {
+        assert!(n >= 1, "need at least one cell");
+        assert!(!self.cells.is_empty(), "no template cell to clone");
+        let template = self.cells[0].clone();
+        while self.cells.len() < n {
+            let i = self.cells.len();
+            let mut c = template.clone();
+            c.name = format!("cell-{i}");
+            for (di, d) in c.devices.iter_mut().enumerate() {
+                d.name = format!("cell{i}-dev{di}");
+                d.distance_m += 15.0 * i as f64;
+            }
+            self.cells.push(c);
+        }
+        self.cells.truncate(n);
+        self
+    }
+
+    /// Load from a JSON file (the format `repro config cluster` prints).
+    pub fn from_json_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            (
+                "cells",
+                Json::Arr(self.cells.iter().map(|c| c.to_json()).collect()),
+            ),
+            ("policy", self.policy.to_json()),
+            ("cache_capacity", Json::Num(self.cache_capacity as f64)),
+            ("dispatch", Json::str(self.dispatch.as_str())),
+            ("warmup_frac", Json::Num(self.warmup_frac)),
+            ("gate_sharpness", Json::Num(self.gate_sharpness)),
+            ("gate_bias", Json::Num(self.gate_bias)),
+            ("activation_eta", Json::Num(self.activation_eta)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            model: ModelDims::from_json(j.get("model")?)?,
+            cells: j
+                .get("cells")?
+                .as_arr()?
+                .iter()
+                .map(CellConfig::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            policy: PolicyConfig::from_json(j.get("policy")?)?,
+            cache_capacity: j.get("cache_capacity")?.as_usize()?,
+            dispatch: DispatchKind::parse(j.get("dispatch")?.as_str()?)?,
+            warmup_frac: j.get("warmup_frac")?.as_f64()?,
+            gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
+            gate_bias: j.get("gate_bias")?.as_f64()?,
+            activation_eta: j.get("activation_eta")?.as_f64()?,
+            seed: j.get("seed")?.as_u64()?,
+        })
+    }
+
+    /// Invariants the cluster simulator assumes.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.cells.is_empty(), "at least one cell required");
+        anyhow::ensure!(self.cache_capacity >= 1, "cache capacity must be >= 1");
+        anyhow::ensure!(self.model.top_k >= 1, "top_k must be >= 1");
+        anyhow::ensure!(
+            self.model.top_k <= self.model.n_experts,
+            "top_k exceeds expert count"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.warmup_frac),
+            "warmup_frac must be in [0,1)"
+        );
+        for cell in &self.cells {
+            anyhow::ensure!(
+                !cell.devices.is_empty(),
+                "{}: at least one device required",
+                cell.name
+            );
+            // Every expert needs a host: n_experts <= devices x cache is
+            // exactly ceil(n_experts / n_devices) <= cache for the
+            // round-robin home placement.
+            anyhow::ensure!(
+                self.model.n_experts <= cell.devices.len() * self.cache_capacity,
+                "{}: {} devices with cache {} cannot host {} experts",
+                cell.name,
+                cell.devices.len(),
+                self.cache_capacity,
+                self.model.n_experts
+            );
+            anyhow::ensure!(
+                cell.channel.total_bandwidth_hz > 0.0,
+                "{}: bandwidth must be positive",
+                cell.name
+            );
+            for d in &cell.devices {
+                anyhow::ensure!(d.distance_m > 0.0, "{}: distance must be positive", d.name);
+                anyhow::ensure!(d.compute_flops > 0.0, "{}: compute must be positive", d.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ClusterConfig::edge_default().validate().unwrap();
+        ClusterConfig::single_cell().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ClusterConfig::edge_default();
+        let back = ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn with_n_cells_synthesizes_from_template() {
+        let cfg = ClusterConfig::edge_default().with_n_cells(4);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.n_cells(), 4);
+        assert_eq!(cfg.cells[3].name, "cell-3");
+        assert_eq!(cfg.cells[3].devices[0].name, "cell3-dev0");
+        // each synthesized cell is shifted 15 m per index
+        assert_eq!(
+            cfg.cells[3].devices[0].distance_m,
+            cfg.cells[0].devices[0].distance_m + 45.0
+        );
+        // shrinking works too
+        assert_eq!(cfg.with_n_cells(1).n_cells(), 1);
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = crate::util::temp_dir("cluster-cfg");
+        let path = dir.join("cluster.json");
+        let cfg = ClusterConfig::edge_default();
+        std::fs::write(&path, cfg.to_json().to_string()).unwrap();
+        let back = ClusterConfig::from_json_file(&path).unwrap();
+        assert_eq!(cfg, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dispatch_kind_parsing_roundtrip() {
+        for k in [DispatchKind::LoadAware, DispatchKind::Static] {
+            assert_eq!(DispatchKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(DispatchKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_infeasible_cache() {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.cache_capacity = 1;
+        cfg.cells[0].devices.truncate(4); // 8 experts on 4 devices needs cache >= 2
+        assert!(cfg.validate().is_err());
+        cfg.cache_capacity = 2;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_empty_cells() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.cells.clear();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_warmup() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.warmup_frac = 1.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -11,7 +11,10 @@
 //! [`SystemConfig::paper_testbed`] (Section VI — 4 Jetson-class devices
 //! over WiFi).
 
+pub mod cluster;
 mod presets; // preset constructors are inherent impls on SystemConfig
+
+pub use cluster::{CellConfig, ClusterConfig, DispatchKind};
 
 use crate::util::Json;
 use anyhow::Result;

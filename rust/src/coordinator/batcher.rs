@@ -5,9 +5,15 @@
 //! number of input tokens of all prompts at present", §II-A). The batcher
 //! greedily packs queued requests up to a token budget; a batch is also
 //! closed when the oldest request has waited past `max_wait`.
+//!
+//! Waiting time is measured through the [`Clock`] abstraction: serving
+//! uses the default [`SystemClock`], while tests and the `cluster`
+//! discrete-event simulator drive the same logic with a [`VirtualClock`]
+//! so timeout behaviour is deterministic.
 
+use crate::util::clock::{Clock, SystemClock, VirtualClock};
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Batching knobs.
 #[derive(Debug, Clone)]
@@ -36,23 +42,37 @@ impl Default for BatcherConfig {
 pub struct QueuedRequest {
     pub id: u64,
     pub token_ids: Vec<i32>,
-    pub enqueued: Instant,
+    /// Enqueue instant on the batcher's clock (elapsed since its epoch).
+    pub enqueued: Duration,
 }
 
 /// Greedy FIFO token-budget batcher.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
+    clock: Box<dyn Clock>,
     queue: VecDeque<QueuedRequest>,
     next_id: u64,
 }
 
 impl DynamicBatcher {
+    /// Batcher on wall-clock time (serving path).
     pub fn new(cfg: BatcherConfig) -> Self {
+        Self::with_clock(cfg, Box::new(SystemClock::new()))
+    }
+
+    /// Batcher on an explicit clock (tests, discrete-event simulation).
+    pub fn with_clock(cfg: BatcherConfig, clock: Box<dyn Clock>) -> Self {
         Self {
             cfg,
+            clock,
             queue: VecDeque::new(),
             next_id: 0,
         }
+    }
+
+    /// Batcher sharing the given virtual clock.
+    pub fn with_virtual_clock(cfg: BatcherConfig, clock: VirtualClock) -> Self {
+        Self::with_clock(cfg, Box::new(clock))
     }
 
     /// Enqueue a prompt; returns its request id. Prompts longer than the
@@ -65,7 +85,7 @@ impl DynamicBatcher {
         self.queue.push_back(QueuedRequest {
             id,
             token_ids,
-            enqueued: Instant::now(),
+            enqueued: self.clock.now(),
         });
         id
     }
@@ -82,7 +102,9 @@ impl DynamicBatcher {
         let tokens: usize = self.queue.iter().map(|r| r.token_ids.len()).sum();
         tokens >= self.cfg.max_tokens
             || self.queue.len() >= self.cfg.max_prompts
-            || self.queue.front().map_or(false, |r| r.enqueued.elapsed() >= self.cfg.max_wait)
+            || self.queue.front().is_some_and(|r| {
+                self.clock.now().saturating_sub(r.enqueued) >= self.cfg.max_wait
+            })
     }
 
     /// Pop the next batch (FIFO, greedy under the token budget). Returns
@@ -186,5 +208,46 @@ mod tests {
         });
         b.push(vec![0; 1]);
         assert!(b.ready(), "zero max_wait means immediately ready");
+    }
+
+    #[test]
+    fn virtual_clock_timeout_is_deterministic() {
+        let clock = VirtualClock::new();
+        let mut b = DynamicBatcher::with_virtual_clock(
+            BatcherConfig {
+                max_tokens: 1000,
+                max_prompts: 100,
+                max_wait: Duration::from_millis(10),
+            },
+            clock.clone(),
+        );
+        b.push(vec![0; 1]);
+        assert!(!b.ready(), "no virtual time has passed");
+        clock.advance(Duration::from_millis(9));
+        assert!(!b.ready(), "9 ms < max_wait");
+        clock.advance(Duration::from_millis(1));
+        assert!(b.ready(), "exactly max_wait elapsed");
+    }
+
+    #[test]
+    fn virtual_clock_timeout_tracks_oldest_request() {
+        let clock = VirtualClock::new();
+        let mut b = DynamicBatcher::with_virtual_clock(
+            BatcherConfig {
+                max_tokens: 1000,
+                max_prompts: 100,
+                max_wait: Duration::from_millis(10),
+            },
+            clock.clone(),
+        );
+        b.push(vec![0; 1]);
+        clock.advance(Duration::from_millis(6));
+        b.push(vec![0; 1]); // newer request must not reset the deadline
+        clock.advance(Duration::from_millis(4));
+        assert!(b.ready(), "oldest request has waited max_wait");
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].enqueued, Duration::ZERO);
+        assert_eq!(batch[1].enqueued, Duration::from_millis(6));
     }
 }

@@ -26,9 +26,14 @@
 //! * [`coordinator`] — request router, dynamic batcher, and the
 //!   block-by-block dispatch loop that walks tokens through
 //!   attention → gate → (devices) experts → combine.
+//! * [`cluster`] — the discrete-event multi-cell serving simulator:
+//!   open-loop arrivals, expert replication under cache-capacity
+//!   constraints, load-aware replica dispatch and per-device FIFO
+//!   queues (`repro cluster`).
 //! * [`runtime`] — PJRT execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text → compile once → execute on the
-//!   request path; python never runs at serving time).
+//!   request path; python never runs at serving time). The PJRT pieces
+//!   are gated behind the off-by-default `pjrt` cargo feature.
 //! * [`workload`] — synthetic benchmark workload generators calibrated to
 //!   the paper's eight evaluation datasets.
 //! * [`testbed`] — the Section-VI hardware-testbed simulation (measured
@@ -39,12 +44,14 @@
 //! See `DESIGN.md` for the per-experiment index and substitution notes,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod util;
 pub mod devices;
 pub mod latency;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod model;
 pub mod moe;
 pub mod optim;

@@ -7,8 +7,14 @@
 //! commands:
 //!   serve [--requests N] [--benchmark NAME] [--policy P]
 //!                 end-to-end serving: PJRT compute + wireless sim
-//!   config [simulation|testbed|serving]
-//!                 print a preset SystemConfig as JSON
+//!                 (needs the `pjrt` cargo feature + built artifacts)
+//!   cluster [--rates CSV] [--requests N] [--benchmark NAME]
+//!           [--cache N] [--dispatch load_aware|static] [--cells N]
+//!                 multi-cell discrete-event serving sweep: throughput,
+//!                 p50/p95/p99 latency, per-device utilization vs
+//!                 arrival rate (CSV into --out)
+//!   config [simulation|testbed|serving|cluster]
+//!                 print a preset config as JSON
 //!   fig5 fig6 fig7 fig8 fig10 table1 table2 table3 table4
 //!                 regenerate one paper table/figure
 //!   all           regenerate everything
@@ -18,14 +24,10 @@
 //! environment — DESIGN.md §Substitutions.)
 
 use std::path::PathBuf;
-use wdmoe::config::{PolicyKind, SystemConfig};
-use wdmoe::coordinator::batcher::BatcherConfig;
-use wdmoe::coordinator::router::{spawn_router, InferenceRequest};
-use wdmoe::model::{ServingEngine, ServingModel};
-use wdmoe::moe::selection::make_policy;
+use wdmoe::cluster::arrival_rate_sweep;
+use wdmoe::config::{ClusterConfig, DispatchKind, SystemConfig};
 use wdmoe::repro::{self, ReproContext};
-use wdmoe::wireless::bandwidth::{BandwidthAllocator, OptimalAllocator, UniformAllocator};
-use wdmoe::workload::{Benchmark, WorkloadGen};
+use wdmoe::workload::Benchmark;
 
 const USAGE: &str = "\
 repro — WDMoE: Wireless Distributed Mixture of Experts (reproduction CLI)
@@ -35,13 +37,18 @@ USAGE: repro [GLOBAL OPTIONS] <COMMAND> [COMMAND OPTIONS]
 GLOBAL OPTIONS:
   --out DIR          output directory for CSVs        [results]
   --artifacts DIR    AOT artifacts (make artifacts)   [artifacts]
-  --config FILE      SystemConfig JSON override
+  --config FILE      config JSON override (SystemConfig; for the
+                     `cluster` command a ClusterConfig as printed by
+                     `repro config cluster`)
   --quick            coarser sweeps, single batch per point
   --seed N           base RNG seed                    [0]
 
 COMMANDS:
   serve [--requests N] [--benchmark NAME] [--policy vanilla|wdmoe|testbed|random]
-  config [simulation|testbed|serving]
+        (requires building with --features pjrt)
+  cluster [--rates CSV] [--requests N] [--benchmark NAME]
+          [--cache N] [--dispatch load_aware|static] [--cells N]
+  config [simulation|testbed|serving|cluster]
   fig5 | fig6 | fig7 | fig8 | fig10
   table1 | table2 | table3 | table4
   ablate        design-decision ablations (allocation granularity, bias, theta)
@@ -103,7 +110,9 @@ fn rest_opt(rest: &[String], key: &str) -> Option<String> {
         .and_then(|i| rest.get(i + 1).cloned())
 }
 
-fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
+#[cfg(feature = "pjrt")]
+fn parse_policy(s: &str) -> anyhow::Result<wdmoe::config::PolicyKind> {
+    use wdmoe::config::PolicyKind;
     Ok(match s.to_lowercase().as_str() {
         "vanilla" | "topk" | "mixtral" => PolicyKind::VanillaTopK,
         "wdmoe" | "alg1" => PolicyKind::Wdmoe,
@@ -124,32 +133,42 @@ fn main() -> anyhow::Result<()> {
     match args.cmd.as_str() {
         "config" => {
             let preset = args.rest.first().map(|s| s.as_str()).unwrap_or("simulation");
-            let cfg = match preset {
-                "simulation" => SystemConfig::paper_simulation(),
-                "testbed" => SystemConfig::paper_testbed(),
-                "serving" => SystemConfig::artifact_serving(),
+            let json = match preset {
+                "simulation" => SystemConfig::paper_simulation().to_json(),
+                "testbed" => SystemConfig::paper_testbed().to_json(),
+                "serving" => SystemConfig::artifact_serving().to_json(),
+                "cluster" => ClusterConfig::edge_default().to_json(),
                 other => anyhow::bail!("unknown preset {other}"),
             };
-            println!("{}", cfg.to_json().to_string());
+            println!("{}", json.to_string());
         }
         "serve" => {
-            let requests: usize = rest_opt(&args.rest, "--requests")
-                .map(|s| s.parse())
-                .transpose()?
-                .unwrap_or(16);
-            let bench_name =
-                rest_opt(&args.rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
-            let bench = Benchmark::from_name(&bench_name)
-                .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
-            let kind = parse_policy(
-                &rest_opt(&args.rest, "--policy").unwrap_or_else(|| "wdmoe".to_string()),
-            )?;
-            let cfg = match &args.config {
-                Some(p) => SystemConfig::from_json_file(p)?,
-                None => SystemConfig::artifact_serving(),
-            };
-            serve(&args.artifacts, cfg, bench, kind, requests, args.seed)?;
+            #[cfg(feature = "pjrt")]
+            {
+                let requests: usize = rest_opt(&args.rest, "--requests")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(16);
+                let bench_name =
+                    rest_opt(&args.rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
+                let bench = Benchmark::from_name(&bench_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
+                let kind = parse_policy(
+                    &rest_opt(&args.rest, "--policy").unwrap_or_else(|| "wdmoe".to_string()),
+                )?;
+                let cfg = match &args.config {
+                    Some(p) => SystemConfig::from_json_file(p)?,
+                    None => SystemConfig::artifact_serving(),
+                };
+                serve(&args.artifacts, cfg, bench, kind, requests, args.seed)?;
+            }
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!(
+                "`serve` executes the AOT artifacts via PJRT — rebuild with \
+                 `cargo build --release --features pjrt` (see rust/Cargo.toml)"
+            );
         }
+        "cluster" => cluster_cmd(&args)?,
         "fig5" => drop(repro::fig5(&ctx)?),
         "fig6" => drop(repro::fig6(&ctx)?),
         "fig7" => drop(repro::fig7(&ctx)?),
@@ -166,15 +185,84 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro cluster` — multi-cell DES arrival-rate sweep.
+fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
+    // --config takes a ClusterConfig JSON here (the format
+    // `repro config cluster` prints), not a SystemConfig.
+    let mut cfg = match &args.config {
+        Some(p) => ClusterConfig::from_json_file(p)?,
+        None => ClusterConfig::edge_default(),
+    };
+    cfg.seed = args.seed;
+    if let Some(n) = rest_opt(&args.rest, "--cells") {
+        let n: usize = n.parse()?;
+        anyhow::ensure!(n >= 1, "--cells must be >= 1");
+        cfg = cfg.with_n_cells(n);
+    }
+    if let Some(c) = rest_opt(&args.rest, "--cache") {
+        cfg.cache_capacity = c.parse()?;
+    }
+    if let Some(d) = rest_opt(&args.rest, "--dispatch") {
+        cfg.dispatch = DispatchKind::parse(&d)?;
+    }
+    let bench_name = rest_opt(&args.rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
+    let bench = Benchmark::from_name(&bench_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
+    let requests: usize = rest_opt(&args.rest, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(if args.quick { 120 } else { 400 });
+    let rates: Vec<f64> = match rest_opt(&args.rest, "--rates") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().map_err(anyhow::Error::from))
+            .collect::<anyhow::Result<Vec<f64>>>()?,
+        None if args.quick => vec![0.5, 1.0, 2.0, 4.0],
+        None => vec![0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0],
+    };
+    anyhow::ensure!(!rates.is_empty(), "--rates must name at least one rate");
+    anyhow::ensure!(
+        rates.iter().all(|r| r.is_finite() && *r > 0.0),
+        "--rates must be finite and positive, got {rates:?}"
+    );
+
+    println!(
+        "cluster sweep: {} cells, cache {}, dispatch {}, {} x {} requests, rates {:?}",
+        cfg.n_cells(),
+        cfg.cache_capacity,
+        cfg.dispatch.as_str(),
+        bench.name(),
+        requests,
+        rates
+    );
+    let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, args.seed)?;
+    println!("{}", sweep.summary.render());
+    let p = sweep.summary.write_csv(&args.out)?;
+    println!("  -> {}\n", p.display());
+    println!("{}", sweep.utilization.render());
+    let p = sweep.utilization.write_csv(&args.out)?;
+    println!("  -> {}\n", p.display());
+    Ok(())
+}
+
 /// End-to-end serving: router + batcher + PJRT model + wireless sim.
+#[cfg(feature = "pjrt")]
 fn serve(
     artifacts: &PathBuf,
     cfg: SystemConfig,
     bench: Benchmark,
-    kind: PolicyKind,
+    kind: wdmoe::config::PolicyKind,
     requests: usize,
     seed: u64,
 ) -> anyhow::Result<()> {
+    use wdmoe::config::PolicyKind;
+    use wdmoe::coordinator::batcher::BatcherConfig;
+    use wdmoe::coordinator::router::{spawn_router, InferenceRequest};
+    use wdmoe::model::{ServingEngine, ServingModel};
+    use wdmoe::moe::selection::make_policy;
+    use wdmoe::wireless::bandwidth::{BandwidthAllocator, OptimalAllocator, UniformAllocator};
+    use wdmoe::workload::WorkloadGen;
+
     let n_dev = cfg.n_devices();
     let policy = make_policy(kind, &cfg.policy, n_dev, seed);
     let allocator: Box<dyn BandwidthAllocator> = match kind {

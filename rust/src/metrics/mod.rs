@@ -67,6 +67,90 @@ impl Summary {
     }
 }
 
+/// Steady-state accumulator: a [`Summary`] that discards a warm-up
+/// prefix before reporting.
+///
+/// Open-loop serving sweeps (the `cluster` subsystem) start from an empty
+/// system, so the first completions see artificially short queues. Values
+/// are recorded in completion order; `steady()` drops the first
+/// `warmup_frac` fraction and summarises the rest, which is what the
+/// p50/p95/p99 columns of `repro cluster` report.
+#[derive(Debug, Clone)]
+pub struct SteadyState {
+    warmup_frac: f64,
+    values: Vec<f64>,
+}
+
+impl SteadyState {
+    /// `warmup_frac` in [0, 1): fraction of leading samples to discard.
+    pub fn new(warmup_frac: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&warmup_frac),
+            "warmup_frac must be in [0,1), got {warmup_frac}"
+        );
+        Self {
+            warmup_frac,
+            values: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    /// Samples recorded, including warm-up.
+    pub fn total_count(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Post-warm-up samples (completion order preserved).
+    pub fn steady_values(&self) -> &[f64] {
+        let skip = ((self.values.len() as f64) * self.warmup_frac).floor() as usize;
+        // Keep at least one sample when anything was recorded.
+        let skip = skip.min(self.values.len().saturating_sub(1));
+        &self.values[skip..]
+    }
+
+    /// Summary over the post-warm-up window.
+    pub fn steady(&self) -> Summary {
+        let mut s = Summary::new();
+        for &v in self.steady_values() {
+            s.record(v);
+        }
+        s
+    }
+}
+
+/// Busy-time utilization tracker for one resource.
+///
+/// `busy / horizon` with busy time accumulated as work is scheduled; the
+/// cluster simulator keeps one per device so utilization *emerges* from
+/// load rather than being assumed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Utilization {
+    busy_s: f64,
+}
+
+impl Utilization {
+    pub fn add_busy(&mut self, seconds: f64) {
+        debug_assert!(seconds >= 0.0);
+        self.busy_s += seconds;
+    }
+
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// Fraction of `horizon_s` spent busy (0 when the horizon is empty).
+    pub fn fraction(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            self.busy_s / horizon_s
+        }
+    }
+}
+
 /// A rendered results table: the `repro` harness prints these in the same
 /// row/column layout as the paper and also dumps CSV next to them.
 #[derive(Debug, Clone)]
@@ -186,6 +270,60 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
         assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn steady_state_discards_warmup_prefix() {
+        let mut s = SteadyState::new(0.25);
+        // 4 warm-up-ish low values then 12 steady ones
+        for v in [1.0, 1.0, 1.0, 1.0] {
+            s.record(v);
+        }
+        for _ in 0..12 {
+            s.record(10.0);
+        }
+        assert_eq!(s.total_count(), 16);
+        assert_eq!(s.steady_values().len(), 12);
+        assert_eq!(s.steady().mean(), 10.0);
+        assert_eq!(s.steady().percentile(99.0), 10.0);
+    }
+
+    #[test]
+    fn steady_state_zero_warmup_keeps_all() {
+        let mut s = SteadyState::new(0.0);
+        s.record(1.0);
+        s.record(2.0);
+        assert_eq!(s.steady().count(), 2);
+    }
+
+    #[test]
+    fn steady_state_keeps_at_least_one_sample() {
+        let mut s = SteadyState::new(0.9);
+        s.record(5.0);
+        assert_eq!(s.steady_values(), &[5.0]);
+    }
+
+    #[test]
+    fn steady_state_empty_is_safe() {
+        let s = SteadyState::new(0.5);
+        assert_eq!(s.steady().count(), 0);
+        assert_eq!(s.steady().percentile(99.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "warmup_frac")]
+    fn steady_state_rejects_bad_frac() {
+        let _ = SteadyState::new(1.0);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut u = Utilization::default();
+        u.add_busy(2.0);
+        u.add_busy(3.0);
+        assert_eq!(u.busy_seconds(), 5.0);
+        assert_eq!(u.fraction(10.0), 0.5);
+        assert_eq!(u.fraction(0.0), 0.0);
     }
 
     #[test]

@@ -12,12 +12,19 @@
 //! alongside as the published reference.
 
 use super::ReproContext;
-use crate::config::{PolicyKind, SystemConfig};
+use crate::config::PolicyKind;
+#[cfg(feature = "pjrt")]
+use crate::config::SystemConfig;
 use crate::metrics::Table;
+#[cfg(feature = "pjrt")]
 use crate::model::ServingModel;
+#[cfg(feature = "pjrt")]
 use crate::moe::selection::make_policy;
+#[cfg(feature = "pjrt")]
 use crate::wireless::bandwidth::{OptimalAllocator, UniformAllocator};
-use crate::workload::{Benchmark, WorkloadGen};
+use crate::workload::Benchmark;
+#[cfg(feature = "pjrt")]
+use crate::workload::WorkloadGen;
 
 /// Paper Table I reference scores (%): rows are models, columns the eight
 /// benchmarks in paper order.
@@ -44,6 +51,7 @@ pub const TABLE3_PAPER: [(&str, [f64; 4]); 2] = [
 /// is a pessimistic lower bound. KL divergence and logit cosine measure
 /// the actual distributional shift (a trained model's peaked logits would
 /// push argmax agreement toward 100% at the same KL).
+#[cfg(feature = "pjrt")]
 pub struct ProbeResult {
     /// Fraction of positions whose argmax next-token matches baseline.
     pub argmax_agreement: f64,
@@ -55,6 +63,7 @@ pub struct ProbeResult {
     pub logit_cosine: f64,
 }
 
+#[cfg(feature = "pjrt")]
 fn top_k_set(row: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..row.len()).collect();
     idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
@@ -62,6 +71,7 @@ fn top_k_set(row: &[f32], k: usize) -> Vec<usize> {
     idx
 }
 
+#[cfg(feature = "pjrt")]
 fn cosine32(a: &[f32], b: &[f32]) -> f64 {
     let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
     let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
@@ -72,6 +82,7 @@ fn cosine32(a: &[f32], b: &[f32]) -> f64 {
     dot / (na * nb)
 }
 
+#[cfg(feature = "pjrt")]
 fn softmax(row: &[f32]) -> Vec<f64> {
     let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
     let exps: Vec<f64> = row.iter().map(|&l| ((l as f64) - max).exp()).collect();
@@ -81,6 +92,7 @@ fn softmax(row: &[f32]) -> Vec<f64> {
 
 /// Compare `policy_kind` (+ optimal bandwidth) against vanilla top-2
 /// (+ uniform bandwidth) on `n_batches` of `bench`-scale token batches.
+#[cfg(feature = "pjrt")]
 pub fn probe(
     model: &mut ServingModel,
     bench: Benchmark,
@@ -139,6 +151,7 @@ pub fn probe(
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn load_model(ctx: &ReproContext) -> Option<ServingModel> {
     let dir = ctx.artifacts_dir.clone()?;
     match ServingModel::load(&dir, SystemConfig::artifact_serving()) {
@@ -148,6 +161,45 @@ fn load_model(ctx: &ReproContext) -> Option<ServingModel> {
             None
         }
     }
+}
+
+/// Measured fidelity rows for the given policy, one per benchmark.
+/// Without the `pjrt` feature (or without artifacts) measurement is
+/// skipped and only the paper-reference tables are emitted.
+#[cfg(feature = "pjrt")]
+fn probe_rows(
+    ctx: &ReproContext,
+    kind: PolicyKind,
+    benches: &[Benchmark],
+) -> anyhow::Result<Vec<(String, Vec<f64>)>> {
+    let Some(mut model) = load_model(ctx) else {
+        println!("(measurement skipped: build artifacts with `make artifacts`)");
+        return Ok(vec![]);
+    };
+    let mut rows = Vec::new();
+    for &bench in benches {
+        let r = probe(&mut model, bench, kind, ctx.seed, 1)?;
+        rows.push((
+            bench.name().to_string(),
+            vec![
+                r.argmax_agreement * 100.0,
+                r.top5_overlap * 100.0,
+                r.mean_kl,
+                r.logit_cosine,
+            ],
+        ));
+    }
+    Ok(rows)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn probe_rows(
+    _ctx: &ReproContext,
+    _kind: PolicyKind,
+    _benches: &[Benchmark],
+) -> anyhow::Result<Vec<(String, Vec<f64>)>> {
+    println!("(measurement skipped: PJRT disabled — rebuild with `--features pjrt`)");
+    Ok(vec![])
 }
 
 /// Table I: capability under WDMoE routing (Algorithm 1).
@@ -166,21 +218,8 @@ pub fn table1(ctx: &ReproContext) -> anyhow::Result<Table> {
         &["argmax_agreement_pct", "top5_overlap_pct", "mean_kl_nats", "logit_cosine"],
     );
     t.precision = 4;
-    if let Some(mut model) = load_model(ctx) {
-        for bench in Benchmark::ALL {
-            let r = probe(&mut model, bench, PolicyKind::Wdmoe, ctx.seed, 1)?;
-            t.row(
-                bench.name(),
-                vec![
-                    r.argmax_agreement * 100.0,
-                    r.top5_overlap * 100.0,
-                    r.mean_kl,
-                    r.logit_cosine,
-                ],
-            );
-        }
-    } else {
-        println!("(Table I measurement skipped: build artifacts with `make artifacts`)");
+    for (label, vals) in probe_rows(ctx, PolicyKind::Wdmoe, &Benchmark::ALL)? {
+        t.row(&label, vals);
     }
     ctx.emit(&t)?;
     Ok(t)
@@ -202,26 +241,14 @@ pub fn table3(ctx: &ReproContext) -> anyhow::Result<Table> {
         &["argmax_agreement_pct", "top5_overlap_pct", "mean_kl_nats", "logit_cosine"],
     );
     t.precision = 4;
-    if let Some(mut model) = load_model(ctx) {
-        for bench in [
-            Benchmark::ArcEasy,
-            Benchmark::ArcChallenge,
-            Benchmark::Mbpp,
-            Benchmark::Piqa,
-        ] {
-            let r = probe(&mut model, bench, PolicyKind::Testbed, ctx.seed, 1)?;
-            t.row(
-                bench.name(),
-                vec![
-                    r.argmax_agreement * 100.0,
-                    r.top5_overlap * 100.0,
-                    r.mean_kl,
-                    r.logit_cosine,
-                ],
-            );
-        }
-    } else {
-        println!("(Table III measurement skipped: build artifacts with `make artifacts`)");
+    let testbed_benches = [
+        Benchmark::ArcEasy,
+        Benchmark::ArcChallenge,
+        Benchmark::Mbpp,
+        Benchmark::Piqa,
+    ];
+    for (label, vals) in probe_rows(ctx, PolicyKind::Testbed, &testbed_benches)? {
+        t.row(&label, vals);
     }
     ctx.emit(&t)?;
     Ok(t)

@@ -11,10 +11,13 @@ pub mod manifest;
 
 pub use manifest::{Manifest, WeightStore};
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// A compiled-artifact registry bound to one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -23,6 +26,7 @@ pub struct Runtime {
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load the manifest and weights and compile every artifact on the
     /// CPU PJRT client. Compilation happens once, here; the request path
@@ -120,7 +124,7 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,120 @@
+//! Time sources: a `Clock` trait over wall and virtual time.
+//!
+//! Every component that asks "how long has X waited" goes through
+//! [`Clock`] instead of touching [`Instant`] directly, so the same code
+//! runs against real time in serving ([`SystemClock`]) and against the
+//! discrete-event simulator's virtual time ([`VirtualClock`]) in tests
+//! and in the `cluster` subsystem — deterministically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source. `now()` is elapsed time since the clock's
+/// epoch (creation for [`SystemClock`], t=0 for [`VirtualClock`]).
+pub trait Clock: Send {
+    fn now(&self) -> Duration;
+}
+
+/// Wall-clock time, anchored at construction.
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+        }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> Duration {
+        self.origin.elapsed()
+    }
+}
+
+/// Manually-advanced virtual time with nanosecond resolution.
+///
+/// Clones share the same underlying counter, so a simulator can hold one
+/// handle and advance it while a batcher holds another and reads it. Time
+/// never goes backwards: advancing to an earlier instant is a no-op.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time in nanoseconds since t=0.
+    pub fn nanos(&self) -> u64 {
+        self.nanos.load(Ordering::SeqCst)
+    }
+
+    /// Move the clock forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Move the clock forward to the absolute instant `t_nanos`
+    /// (monotone: earlier instants leave the clock unchanged).
+    pub fn advance_to_nanos(&self, t_nanos: u64) {
+        self.nanos.fetch_max(t_nanos, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_monotone() {
+        let c = SystemClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_starts_at_zero_and_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(5));
+        c.advance_to_nanos(7_000_000);
+        assert_eq!(c.now(), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn virtual_clock_never_rewinds() {
+        let c = VirtualClock::new();
+        c.advance_to_nanos(10_000);
+        c.advance_to_nanos(4_000);
+        assert_eq!(c.nanos(), 10_000);
+    }
+
+    #[test]
+    fn clones_share_time() {
+        let a = VirtualClock::new();
+        let b = a.clone();
+        a.advance(Duration::from_secs(1));
+        assert_eq!(b.now(), Duration::from_secs(1));
+    }
+}

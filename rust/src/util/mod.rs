@@ -4,9 +4,11 @@
 //! helper (`tempfile`), and a micro-benchmark timer (`criterion`).
 
 pub mod bench;
+pub mod clock;
 pub mod json;
 pub mod rng;
 
+pub use clock::{Clock, SystemClock, VirtualClock};
 pub use json::Json;
 pub use rng::Rng;
 

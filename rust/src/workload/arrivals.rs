@@ -1,0 +1,158 @@
+//! Open-loop request arrival processes for the cluster simulator.
+//!
+//! The paper evaluates one batch at a time; serving "heavy traffic from
+//! millions of users" means requests arrive *while others are in flight*.
+//! This module generates those arrival streams: a seeded Poisson process
+//! (exponential inter-arrival gaps at a target rate) and trace replay
+//! (prompt sizes taken from a recorded [`Trace`], evenly paced), both
+//! yielding the `(time, tokens)` pairs [`crate::cluster::ClusterSim`]
+//! consumes.
+
+use super::trace::Trace;
+use super::Benchmark;
+use crate::util::Rng;
+
+/// One request entering the system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    /// Arrival instant in seconds from simulation start.
+    pub time_s: f64,
+    /// Prompt length in tokens.
+    pub tokens: usize,
+}
+
+/// An open-loop arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_rps` requests/second; prompt lengths
+    /// vary ±30% (uniform) around the benchmark mean, matching
+    /// [`crate::workload::WorkloadGen::batch`]'s calibration.
+    Poisson { rate_rps: f64 },
+    /// Replay an explicit arrival sequence (times must be non-decreasing).
+    Replay { arrivals: Vec<Arrival> },
+}
+
+impl ArrivalProcess {
+    /// Trace-driven arrivals: prompt sizes from the recorded batches (in
+    /// record order, flattened), paced deterministically at `rate_rps`.
+    pub fn from_trace(trace: &Trace, rate_rps: f64) -> Self {
+        assert!(rate_rps > 0.0, "rate must be positive");
+        let gap = 1.0 / rate_rps;
+        let arrivals = trace
+            .batches
+            .iter()
+            .flat_map(|b| b.prompt_lens.iter().copied())
+            .enumerate()
+            .map(|(i, tokens)| Arrival {
+                time_s: i as f64 * gap,
+                tokens: tokens.max(1),
+            })
+            .collect();
+        ArrivalProcess::Replay { arrivals }
+    }
+
+    /// Materialise the first `n_requests` arrivals. Deterministic given
+    /// `seed`; the returned list is sorted by time.
+    pub fn generate(&self, n_requests: usize, bench: Benchmark, seed: u64) -> Vec<Arrival> {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                assert!(*rate_rps > 0.0, "rate must be positive");
+                let mut rng = Rng::seed_from_u64(seed ^ 0xa881_7a1e);
+                let mean = bench.mean_prompt_tokens() as f64;
+                let mut t = 0.0f64;
+                (0..n_requests)
+                    .map(|_| {
+                        // Exponential gap via inverse CDF; u in [0,1) so
+                        // 1-u in (0,1] and ln is finite.
+                        let u = rng.f64();
+                        t += -(1.0 - u).ln() / rate_rps;
+                        let f = rng.range_f64(0.7, 1.3);
+                        Arrival {
+                            time_s: t,
+                            tokens: ((mean * f).round() as usize).max(1),
+                        }
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Replay { arrivals } => {
+                let mut out: Vec<Arrival> =
+                    arrivals.iter().take(n_requests).cloned().collect();
+                out.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadGen;
+
+    #[test]
+    fn poisson_rate_is_calibrated() {
+        let p = ArrivalProcess::Poisson { rate_rps: 4.0 };
+        let arr = p.generate(4000, Benchmark::Piqa, 0);
+        assert_eq!(arr.len(), 4000);
+        let horizon = arr.last().unwrap().time_s;
+        let measured = arr.len() as f64 / horizon;
+        assert!(
+            (measured - 4.0).abs() / 4.0 < 0.1,
+            "measured rate {measured} vs 4.0"
+        );
+        // times strictly increasing (exponential gaps are a.s. positive)
+        for w in arr.windows(2) {
+            assert!(w[1].time_s > w[0].time_s);
+        }
+    }
+
+    #[test]
+    fn poisson_tokens_match_benchmark_calibration() {
+        let p = ArrivalProcess::Poisson { rate_rps: 1.0 };
+        let arr = p.generate(2000, Benchmark::Boolq, 1);
+        let mean = arr.iter().map(|a| a.tokens as f64).sum::<f64>() / arr.len() as f64;
+        let nominal = Benchmark::Boolq.mean_prompt_tokens() as f64;
+        assert!(
+            (mean - nominal).abs() / nominal < 0.05,
+            "mean tokens {mean} vs nominal {nominal}"
+        );
+        assert!(arr.iter().all(|a| a.tokens >= 1));
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let p = ArrivalProcess::Poisson { rate_rps: 2.0 };
+        let a = p.generate(50, Benchmark::Mbpp, 7);
+        let b = p.generate(50, Benchmark::Mbpp, 7);
+        assert_eq!(a, b);
+        let c = p.generate(50, Benchmark::Mbpp, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn trace_replay_preserves_prompt_sizes() {
+        let mut gen = WorkloadGen::new(0, 2048);
+        let mut trace = Trace::new();
+        trace.record(gen.batch(Benchmark::Gsm8k));
+        let p = ArrivalProcess::from_trace(&trace, 2.0);
+        let arr = p.generate(100, Benchmark::Gsm8k, 0);
+        let want: Vec<usize> = trace.batches[0].prompt_lens.clone();
+        assert_eq!(arr.len(), want.len().min(100));
+        for (a, &w) in arr.iter().zip(&want) {
+            assert_eq!(a.tokens, w);
+        }
+        // evenly paced at 1/rate
+        assert!((arr[1].time_s - arr[0].time_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_truncates_to_n() {
+        let arrivals = vec![
+            Arrival { time_s: 0.0, tokens: 5 },
+            Arrival { time_s: 1.0, tokens: 6 },
+            Arrival { time_s: 2.0, tokens: 7 },
+        ];
+        let p = ArrivalProcess::Replay { arrivals };
+        assert_eq!(p.generate(2, Benchmark::Piqa, 0).len(), 2);
+    }
+}

@@ -10,7 +10,10 @@
 //! For execution mode the generator also emits synthetic token ids in the
 //! artifact vocabulary.
 
+pub mod arrivals;
 pub mod trace;
+
+pub use arrivals::{Arrival, ArrivalProcess};
 
 use crate::util::{Json, Rng};
 

@@ -1,6 +1,7 @@
-//! PJRT serving-path integration tests (need `make artifacts`; skip
-//! gracefully otherwise): router + batcher + model end to end, and
-//! numerical parity of the orchestrated block path.
+//! PJRT serving-path integration tests (need the `pjrt` cargo feature
+//! and `make artifacts`; skip gracefully otherwise): router + batcher +
+//! model end to end, and numerical parity of the orchestrated block path.
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 use wdmoe::config::{PolicyKind, SystemConfig};
