@@ -2,18 +2,20 @@
 //! needed.
 //!
 //! Runs the discrete-event serving simulator over a range of Poisson
-//! arrival rates on the two-cell edge preset, twice: the paper-style
-//! fixed placement (one expert per device, static dispatch) against
-//! replicated placement (2-expert cache per device) with load-aware
-//! dispatch. Prints throughput, steady-state latency percentiles and
-//! per-device utilization, showing replication holding the p99 down as
-//! the cluster saturates.
+//! arrival rates on the two-cell edge preset, comparing the three
+//! control planes on identical arrival streams: the frozen uniform
+//! split (PR-1 baseline), the one-shot P3 pre-solve, and the adaptive
+//! closed loop (epoch re-solves from observed backlog + replica
+//! autoscaling). Then contrasts replicated, load-aware serving against
+//! the paper's fixed expert-per-device placement. Watch the adaptive
+//! plane hold p99 down as the cluster saturates, and the `resolves` /
+//! `churn` columns show what the closed loop paid for it.
 //!
 //! ```bash
 //! cargo run --release --example cluster_sweep
 //! ```
 
-use wdmoe::cluster::arrival_rate_sweep;
+use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
 use wdmoe::config::{ClusterConfig, DispatchKind};
 use wdmoe::workload::Benchmark;
 
@@ -22,6 +24,13 @@ fn main() -> anyhow::Result<()> {
     let requests = 200;
     let bench = Benchmark::Piqa;
 
+    // Control planes head to head on identical arrival streams.
+    let cfg = ClusterConfig::edge_default();
+    println!("== control planes (cache 2, load-aware dispatch) ==");
+    let table = control_plane_sweep(&cfg, &rates, requests, bench, 0)?;
+    println!("{}", table.render());
+
+    // Replication effect, under the static-uniform baseline plane.
     for (label, cache, dispatch) in [
         ("no replication (paper placement)", 1, DispatchKind::Static),
         ("replicated, load-aware dispatch", 2, DispatchKind::LoadAware),

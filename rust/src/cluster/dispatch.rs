@@ -8,6 +8,13 @@
 //! latency (Eq. (11)) given current queue state. The static dispatcher
 //! always uses the home replica, reproducing the paper's fixed
 //! expert-per-device assignment as a baseline.
+//!
+//! The dispatcher is stateless: `t_per_token` must be the *current*
+//! service-time vector read from the cell's
+//! [`crate::control::ControlPlane`] at dispatch time — never a cached
+//! copy — so a control-epoch re-allocation immediately changes which
+//! replica wins. Replicas whose service time is non-finite (offline, or
+//! starved of spectrum by a re-solve) are never chosen.
 
 use super::event::{nanos_from_secs, Nanos};
 use crate::config::DispatchKind;
@@ -31,7 +38,9 @@ impl Dispatcher {
     /// * `t_per_token[k]` — service seconds per token on device `k`;
     /// * `online[k]` — device availability.
     ///
-    /// Returns `None` when no replica is online.
+    /// Returns `None` when no replica is serviceable — online with a
+    /// finite service time (a control-plane re-solve can starve an
+    /// online device of spectrum entirely).
     pub fn choose(
         &self,
         replicas: &[usize],
@@ -42,9 +51,12 @@ impl Dispatcher {
         online: &[bool],
     ) -> Option<usize> {
         match self.kind {
-            // First online replica in replica order — the home replica
-            // whenever it is up.
-            DispatchKind::Static => replicas.iter().copied().find(|&k| online[k]),
+            // First serviceable replica in replica order — the home
+            // replica whenever it is up and has finite service time.
+            DispatchKind::Static => replicas
+                .iter()
+                .copied()
+                .find(|&k| online[k] && t_per_token[k].is_finite()),
             DispatchKind::LoadAware => {
                 let mut best: Option<(Nanos, usize)> = None;
                 for k in replicas.iter().copied().filter(|&k| online[k]) {
@@ -122,5 +134,16 @@ mod tests {
         let d = Dispatcher::new(DispatchKind::LoadAware);
         let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4);
         assert_eq!(k, Some(1));
+    }
+
+    #[test]
+    fn static_dispatch_skips_unserviceable_home() {
+        // A re-solve can starve an online device of spectrum (infinite
+        // service time); static dispatch must fall through to the next
+        // replica rather than schedule unbounded work.
+        let s = Dispatcher::new(DispatchKind::Static);
+        let t = [f64::INFINITY, 1e-3, 1e-3, 1e-3];
+        assert_eq!(s.choose(&[0, 2], 5.0, 0, &[0; 4], &t, &ONLINE4), Some(2));
+        assert_eq!(s.choose(&[0], 5.0, 0, &[0; 4], &t, &ONLINE4), None);
     }
 }

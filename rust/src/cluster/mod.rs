@@ -34,27 +34,50 @@
 //! groups' finish instants — becomes the next `BlockDone` event. Waiting
 //! time and utilization therefore *emerge* from load; nothing is assumed.
 //!
-//! ## Replication and placement
+//! ## Control plane, replication and placement
 //!
-//! Each cell owns a [`placement::Placement`]: experts may live on several
-//! devices, bounded by a per-device cache capacity (the paper's §I
-//! "limited computing and caching resources", Eq. (7)). The greedy
-//! optimizer replicates experts homed on slow/far devices onto fast ones;
-//! the load-aware dispatcher then picks, per block, the replica with the
-//! earliest predicted completion given current backlog. Cache capacity 1
-//! (or [`crate::config::DispatchKind::Static`]) reproduces the paper's
-//! fixed expert-per-device assignment as a baseline.
+//! Each cell's `(bandwidth allocation, service times, expert placement)`
+//! are owned by its [`crate::control::ControlPlane`], selected by
+//! [`crate::config::ControlKind`]: the static planes freeze them at
+//! construction (uniform split, or a one-shot P3 pre-solve), while the
+//! **adaptive** plane closes the paper's loop inside the DES —
+//! `ControlTick` events on an epoch cadence convert observed queue
+//! backlog into a demand vector, re-solve P3 warm-started from the
+//! previous split, and re-balance expert replicas from observed
+//! per-expert token counts (replica autoscaling). Placement is a
+//! [`placement::Placement`]: experts may live on several devices,
+//! bounded by a per-device cache capacity (the paper's §I "limited
+//! computing and caching resources", Eq. (7)); the load-aware dispatcher
+//! picks, per block, the replica with the earliest predicted completion
+//! given current backlog, reading service times through the plane so
+//! re-allocations take effect immediately. Cache capacity 1 (or
+//! [`crate::config::DispatchKind::Static`]) reproduces the paper's fixed
+//! expert-per-device assignment as a baseline.
+//!
+//! ## Admission control
+//!
+//! With [`crate::config::ClusterConfig::queue_limit_s`] set, a dispatch
+//! finding every replica of an expert beyond the backlog bound triggers
+//! the configured [`crate::config::DropPolicy`]: reject the whole
+//! request, or shed only the offending token group (a block always
+//! serves at least one group). Goodput, drop rate and shed rate are
+//! reported next to the latency percentiles so overload shows up as
+//! degraded useful work instead of unbounded queues — whichever policy
+//! absorbs it.
 //!
 //! ## Entry points
 //!
 //! * [`sim::ClusterSim`] — build from a [`crate::config::ClusterConfig`],
 //!   feed an arrival stream, get a [`sim::ClusterOutcome`] (throughput,
-//!   steady-state p50/p95/p99 latency, per-device utilization).
+//!   goodput, drop rate, steady-state p50/p95/p99 latency, per-device
+//!   utilization, control-plane activity).
 //! * [`sim::arrival_rate_sweep`] — the `repro cluster` CLI command: sweep
 //!   Poisson arrival rates and emit the summary + utilization CSVs.
+//! * [`sim::control_plane_sweep`] — `repro cluster --control compare`:
+//!   the three planes on identical arrival streams in one CSV.
 //!
-//! Follow-ons tracked in ROADMAP.md: admission control, inter-cell
-//! handover, an energy model, autoscaling of replicas.
+//! Follow-ons tracked in ROADMAP.md: inter-cell handover, an energy
+//! model.
 
 pub mod dispatch;
 pub mod event;
@@ -64,4 +87,6 @@ pub mod sim;
 pub use dispatch::Dispatcher;
 pub use event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 pub use placement::Placement;
-pub use sim::{arrival_rate_sweep, ClusterOutcome, ClusterSim, SweepPoint, SweepResult};
+pub use sim::{
+    arrival_rate_sweep, control_plane_sweep, ClusterOutcome, ClusterSim, SweepPoint, SweepResult,
+};

@@ -10,39 +10,68 @@
 //! the next block starts. Queueing delay, utilization and tail latency
 //! all *emerge* from contention between in-flight requests — nothing is
 //! assumed.
+//!
+//! Each cell's bandwidth allocation, service-time vector and expert
+//! placement are owned by its [`ControlPlane`]
+//! ([`crate::config::ControlKind`]): the static planes freeze them at
+//! construction, while the adaptive plane re-solves P3 from observed
+//! per-device demand on an epoch cadence (`ControlTick` events) and
+//! re-balances expert replicas from observed per-expert token counts.
+//! Service times are read through the plane at every dispatch — never
+//! cached — so a mid-run re-allocation immediately redirects the
+//! load-aware dispatcher.
+//!
+//! Admission control: with `queue_limit_s > 0`, a dispatch finding *every*
+//! replica of an expert beyond the backlog bound triggers the configured
+//! [`crate::config::DropPolicy`] — reject the whole request, or shed just
+//! that expert's token group (never all of a block's groups) — so
+//! overload degrades goodput and shed rate measurably instead of growing
+//! queues without bound.
 
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 use super::placement::Placement;
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, ControlKind, DropPolicy};
+use crate::control::{make_plane, ControlOptions, ControlPlane, LinkState};
 use crate::devices::Fleet;
 use crate::latency::TokenLatencies;
-use crate::metrics::{SteadyState, Summary, Table, Utilization};
+use crate::metrics::{ControlStats, SteadyState, Summary, Table, Utilization};
 use crate::moe::selection::{make_policy, SelectionContext, SelectionPolicy};
 use crate::moe::GateWeights;
-use crate::optim::PerBlockLoad;
 use crate::util::clock::VirtualClock;
-use crate::wireless::bandwidth::AllocationInput;
 use crate::wireless::ChannelSimulator;
 use crate::workload::{ArrivalProcess, Benchmark, WorkloadGen};
 
-/// One cell's runtime state: fleet, placement, policy and FIFO queues.
+/// One cell's runtime state: control plane, policy and FIFO queues.
 struct Cell {
-    /// Per-device service seconds per token (comm + comp, Eq. (8)) under
-    /// the cell's uniform bandwidth share.
-    t_per_token: Vec<f64>,
-    placement: Placement,
+    /// Owns (bandwidth, t_per_token, placement); service times are read
+    /// through it on every dispatch so re-allocations take effect
+    /// immediately.
+    plane: Box<dyn ControlPlane>,
     policy: Box<dyn SelectionPolicy>,
     gates: WorkloadGen,
     /// Instant each device's FIFO queue drains.
     busy_until: Vec<Nanos>,
     busy: Vec<Utilization>,
     online: Vec<bool>,
+    /// Tokens dispatched per device since the last control epoch.
+    served_tokens: Vec<f64>,
+    /// Tokens dispatched per expert since the last control epoch.
+    expert_tokens: Vec<f64>,
+    /// Reusable per-block staging state (no per-block allocation): queue
+    /// instants as groups are tentatively placed, the admitted
+    /// `(expert, device, tokens, service seconds)` placements, and the
+    /// under-queue-bound replica candidates.
+    scratch_busy: Vec<Nanos>,
+    placed: Vec<(usize, usize, f64, f64)>,
+    cand: Vec<usize>,
 }
 
 enum Event {
     Arrive(usize),
     BlockDone(usize),
+    /// Epoch boundary for one cell's adaptive control plane.
+    ControlTick(usize),
 }
 
 struct ReqState {
@@ -52,13 +81,29 @@ struct ReqState {
     next_block: usize,
 }
 
+/// Outcome of dispatching one block.
+struct BlockResult {
+    /// Completion instant, or `None` when admission control rejected the
+    /// request.
+    end: Option<Nanos>,
+    /// Token groups shed by [`DropPolicy::ShedTokens`] in this block.
+    shed_tokens: f64,
+}
+
 /// Result of one simulation run (all arrivals drained).
 #[derive(Debug)]
 pub struct ClusterOutcome {
     pub arrived: usize,
     pub completed: usize,
+    /// Requests rejected by admission control ([`DropPolicy::DropRequest`]).
+    pub dropped: usize,
     pub arrived_tokens: u64,
     pub completed_tokens: u64,
+    /// Tokens of rejected requests.
+    pub dropped_tokens: u64,
+    /// Expert token groups shed by [`DropPolicy::ShedTokens`] (requests
+    /// continue degraded; not counted in `dropped`).
+    pub shed_tokens: f64,
     /// Requests still in flight when the event queue drained (0 by
     /// construction for finite arrival streams — the conservation law).
     pub in_flight: usize,
@@ -68,6 +113,9 @@ pub struct ClusterOutcome {
     pub latency_ms: SteadyState,
     /// `utilization[cell][device]` — busy fraction of the makespan.
     pub utilization: Vec<Vec<f64>>,
+    /// Per-cell control-plane activity (re-solves, placement updates,
+    /// allocation churn).
+    pub control: Vec<ControlStats>,
 }
 
 impl ClusterOutcome {
@@ -77,6 +125,48 @@ impl ClusterOutcome {
         } else {
             self.completed as f64 / self.makespan_s
         }
+    }
+
+    /// Useful work delivered: tokens of completed requests per second.
+    /// Excludes dropped requests; groups shed by
+    /// [`DropPolicy::ShedTokens`] are *not* subtracted here (the request
+    /// still completes, degraded) — shed volume is reported separately
+    /// via [`Self::shed_tokens`].
+    pub fn goodput_tps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed_tokens as f64 / self.makespan_s
+        }
+    }
+
+    /// Expert-group tokens shed per second by
+    /// [`DropPolicy::ShedTokens`] — the degraded-quality counterpart of
+    /// [`Self::drop_rate`], so shedding never hides overload in reports.
+    pub fn shed_tps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.shed_tokens / self.makespan_s
+        }
+    }
+
+    /// Fraction of arrivals rejected by admission control.
+    pub fn drop_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.arrived as f64
+        }
+    }
+
+    /// Control-plane counters aggregated over cells.
+    pub fn control_total(&self) -> ControlStats {
+        let mut total = ControlStats::default();
+        for c in &self.control {
+            total.absorb(c);
+        }
+        total
     }
 
     /// Steady-state latency summary (warm-up discarded).
@@ -126,30 +216,26 @@ impl ClusterSim {
             let realization = chan.expected_realization();
             let fleet = Fleet::new(&cell_cfg.devices, cfg.seed);
             let t_comp = fleet.t_comp_nominal(l_comp);
-            let dummy_loads: Vec<PerBlockLoad> = vec![];
-            let input = AllocationInput {
-                channel_cfg: &cell_cfg.channel,
-                realization: &realization,
-                loads: &dummy_loads,
-                t_comp_per_token: &t_comp,
-                l_comm_bits: cfg.model.l_comm_bits(cell_cfg.channel.quant_bits),
-            };
-            let share = cell_cfg.channel.total_bandwidth_hz / n_dev as f64;
-            let t_per_token: Vec<f64> =
-                input.links().iter().map(|l| l.t_per_token(share)).collect();
-            let placement = if cfg.cache_capacity == 1 {
-                Placement::home(n_experts, n_dev, 1)
-            } else {
-                // Popularity bias shifts per block, so the static
-                // optimizer assumes uniform expert load and balances on
-                // device speed.
-                let uniform_load = vec![1.0; n_experts];
-                Placement::optimize(n_experts, &t_per_token, &uniform_load, cfg.cache_capacity)
-            };
-            placement.validate()?;
+            let state = LinkState::new(
+                &cell_cfg.channel,
+                &realization,
+                &t_comp,
+                cfg.model.l_comm_bits(cell_cfg.channel.quant_bits),
+            );
+            let plane = make_plane(
+                cfg.control,
+                state,
+                n_experts,
+                cfg.cache_capacity,
+                ControlOptions {
+                    epoch_s: cfg.control_epoch_s,
+                    hysteresis: cfg.control_hysteresis,
+                    solver: Default::default(),
+                },
+            );
+            plane.placement().validate()?;
             cells.push(Cell {
-                t_per_token,
-                placement,
+                plane,
                 policy: make_policy(
                     cfg.policy.selection,
                     &cfg.policy,
@@ -163,6 +249,11 @@ impl ClusterSim {
                 busy_until: vec![0; n_dev],
                 busy: vec![Utilization::default(); n_dev],
                 online: vec![true; n_dev],
+                served_tokens: vec![0.0; n_dev],
+                expert_tokens: vec![0.0; n_experts],
+                scratch_busy: vec![0; n_dev],
+                placed: Vec::with_capacity(n_experts),
+                cand: Vec::with_capacity(n_dev),
             });
         }
         let dispatcher = Dispatcher::new(cfg.dispatch);
@@ -175,26 +266,53 @@ impl ClusterSim {
 
     /// Expert placement of one cell (inspection / tests).
     pub fn placement(&self, cell: usize) -> &Placement {
-        &self.cells[cell].placement
+        self.cells[cell].plane.placement()
     }
 
-    /// Per-device service seconds per token in one cell.
+    /// Per-device service seconds per token in one cell, under the
+    /// cell's *current* bandwidth allocation.
     pub fn t_per_token(&self, cell: usize) -> &[f64] {
-        &self.cells[cell].t_per_token
+        self.cells[cell].plane.t_per_token()
+    }
+
+    /// Current bandwidth split of one cell (Hz).
+    pub fn bandwidth(&self, cell: usize) -> &[f64] {
+        self.cells[cell].plane.bandwidth()
+    }
+
+    /// Control-plane counters of one cell.
+    pub fn control_stats(&self, cell: usize) -> ControlStats {
+        self.cells[cell].plane.stats()
+    }
+
+    /// Force a control epoch now with an explicit demand signal
+    /// (tests / tooling; the DES feeds observed backlog automatically).
+    pub fn control_epoch(
+        &mut self,
+        cell: usize,
+        demand_tokens: &[f64],
+        expert_tokens: &[f64],
+    ) -> bool {
+        self.cells[cell].plane.on_epoch(demand_tokens, expert_tokens)
     }
 
     /// Failure injection: mark a device (un)available for future
-    /// dispatches. Work already queued on it still completes.
+    /// dispatches. Work already queued on it still completes. Adaptive
+    /// planes re-solve the allocation for the survivors immediately.
     pub fn set_device_online(&mut self, cell: usize, device: usize, online: bool) {
+        if self.cells[cell].online[device] == online {
+            return; // idempotent: a no-op change must not trigger a re-solve
+        }
         self.cells[cell].online[device] = online;
+        let mask = self.cells[cell].online.clone();
+        self.cells[cell].plane.on_topology_change(&mask);
     }
 
     /// Run the arrival stream to drain and report.
     pub fn run(&mut self, arrivals: &[crate::workload::Arrival]) -> ClusterOutcome {
         let n_blocks = self.cfg.model.n_blocks;
         let n_cells = self.cells.len();
-        let clock = VirtualClock::new();
-        let mut queue: EventQueue<Event> = EventQueue::new(clock.clone());
+        let mut queue: EventQueue<Event> = EventQueue::new(VirtualClock::new());
         let mut states: Vec<ReqState> = arrivals
             .iter()
             .enumerate()
@@ -208,57 +326,140 @@ impl ClusterSim {
         for (i, st) in states.iter().enumerate() {
             queue.schedule_at(st.arrived, Event::Arrive(i));
         }
+        // Adaptive cells tick on their epoch cadence while requests are
+        // outstanding; ticks stop rescheduling once every request has
+        // completed or been dropped, so finite streams still drain.
+        let mut outstanding = states.len();
+        for ci in 0..n_cells {
+            if let Some(e) = self.cells[ci].plane.epoch_s() {
+                queue.schedule_at(nanos_from_secs(e), Event::ControlTick(ci));
+            }
+        }
 
         let mut arrived = 0usize;
         let mut completed = 0usize;
+        let mut dropped = 0usize;
         let mut arrived_tokens = 0u64;
         let mut completed_tokens = 0u64;
+        let mut dropped_tokens = 0u64;
+        let mut shed_tokens = 0.0f64;
         let mut latency_ms = SteadyState::new(self.cfg.warmup_frac);
+        // Makespan is the last *work* event: a control tick pending when
+        // the final request completes must not pad the horizon (it would
+        // bias throughput/utilization against adaptive planes).
+        let mut last_work_ns: Nanos = 0;
 
         while let Some((now, ev)) = queue.pop() {
             let i = match ev {
+                Event::ControlTick(ci) => {
+                    // A tick popping after the last request completed
+                    // must neither re-solve (it would inflate the
+                    // resolves/churn columns with work that can't matter)
+                    // nor reschedule.
+                    if outstanding > 0 {
+                        self.control_tick(ci, now);
+                        if let Some(e) = self.cells[ci].plane.epoch_s() {
+                            queue.schedule_in(nanos_from_secs(e), Event::ControlTick(ci));
+                        }
+                    }
+                    continue;
+                }
                 Event::Arrive(i) => {
                     arrived += 1;
                     arrived_tokens += states[i].tokens as u64;
+                    last_work_ns = now;
                     i
                 }
                 Event::BlockDone(i) => {
+                    last_work_ns = now;
                     states[i].next_block += 1;
                     if states[i].next_block >= n_blocks {
                         completed += 1;
                         completed_tokens += states[i].tokens as u64;
+                        outstanding -= 1;
                         latency_ms.record(secs_from_nanos(now - states[i].arrived) * 1e3);
                         continue;
                     }
                     i
                 }
             };
-            let block_end = self.start_block(&states[i], now);
-            queue.schedule_at(block_end, Event::BlockDone(i));
+            let r = self.start_block(&states[i], now);
+            shed_tokens += r.shed_tokens;
+            match r.end {
+                Some(block_end) => queue.schedule_at(block_end, Event::BlockDone(i)),
+                None => {
+                    dropped += 1;
+                    dropped_tokens += states[i].tokens as u64;
+                    outstanding -= 1;
+                }
+            }
         }
 
-        let makespan_s = secs_from_nanos(clock.nanos());
+        let makespan_s = secs_from_nanos(last_work_ns);
         let utilization = self
             .cells
             .iter()
             .map(|c| c.busy.iter().map(|u| u.fraction(makespan_s)).collect())
             .collect();
+        let control = self.cells.iter().map(|c| c.plane.stats()).collect();
         ClusterOutcome {
             arrived,
             completed,
+            dropped,
             arrived_tokens,
             completed_tokens,
-            in_flight: arrived - completed,
+            dropped_tokens,
+            shed_tokens,
+            in_flight: arrived - completed - dropped,
             makespan_s,
             latency_ms,
             utilization,
+            control,
+        }
+    }
+
+    /// Epoch boundary for one cell: convert queue backlog to a token
+    /// demand vector and hand it — with the per-expert counts since the
+    /// last tick — to the control plane.
+    fn control_tick(&mut self, ci: usize, now: Nanos) {
+        let cell = &mut self.cells[ci];
+        let n_dev = cell.busy_until.len();
+        let mut demand = vec![0.0f64; n_dev];
+        {
+            let t = cell.plane.t_per_token();
+            for (k, d) in demand.iter_mut().enumerate() {
+                let backlog_s = secs_from_nanos(cell.busy_until[k].saturating_sub(now));
+                let backlog_tokens = if t[k].is_finite() && t[k] > 0.0 {
+                    backlog_s / t[k]
+                } else {
+                    0.0
+                };
+                // Demand proxy: the larger of current backlog and the
+                // epoch's dispatches. Tokens routed this epoch that are
+                // still queued appear in both signals, so summing would
+                // double-count momentarily backlogged devices and make
+                // the re-solve overshoot; the max never double-counts,
+                // and recent dispatches keep a device's share alive even
+                // when its queue happens to be drained.
+                *d = backlog_tokens.max(cell.served_tokens[k]);
+            }
+        }
+        cell.plane.on_epoch(&demand, &cell.expert_tokens);
+        for v in &mut cell.served_tokens {
+            *v = 0.0;
+        }
+        for v in &mut cell.expert_tokens {
+            *v = 0.0;
         }
     }
 
     /// Dispatch one block of one request; returns the block's completion
-    /// instant (the Eq. (11) barrier over its token groups).
-    fn start_block(&mut self, st: &ReqState, now: Nanos) -> Nanos {
+    /// instant (the Eq. (11) barrier over its token groups), or a drop
+    /// marker when admission control rejects the request.
+    fn start_block(&mut self, st: &ReqState, now: Nanos) -> BlockResult {
         let n_experts = self.cfg.model.n_experts;
+        let queue_limit_s = self.cfg.queue_limit_s;
+        let drop_policy = self.cfg.drop_policy;
         let cell = &mut self.cells[st.cell];
         let gate = GateWeights::new(cell.gates.synthetic_gate_weights_biased(
             st.tokens,
@@ -266,15 +467,19 @@ impl ClusterSim {
             self.cfg.gate_sharpness,
             self.cfg.gate_bias,
         ));
+        // Service times and placement come from the control plane *now*:
+        // an epoch re-solve between blocks redirects this dispatch.
+        let t_per_token = cell.plane.t_per_token();
+        let placement = cell.plane.placement();
         // Per-expert latency estimate (best online replica) and liveness.
         let mut est = vec![f64::INFINITY; n_experts];
         let mut online = vec![false; n_experts];
         for e in 0..n_experts {
-            for &k in cell.placement.replicas(e) {
+            for &k in placement.replicas(e) {
                 if cell.online[k] {
                     online[e] = true;
-                    if cell.t_per_token[k] < est[e] {
-                        est[e] = cell.t_per_token[k];
+                    if t_per_token[k] < est[e] {
+                        est[e] = t_per_token[k];
                     }
                 }
             }
@@ -289,31 +494,146 @@ impl ClusterSim {
         let counts = sel.tokens_per_device();
 
         let mut block_end = now;
+        let mut shed = 0.0f64;
+        // Heaviest shed group, kept so a block can never shed everything
+        // (every token needs at least one expert — constraint (16) — and
+        // a zero-work block would fake perfect latency under overload).
+        let mut best_shed: Option<(usize, f64)> = None;
+        // Pass 1: place every group against the cell's scratch copy of
+        // the queue state (reused across blocks — no allocation). A
+        // DropRequest rejection must leave *no* partial work behind,
+        // whichever expert index trips the bound.
+        cell.scratch_busy.copy_from_slice(&cell.busy_until);
+        cell.placed.clear();
         for (e, &q) in counts.iter().enumerate() {
             if q <= 0.0 {
                 continue;
             }
-            let Some(k) = self.dispatcher.choose(
-                cell.placement.replicas(e),
-                q,
-                now,
-                &cell.busy_until,
-                &cell.t_per_token,
-                &cell.online,
-            ) else {
-                continue; // no online replica: tokens dropped by selection
+            // Admission control: the drop policy applies only when every
+            // replica of the expert sits beyond the queue bound — an
+            // under-bound replica is preferred even if it finishes later.
+            let k = if queue_limit_s > 0.0 {
+                // Cheap serviceability check (no predicted-completion
+                // scan): distinguishes "no replica at all" (selection
+                // drop) from "all replicas over the bound" (drop policy).
+                if !placement
+                    .replicas(e)
+                    .iter()
+                    .any(|&r| cell.online[r] && t_per_token[r].is_finite())
+                {
+                    continue; // no serviceable replica: tokens dropped by selection
+                }
+                cell.cand.clear();
+                for &r in placement.replicas(e) {
+                    // The bound measures *pre-existing* backlog
+                    // (committed queue state at block start), not the
+                    // block's own tentative placements — a single large
+                    // block on an idle cluster is barrier work, not
+                    // overload.
+                    let backlog_s =
+                        secs_from_nanos(cell.busy_until[r].saturating_sub(now));
+                    if backlog_s <= queue_limit_s {
+                        cell.cand.push(r);
+                    }
+                }
+                match self.dispatcher.choose(
+                    &cell.cand,
+                    q,
+                    now,
+                    &cell.scratch_busy,
+                    t_per_token,
+                    &cell.online,
+                ) {
+                    Some(k) => k,
+                    None => match drop_policy {
+                        DropPolicy::DropRequest => {
+                            return BlockResult {
+                                end: None,
+                                shed_tokens: 0.0,
+                            }
+                        }
+                        DropPolicy::ShedTokens => {
+                            shed += q;
+                            // Shed demand is still demand: without this
+                            // the autoscaler is blind to exactly the
+                            // experts being shed. (ShedTokens never
+                            // aborts the block, so this needs no
+                            // rollback.)
+                            cell.expert_tokens[e] += q;
+                            let heavier = match best_shed {
+                                None => true,
+                                Some((_, bq)) => q > bq,
+                            };
+                            if heavier {
+                                best_shed = Some((e, q));
+                            }
+                            continue;
+                        }
+                    },
+                }
+            } else {
+                match self.dispatcher.choose(
+                    placement.replicas(e),
+                    q,
+                    now,
+                    &cell.scratch_busy,
+                    t_per_token,
+                    &cell.online,
+                ) {
+                    Some(k) => k,
+                    // no serviceable replica: tokens dropped by selection
+                    None => continue,
+                }
             };
-            let service_s = q * cell.t_per_token[k];
-            let start = cell.busy_until[k].max(now);
+            let service_s = q * t_per_token[k];
+            let start = cell.scratch_busy[k].max(now);
             let done = start.saturating_add(nanos_from_secs(service_s));
-            cell.busy_until[k] = done;
-            cell.busy[k].add_busy(service_s);
-            cell.policy.observe(e, cell.t_per_token[k]);
+            cell.scratch_busy[k] = done;
+            cell.placed.push((e, k, q, service_s));
             if done > block_end {
                 block_end = done;
             }
         }
-        block_end
+        // A block must do *some* work: if shedding removed every group,
+        // serve the heaviest one anyway — the barrier then reflects the
+        // overloaded device instead of a zero-time hop.
+        if cell.placed.is_empty() {
+            if let Some((e, q)) = best_shed {
+                if let Some(k) = self.dispatcher.choose(
+                    placement.replicas(e),
+                    q,
+                    now,
+                    &cell.scratch_busy,
+                    t_per_token,
+                    &cell.online,
+                ) {
+                    shed -= q;
+                    // Un-count the shed-side demand: the commit pass
+                    // below records this group like any other placement.
+                    cell.expert_tokens[e] -= q;
+                    let service_s = q * t_per_token[k];
+                    let start = cell.scratch_busy[k].max(now);
+                    let done = start.saturating_add(nanos_from_secs(service_s));
+                    cell.scratch_busy[k] = done;
+                    cell.placed.push((e, k, q, service_s));
+                    if done > block_end {
+                        block_end = done;
+                    }
+                }
+            }
+        }
+        // Pass 2: the block was admitted — commit the placements.
+        cell.busy_until.copy_from_slice(&cell.scratch_busy);
+        for &(e, k, q, service_s) in &cell.placed {
+            cell.busy[k].add_busy(service_s);
+            cell.policy.observe(e, t_per_token[k]);
+            cell.served_tokens[k] += q;
+            cell.expert_tokens[e] += q;
+        }
+        BlockResult {
+            end: Some(block_end),
+            shed_tokens: shed,
+        }
     }
 }
 
@@ -332,8 +652,8 @@ pub struct SweepResult {
 }
 
 /// Sweep Poisson arrival rate over a fresh simulator per point and
-/// tabulate throughput, steady-state latency percentiles and per-device
-/// utilization.
+/// tabulate throughput, goodput, drop rate, steady-state latency
+/// percentiles, control-plane activity and per-device utilization.
 pub fn arrival_rate_sweep(
     cfg: &ClusterConfig,
     rates_rps: &[f64],
@@ -348,12 +668,17 @@ pub fn arrival_rate_sweep(
         &[
             "rate_rps",
             "throughput_rps",
+            "goodput_tps",
+            "drop_rate",
+            "shed_tps",
             "p50_ms",
             "p95_ms",
             "p99_ms",
             "mean_ms",
             "util_mean",
             "util_max",
+            "resolves",
+            "churn",
         ],
     );
     summary.precision = 3;
@@ -379,17 +704,23 @@ pub fn arrival_rate_sweep(
         let util = out.flat_utilization();
         let util_mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
         let util_max = util.iter().cloned().fold(0.0f64, f64::max);
+        let ctl = out.control_total();
         summary.row(
             &format!("rate={rate}"),
             vec![
                 rate,
                 out.throughput_rps(),
+                out.goodput_tps(),
+                out.drop_rate(),
+                out.shed_tps(),
                 s.percentile(50.0),
                 s.percentile(95.0),
                 s.percentile(99.0),
                 s.mean(),
                 util_mean,
                 util_max,
+                ctl.resolves as f64,
+                ctl.churn_frac,
             ],
         );
         util_t.row(&format!("rate={rate}"), util);
@@ -403,6 +734,70 @@ pub fn arrival_rate_sweep(
         summary,
         utilization: util_t,
     })
+}
+
+/// Compare the three control planes on one workload in a single table:
+/// per (plane, rate) row, throughput/goodput/drops, latency percentiles
+/// and control activity. The same arrival streams are replayed for every
+/// plane, so rows differ only by control behaviour.
+pub fn control_plane_sweep(
+    cfg: &ClusterConfig,
+    rates_rps: &[f64],
+    requests: usize,
+    bench: Benchmark,
+    seed: u64,
+) -> anyhow::Result<Table> {
+    cfg.validate()?;
+    anyhow::ensure!(requests > 0, "need at least one request");
+    let mut table = Table::new(
+        &format!("Cluster control-plane comparison — {}", bench.name()),
+        &[
+            "rate_rps",
+            "throughput_rps",
+            "goodput_tps",
+            "drop_rate",
+            "shed_tps",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "resolves",
+            "placement_updates",
+            "churn",
+        ],
+    );
+    table.precision = 3;
+    for kind in ControlKind::all() {
+        let mut c = cfg.clone();
+        c.control = kind;
+        for (ri, &rate) in rates_rps.iter().enumerate() {
+            let mut sim = ClusterSim::new(c.clone())?;
+            let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
+                requests,
+                bench,
+                seed.wrapping_add(ri as u64 * 7919),
+            );
+            let out = sim.run(&arrivals);
+            let s = out.steady_latency();
+            let ctl = out.control_total();
+            table.row(
+                &format!("{}@rate={rate}", kind.as_str()),
+                vec![
+                    rate,
+                    out.throughput_rps(),
+                    out.goodput_tps(),
+                    out.drop_rate(),
+                    out.shed_tps(),
+                    s.percentile(50.0),
+                    s.percentile(95.0),
+                    s.percentile(99.0),
+                    ctl.resolves as f64,
+                    ctl.placement_updates as f64,
+                    ctl.churn_frac,
+                ],
+            );
+        }
+    }
+    Ok(table)
 }
 
 #[cfg(test)]
@@ -428,10 +823,14 @@ mod tests {
         let out = run_with(small_cfg(), 1.0, 40, 0);
         assert_eq!(out.arrived, 40);
         assert_eq!(out.completed, 40);
+        assert_eq!(out.dropped, 0);
         assert_eq!(out.in_flight, 0);
         assert_eq!(out.arrived_tokens, out.completed_tokens);
+        assert_eq!(out.shed_tokens, 0.0);
         assert!(out.makespan_s > 0.0);
         assert!(out.throughput_rps() > 0.0);
+        assert!(out.goodput_tps() > 0.0);
+        assert_eq!(out.drop_rate(), 0.0);
         assert_eq!(out.latency_ms.total_count(), 40);
     }
 
@@ -442,6 +841,17 @@ mod tests {
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
         assert_eq!(a.utilization, b.utilization);
+    }
+
+    #[test]
+    fn adaptive_control_is_deterministic_too() {
+        let mut cfg = small_cfg();
+        cfg.control = ControlKind::Adaptive;
+        let a = run_with(cfg.clone(), 4.0, 30, 3);
+        let b = run_with(cfg, 4.0, 30, 3);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
+        assert_eq!(a.control, b.control);
     }
 
     #[test]
@@ -502,6 +912,62 @@ mod tests {
     }
 
     #[test]
+    fn static_planes_never_tick_and_report_frozen_split() {
+        let mut sim = ClusterSim::new(small_cfg()).unwrap();
+        let share =
+            sim.cfg.cells[0].channel.total_bandwidth_hz / sim.cfg.cells[0].n_devices() as f64;
+        for &b in sim.bandwidth(0) {
+            assert!((b - share).abs() < 1e-6);
+        }
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(20, Benchmark::Piqa, 0);
+        let out = sim.run(&arrivals);
+        assert_eq!(out.control_total().resolves, 0);
+        assert_eq!(out.control_total().churn_frac, 0.0);
+    }
+
+    #[test]
+    fn adaptive_plane_resolves_during_run() {
+        let mut cfg = small_cfg();
+        cfg.control = ControlKind::Adaptive;
+        cfg.control_epoch_s = 0.1;
+        let out = run_with(cfg, 6.0, 60, 0);
+        assert_eq!(out.completed, 60);
+        let ctl = out.control_total();
+        assert!(ctl.resolves >= 1, "adaptive plane never re-solved");
+        assert!(ctl.churn_frac > 0.0, "re-solve moved no bandwidth");
+    }
+
+    #[test]
+    fn bounded_queue_drop_request_rejects_under_overload() {
+        // Limit chosen so the first (empty-system) requests clear it but
+        // sustained 50 rps overload must trip it.
+        let mut cfg = small_cfg();
+        cfg.queue_limit_s = 0.2;
+        cfg.drop_policy = DropPolicy::DropRequest;
+        let out = run_with(cfg, 50.0, 80, 1);
+        assert!(out.dropped > 0, "overload never tripped admission control");
+        assert_eq!(out.arrived, 80);
+        assert_eq!(out.completed + out.dropped, 80);
+        assert_eq!(out.in_flight, 0);
+        assert!(out.drop_rate() > 0.0 && out.drop_rate() <= 1.0);
+        assert!(out.dropped_tokens > 0);
+    }
+
+    #[test]
+    fn bounded_queue_shed_tokens_keeps_requests_completing() {
+        let mut cfg = small_cfg();
+        cfg.queue_limit_s = 0.2;
+        cfg.drop_policy = DropPolicy::ShedTokens;
+        let out = run_with(cfg, 50.0, 80, 1);
+        assert_eq!(out.completed, 80, "shedding must not reject requests");
+        assert_eq!(out.dropped, 0);
+        assert!(out.shed_tokens > 0.0, "overload never shed a group");
+        assert!(out.shed_tps() > 0.0, "shed volume must be reportable");
+        assert_eq!(out.arrived_tokens, out.completed_tokens);
+    }
+
+    #[test]
     fn sweep_emits_consistent_tables() {
         let cfg = small_cfg();
         let r = arrival_rate_sweep(&cfg, &[0.5, 2.0], 24, Benchmark::Piqa, 0).unwrap();
@@ -511,6 +977,27 @@ mod tests {
         assert_eq!(r.utilization.columns.len(), 8);
         for p in &r.points {
             assert_eq!(p.outcome.completed, 24);
+        }
+        for col in ["goodput_tps", "drop_rate", "shed_tps", "resolves", "churn"] {
+            assert!(
+                r.summary.columns.iter().any(|c| c == col),
+                "missing column {col}"
+            );
+        }
+    }
+
+    #[test]
+    fn control_plane_sweep_rows_cover_all_kinds() {
+        let mut cfg = small_cfg();
+        cfg.model.n_blocks = 4;
+        let t = control_plane_sweep(&cfg, &[1.0, 4.0], 16, Benchmark::Piqa, 0).unwrap();
+        assert_eq!(t.rows.len(), 3 * 2);
+        for kind in ControlKind::all() {
+            assert!(
+                t.rows.iter().any(|(label, _)| label.starts_with(kind.as_str())),
+                "missing rows for {}",
+                kind.as_str()
+            );
         }
     }
 }

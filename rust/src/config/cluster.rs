@@ -8,9 +8,91 @@
 //! and caching resources" constraint, Eq. (7)); and the dispatch policy
 //! that picks among expert replicas at serving time.
 
-use super::{ChannelConfig, DeviceConfig, ModelDims, PolicyConfig};
+use super::{AllocatorKind, ChannelConfig, DeviceConfig, ModelDims, PolicyConfig};
 use crate::util::Json;
 use anyhow::Result;
+
+/// Which control plane owns a cell's bandwidth allocation and expert
+/// placement (see [`crate::control`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlKind {
+    /// Uniform bandwidth split, placement balanced on device speed under
+    /// a uniform expert-load assumption, both frozen at construction —
+    /// the PR-1 baseline behaviour.
+    StaticUniform,
+    /// One-shot P3 pre-solve (equal expected load per device) frozen at
+    /// construction; placement balanced under the pre-solved split.
+    StaticOptimal,
+    /// Closed loop: re-solve P3 from observed per-device demand on an
+    /// epoch cadence inside the DES (warm-started), and re-optimize
+    /// placement from observed per-expert token counts.
+    Adaptive,
+}
+
+impl ControlKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ControlKind::StaticUniform => "static_uniform",
+            ControlKind::StaticOptimal => "static_optimal",
+            ControlKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "static_uniform" | "uniform" => ControlKind::StaticUniform,
+            "static_optimal" | "optimal" => ControlKind::StaticOptimal,
+            "adaptive" => ControlKind::Adaptive,
+            other => anyhow::bail!("unknown control kind '{other}'"),
+        })
+    }
+
+    /// All kinds, in baseline → adaptive order (comparison sweeps).
+    pub fn all() -> [ControlKind; 3] {
+        [
+            ControlKind::StaticUniform,
+            ControlKind::StaticOptimal,
+            ControlKind::Adaptive,
+        ]
+    }
+}
+
+impl From<AllocatorKind> for ControlKind {
+    fn from(a: AllocatorKind) -> Self {
+        match a {
+            AllocatorKind::Uniform => ControlKind::StaticUniform,
+            AllocatorKind::Optimal => ControlKind::StaticOptimal,
+        }
+    }
+}
+
+/// What happens when a dispatch would exceed a device's queue bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropPolicy {
+    /// Reject the whole request: no further blocks are scheduled and it
+    /// counts against the drop rate (admission control).
+    DropRequest,
+    /// Shed only the offending expert's token group; the request
+    /// continues degraded (quality-for-latency trade).
+    ShedTokens,
+}
+
+impl DropPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropPolicy::DropRequest => "drop_request",
+            DropPolicy::ShedTokens => "shed_tokens",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "drop_request" | "request" | "drop" => DropPolicy::DropRequest,
+            "shed_tokens" | "shed" | "tokens" => DropPolicy::ShedTokens,
+            other => anyhow::bail!("unknown drop policy '{other}'"),
+        })
+    }
+}
 
 /// How the BS picks among the replicas of a selected expert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +170,17 @@ pub struct ClusterConfig {
     pub cache_capacity: usize,
     /// Replica-choice policy at dispatch time.
     pub dispatch: DispatchKind,
+    /// Control plane owning bandwidth allocation + placement per cell.
+    pub control: ControlKind,
+    /// Adaptive re-solve cadence in virtual seconds.
+    pub control_epoch_s: f64,
+    /// Minimum relative L1 shift of the per-device demand share since the
+    /// last solve before the adaptive plane re-solves (churn damping).
+    pub control_hysteresis: f64,
+    /// Per-device queue bound in seconds of backlog (0 = unbounded).
+    pub queue_limit_s: f64,
+    /// Policy applied when a dispatch would exceed the queue bound.
+    pub drop_policy: DropPolicy,
     /// Fraction of completed requests discarded as warm-up before
     /// steady-state latency percentiles are computed.
     pub warmup_frac: f64,
@@ -132,6 +225,11 @@ impl ClusterConfig {
             policy: PolicyConfig::default(),
             cache_capacity: 2,
             dispatch: DispatchKind::LoadAware,
+            control: ControlKind::StaticUniform,
+            control_epoch_s: 0.25,
+            control_hysteresis: 0.05,
+            queue_limit_s: 0.0,
+            drop_policy: DropPolicy::DropRequest,
             warmup_frac: 0.2,
             gate_sharpness: 1.5,
             gate_bias: 0.4,
@@ -184,6 +282,11 @@ impl ClusterConfig {
             ("policy", self.policy.to_json()),
             ("cache_capacity", Json::Num(self.cache_capacity as f64)),
             ("dispatch", Json::str(self.dispatch.as_str())),
+            ("control", Json::str(self.control.as_str())),
+            ("control_epoch_s", Json::Num(self.control_epoch_s)),
+            ("control_hysteresis", Json::Num(self.control_hysteresis)),
+            ("queue_limit_s", Json::Num(self.queue_limit_s)),
+            ("drop_policy", Json::str(self.drop_policy.as_str())),
             ("warmup_frac", Json::Num(self.warmup_frac)),
             ("gate_sharpness", Json::Num(self.gate_sharpness)),
             ("gate_bias", Json::Num(self.gate_bias)),
@@ -204,6 +307,11 @@ impl ClusterConfig {
             policy: PolicyConfig::from_json(j.get("policy")?)?,
             cache_capacity: j.get("cache_capacity")?.as_usize()?,
             dispatch: DispatchKind::parse(j.get("dispatch")?.as_str()?)?,
+            control: ControlKind::parse(j.get("control")?.as_str()?)?,
+            control_epoch_s: j.get("control_epoch_s")?.as_f64()?,
+            control_hysteresis: j.get("control_hysteresis")?.as_f64()?,
+            queue_limit_s: j.get("queue_limit_s")?.as_f64()?,
+            drop_policy: DropPolicy::parse(j.get("drop_policy")?.as_str()?)?,
             warmup_frac: j.get("warmup_frac")?.as_f64()?,
             gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
             gate_bias: j.get("gate_bias")?.as_f64()?,
@@ -224,6 +332,18 @@ impl ClusterConfig {
         anyhow::ensure!(
             (0.0..1.0).contains(&self.warmup_frac),
             "warmup_frac must be in [0,1)"
+        );
+        anyhow::ensure!(
+            self.control_epoch_s.is_finite() && self.control_epoch_s > 0.0,
+            "control_epoch_s must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.control_hysteresis.is_finite() && self.control_hysteresis >= 0.0,
+            "control_hysteresis must be non-negative and finite"
+        );
+        anyhow::ensure!(
+            self.queue_limit_s.is_finite() && self.queue_limit_s >= 0.0,
+            "queue_limit_s must be non-negative and finite (0 = unbounded)"
         );
         for cell in &self.cells {
             anyhow::ensure!(
@@ -307,6 +427,66 @@ mod tests {
             assert_eq!(DispatchKind::parse(k.as_str()).unwrap(), k);
         }
         assert!(DispatchKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn control_kind_parsing_roundtrip() {
+        for k in ControlKind::all() {
+            assert_eq!(ControlKind::parse(k.as_str()).unwrap(), k);
+        }
+        // allocator-style aliases
+        assert_eq!(
+            ControlKind::parse("uniform").unwrap(),
+            ControlKind::StaticUniform
+        );
+        assert_eq!(
+            ControlKind::parse("optimal").unwrap(),
+            ControlKind::StaticOptimal
+        );
+        assert!(ControlKind::parse("bogus").is_err());
+        assert_eq!(
+            ControlKind::from(AllocatorKind::Uniform),
+            ControlKind::StaticUniform
+        );
+        assert_eq!(
+            ControlKind::from(AllocatorKind::Optimal),
+            ControlKind::StaticOptimal
+        );
+    }
+
+    #[test]
+    fn drop_policy_parsing_roundtrip() {
+        for p in [DropPolicy::DropRequest, DropPolicy::ShedTokens] {
+            assert_eq!(DropPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(DropPolicy::parse("shed").unwrap(), DropPolicy::ShedTokens);
+        assert!(DropPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_control_fields() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.control = ControlKind::Adaptive;
+        cfg.control_epoch_s = 0.5;
+        cfg.control_hysteresis = 0.1;
+        cfg.queue_limit_s = 2.0;
+        cfg.drop_policy = DropPolicy::ShedTokens;
+        let back = ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn validation_rejects_bad_control_knobs() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.control_epoch_s = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.control_hysteresis = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.queue_limit_s = f64::NAN;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 pub mod cluster;
 mod presets; // preset constructors are inherent impls on SystemConfig
 
-pub use cluster::{CellConfig, ClusterConfig, DispatchKind};
+pub use cluster::{CellConfig, ClusterConfig, ControlKind, DispatchKind, DropPolicy};
 
 use crate::util::Json;
 use anyhow::Result;

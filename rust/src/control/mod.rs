@@ -1,0 +1,35 @@
+//! # `control` — the shared control plane
+//!
+//! The paper's core contribution is the *joint* optimization of expert
+//! selection and bandwidth allocation (problem P3). Before this layer,
+//! the two simulators split that responsibility inconsistently: the
+//! analytic [`crate::coordinator::sim::Simulator`] re-solved P3 per
+//! block but rebuilt its link inputs by hand, while the DES
+//! ([`crate::cluster::sim::ClusterSim`]) froze per-device service times
+//! at construction under the uniform split and never revisited them.
+//!
+//! This module owns the `(bandwidth allocation, expert placement,
+//! t_per_token)` state per cell and is consumed by **both** simulators:
+//!
+//! * [`LinkState`] — the single home of the per-device link assembly
+//!   (channel gains + compute + payload → [`DeviceLink`]s) and of the
+//!   split → service-time mapping, replacing the duplicated
+//!   `AllocationInput` construction.
+//! * [`ControlPlane`] — the trait both simulators program against, with
+//!   three implementations selected by [`crate::config::ControlKind`]:
+//!   static-uniform (open loop, even split), static-optimal (one-shot P3
+//!   pre-solve) and adaptive (epoch-cadence re-solve from observed queue
+//!   backlog, warm-started, plus replica autoscaling from observed
+//!   per-expert token counts).
+//!
+//! Re-solve counts and allocation churn are reported through
+//! [`crate::metrics::ControlStats`] so closed-loop activity shows up in
+//! the `repro cluster` CSVs next to latency.
+//!
+//! [`DeviceLink`]: crate::optim::solver::DeviceLink
+
+pub mod plane;
+pub mod state;
+
+pub use plane::{make_plane, AdaptivePlane, ControlOptions, ControlPlane, StaticPlane};
+pub use state::LinkState;

@@ -1,0 +1,555 @@
+//! Control planes: who owns `(bandwidth allocation, expert placement,
+//! t_per_token)` for a cell, and when it changes.
+//!
+//! * [`StaticPlane`] — the open-loop arms. `StaticUniform` freezes the
+//!   even split (the PR-1 cluster baseline and the paper's "Mixtral-based"
+//!   allocation); `StaticOptimal` freezes a one-shot P3 pre-solve under an
+//!   equal-expected-load assumption. Both still serve per-block solves to
+//!   the coordinator via [`ControlPlane::allocate_for`].
+//! * [`AdaptivePlane`] — the paper's closed loop inside the DES: on an
+//!   epoch cadence it re-solves P3 from *observed* per-device demand
+//!   (queue backlog + recently served tokens), warm-starting from the
+//!   previous split so the re-solve stays cheap, and re-optimizes the
+//!   expert placement from observed per-expert token counts (replica
+//!   autoscaling). A hysteresis knob suppresses re-solves when the demand
+//!   share barely moved.
+
+use super::state::LinkState;
+use crate::cluster::placement::Placement;
+use crate::config::ControlKind;
+use crate::metrics::ControlStats;
+use crate::optim::{PerBlockLoad, SolverOptions};
+
+/// Knobs shared by every plane (only the adaptive one reads them all).
+#[derive(Debug, Clone)]
+pub struct ControlOptions {
+    /// Adaptive re-solve cadence in virtual seconds.
+    pub epoch_s: f64,
+    /// Minimum relative L1 shift of the demand share since the last
+    /// solve before re-solving (0 = always re-solve on demand).
+    pub hysteresis: f64,
+    /// P3 solver hyper-parameters.
+    pub solver: SolverOptions,
+}
+
+impl Default for ControlOptions {
+    fn default() -> Self {
+        Self {
+            epoch_s: 0.25,
+            hysteresis: 0.05,
+            solver: SolverOptions::default(),
+        }
+    }
+}
+
+/// The contract both simulators program against.
+///
+/// The plane owns the cell's bandwidth split, the service-time vector
+/// derived from it, and the expert placement. Consumers must read service
+/// times through the plane on every use (never cache them): an epoch or
+/// failover re-solve may change them mid-run.
+pub trait ControlPlane: Send {
+    fn kind(&self) -> ControlKind;
+    /// The frozen link context (channel gains, compute, payload).
+    fn state(&self) -> &LinkState;
+    /// Current bandwidth split (Hz, sums to the cell budget).
+    fn bandwidth(&self) -> &[f64];
+    /// Current per-device service seconds per token under
+    /// [`Self::bandwidth`] (infinite for devices the plane knows are
+    /// offline).
+    fn t_per_token(&self) -> &[f64];
+    /// Current expert → replica map.
+    fn placement(&self) -> &Placement;
+    /// One-shot allocation for explicit per-block loads — the
+    /// coordinator's "given the selection Q, solve the upper level" step.
+    /// Does not change the plane's own split.
+    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64>;
+    /// Re-solve cadence for the DES (None = static plane, no ticks).
+    fn epoch_s(&self) -> Option<f64>;
+    /// Epoch tick: observed per-device demand (backlog + recently served
+    /// tokens) and per-expert token counts since the last tick. Returns
+    /// true when allocation or placement changed.
+    fn on_epoch(&mut self, demand_tokens: &[f64], expert_tokens: &[f64]) -> bool;
+    /// Device liveness changed (failure injection / recovery).
+    fn on_topology_change(&mut self, online: &[bool]);
+    fn stats(&self) -> ControlStats;
+}
+
+/// `Σ|a-b|`.
+fn l1(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Home placement when replication is off, speed-balanced greedy
+/// replication otherwise — the construction both simulators shared.
+fn initial_placement(n_experts: usize, t_per_token: &[f64], cache_capacity: usize) -> Placement {
+    if cache_capacity == 1 {
+        Placement::home(n_experts, t_per_token.len(), 1)
+    } else {
+        // Popularity bias shifts per block, so construction assumes
+        // uniform expert load and balances on device speed; the adaptive
+        // plane later re-balances from observed counts.
+        let uniform_load = vec![1.0; n_experts];
+        Placement::optimize(n_experts, t_per_token, &uniform_load, cache_capacity)
+    }
+}
+
+/// Build the plane for a [`ControlKind`].
+pub fn make_plane(
+    kind: ControlKind,
+    state: LinkState,
+    n_experts: usize,
+    cache_capacity: usize,
+    opts: ControlOptions,
+) -> Box<dyn ControlPlane> {
+    match kind {
+        ControlKind::StaticUniform | ControlKind::StaticOptimal => {
+            Box::new(StaticPlane::new(kind, state, n_experts, cache_capacity, opts))
+        }
+        ControlKind::Adaptive => {
+            Box::new(AdaptivePlane::new(state, n_experts, cache_capacity, opts))
+        }
+    }
+}
+
+// ---------------------------------------------------------- StaticPlane
+
+/// Open-loop plane: allocation and placement frozen at construction.
+pub struct StaticPlane {
+    kind: ControlKind,
+    state: LinkState,
+    bandwidth: Vec<f64>,
+    t_per_token: Vec<f64>,
+    placement: Placement,
+    /// Warm start threaded between [`ControlPlane::allocate_for`] calls
+    /// (consecutive blocks have similar loads).
+    warm: Option<Vec<f64>>,
+    opts: ControlOptions,
+    stats: ControlStats,
+}
+
+impl StaticPlane {
+    pub fn new(
+        kind: ControlKind,
+        state: LinkState,
+        n_experts: usize,
+        cache_capacity: usize,
+        opts: ControlOptions,
+    ) -> Self {
+        debug_assert!(matches!(
+            kind,
+            ControlKind::StaticUniform | ControlKind::StaticOptimal
+        ));
+        let mut stats = ControlStats::default();
+        let bandwidth = match kind {
+            ControlKind::StaticOptimal => {
+                // One-shot pre-solve assuming every device carries equal
+                // expected load — the best a cell can do before traffic.
+                let loads = [PerBlockLoad {
+                    tokens: vec![1.0; state.n_devices()],
+                }];
+                stats.resolves = 1;
+                state.solve(&loads, &opts.solver, None).bandwidth
+            }
+            _ => state.uniform_split(),
+        };
+        let t_per_token = state.t_per_token(&bandwidth);
+        let placement = initial_placement(n_experts, &t_per_token, cache_capacity);
+        // The pre-solve doubles as the warm start for the first
+        // allocate_for call, so the coordinator path gets its cost back.
+        let warm = match kind {
+            ControlKind::StaticOptimal => Some(bandwidth.clone()),
+            _ => None,
+        };
+        Self {
+            kind,
+            state,
+            bandwidth,
+            t_per_token,
+            placement,
+            warm,
+            opts,
+            stats,
+        }
+    }
+}
+
+impl ControlPlane for StaticPlane {
+    fn kind(&self) -> ControlKind {
+        self.kind
+    }
+    fn state(&self) -> &LinkState {
+        &self.state
+    }
+    fn bandwidth(&self) -> &[f64] {
+        &self.bandwidth
+    }
+    fn t_per_token(&self) -> &[f64] {
+        &self.t_per_token
+    }
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64> {
+        match self.kind {
+            ControlKind::StaticUniform => self.state.uniform_split(),
+            _ => {
+                let r = self.state.solve(loads, &self.opts.solver, self.warm.as_deref());
+                self.stats.resolves += 1;
+                self.warm = Some(r.bandwidth.clone());
+                r.bandwidth
+            }
+        }
+    }
+
+    fn epoch_s(&self) -> Option<f64> {
+        None
+    }
+    fn on_epoch(&mut self, _demand_tokens: &[f64], _expert_tokens: &[f64]) -> bool {
+        false
+    }
+    fn on_topology_change(&mut self, _online: &[bool]) {
+        // Static planes keep their frozen split; the dispatcher's online
+        // mask already keeps work off dead devices.
+    }
+    fn stats(&self) -> ControlStats {
+        self.stats
+    }
+}
+
+// -------------------------------------------------------- AdaptivePlane
+
+/// Closed-loop plane: starts from the uniform split and converges to the
+/// observed load online.
+pub struct AdaptivePlane {
+    state: LinkState,
+    bandwidth: Vec<f64>,
+    t_per_token: Vec<f64>,
+    placement: Placement,
+    n_experts: usize,
+    cache_capacity: usize,
+    opts: ControlOptions,
+    online: Vec<bool>,
+    /// Demand share the last solve used (hysteresis reference).
+    last_share: Option<Vec<f64>>,
+    stats: ControlStats,
+}
+
+impl AdaptivePlane {
+    pub fn new(
+        state: LinkState,
+        n_experts: usize,
+        cache_capacity: usize,
+        opts: ControlOptions,
+    ) -> Self {
+        let bandwidth = state.uniform_split();
+        let t_per_token = state.t_per_token(&bandwidth);
+        let placement = initial_placement(n_experts, &t_per_token, cache_capacity);
+        let online = vec![true; state.n_devices()];
+        Self {
+            state,
+            bandwidth,
+            t_per_token,
+            placement,
+            n_experts,
+            cache_capacity,
+            opts,
+            online,
+            last_share: None,
+            stats: ControlStats::default(),
+        }
+    }
+
+    /// Replica autoscaling: re-balance the placement from observed
+    /// per-expert demand instead of the uniform-load assumption. Returns
+    /// true when the replica map actually changed.
+    fn rebalance_placement(&mut self, expert_tokens: &[f64]) -> bool {
+        if self.cache_capacity <= 1 {
+            return false;
+        }
+        let etot: f64 = expert_tokens.iter().sum();
+        if etot <= 0.0 || !etot.is_finite() {
+            return false;
+        }
+        // Small floor keeps unobserved experts placeable; finite cap
+        // keeps the greedy projections NaN-free when a device is offline
+        // (infinite service time).
+        let efloor = etot * 1e-3;
+        let eload: Vec<f64> = expert_tokens.iter().map(|&q| q.max(efloor)).collect();
+        let t_safe: Vec<f64> = self
+            .t_per_token
+            .iter()
+            .map(|&t| if t.is_finite() { t } else { 1e9 })
+            .collect();
+        let p = Placement::optimize(self.n_experts, &t_safe, &eload, self.cache_capacity);
+        if p != self.placement {
+            self.stats.placement_updates += 1;
+            self.placement = p;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-solve P3 for `load`, warm-started from the current split, and
+    /// refresh the service-time vector.
+    fn resolve(&mut self, load: &[f64]) {
+        let loads = [PerBlockLoad {
+            tokens: load.to_vec(),
+        }];
+        let r = self.state.solve(&loads, &self.opts.solver, Some(&self.bandwidth));
+        self.stats.churn_frac +=
+            0.5 * l1(&r.bandwidth, &self.bandwidth) / self.state.total_bandwidth_hz();
+        self.bandwidth = r.bandwidth;
+        self.t_per_token = self.state.t_per_token(&self.bandwidth);
+        for (k, &on) in self.online.iter().enumerate() {
+            if !on {
+                self.t_per_token[k] = f64::INFINITY;
+            }
+        }
+        self.stats.resolves += 1;
+    }
+}
+
+impl ControlPlane for AdaptivePlane {
+    fn kind(&self) -> ControlKind {
+        ControlKind::Adaptive
+    }
+    fn state(&self) -> &LinkState {
+        &self.state
+    }
+    fn bandwidth(&self) -> &[f64] {
+        &self.bandwidth
+    }
+    fn t_per_token(&self) -> &[f64] {
+        &self.t_per_token
+    }
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64> {
+        let r = self.state.solve(loads, &self.opts.solver, Some(&self.bandwidth));
+        self.stats.resolves += 1;
+        r.bandwidth
+    }
+
+    fn epoch_s(&self) -> Option<f64> {
+        Some(self.opts.epoch_s)
+    }
+
+    fn on_epoch(&mut self, demand_tokens: &[f64], expert_tokens: &[f64]) -> bool {
+        let u = self.state.n_devices();
+        debug_assert_eq!(demand_tokens.len(), u);
+        debug_assert_eq!(expert_tokens.len(), self.n_experts);
+        let masked: Vec<f64> = demand_tokens
+            .iter()
+            .zip(&self.online)
+            .map(|(&q, &on)| if on { q.max(0.0) } else { 0.0 })
+            .collect();
+        let total: f64 = masked.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return false; // idle epoch: keep the current split
+        }
+        // Bandwidth re-solve, damped by hysteresis on the per-device
+        // demand share.
+        let share: Vec<f64> = masked.iter().map(|q| q / total).collect();
+        let resolved = match &self.last_share {
+            Some(prev) if l1(&share, prev) < self.opts.hysteresis => false,
+            _ => {
+                // Floor online devices at 1% of the mean demand so a
+                // currently idle device keeps a sliver of spectrum
+                // (finite service time) and can win traffic back next
+                // epoch.
+                let n_on = self.online.iter().filter(|&&on| on).count().max(1);
+                let floor = 0.01 * total / n_on as f64;
+                let load: Vec<f64> = masked
+                    .iter()
+                    .zip(&self.online)
+                    .map(|(&q, &on)| if on { q.max(floor) } else { 0.0 })
+                    .collect();
+                self.resolve(&load);
+                self.last_share = Some(share);
+                true
+            }
+        };
+        // Replica autoscaling runs on its own trigger: expert popularity
+        // can invert while the per-device demand share stays flat (the
+        // load-aware dispatcher equalizes queues), so placement must not
+        // ride the bandwidth hysteresis.
+        let rebalanced = self.rebalance_placement(expert_tokens);
+        resolved || rebalanced
+    }
+
+    fn on_topology_change(&mut self, online: &[bool]) {
+        debug_assert_eq!(online.len(), self.state.n_devices());
+        self.online = online.to_vec();
+        let load: Vec<f64> = online
+            .iter()
+            .map(|&on| if on { 1.0 } else { 0.0 })
+            .collect();
+        if load.iter().sum::<f64>() <= 0.0 {
+            return; // everything offline: nothing to allocate for
+        }
+        // Failover re-solve: spread the spectrum over the survivors now
+        // rather than waiting for the next epoch's demand signal.
+        self.resolve(&load);
+        self.last_share = None;
+    }
+
+    fn stats(&self) -> ControlStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::devices::Fleet;
+    use crate::wireless::ChannelSimulator;
+
+    fn link_state() -> LinkState {
+        let cfg = SystemConfig::paper_simulation();
+        let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
+        let real = chan.expected_realization();
+        let fleet = Fleet::new(&cfg.devices, 0);
+        let t_comp = fleet.t_comp_nominal(cfg.model.l_comp_flops(cfg.activation_eta));
+        LinkState::new(
+            &cfg.channel,
+            &real,
+            &t_comp,
+            cfg.model.l_comm_bits(cfg.channel.quant_bits),
+        )
+    }
+
+    #[test]
+    fn static_uniform_matches_even_split() {
+        let state = link_state();
+        let expect_bw = state.uniform_split();
+        let expect_t = state.uniform_t_per_token();
+        let mut plane = StaticPlane::new(
+            ControlKind::StaticUniform,
+            state,
+            8,
+            2,
+            ControlOptions::default(),
+        );
+        assert_eq!(plane.bandwidth(), expect_bw.as_slice());
+        assert_eq!(plane.t_per_token(), expect_t.as_slice());
+        assert_eq!(plane.stats().resolves, 0);
+        let loads = [PerBlockLoad {
+            tokens: vec![10.0; 8],
+        }];
+        assert_eq!(plane.allocate_for(&loads), expect_bw);
+        assert!(!plane.on_epoch(&[5.0; 8], &[1.0; 8]));
+        assert_eq!(plane.epoch_s(), None);
+    }
+
+    #[test]
+    fn static_optimal_presolves_and_beats_uniform_worst_device() {
+        let state = link_state();
+        let uni_t = state.uniform_t_per_token();
+        let plane = StaticPlane::new(
+            ControlKind::StaticOptimal,
+            state,
+            8,
+            2,
+            ControlOptions::default(),
+        );
+        assert_eq!(plane.stats().resolves, 1);
+        let t = plane.t_per_token();
+        let worst_uni = uni_t.iter().cloned().fold(f64::MIN, f64::max);
+        let worst_opt = t.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(
+            worst_opt < worst_uni,
+            "pre-solve should shrink the slowest device: {worst_opt} vs {worst_uni}"
+        );
+    }
+
+    #[test]
+    fn adaptive_resolves_on_demand_shift_and_respects_hysteresis() {
+        let mut plane = AdaptivePlane::new(link_state(), 8, 2, ControlOptions::default());
+        assert_eq!(plane.epoch_s(), Some(0.25));
+        let experts = vec![1.0; 8];
+        // First epoch with demand: must re-solve.
+        let mut demand = vec![10.0; 8];
+        demand[7] = 200.0;
+        assert!(plane.on_epoch(&demand, &experts));
+        assert_eq!(plane.stats().resolves, 1);
+        assert!(plane.stats().churn_frac > 0.0);
+        // Identical demand share: hysteresis suppresses the re-solve.
+        assert!(!plane.on_epoch(&demand, &experts));
+        assert_eq!(plane.stats().resolves, 1);
+        // Large shift: re-solves again.
+        let mut demand2 = vec![10.0; 8];
+        demand2[0] = 300.0;
+        assert!(plane.on_epoch(&demand2, &experts));
+        assert_eq!(plane.stats().resolves, 2);
+        // Idle epoch: no-op.
+        assert!(!plane.on_epoch(&[0.0; 8], &experts));
+    }
+
+    #[test]
+    fn adaptive_shifts_bandwidth_toward_demand() {
+        let mut plane = AdaptivePlane::new(link_state(), 8, 1, ControlOptions::default());
+        let before = plane.bandwidth().to_vec();
+        let mut demand = vec![1.0; 8];
+        demand[7] = 500.0; // far, slow device swamped
+        plane.on_epoch(&demand, &[1.0; 8]);
+        assert!(
+            plane.bandwidth()[7] > before[7] * 2.0,
+            "swamped device should gain spectrum: {:?}",
+            plane.bandwidth()
+        );
+        // Service time on the hot device improves, and every online
+        // device keeps a finite service time (the 1% demand floor).
+        for &t in plane.t_per_token() {
+            assert!(t.is_finite() && t > 0.0);
+        }
+    }
+
+    #[test]
+    fn adaptive_topology_change_triggers_resolve_and_infinite_service() {
+        let mut plane = AdaptivePlane::new(link_state(), 8, 2, ControlOptions::default());
+        let mut online = vec![true; 8];
+        online[3] = false;
+        plane.on_topology_change(&online);
+        assert_eq!(plane.stats().resolves, 1);
+        assert!(plane.t_per_token()[3].is_infinite());
+        assert!(plane.t_per_token()[0].is_finite());
+        // Dead device is starved of spectrum.
+        assert!(plane.bandwidth()[3] < plane.bandwidth()[0] * 0.2);
+    }
+
+    #[test]
+    fn adaptive_placement_follows_observed_expert_load() {
+        let mut plane = AdaptivePlane::new(link_state(), 8, 2, ControlOptions::default());
+        // Construction balances for *uniform* expert load, so expert 0 —
+        // homed on the fastest, nearest device — starts unreplicated.
+        assert_eq!(plane.placement().replicas(0).len(), 1);
+        // Observed traffic then concentrates on expert 0: the autoscaler
+        // must give it at least one extra replica.
+        let mut experts = vec![1.0; 8];
+        experts[0] = 400.0;
+        let demand = vec![50.0; 8];
+        assert!(plane.on_epoch(&demand, &experts));
+        assert!(
+            plane.placement().replicas(0).len() >= 2,
+            "hot expert not replicated: {:?}",
+            plane.placement().replicas(0)
+        );
+        assert!(plane.stats().placement_updates >= 1);
+    }
+
+    #[test]
+    fn make_plane_dispatches_on_kind() {
+        for kind in ControlKind::all() {
+            let p = make_plane(kind, link_state(), 8, 2, ControlOptions::default());
+            assert_eq!(p.kind(), kind);
+            assert_eq!(p.t_per_token().len(), 8);
+            p.placement().validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! [`LinkState`] — the one place where a cell's per-device
+//! [`DeviceLink`]s are assembled from channel + fleet parameters.
+//!
+//! Before the control layer existed, both simulators duplicated the same
+//! ritual: build an [`AllocationInput`], call `.links()`, and map a
+//! bandwidth split through `t_per_token`. `LinkState` owns that ritual:
+//! construct once per cell (or per batch under fading), then ask it for
+//! service times under any split, or for a P3 solve (optionally
+//! warm-started from the previous allocation).
+
+use crate::config::ChannelConfig;
+use crate::latency::TokenLatencies;
+use crate::optim::solver::DeviceLink;
+use crate::optim::{minimize_sum_max_warm, PerBlockLoad, SolverOptions, SolverResult};
+use crate::wireless::bandwidth::AllocationInput;
+use crate::wireless::ChannelRealization;
+
+/// Frozen per-cell link context: the Eq. (8) inputs for every device.
+#[derive(Debug, Clone)]
+pub struct LinkState {
+    links: Vec<DeviceLink>,
+    total_bandwidth_hz: f64,
+}
+
+impl LinkState {
+    /// Assemble links for one cell. `t_comp_per_token[k]` is `L_comp/C_k`
+    /// (infinite for offline devices); `l_comm_bits` is Eq. (4).
+    pub fn new(
+        channel: &ChannelConfig,
+        realization: &ChannelRealization,
+        t_comp_per_token: &[f64],
+        l_comm_bits: f64,
+    ) -> Self {
+        assert_eq!(
+            realization.n_devices(),
+            t_comp_per_token.len(),
+            "realization/fleet arity mismatch"
+        );
+        let loads: [PerBlockLoad; 0] = [];
+        let input = AllocationInput {
+            channel_cfg: channel,
+            realization,
+            loads: &loads,
+            t_comp_per_token,
+            l_comm_bits,
+        };
+        Self {
+            links: input.links(),
+            total_bandwidth_hz: channel.total_bandwidth_hz,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn links(&self) -> &[DeviceLink] {
+        &self.links
+    }
+
+    pub fn total_bandwidth_hz(&self) -> f64 {
+        self.total_bandwidth_hz
+    }
+
+    /// The even split `B_k = B/U`.
+    pub fn uniform_split(&self) -> Vec<f64> {
+        let u = self.links.len();
+        vec![self.total_bandwidth_hz / u as f64; u]
+    }
+
+    /// Per-device service seconds per token (Eq. (8)) under a split.
+    pub fn t_per_token(&self, bandwidth: &[f64]) -> Vec<f64> {
+        assert_eq!(bandwidth.len(), self.links.len(), "split arity mismatch");
+        self.links
+            .iter()
+            .zip(bandwidth)
+            .map(|(l, &b)| l.t_per_token(b))
+            .collect()
+    }
+
+    /// Service times under the uniform split — what selection policies
+    /// consume (§IV-A) and what the static-uniform plane serves with.
+    pub fn uniform_t_per_token(&self) -> Vec<f64> {
+        self.t_per_token(&self.uniform_split())
+    }
+
+    /// [`TokenLatencies`] view of a split (the latency model's input).
+    pub fn token_latencies(&self, bandwidth: &[f64]) -> TokenLatencies {
+        TokenLatencies::from_links(&self.links, bandwidth)
+    }
+
+    /// Solve P3 for the given loads, optionally warm-starting from a
+    /// previous allocation (e.g. the last control epoch's split).
+    pub fn solve(
+        &self,
+        loads: &[PerBlockLoad],
+        opts: &SolverOptions,
+        warm: Option<&[f64]>,
+    ) -> SolverResult {
+        minimize_sum_max_warm(&self.links, loads, self.total_bandwidth_hz, opts, warm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::devices::Fleet;
+    use crate::wireless::ChannelSimulator;
+
+    fn state() -> LinkState {
+        let cfg = SystemConfig::paper_simulation();
+        let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
+        let real = chan.expected_realization();
+        let fleet = Fleet::new(&cfg.devices, 0);
+        let t_comp = fleet.t_comp_nominal(cfg.model.l_comp_flops(cfg.activation_eta));
+        LinkState::new(
+            &cfg.channel,
+            &real,
+            &t_comp,
+            cfg.model.l_comm_bits(cfg.channel.quant_bits),
+        )
+    }
+
+    #[test]
+    fn uniform_split_partitions_budget() {
+        let s = state();
+        assert_eq!(s.n_devices(), 8);
+        let b = s.uniform_split();
+        assert_eq!(b.len(), 8);
+        let sum: f64 = b.iter().sum();
+        assert!((sum - s.total_bandwidth_hz()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn t_per_token_matches_links_directly() {
+        let s = state();
+        let bw = s.uniform_split();
+        let t = s.t_per_token(&bw);
+        for (k, link) in s.links().iter().enumerate() {
+            assert_eq!(t[k], link.t_per_token(bw[k]));
+            assert!(t[k].is_finite() && t[k] > 0.0);
+        }
+        assert_eq!(s.token_latencies(&bw).per_token, t);
+    }
+
+    #[test]
+    fn far_device_is_slower_under_uniform_split() {
+        // Preset orders devices by increasing distance; device 7 is also
+        // the weakest compute, so it must be the slowest end to end.
+        let t = state().uniform_t_per_token();
+        assert!(t[7] > t[0], "t={t:?}");
+    }
+
+    #[test]
+    fn solve_equalizes_loaded_devices() {
+        let s = state();
+        let loads = [PerBlockLoad {
+            tokens: vec![50.0; 8],
+        }];
+        let r = s.solve(&loads, &SolverOptions::default(), None);
+        let sum: f64 = r.bandwidth.iter().sum();
+        assert!((sum - s.total_bandwidth_hz()).abs() / s.total_bandwidth_hz() < 1e-6);
+        let t = s.t_per_token(&r.bandwidth);
+        let per_dev: Vec<f64> = t.iter().map(|tk| 50.0 * tk).collect();
+        let max = per_dev.iter().cloned().fold(f64::MIN, f64::max);
+        let min = per_dev.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max - min) / max < 0.05, "not equalised: {per_dev:?}");
+    }
+}

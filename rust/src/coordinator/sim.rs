@@ -13,18 +13,25 @@
 //! 4. evaluates the final attention waiting latency per block (Eqs.
 //!    (9)–(11)) under the allocated bandwidth.
 //!
+//! Link assembly and allocation go through the shared control layer: a
+//! [`crate::control::LinkState`] is built per *arm* — from the channel
+//! realization current at [`Simulator::make_arm`] time — and a
+//! [`ControlPlane`] matching the variant's allocator serves the
+//! per-block solves, the same code path the cluster DES uses. Under
+//! fading, pair one fresh arm with each batch (as [`Simulator::run_variant`]
+//! does) so every batch sees its own draw; reusing an arm across batches
+//! freezes its realization.
+//!
 //! The four ablation arms of paper Fig. 7 / Table II are expressible as
 //! [`Variant`]s: policy × allocator.
 
 use crate::config::{AllocatorKind, PolicyKind, SystemConfig};
+use crate::control::{self, ControlOptions, ControlPlane, LinkState};
 use crate::devices::Fleet;
 use crate::latency::{block_latency, LatencyReport, TokenLatencies};
 use crate::moe::selection::{make_policy, SelectionContext, SelectionPolicy};
 use crate::moe::{total_wlr, GateWeights, Selection};
 use crate::optim::PerBlockLoad;
-use crate::wireless::bandwidth::{
-    AllocationInput, BandwidthAllocator, OptimalAllocator, UniformAllocator,
-};
 use crate::wireless::{ChannelRealization, ChannelSimulator};
 use crate::workload::WorkloadGen;
 
@@ -146,21 +153,39 @@ impl Simulator {
         }
     }
 
-    /// Build a policy/allocator pair for a variant.
-    pub fn make_arm(
-        &self,
-        v: Variant,
-    ) -> (Box<dyn SelectionPolicy>, Box<dyn BandwidthAllocator>) {
+    /// Build a policy/control-plane pair for a variant. The plane owns
+    /// the batch's [`LinkState`] (links assembled from the *current*
+    /// channel realization, so fading draws are honoured).
+    pub fn make_arm(&self, v: Variant) -> (Box<dyn SelectionPolicy>, Box<dyn ControlPlane>) {
         let policy = make_policy(v.policy, &self.cfg.policy, self.cfg.n_devices(), self.cfg.seed);
-        let allocator: Box<dyn BandwidthAllocator> = match v.allocator {
-            AllocatorKind::Uniform => Box::new(UniformAllocator),
-            AllocatorKind::Optimal => Box::new(OptimalAllocator::default()),
-        };
-        (policy, allocator)
+        (policy, self.make_plane(v.allocator))
+    }
+
+    /// Control plane matching an allocator kind. Link/t_per_token
+    /// assembly lives in [`LinkState`] — shared with the cluster DES, not
+    /// duplicated here. The paper's setup has no replication (expert k on
+    /// device k), hence cache capacity 1.
+    pub fn make_plane(&self, allocator: AllocatorKind) -> Box<dyn ControlPlane> {
+        let l_comp = self.cfg.model.l_comp_flops(self.cfg.activation_eta);
+        let t_comp = self.fleet.t_comp_nominal(l_comp);
+        let realization = self.realization();
+        let state = LinkState::new(
+            &self.cfg.channel,
+            &realization,
+            &t_comp,
+            self.cfg.model.l_comm_bits(self.cfg.channel.quant_bits),
+        );
+        control::make_plane(
+            allocator.into(),
+            state,
+            self.cfg.model.n_experts,
+            1,
+            ControlOptions::default(),
+        )
     }
 
     /// Simulate one batch of `n_tokens` through all `I` blocks under the
-    /// given policy/allocator. Gate weights are drawn fresh per block
+    /// given policy/control plane. Gate weights are drawn fresh per block
     /// (same stream for a given simulator seed and call order, so two
     /// variants compare on identical routing when run on fresh simulators
     /// with the same seed).
@@ -168,30 +193,18 @@ impl Simulator {
         &mut self,
         n_tokens: usize,
         policy: &mut dyn SelectionPolicy,
-        allocator: &dyn BandwidthAllocator,
+        plane: &mut dyn ControlPlane,
     ) -> SimOutcome {
         let u = self.cfg.n_devices();
         let blocks = self.cfg.model.n_blocks;
-        let l_comp = self.cfg.model.l_comp_flops(self.cfg.activation_eta);
-        let l_comm = self.cfg.model.l_comm_bits(self.cfg.channel.quant_bits);
-        let total_bw = self.cfg.channel.total_bandwidth_hz;
-
-        let realization = self.realization();
-        let t_comp = self.fleet.t_comp_nominal(l_comp);
         let online = self.fleet.online_mask();
 
-        // Uniform-bandwidth latency estimate for the selection policy.
-        let uniform_bw = vec![total_bw / u as f64; u];
-        let dummy_loads: Vec<PerBlockLoad> = vec![];
-        let input = AllocationInput {
-            channel_cfg: &self.cfg.channel,
-            realization: &realization,
-            loads: &dummy_loads,
-            t_comp_per_token: &t_comp,
-            l_comm_bits: l_comm,
+        // Uniform-bandwidth latency estimate for the selection policy
+        // (§IV-A: selection assumes the even split, whatever the
+        // allocator later decides).
+        let est = TokenLatencies {
+            per_token: plane.state().uniform_t_per_token(),
         };
-        let links = input.links();
-        let est = TokenLatencies::from_links(&links, &uniform_bw);
 
         // Phase 1: per-block gating + expert selection.
         let mut selections = Vec::with_capacity(blocks);
@@ -227,15 +240,8 @@ impl Simulator {
         let mut mean_bw = vec![0.0; u];
         for (i, sel) in selections.iter().enumerate() {
             let block_loads = [loads[i].clone()];
-            let input = AllocationInput {
-                channel_cfg: &self.cfg.channel,
-                realization: &realization,
-                loads: &block_loads,
-                t_comp_per_token: &t_comp,
-                l_comm_bits: l_comm,
-            };
-            let bw = allocator.allocate(&input, total_bw);
-            let final_lat = TokenLatencies::from_links(&links, &bw);
+            let bw = plane.allocate_for(&block_loads);
+            let final_lat = plane.state().token_latencies(&bw);
             let bl = block_latency(&final_lat, &loads[i].tokens);
             // Algorithm-2 feedback: observed per-token latency per device.
             for k in 0..u {
@@ -260,10 +266,10 @@ impl Simulator {
         }
     }
 
-    /// Convenience: run a variant on a fresh policy instance.
+    /// Convenience: run a variant on a fresh policy/plane pair.
     pub fn run_variant(&mut self, n_tokens: usize, v: Variant) -> SimOutcome {
-        let (mut policy, allocator) = self.make_arm(v);
-        self.run_batch(n_tokens, policy.as_mut(), allocator.as_ref())
+        let (mut policy, mut plane) = self.make_arm(v);
+        self.run_batch(n_tokens, policy.as_mut(), plane.as_mut())
     }
 }
 

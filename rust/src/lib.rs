@@ -23,6 +23,12 @@
 //!   (the Mixtral baseline), the paper's Algorithm 1 (cosine-similarity
 //!   threshold, WLR-guarded), and Algorithm 2 (the hardware-testbed
 //!   history-driven policy).
+//! * [`control`] — the shared control plane: [`control::LinkState`]
+//!   (the single home of per-device link assembly) and the
+//!   [`control::ControlPlane`] implementations — static uniform/optimal
+//!   and the adaptive closed loop (epoch-cadence P3 re-solve from
+//!   observed backlog, warm-started, plus replica autoscaling) — consumed
+//!   by both simulators.
 //! * [`coordinator`] — request router, dynamic batcher, and the
 //!   block-by-block dispatch loop that walks tokens through
 //!   attention → gate → (devices) experts → combine.
@@ -46,6 +52,7 @@
 
 pub mod cluster;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod util;
 pub mod devices;

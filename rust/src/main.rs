@@ -10,9 +10,13 @@
 //!                 (needs the `pjrt` cargo feature + built artifacts)
 //!   cluster [--rates CSV] [--requests N] [--benchmark NAME]
 //!           [--cache N] [--dispatch load_aware|static] [--cells N]
+//!           [--control static_uniform|static_optimal|adaptive|compare]
+//!           [--epoch S] [--queue-limit S] [--drop request|shed]
 //!                 multi-cell discrete-event serving sweep: throughput,
-//!                 p50/p95/p99 latency, per-device utilization vs
-//!                 arrival rate (CSV into --out)
+//!                 goodput, drop rate, p50/p95/p99 latency, per-device
+//!                 utilization and control-plane activity vs arrival
+//!                 rate (CSV into --out); `--control compare` runs all
+//!                 three control planes on identical arrival streams
 //!   config [simulation|testbed|serving|cluster]
 //!                 print a preset config as JSON
 //!   fig5 fig6 fig7 fig8 fig10 table1 table2 table3 table4
@@ -24,8 +28,8 @@
 //! environment — DESIGN.md §Substitutions.)
 
 use std::path::PathBuf;
-use wdmoe::cluster::arrival_rate_sweep;
-use wdmoe::config::{ClusterConfig, DispatchKind, SystemConfig};
+use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
+use wdmoe::config::{ClusterConfig, ControlKind, DispatchKind, DropPolicy, SystemConfig};
 use wdmoe::repro::{self, ReproContext};
 use wdmoe::workload::Benchmark;
 
@@ -48,6 +52,8 @@ COMMANDS:
         (requires building with --features pjrt)
   cluster [--rates CSV] [--requests N] [--benchmark NAME]
           [--cache N] [--dispatch load_aware|static] [--cells N]
+          [--control static_uniform|static_optimal|adaptive|compare]
+          [--epoch S] [--queue-limit S] [--drop request|shed]
   config [simulation|testbed|serving|cluster]
   fig5 | fig6 | fig7 | fig8 | fig10
   table1 | table2 | table3 | table4
@@ -60,9 +66,16 @@ struct Args {
     artifacts: PathBuf,
     config: Option<PathBuf>,
     quick: bool,
-    seed: u64,
+    /// `--seed` if given; `None` lets a `--config` file's seed stand.
+    seed: Option<u64>,
     cmd: String,
     rest: Vec<String>,
+}
+
+impl Args {
+    fn seed_or_default(&self) -> u64 {
+        self.seed.unwrap_or(0)
+    }
 }
 
 fn parse_args() -> anyhow::Result<Args> {
@@ -70,7 +83,7 @@ fn parse_args() -> anyhow::Result<Args> {
     let mut artifacts = PathBuf::from("artifacts");
     let mut config = None;
     let mut quick = false;
-    let mut seed = 0u64;
+    let mut seed = None;
     let mut cmd = None;
     let mut rest = Vec::new();
     let mut it = std::env::args().skip(1);
@@ -83,7 +96,7 @@ fn parse_args() -> anyhow::Result<Args> {
             "--artifacts" => artifacts = PathBuf::from(take("--artifacts")?),
             "--config" => config = Some(PathBuf::from(take("--config")?)),
             "--quick" => quick = true,
-            "--seed" => seed = take("--seed")?.parse()?,
+            "--seed" => seed = Some(take("--seed")?.parse()?),
             "--help" | "-h" => {
                 print!("{USAGE}");
                 std::process::exit(0);
@@ -128,7 +141,7 @@ fn main() -> anyhow::Result<()> {
         out_dir: args.out.clone(),
         artifacts_dir: Some(args.artifacts.clone()),
         quick: args.quick,
-        seed: args.seed,
+        seed: args.seed_or_default(),
     };
     match args.cmd.as_str() {
         "config" => {
@@ -160,7 +173,7 @@ fn main() -> anyhow::Result<()> {
                     Some(p) => SystemConfig::from_json_file(p)?,
                     None => SystemConfig::artifact_serving(),
                 };
-                serve(&args.artifacts, cfg, bench, kind, requests, args.seed)?;
+                serve(&args.artifacts, cfg, bench, kind, requests, args.seed_or_default())?;
             }
             #[cfg(not(feature = "pjrt"))]
             anyhow::bail!(
@@ -193,7 +206,10 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         Some(p) => ClusterConfig::from_json_file(p)?,
         None => ClusterConfig::edge_default(),
     };
-    cfg.seed = args.seed;
+    // --seed overrides; otherwise a --config file's seed stands.
+    if let Some(seed) = args.seed {
+        cfg.seed = seed;
+    }
     if let Some(n) = rest_opt(&args.rest, "--cells") {
         let n: usize = n.parse()?;
         anyhow::ensure!(n >= 1, "--cells must be >= 1");
@@ -205,6 +221,23 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     if let Some(d) = rest_opt(&args.rest, "--dispatch") {
         cfg.dispatch = DispatchKind::parse(&d)?;
     }
+    if let Some(e) = rest_opt(&args.rest, "--epoch") {
+        cfg.control_epoch_s = e.parse()?;
+    }
+    if let Some(q) = rest_opt(&args.rest, "--queue-limit") {
+        cfg.queue_limit_s = q.parse()?;
+    }
+    if let Some(d) = rest_opt(&args.rest, "--drop") {
+        cfg.drop_policy = DropPolicy::parse(&d)?;
+    }
+    let compare = match rest_opt(&args.rest, "--control") {
+        Some(s) if s == "compare" => true,
+        Some(s) => {
+            cfg.control = ControlKind::parse(&s)?;
+            false
+        }
+        None => false,
+    };
     let bench_name = rest_opt(&args.rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
     let bench = Benchmark::from_name(&bench_name)
         .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
@@ -227,15 +260,23 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     );
 
     println!(
-        "cluster sweep: {} cells, cache {}, dispatch {}, {} x {} requests, rates {:?}",
+        "cluster sweep: {} cells, cache {}, dispatch {}, control {}, {} x {} requests, rates {:?}",
         cfg.n_cells(),
         cfg.cache_capacity,
         cfg.dispatch.as_str(),
+        if compare { "compare" } else { cfg.control.as_str() },
         bench.name(),
         requests,
         rates
     );
-    let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, args.seed)?;
+    if compare {
+        let table = control_plane_sweep(&cfg, &rates, requests, bench, cfg.seed)?;
+        println!("{}", table.render());
+        let p = table.write_csv(&args.out)?;
+        println!("  -> {}\n", p.display());
+        return Ok(());
+    }
+    let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, cfg.seed)?;
     println!("{}", sweep.summary.render());
     let p = sweep.summary.write_csv(&args.out)?;
     println!("  -> {}\n", p.display());

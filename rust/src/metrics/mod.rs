@@ -151,6 +151,34 @@ impl Utilization {
     }
 }
 
+/// Counters a control plane exposes so re-optimization activity is
+/// observable alongside latency: how often P3 was re-solved, how often
+/// the expert placement changed, and how much spectrum moved.
+///
+/// `churn_frac` accumulates, per re-solve, the fraction of the cell's
+/// total bandwidth that changed hands (half the L1 distance between the
+/// old and new splits, normalised by the budget) — a run that never
+/// re-allocates reports 0, one that flips the whole spectrum every epoch
+/// reports ~1 per epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ControlStats {
+    /// P3 (bandwidth) re-solves performed.
+    pub resolves: usize,
+    /// Placement re-optimizations that actually changed the replica map.
+    pub placement_updates: usize,
+    /// Accumulated fraction of total bandwidth moved across re-solves.
+    pub churn_frac: f64,
+}
+
+impl ControlStats {
+    /// Fold another plane's counters in (aggregating across cells).
+    pub fn absorb(&mut self, other: &ControlStats) {
+        self.resolves += other.resolves;
+        self.placement_updates += other.placement_updates;
+        self.churn_frac += other.churn_frac;
+    }
+}
+
 /// A rendered results table: the `repro` harness prints these in the same
 /// row/column layout as the paper and also dumps CSV next to them.
 #[derive(Debug, Clone)]
@@ -314,6 +342,24 @@ mod tests {
     #[should_panic(expected = "warmup_frac")]
     fn steady_state_rejects_bad_frac() {
         let _ = SteadyState::new(1.0);
+    }
+
+    #[test]
+    fn control_stats_absorb_sums() {
+        let mut a = ControlStats {
+            resolves: 2,
+            placement_updates: 1,
+            churn_frac: 0.25,
+        };
+        let b = ControlStats {
+            resolves: 3,
+            placement_updates: 0,
+            churn_frac: 0.5,
+        };
+        a.absorb(&b);
+        assert_eq!(a.resolves, 5);
+        assert_eq!(a.placement_updates, 1);
+        assert!((a.churn_frac - 0.75).abs() < 1e-12);
     }
 
     #[test]

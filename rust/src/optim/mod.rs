@@ -21,4 +21,6 @@ pub mod simplex;
 pub mod solver;
 
 pub use simplex::project_simplex;
-pub use solver::{minimize_sum_max, PerBlockLoad, SolverOptions, SolverResult};
+pub use solver::{
+    minimize_sum_max, minimize_sum_max_warm, PerBlockLoad, SolverOptions, SolverResult,
+};

@@ -161,6 +161,7 @@ fn solve_single_block(
     links: &[DeviceLink],
     tokens: &[f64],
     total: f64,
+    warm_init: Option<&[f64]>,
 ) -> Option<SolverResult> {
     let u = links.len();
     let active: Vec<usize> = (0..u)
@@ -212,8 +213,35 @@ fn solve_single_block(
     }
     lambda_lo = lambda_lo.max(lambda_hi * 1e-9);
 
-    let mut warm: Vec<f64> = vec![share; u];
-    let mut lambda = lambda_hi;
+    // Warm start: seed the per-device inversion points and the latency
+    // level from a previous solution (e.g. the last control epoch). The
+    // bracket above is kept regardless, so a stale warm point only costs
+    // iterations, never correctness — warm and cold solves share the
+    // unique water-filling fixed point. Sanitization (arity, finiteness,
+    // non-negativity) is the caller's job: `minimize_sum_max_warm`
+    // filters before reaching here.
+    let mut warm: Vec<f64> = match warm_init {
+        Some(w) => {
+            debug_assert!(
+                w.len() == u && w.iter().all(|b| b.is_finite() && *b >= 0.0),
+                "unsanitized warm start"
+            );
+            w.iter()
+                .map(|&b| b.clamp(total * 1e-9, total * 16.0))
+                .collect()
+        }
+        None => vec![share; u],
+    };
+    let mut lambda = if warm_init.is_some() {
+        let l0 = active.iter().map(|&k| f(k, warm[k])).fold(0.0, f64::max);
+        if l0.is_finite() {
+            l0.clamp(lambda_lo, lambda_hi)
+        } else {
+            lambda_hi
+        }
+    } else {
+        lambda_hi
+    };
     let mut best = vec![0.0; u];
     for _ in 0..80 {
         let mut sum = 0.0;
@@ -274,6 +302,24 @@ pub fn minimize_sum_max(
     total_bandwidth: f64,
     opts: &SolverOptions,
 ) -> SolverResult {
+    minimize_sum_max_warm(links, loads, total_bandwidth, opts, None)
+}
+
+/// [`minimize_sum_max`] with an optional warm-start split — typically the
+/// previous control epoch's allocation, whose loads differ only slightly.
+///
+/// The warm point only seeds the search: the single-block fast path keeps
+/// its bisection bracket and the gradient path keeps the uniform-split
+/// guard, so a stale or garbage warm start costs iterations, never
+/// quality. At the optimum warm and cold solves agree (the program is
+/// convex with a unique min-max level).
+pub fn minimize_sum_max_warm(
+    links: &[DeviceLink],
+    loads: &[PerBlockLoad],
+    total_bandwidth: f64,
+    opts: &SolverOptions,
+    warm: Option<&[f64]>,
+) -> SolverResult {
     let u = links.len();
     assert!(u > 0, "no devices");
     assert!(
@@ -289,10 +335,16 @@ pub fn minimize_sum_max(
             iterations: 0,
         };
     }
+    // Sanitize: a usable warm start is finite, non-negative and non-zero.
+    let warm = warm.filter(|w| {
+        w.len() == u
+            && w.iter().all(|b| b.is_finite() && *b >= 0.0)
+            && w.iter().sum::<f64>() > 0.0
+    });
 
     // Fast path: the per-block allocation the coordinator performs.
     if loads.len() == 1 {
-        if let Some(r) = solve_single_block(links, &loads[0].tokens, total_bandwidth) {
+        if let Some(r) = solve_single_block(links, &loads[0].tokens, total_bandwidth, warm) {
             // Guard: never return something worse than uniform.
             let o_uni = exact_objective(links, loads, &uniform);
             if r.objective <= o_uni {
@@ -301,9 +353,19 @@ pub fn minimize_sum_max(
         }
     }
 
-    let mut b = uniform.clone();
+    let mut b = match warm {
+        Some(w) => project_simplex(w, total_bandwidth),
+        None => uniform.clone(),
+    };
     let mut best_b = b.clone();
     let mut best_obj = exact_objective(links, loads, &b);
+    // Guard: never start the descent worse than the uniform split.
+    let o_uni = exact_objective(links, loads, &uniform);
+    if o_uni < best_obj {
+        b = uniform.clone();
+        best_b = uniform.clone();
+        best_obj = o_uni;
+    }
     let mut iters_used = 0;
 
     // Anneal temperature from ~10% of the objective scale downward.
@@ -528,6 +590,64 @@ mod tests {
         let r = minimize_sum_max(&links, &loads, 100e6, &SolverOptions::default());
         assert_eq!(r.bandwidth, vec![50e6, 50e6]);
         assert_eq!(r.objective, 0.0);
+    }
+
+    #[test]
+    fn warm_start_matches_cold_start_single_block() {
+        let links: Vec<DeviceLink> = [60.0, 150.0, 280.0, 350.0]
+            .iter()
+            .map(|&d| link(gain_at(d), 1e-5))
+            .collect();
+        let loads = vec![PerBlockLoad {
+            tokens: vec![120.0, 40.0, 90.0, 60.0],
+        }];
+        let total = 100e6;
+        let opts = SolverOptions::default();
+        let cold = minimize_sum_max(&links, &loads, total, &opts);
+        // Warm from a perturbed neighbour of the optimum.
+        let warm_point: Vec<f64> = cold.bandwidth.iter().map(|&b| b * 1.2 + 1e5).collect();
+        let warm = minimize_sum_max_warm(&links, &loads, total, &opts, Some(&warm_point));
+        assert!(
+            (warm.objective - cold.objective).abs() / cold.objective < 1e-8,
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        let l1: f64 = warm
+            .bandwidth
+            .iter()
+            .zip(&cold.bandwidth)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(l1 / total < 1e-4, "allocations diverge by {l1} Hz");
+    }
+
+    #[test]
+    fn garbage_warm_start_is_harmless() {
+        let links: Vec<DeviceLink> = [80.0, 300.0]
+            .iter()
+            .map(|&d| link(gain_at(d), 2e-5))
+            .collect();
+        let loads = vec![PerBlockLoad {
+            tokens: vec![150.0, 80.0],
+        }];
+        let total = 100e6;
+        let opts = SolverOptions::default();
+        let cold = minimize_sum_max(&links, &loads, total, &opts);
+        for bad in [
+            vec![0.0, 0.0],
+            vec![f64::NAN, 1.0],
+            vec![1e30, 1e30],
+            vec![1.0],
+        ] {
+            let warm = minimize_sum_max_warm(&links, &loads, total, &opts, Some(&bad));
+            assert!(
+                warm.objective <= cold.objective * (1.0 + 1e-8),
+                "bad warm {bad:?}: {} vs {}",
+                warm.objective,
+                cold.objective
+            );
+        }
     }
 
     #[test]

@@ -12,10 +12,10 @@
 
 use super::ReproContext;
 use crate::config::SystemConfig;
+use crate::control::LinkState;
 use crate::coordinator::sim::{Simulator, Variant};
 use crate::metrics::Table;
-use crate::optim::{minimize_sum_max, SolverOptions};
-use crate::wireless::bandwidth::AllocationInput;
+use crate::optim::SolverOptions;
 use crate::wireless::ChannelSimulator;
 
 /// Ablation 1: re-run the ARC-C-scale batch with one global allocation
@@ -49,15 +49,13 @@ pub fn global_vs_per_block(ctx: &ReproContext) -> anyhow::Result<Table> {
             tokens: b.tokens_per_device.clone(),
         })
         .collect();
-    let input = AllocationInput {
-        channel_cfg: &cfg.channel,
-        realization: &real,
-        loads: &loads,
-        t_comp_per_token: &t_comp,
-        l_comm_bits: cfg.model.l_comm_bits(cfg.channel.quant_bits),
-    };
-    let links = input.links();
-    let global = minimize_sum_max(&links, &loads, cfg.channel.total_bandwidth_hz, &SolverOptions::default());
+    let state = LinkState::new(
+        &cfg.channel,
+        &real,
+        &t_comp,
+        cfg.model.l_comm_bits(cfg.channel.quant_bits),
+    );
+    let global = state.solve(&loads, &SolverOptions::default(), None);
     let global_ms = global.objective * 1e3;
 
     let red = |ms: f64| (1.0 - ms / uni.latency_ms()) * 100.0;

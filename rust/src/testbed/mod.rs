@@ -12,8 +12,9 @@
 //! variance Algorithm 2's history estimator is designed to absorb.
 
 use crate::config::SystemConfig;
+use crate::control::LinkState;
 use crate::devices::Fleet;
-use crate::latency::{block_latency, BlockLatency, TokenLatencies};
+use crate::latency::{block_latency, BlockLatency};
 use crate::moe::selection::{SelectionContext, SelectionPolicy};
 use crate::moe::GateWeights;
 use crate::wireless::ChannelSimulator;
@@ -100,29 +101,17 @@ impl TestbedSim {
         let mut transmissions = 0.0;
         for _ in 0..blocks {
             // True (this block's) conditions — hidden from the policy.
+            // Link assembly goes through the shared control layer.
             let realization = self.channel.realization().clone();
             let t_comp = self.fleet.t_comp_per_token(l_comp); // jittered
-            let input = crate::wireless::bandwidth::AllocationInput {
-                channel_cfg: &self.cfg.channel,
-                realization: &realization,
-                loads: &[],
-                t_comp_per_token: &t_comp,
-                l_comm_bits: l_comm,
-            };
-            let links = input.links();
-            let truth = TokenLatencies::from_links(&links, &uniform);
+            let truth = LinkState::new(&self.cfg.channel, &realization, &t_comp, l_comm)
+                .token_latencies(&uniform);
 
             // Cold-start estimate: nominal (jitter-free) mean-channel view.
             let nominal_t_comp = self.fleet.t_comp_nominal(l_comp);
             let mean_real = self.channel.expected_realization();
-            let est_input = crate::wireless::bandwidth::AllocationInput {
-                channel_cfg: &self.cfg.channel,
-                realization: &mean_real,
-                loads: &[],
-                t_comp_per_token: &nominal_t_comp,
-                l_comm_bits: l_comm,
-            };
-            let est = TokenLatencies::from_links(&est_input.links(), &uniform);
+            let est = LinkState::new(&self.cfg.channel, &mean_real, &nominal_t_comp, l_comm)
+                .token_latencies(&uniform);
 
             let gate = GateWeights::new(self.gates.synthetic_gate_weights(
                 n_tokens,

@@ -75,6 +75,15 @@ impl ArrivalProcess {
                     .collect()
             }
             ArrivalProcess::Replay { arrivals } => {
+                // Fail fast here rather than as a cryptic virtual-time
+                // panic deep inside a simulator run.
+                for a in arrivals.iter().take(n_requests) {
+                    assert!(
+                        a.time_s.is_finite() && a.time_s >= 0.0,
+                        "replay arrival times must be finite and non-negative, got {}",
+                        a.time_s
+                    );
+                }
                 let mut out: Vec<Arrival> =
                     arrivals.iter().take(n_requests).cloned().collect();
                 out.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
@@ -154,5 +163,12 @@ mod tests {
         ];
         let p = ArrivalProcess::Replay { arrivals };
         assert_eq!(p.generate(2, Benchmark::Piqa, 0).len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn replay_rejects_negative_times_up_front() {
+        let arrivals = vec![Arrival { time_s: -0.1, tokens: 5 }];
+        let _ = ArrivalProcess::Replay { arrivals }.generate(1, Benchmark::Piqa, 0);
     }
 }

@@ -233,7 +233,17 @@ fn sweep_writes_acceptance_csvs() {
     let util = sweep.utilization.write_csv(&dir).unwrap();
     let text = std::fs::read_to_string(&summary).unwrap();
     let head = text.lines().next().unwrap();
-    for col in ["throughput_rps", "p50_ms", "p95_ms", "p99_ms"] {
+    for col in [
+        "throughput_rps",
+        "goodput_tps",
+        "drop_rate",
+        "shed_tps",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "resolves",
+        "churn",
+    ] {
         assert!(head.contains(col), "missing column {col} in {head}");
     }
     assert_eq!(text.lines().count(), 3, "header + one row per rate");
