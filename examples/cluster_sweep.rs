@@ -11,6 +11,10 @@
 //! plane hold p99 down as the cluster saturates, and the `resolves` /
 //! `churn` columns show what the closed loop paid for it.
 //!
+//! Every sweep point runs on the parallel engine (`threads = 0`: one
+//! worker per core); results merge in canonical order, so the tables
+//! match a serial run byte for byte.
+//!
 //! ```bash
 //! cargo run --release --example cluster_sweep
 //! ```
@@ -23,11 +27,12 @@ fn main() -> anyhow::Result<()> {
     let rates = [0.5, 1.0, 2.0, 4.0, 6.0];
     let requests = 200;
     let bench = Benchmark::Piqa;
+    let threads = 0; // one worker per core
 
     // Control planes head to head on identical arrival streams.
     let cfg = ClusterConfig::edge_default();
     println!("== control planes (cache 2, load-aware dispatch) ==");
-    let table = control_plane_sweep(&cfg, &rates, requests, bench, 0)?;
+    let table = control_plane_sweep(&cfg, &rates, requests, bench, 0, threads)?;
     println!("{}", table.render());
 
     // Replication effect, under the static-uniform baseline plane.
@@ -39,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         cfg.cache_capacity = cache;
         cfg.dispatch = dispatch;
         println!("== {label} ==");
-        let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, 0)?;
+        let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, 0, threads)?;
         println!("{}", sweep.summary.render());
         // Tail behaviour at the highest rate.
         let last = sweep.points.last().unwrap();

@@ -2,7 +2,7 @@
 //! optimization, and replica dispatch — the hot paths behind
 //! `repro cluster`.
 
-use wdmoe::cluster::{ClusterSim, Dispatcher, Placement};
+use wdmoe::cluster::{ClusterSim, Placement};
 use wdmoe::config::{ClusterConfig, DispatchKind};
 use wdmoe::util::bench::{bench, default_budget};
 use wdmoe::workload::{ArrivalProcess, Benchmark};
@@ -11,6 +11,8 @@ fn main() {
     let budget = default_budget();
 
     // Full DES run: 60 requests x 8 blocks through a 2-cell cluster.
+    // One simulator per arm, reset between runs — what a sweep point
+    // costs without construction, and with the allocation-free hot path.
     for (name, dispatch, cache) in [
         ("cluster_run/static_cache1", DispatchKind::Static, 1),
         ("cluster_run/load_aware_cache2", DispatchKind::LoadAware, 2),
@@ -21,8 +23,9 @@ fn main() {
         cfg.cache_capacity = cache;
         let arrivals =
             ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(60, Benchmark::Piqa, 0);
+        let mut sim = ClusterSim::new(&cfg).unwrap();
         bench(name, budget, || {
-            let mut sim = ClusterSim::new(cfg.clone()).unwrap();
+            sim.reset().unwrap();
             sim.run(&arrivals).completed
         });
     }
@@ -34,12 +37,8 @@ fn main() {
         Placement::optimize(16, &t, &load, 4).experts_per_device()
     });
 
-    // Dispatch decision on a backlogged fleet.
-    let d = Dispatcher::new(DispatchKind::LoadAware);
-    let busy: Vec<u64> = (0..16).map(|k| k as u64 * 1_000_000).collect();
-    let online = vec![true; 16];
-    let replicas: Vec<usize> = (0..16).collect();
-    bench("dispatch_choose/16_replicas", budget, || {
-        d.choose(&replicas, 40.0, 500_000, &busy, &t, &online)
-    });
+    // Dispatch decision on a backlogged fleet, and whole-DES throughput
+    // (events/sec) — the shared harnesses `repro bench` serializes.
+    wdmoe::repro::benchsuite::dispatch_harness(budget);
+    wdmoe::repro::benchsuite::des_harness(budget, 60);
 }

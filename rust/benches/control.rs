@@ -1,67 +1,36 @@
 //! Control-plane benchmarks: the P3 re-solve the adaptive plane pays at
 //! every epoch (cold vs warm start) and the full epoch tick (re-solve +
 //! placement re-balance) — the costs that must stay off the DES hot path.
+//!
+//! The workspace-path solver and epoch-tick harnesses are the shared
+//! ones from [`wdmoe::repro::benchsuite`] (same code `repro bench`
+//! serializes into BENCH_cluster.json, so the numbers can't drift);
+//! this binary adds the allocating-wrapper variants alongside for
+//! reference.
 
-use wdmoe::cluster::ClusterSim;
-use wdmoe::config::{ClusterConfig, ControlKind, SystemConfig};
-use wdmoe::control::LinkState;
-use wdmoe::devices::Fleet;
-use wdmoe::optim::{PerBlockLoad, SolverOptions};
+use wdmoe::optim::PerBlockLoad;
+use wdmoe::repro::benchsuite;
 use wdmoe::util::bench::{bench, default_budget};
-use wdmoe::wireless::ChannelSimulator;
 
 fn main() {
     let budget = default_budget();
-    let cfg = SystemConfig::paper_simulation();
-    let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
-    let real = chan.expected_realization();
-    let fleet = Fleet::new(&cfg.devices, 0);
-    let t_comp = fleet.t_comp_nominal(cfg.model.l_comp_flops(cfg.activation_eta));
-    let state = LinkState::new(
-        &cfg.channel,
-        &real,
-        &t_comp,
-        cfg.model.l_comm_bits(cfg.channel.quant_bits),
-    );
-    let opts = SolverOptions::default();
 
-    // Cold solve on the paper's 8-device fleet.
-    let loads = [PerBlockLoad {
-        tokens: (0..8).map(|k| (20 + k * 7) as f64).collect(),
-    }];
+    // Shared harnesses: zero-allocation cold + warm solve, epoch tick.
+    benchsuite::solver_harnesses(budget);
+    benchsuite::epoch_tick_harness(budget);
+
+    // Allocating-wrapper variants of the same solves, for comparison.
+    let state = benchsuite::paper_link_state();
+    let opts = Default::default();
+    let loads = benchsuite::solver_load();
     let cold = state.solve(&loads, &opts, None);
-    bench("control_solve/cold_8dev", budget, || {
+    bench("control_solve/cold_8dev_alloc", budget, || {
         state.solve(&loads, &opts, None).objective
     });
-
-    // Warm solve: previous optimum, loads shifted 10% (the epoch case).
     let perturbed = [PerBlockLoad {
         tokens: loads[0].tokens.iter().map(|q| q * 1.1).collect(),
     }];
-    bench("control_solve/warm_8dev", budget, || {
+    bench("control_solve/warm_8dev_alloc", budget, || {
         state.solve(&perturbed, &opts, Some(&cold.bandwidth)).objective
-    });
-
-    // Full adaptive epoch tick: demand-driven re-solve + placement
-    // re-balance. Demand alternates so hysteresis never suppresses it.
-    let mut ccfg = ClusterConfig::single_cell();
-    ccfg.control = ControlKind::Adaptive;
-    ccfg.model.n_blocks = 4;
-    let mut sim = ClusterSim::new(ccfg).unwrap();
-    let experts: Vec<f64> = (0..8).map(|k| 5.0 + k as f64).collect();
-    let mut flip = false;
-    bench("control_epoch/adaptive_8dev", budget, || {
-        flip = !flip;
-        let demand: Vec<f64> = (0..8)
-            .map(|k| {
-                let base = 10.0 + k as f64 * 5.0;
-                if (k % 2 == 0) == flip {
-                    base * 3.0
-                } else {
-                    base
-                }
-            })
-            .collect();
-        sim.control_epoch(0, &demand, &experts)
     });
 }

@@ -41,6 +41,11 @@ impl Dispatcher {
     /// Returns `None` when no replica is serviceable — online with a
     /// finite service time (a control-plane re-solve can starve an
     /// online device of spectrum entirely).
+    ///
+    /// Runs once per selected expert per block on the DES hot path:
+    /// allocation-free by construction (pure reduction over borrowed
+    /// slices), and inlined into the dispatch loop.
+    #[inline]
     pub fn choose(
         &self,
         replicas: &[usize],

@@ -67,14 +67,22 @@
 //!
 //! ## Entry points
 //!
-//! * [`sim::ClusterSim`] — build from a [`crate::config::ClusterConfig`],
-//!   feed an arrival stream, get a [`sim::ClusterOutcome`] (throughput,
-//!   goodput, drop rate, steady-state p50/p95/p99 latency, per-device
-//!   utilization, control-plane activity).
+//! * [`sim::ClusterSim`] — build from a borrowed
+//!   [`crate::config::ClusterConfig`] (sweeps never clone the config per
+//!   point), feed an arrival stream, get a [`sim::ClusterOutcome`]
+//!   (throughput, goodput, drop rate, steady-state p50/p95/p99 latency,
+//!   per-device utilization, control-plane activity, events processed);
+//!   [`sim::ClusterSim::reset`] restores the just-built state so one
+//!   simulator serves many runs.
 //! * [`sim::arrival_rate_sweep`] — the `repro cluster` CLI command: sweep
 //!   Poisson arrival rates and emit the summary + utilization CSVs.
 //! * [`sim::control_plane_sweep`] — `repro cluster --control compare`:
 //!   the three planes on identical arrival streams in one CSV.
+//!
+//! Both sweeps run their points on the [`crate::exec`] worker pool and
+//! merge in canonical order — parallel output is byte-identical to
+//! serial. The event loop itself is allocation-free per event (per-cell
+//! scratch + the control plane's solver workspace).
 //!
 //! Follow-ons tracked in ROADMAP.md: inter-cell handover, an energy
 //! model.

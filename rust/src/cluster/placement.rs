@@ -62,21 +62,27 @@ impl Placement {
         }
 
         // Projected completion seconds per device if each expert's load
-        // splits evenly across its current replicas.
-        let projected = |p: &Placement| -> Vec<f64> {
-            let mut load = vec![0.0f64; n_devices];
+        // splits evenly across its current replicas. Written into a
+        // reused buffer — the adaptive control plane runs this optimizer
+        // on every epoch tick, so the greedy loop must not churn the
+        // heap (no per-step placement clones either: a rejected trial
+        // replica is popped back off).
+        let project_into = |p: &Placement, out: &mut [f64]| {
+            out.iter_mut().for_each(|x| *x = 0.0);
             for (e, reps) in p.replicas.iter().enumerate() {
                 let share = expected_load[e] / reps.len() as f64;
                 for &k in reps {
-                    load[k] += share * t_per_token[k];
+                    out[k] += share * t_per_token[k];
                 }
             }
-            load
         };
 
+        let mut proj = vec![0.0f64; n_devices];
+        let mut proj_new = vec![0.0f64; n_devices];
+        let mut hosted = p.experts_per_device();
         let free_slots = n_devices * cache_capacity - n_experts;
         for _ in 0..free_slots {
-            let proj = projected(&p);
+            project_into(&p, &mut proj);
             let worst = proj
                 .iter()
                 .enumerate()
@@ -96,7 +102,6 @@ impl Placement {
             };
             // Best target: free cache slot, not already a replica, and
             // the lowest projected completion after taking its share.
-            let hosted = p.experts_per_device();
             let new_reps = (p.replicas[expert].len() + 1) as f64;
             let target = (0..n_devices)
                 .filter(|&k| hosted[k] < cache_capacity && !p.replicas[expert].contains(&k))
@@ -107,15 +112,15 @@ impl Placement {
                 });
             let Some(target) = target else { break };
             // Only accept strict improvement of the bottleneck.
-            let mut cand = p.clone();
-            cand.replicas[expert].push(target);
-            let new_proj = projected(&cand);
-            let new_max = new_proj.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            p.replicas[expert].push(target);
+            project_into(&p, &mut proj_new);
+            let new_max = proj_new.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
             let old_max = proj.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
             if new_max >= old_max {
+                p.replicas[expert].pop();
                 break;
             }
-            p = cand;
+            hosted[target] += 1;
         }
         p
     }

@@ -27,11 +27,23 @@
 //! that expert's token group (never all of a block's groups) — so
 //! overload degrades goodput and shed rate measurably instead of growing
 //! queues without bound.
+//!
+//! ## Hot-path discipline
+//!
+//! The event loop is allocation-free per event: every per-block vector
+//! (expert latency estimates, liveness, token counts, tentative queue
+//! state, admitted placements, replica candidates) and the per-tick
+//! demand vector live in per-cell scratch reused across events, and the
+//! control plane's epoch re-solve runs through its own
+//! [`crate::optim::SolverWorkspace`]. Construction borrows the
+//! [`ClusterConfig`] — sweeps never clone the config per point — and
+//! [`ClusterSim::reset`] restores the just-built state so one simulator
+//! can serve many runs.
 
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 use super::placement::Placement;
-use crate::config::{ClusterConfig, ControlKind, DropPolicy};
+use crate::config::{ClusterConfig, ControlKind, DropPolicy, PolicyConfig};
 use crate::control::{make_plane, ControlOptions, ControlPlane, LinkState};
 use crate::devices::Fleet;
 use crate::latency::TokenLatencies;
@@ -58,13 +70,20 @@ struct Cell {
     served_tokens: Vec<f64>,
     /// Tokens dispatched per expert since the last control epoch.
     expert_tokens: Vec<f64>,
-    /// Reusable per-block staging state (no per-block allocation): queue
-    /// instants as groups are tentatively placed, the admitted
+    /// Reusable per-block staging state (no per-block allocation):
+    /// per-expert latency estimate fed to the selection policy, expert
+    /// liveness, the selection's per-expert token counts, queue instants
+    /// as groups are tentatively placed, the admitted
     /// `(expert, device, tokens, service seconds)` placements, and the
     /// under-queue-bound replica candidates.
+    est: TokenLatencies,
+    expert_online: Vec<bool>,
+    counts: Vec<f64>,
     scratch_busy: Vec<Nanos>,
     placed: Vec<(usize, usize, f64, f64)>,
     cand: Vec<usize>,
+    /// Reusable per-tick demand vector (backlog → tokens).
+    demand: Vec<f64>,
 }
 
 enum Event {
@@ -107,6 +126,9 @@ pub struct ClusterOutcome {
     /// Requests still in flight when the event queue drained (0 by
     /// construction for finite arrival streams — the conservation law).
     pub in_flight: usize,
+    /// Discrete events processed (arrivals + block completions + control
+    /// ticks) — the numerator of the DES-throughput benchmark.
+    pub events: usize,
     /// Virtual time of the last event.
     pub makespan_s: f64,
     /// End-to-end request latency (ms), recorded in completion order.
@@ -192,22 +214,45 @@ impl ClusterOutcome {
     }
 }
 
-/// The simulator. Build fresh per run: [`ClusterSim::run`] consumes the
-/// arrival stream once and leaves queues drained.
+/// The scalar knobs the event loop reads per event, copied out of the
+/// borrowed [`ClusterConfig`] at construction so sweeps never clone the
+/// full config (cell/device lists stay with the caller).
+#[derive(Debug, Clone, Copy)]
+struct SimParams {
+    n_blocks: usize,
+    n_experts: usize,
+    top_k: usize,
+    vocab: usize,
+    queue_limit_s: f64,
+    drop_policy: DropPolicy,
+    warmup_frac: f64,
+    gate_sharpness: f64,
+    gate_bias: f64,
+    seed: u64,
+}
+
+/// The simulator. Construction borrows the config; [`ClusterSim::run`]
+/// consumes one arrival stream and leaves queues drained —
+/// [`ClusterSim::reset`] restores the just-built state for the next run.
 pub struct ClusterSim {
-    cfg: ClusterConfig,
-    cells: Vec<Cell>,
+    params: SimParams,
+    policy_cfg: PolicyConfig,
+    control: ControlKind,
+    copts: ControlOptions,
+    cache_capacity: usize,
     dispatcher: Dispatcher,
+    /// Frozen per-cell link contexts — the rebuild template for
+    /// [`Self::reset`].
+    states: Vec<LinkState>,
+    cells: Vec<Cell>,
 }
 
 impl ClusterSim {
-    pub fn new(cfg: ClusterConfig) -> anyhow::Result<Self> {
+    pub fn new(cfg: &ClusterConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let n_experts = cfg.model.n_experts;
         let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
-        let mut cells = Vec::with_capacity(cfg.cells.len());
+        let mut states = Vec::with_capacity(cfg.cells.len());
         for (ci, cell_cfg) in cfg.cells.iter().enumerate() {
-            let n_dev = cell_cfg.n_devices();
             let chan = ChannelSimulator::new(
                 &cell_cfg.channel,
                 &cell_cfg.devices,
@@ -216,52 +261,93 @@ impl ClusterSim {
             let realization = chan.expected_realization();
             let fleet = Fleet::new(&cell_cfg.devices, cfg.seed);
             let t_comp = fleet.t_comp_nominal(l_comp);
-            let state = LinkState::new(
+            states.push(LinkState::new(
                 &cell_cfg.channel,
                 &realization,
                 &t_comp,
                 cfg.model.l_comm_bits(cell_cfg.channel.quant_bits),
-            );
+            ));
+        }
+        let mut sim = Self {
+            params: SimParams {
+                n_blocks: cfg.model.n_blocks,
+                n_experts: cfg.model.n_experts,
+                top_k: cfg.model.top_k,
+                vocab: cfg.model.vocab,
+                queue_limit_s: cfg.queue_limit_s,
+                drop_policy: cfg.drop_policy,
+                warmup_frac: cfg.warmup_frac,
+                gate_sharpness: cfg.gate_sharpness,
+                gate_bias: cfg.gate_bias,
+                seed: cfg.seed,
+            },
+            policy_cfg: cfg.policy.clone(),
+            control: cfg.control,
+            copts: ControlOptions {
+                epoch_s: cfg.control_epoch_s,
+                hysteresis: cfg.control_hysteresis,
+                solver: Default::default(),
+            },
+            cache_capacity: cfg.cache_capacity,
+            dispatcher: Dispatcher::new(cfg.dispatch),
+            states,
+            cells: Vec::new(),
+        };
+        sim.build_cells()?;
+        Ok(sim)
+    }
+
+    /// (Re)construct every cell from the stored link contexts and seeds.
+    fn build_cells(&mut self) -> anyhow::Result<()> {
+        let n_experts = self.params.n_experts;
+        self.cells.clear();
+        for (ci, state) in self.states.iter().enumerate() {
+            let n_dev = state.n_devices();
             let plane = make_plane(
-                cfg.control,
-                state,
+                self.control,
+                state.clone(),
                 n_experts,
-                cfg.cache_capacity,
-                ControlOptions {
-                    epoch_s: cfg.control_epoch_s,
-                    hysteresis: cfg.control_hysteresis,
-                    solver: Default::default(),
-                },
+                self.cache_capacity,
+                self.copts.clone(),
             );
             plane.placement().validate()?;
-            cells.push(Cell {
+            self.cells.push(Cell {
                 plane,
                 policy: make_policy(
-                    cfg.policy.selection,
-                    &cfg.policy,
+                    self.policy_cfg.selection,
+                    &self.policy_cfg,
                     n_experts,
-                    cfg.seed.wrapping_add(ci as u64),
+                    self.params.seed.wrapping_add(ci as u64),
                 ),
                 gates: WorkloadGen::new(
-                    cfg.seed.wrapping_add(0xce11).wrapping_add(ci as u64),
-                    cfg.model.vocab,
+                    self.params.seed.wrapping_add(0xce11).wrapping_add(ci as u64),
+                    self.params.vocab,
                 ),
                 busy_until: vec![0; n_dev],
                 busy: vec![Utilization::default(); n_dev],
                 online: vec![true; n_dev],
                 served_tokens: vec![0.0; n_dev],
                 expert_tokens: vec![0.0; n_experts],
+                est: TokenLatencies {
+                    per_token: Vec::with_capacity(n_experts),
+                },
+                expert_online: Vec::with_capacity(n_experts),
+                counts: Vec::with_capacity(n_experts),
                 scratch_busy: vec![0; n_dev],
                 placed: Vec::with_capacity(n_experts),
                 cand: Vec::with_capacity(n_dev),
+                demand: Vec::with_capacity(n_dev),
             });
         }
-        let dispatcher = Dispatcher::new(cfg.dispatch);
-        Ok(Self {
-            cfg,
-            cells,
-            dispatcher,
-        })
+        Ok(())
+    }
+
+    /// Restore the just-constructed state (fresh planes, policies, gate
+    /// streams, empty queues) without touching the config. A reset
+    /// simulator behaves identically to a newly built one on the same
+    /// config, so sweeps and benches can reuse one instance across runs.
+    pub fn reset(&mut self) -> anyhow::Result<()> {
+        self.build_cells()
     }
 
     /// Expert placement of one cell (inspection / tests).
@@ -300,17 +386,18 @@ impl ClusterSim {
     /// dispatches. Work already queued on it still completes. Adaptive
     /// planes re-solve the allocation for the survivors immediately.
     pub fn set_device_online(&mut self, cell: usize, device: usize, online: bool) {
-        if self.cells[cell].online[device] == online {
+        let c = &mut self.cells[cell];
+        if c.online[device] == online {
             return; // idempotent: a no-op change must not trigger a re-solve
         }
-        self.cells[cell].online[device] = online;
-        let mask = self.cells[cell].online.clone();
-        self.cells[cell].plane.on_topology_change(&mask);
+        c.online[device] = online;
+        // Split borrow: the plane reads the mask it does not own.
+        c.plane.on_topology_change(&c.online);
     }
 
     /// Run the arrival stream to drain and report.
     pub fn run(&mut self, arrivals: &[crate::workload::Arrival]) -> ClusterOutcome {
-        let n_blocks = self.cfg.model.n_blocks;
+        let n_blocks = self.params.n_blocks;
         let n_cells = self.cells.len();
         let mut queue: EventQueue<Event> = EventQueue::new(VirtualClock::new());
         let mut states: Vec<ReqState> = arrivals
@@ -343,13 +430,15 @@ impl ClusterSim {
         let mut completed_tokens = 0u64;
         let mut dropped_tokens = 0u64;
         let mut shed_tokens = 0.0f64;
-        let mut latency_ms = SteadyState::new(self.cfg.warmup_frac);
+        let mut events = 0usize;
+        let mut latency_ms = SteadyState::new(self.params.warmup_frac);
         // Makespan is the last *work* event: a control tick pending when
         // the final request completes must not pad the horizon (it would
         // bias throughput/utilization against adaptive planes).
         let mut last_work_ns: Nanos = 0;
 
         while let Some((now, ev)) = queue.pop() {
+            events += 1;
             let i = match ev {
                 Event::ControlTick(ci) => {
                     // A tick popping after the last request completed
@@ -411,6 +500,7 @@ impl ClusterSim {
             dropped_tokens,
             shed_tokens,
             in_flight: arrived - completed - dropped,
+            events,
             makespan_s,
             latency_ms,
             utilization,
@@ -419,15 +509,16 @@ impl ClusterSim {
     }
 
     /// Epoch boundary for one cell: convert queue backlog to a token
-    /// demand vector and hand it — with the per-expert counts since the
-    /// last tick — to the control plane.
+    /// demand vector (in the cell's reused scratch) and hand it — with
+    /// the per-expert counts since the last tick — to the control plane.
     fn control_tick(&mut self, ci: usize, now: Nanos) {
         let cell = &mut self.cells[ci];
         let n_dev = cell.busy_until.len();
-        let mut demand = vec![0.0f64; n_dev];
+        cell.demand.clear();
+        cell.demand.resize(n_dev, 0.0);
         {
             let t = cell.plane.t_per_token();
-            for (k, d) in demand.iter_mut().enumerate() {
+            for k in 0..n_dev {
                 let backlog_s = secs_from_nanos(cell.busy_until[k].saturating_sub(now));
                 let backlog_tokens = if t[k].is_finite() && t[k] > 0.0 {
                     backlog_s / t[k]
@@ -441,10 +532,10 @@ impl ClusterSim {
                 // the re-solve overshoot; the max never double-counts,
                 // and recent dispatches keep a device's share alive even
                 // when its queue happens to be drained.
-                *d = backlog_tokens.max(cell.served_tokens[k]);
+                cell.demand[k] = backlog_tokens.max(cell.served_tokens[k]);
             }
         }
-        cell.plane.on_epoch(&demand, &cell.expert_tokens);
+        cell.plane.on_epoch(&cell.demand, &cell.expert_tokens);
         for v in &mut cell.served_tokens {
             *v = 0.0;
         }
@@ -457,41 +548,46 @@ impl ClusterSim {
     /// instant (the Eq. (11) barrier over its token groups), or a drop
     /// marker when admission control rejects the request.
     fn start_block(&mut self, st: &ReqState, now: Nanos) -> BlockResult {
-        let n_experts = self.cfg.model.n_experts;
-        let queue_limit_s = self.cfg.queue_limit_s;
-        let drop_policy = self.cfg.drop_policy;
+        let n_experts = self.params.n_experts;
+        let queue_limit_s = self.params.queue_limit_s;
+        let drop_policy = self.params.drop_policy;
+        let top_k = self.params.top_k;
+        let gate_sharpness = self.params.gate_sharpness;
+        let gate_bias = self.params.gate_bias;
         let cell = &mut self.cells[st.cell];
         let gate = GateWeights::new(cell.gates.synthetic_gate_weights_biased(
             st.tokens,
             n_experts,
-            self.cfg.gate_sharpness,
-            self.cfg.gate_bias,
+            gate_sharpness,
+            gate_bias,
         ));
         // Service times and placement come from the control plane *now*:
         // an epoch re-solve between blocks redirects this dispatch.
         let t_per_token = cell.plane.t_per_token();
         let placement = cell.plane.placement();
-        // Per-expert latency estimate (best online replica) and liveness.
-        let mut est = vec![f64::INFINITY; n_experts];
-        let mut online = vec![false; n_experts];
+        // Per-expert latency estimate (best online replica) and liveness,
+        // in the cell's reused scratch.
+        cell.est.per_token.clear();
+        cell.est.per_token.resize(n_experts, f64::INFINITY);
+        cell.expert_online.clear();
+        cell.expert_online.resize(n_experts, false);
         for e in 0..n_experts {
             for &k in placement.replicas(e) {
                 if cell.online[k] {
-                    online[e] = true;
-                    if t_per_token[k] < est[e] {
-                        est[e] = t_per_token[k];
+                    cell.expert_online[e] = true;
+                    if t_per_token[k] < cell.est.per_token[e] {
+                        cell.est.per_token[e] = t_per_token[k];
                     }
                 }
             }
         }
-        let lat = TokenLatencies { per_token: est };
         let ctx = SelectionContext {
-            latencies: &lat,
-            top_k: self.cfg.model.top_k,
-            online: &online,
+            latencies: &cell.est,
+            top_k,
+            online: &cell.expert_online,
         };
         let sel = cell.policy.select(&gate, &ctx);
-        let counts = sel.tokens_per_device();
+        sel.tokens_per_device_into(&mut cell.counts);
 
         let mut block_end = now;
         let mut shed = 0.0f64;
@@ -505,7 +601,8 @@ impl ClusterSim {
         // whichever expert index trips the bound.
         cell.scratch_busy.copy_from_slice(&cell.busy_until);
         cell.placed.clear();
-        for (e, &q) in counts.iter().enumerate() {
+        for e in 0..n_experts {
+            let q = cell.counts[e];
             if q <= 0.0 {
                 continue;
             }
@@ -654,15 +751,39 @@ pub struct SweepResult {
 /// Sweep Poisson arrival rate over a fresh simulator per point and
 /// tabulate throughput, goodput, drop rate, steady-state latency
 /// percentiles, control-plane activity and per-device utilization.
+///
+/// Points run on the [`crate::exec`] worker pool (`threads` workers,
+/// 0 = one per core, 1 = serial): each point is a pure function of
+/// `(config, rate, derived seed)` and results are merged in rate order,
+/// so the tables are byte-identical at any thread count.
 pub fn arrival_rate_sweep(
     cfg: &ClusterConfig,
     rates_rps: &[f64],
     requests: usize,
     bench: Benchmark,
     seed: u64,
+    threads: usize,
 ) -> anyhow::Result<SweepResult> {
     cfg.validate()?;
     anyhow::ensure!(requests > 0, "need at least one request");
+    let outcomes = crate::exec::map_indexed(
+        rates_rps.len(),
+        threads,
+        |ri| -> anyhow::Result<SweepPoint> {
+            let rate = rates_rps[ri];
+            let mut sim = ClusterSim::new(cfg)?;
+            let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
+                requests,
+                bench,
+                seed.wrapping_add(ri as u64 * 7919),
+            );
+            Ok(SweepPoint {
+                rate_rps: rate,
+                outcome: sim.run(&arrivals),
+            })
+        },
+    );
+
     let mut summary = Table::new(
         &format!("Cluster arrival-rate sweep — {}", bench.name()),
         &[
@@ -692,14 +813,10 @@ pub fn arrival_rate_sweep(
     util_t.precision = 3;
 
     let mut points = Vec::with_capacity(rates_rps.len());
-    for (ri, &rate) in rates_rps.iter().enumerate() {
-        let mut sim = ClusterSim::new(cfg.clone())?;
-        let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
-            requests,
-            bench,
-            seed.wrapping_add(ri as u64 * 7919),
-        );
-        let out = sim.run(&arrivals);
+    for point in outcomes {
+        let point = point?;
+        let rate = point.rate_rps;
+        let out = &point.outcome;
         let s = out.steady_latency();
         let util = out.flat_utilization();
         let util_mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
@@ -724,10 +841,7 @@ pub fn arrival_rate_sweep(
             ],
         );
         util_t.row(&format!("rate={rate}"), util);
-        points.push(SweepPoint {
-            rate_rps: rate,
-            outcome: out,
-        });
+        points.push(point);
     }
     Ok(SweepResult {
         points,
@@ -740,15 +854,44 @@ pub fn arrival_rate_sweep(
 /// per (plane, rate) row, throughput/goodput/drops, latency percentiles
 /// and control activity. The same arrival streams are replayed for every
 /// plane, so rows differ only by control behaviour.
+///
+/// `threads` as in [`arrival_rate_sweep`]: all plane × rate points run
+/// concurrently; rows are emitted in the canonical plane-major order.
 pub fn control_plane_sweep(
     cfg: &ClusterConfig,
     rates_rps: &[f64],
     requests: usize,
     bench: Benchmark,
     seed: u64,
+    threads: usize,
 ) -> anyhow::Result<Table> {
     cfg.validate()?;
     anyhow::ensure!(requests > 0, "need at least one request");
+    let kinds = ControlKind::all();
+    // One config clone per plane — never per point.
+    let variants: Vec<ClusterConfig> = kinds
+        .iter()
+        .map(|&kind| {
+            let mut c = cfg.clone();
+            c.control = kind;
+            c
+        })
+        .collect();
+    let n_points = variants.len() * rates_rps.len();
+    let outcomes = crate::exec::map_indexed(
+        n_points,
+        threads,
+        |i| -> anyhow::Result<ClusterOutcome> {
+            let (ki, ri) = (i / rates_rps.len(), i % rates_rps.len());
+            let mut sim = ClusterSim::new(&variants[ki])?;
+            let arrivals = ArrivalProcess::Poisson {
+                rate_rps: rates_rps[ri],
+            }
+            .generate(requests, bench, seed.wrapping_add(ri as u64 * 7919));
+            Ok(sim.run(&arrivals))
+        },
+    );
+
     let mut table = Table::new(
         &format!("Cluster control-plane comparison — {}", bench.name()),
         &[
@@ -766,36 +909,28 @@ pub fn control_plane_sweep(
         ],
     );
     table.precision = 3;
-    for kind in ControlKind::all() {
-        let mut c = cfg.clone();
-        c.control = kind;
-        for (ri, &rate) in rates_rps.iter().enumerate() {
-            let mut sim = ClusterSim::new(c.clone())?;
-            let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
-                requests,
-                bench,
-                seed.wrapping_add(ri as u64 * 7919),
-            );
-            let out = sim.run(&arrivals);
-            let s = out.steady_latency();
-            let ctl = out.control_total();
-            table.row(
-                &format!("{}@rate={rate}", kind.as_str()),
-                vec![
-                    rate,
-                    out.throughput_rps(),
-                    out.goodput_tps(),
-                    out.drop_rate(),
-                    out.shed_tps(),
-                    s.percentile(50.0),
-                    s.percentile(95.0),
-                    s.percentile(99.0),
-                    ctl.resolves as f64,
-                    ctl.placement_updates as f64,
-                    ctl.churn_frac,
-                ],
-            );
-        }
+    for (i, out) in outcomes.into_iter().enumerate() {
+        let out = out?;
+        let kind = kinds[i / rates_rps.len()];
+        let rate = rates_rps[i % rates_rps.len()];
+        let s = out.steady_latency();
+        let ctl = out.control_total();
+        table.row(
+            &format!("{}@rate={rate}", kind.as_str()),
+            vec![
+                rate,
+                out.throughput_rps(),
+                out.goodput_tps(),
+                out.drop_rate(),
+                out.shed_tps(),
+                s.percentile(50.0),
+                s.percentile(95.0),
+                s.percentile(99.0),
+                ctl.resolves as f64,
+                ctl.placement_updates as f64,
+                ctl.churn_frac,
+            ],
+        );
     }
     Ok(table)
 }
@@ -812,7 +947,7 @@ mod tests {
     }
 
     fn run_with(cfg: ClusterConfig, rate: f64, n: usize, seed: u64) -> ClusterOutcome {
-        let mut sim = ClusterSim::new(cfg).unwrap();
+        let mut sim = ClusterSim::new(&cfg).unwrap();
         let arrivals =
             ArrivalProcess::Poisson { rate_rps: rate }.generate(n, Benchmark::Piqa, seed);
         sim.run(&arrivals)
@@ -832,6 +967,8 @@ mod tests {
         assert!(out.goodput_tps() > 0.0);
         assert_eq!(out.drop_rate(), 0.0);
         assert_eq!(out.latency_ms.total_count(), 40);
+        // Every arrival and every block completion is an event.
+        assert!(out.events >= 40 * (1 + 8));
     }
 
     #[test]
@@ -852,6 +989,32 @@ mod tests {
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
         assert_eq!(a.control, b.control);
+    }
+
+    #[test]
+    fn reset_restores_fresh_behaviour() {
+        // A reused, reset simulator must reproduce a fresh one exactly —
+        // including adaptive-plane state (warm splits, hysteresis,
+        // stats) and policy history.
+        let mut cfg = small_cfg();
+        cfg.control = ControlKind::Adaptive;
+        cfg.cache_capacity = 2;
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 6.0 }.generate(40, Benchmark::Piqa, 2);
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let first = sim.run(&arrivals);
+        sim.reset().unwrap();
+        let second = sim.run(&arrivals);
+        let fresh = ClusterSim::new(&cfg).unwrap().run(&arrivals);
+        assert_eq!(second.makespan_s, fresh.makespan_s);
+        assert_eq!(second.makespan_s, first.makespan_s);
+        assert_eq!(
+            second.latency_ms.steady_values(),
+            fresh.latency_ms.steady_values()
+        );
+        assert_eq!(second.utilization, fresh.utilization);
+        assert_eq!(second.control, fresh.control);
+        assert_eq!(second.events, fresh.events);
     }
 
     #[test]
@@ -884,7 +1047,7 @@ mod tests {
     fn multi_cell_spreads_requests() {
         let mut cfg = ClusterConfig::edge_default();
         cfg.model.n_blocks = 4;
-        let mut sim = ClusterSim::new(cfg).unwrap();
+        let mut sim = ClusterSim::new(&cfg).unwrap();
         let arrivals =
             ArrivalProcess::Poisson { rate_rps: 2.0 }.generate(30, Benchmark::Piqa, 0);
         let out = sim.run(&arrivals);
@@ -901,7 +1064,7 @@ mod tests {
         let mut cfg = small_cfg();
         cfg.cache_capacity = 2;
         cfg.dispatch = DispatchKind::LoadAware;
-        let mut sim = ClusterSim::new(cfg).unwrap();
+        let mut sim = ClusterSim::new(&cfg).unwrap();
         // Find a device hosting a replicated expert and kill it.
         sim.set_device_online(0, 7, false);
         let arrivals =
@@ -913,9 +1076,9 @@ mod tests {
 
     #[test]
     fn static_planes_never_tick_and_report_frozen_split() {
-        let mut sim = ClusterSim::new(small_cfg()).unwrap();
-        let share =
-            sim.cfg.cells[0].channel.total_bandwidth_hz / sim.cfg.cells[0].n_devices() as f64;
+        let cfg = small_cfg();
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let share = cfg.cells[0].channel.total_bandwidth_hz / cfg.cells[0].n_devices() as f64;
         for &b in sim.bandwidth(0) {
             assert!((b - share).abs() < 1e-6);
         }
@@ -970,7 +1133,7 @@ mod tests {
     #[test]
     fn sweep_emits_consistent_tables() {
         let cfg = small_cfg();
-        let r = arrival_rate_sweep(&cfg, &[0.5, 2.0], 24, Benchmark::Piqa, 0).unwrap();
+        let r = arrival_rate_sweep(&cfg, &[0.5, 2.0], 24, Benchmark::Piqa, 0, 1).unwrap();
         assert_eq!(r.points.len(), 2);
         assert_eq!(r.summary.rows.len(), 2);
         assert_eq!(r.utilization.rows.len(), 2);
@@ -987,10 +1150,21 @@ mod tests {
     }
 
     #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        let mut cfg = small_cfg();
+        cfg.model.n_blocks = 4;
+        let rates = [0.5, 2.0, 4.0];
+        let serial = arrival_rate_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 1).unwrap();
+        let parallel = arrival_rate_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 4).unwrap();
+        assert_eq!(serial.summary.to_csv(), parallel.summary.to_csv());
+        assert_eq!(serial.utilization.to_csv(), parallel.utilization.to_csv());
+    }
+
+    #[test]
     fn control_plane_sweep_rows_cover_all_kinds() {
         let mut cfg = small_cfg();
         cfg.model.n_blocks = 4;
-        let t = control_plane_sweep(&cfg, &[1.0, 4.0], 16, Benchmark::Piqa, 0).unwrap();
+        let t = control_plane_sweep(&cfg, &[1.0, 4.0], 16, Benchmark::Piqa, 0, 1).unwrap();
         assert_eq!(t.rows.len(), 3 * 2);
         for kind in ControlKind::all() {
             assert!(

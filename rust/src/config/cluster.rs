@@ -296,6 +296,12 @@ impl ClusterConfig {
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
+        // The control/admission knobs postdate the first released config
+        // format: files written before they existed (or hand-trimmed
+        // ones) load with the documented defaults instead of erroring.
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            j.opt(key).map_or(Ok(default), |v| v.as_f64())
+        };
         Ok(Self {
             model: ModelDims::from_json(j.get("model")?)?,
             cells: j
@@ -307,11 +313,17 @@ impl ClusterConfig {
             policy: PolicyConfig::from_json(j.get("policy")?)?,
             cache_capacity: j.get("cache_capacity")?.as_usize()?,
             dispatch: DispatchKind::parse(j.get("dispatch")?.as_str()?)?,
-            control: ControlKind::parse(j.get("control")?.as_str()?)?,
-            control_epoch_s: j.get("control_epoch_s")?.as_f64()?,
-            control_hysteresis: j.get("control_hysteresis")?.as_f64()?,
-            queue_limit_s: j.get("queue_limit_s")?.as_f64()?,
-            drop_policy: DropPolicy::parse(j.get("drop_policy")?.as_str()?)?,
+            control: match j.opt("control") {
+                Some(v) => ControlKind::parse(v.as_str()?)?,
+                None => ControlKind::StaticUniform,
+            },
+            control_epoch_s: opt_f64("control_epoch_s", 0.25)?,
+            control_hysteresis: opt_f64("control_hysteresis", 0.05)?,
+            queue_limit_s: opt_f64("queue_limit_s", 0.0)?,
+            drop_policy: match j.opt("drop_policy") {
+                Some(v) => DropPolicy::parse(v.as_str()?)?,
+                None => DropPolicy::DropRequest,
+            },
             warmup_frac: j.get("warmup_frac")?.as_f64()?,
             gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
             gate_bias: j.get("gate_bias")?.as_f64()?,
@@ -461,6 +473,34 @@ mod tests {
         }
         assert_eq!(DropPolicy::parse("shed").unwrap(), DropPolicy::ShedTokens);
         assert!(DropPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn json_without_control_fields_loads_defaults() {
+        // Configs written before the control/admission knobs existed
+        // must still load, with the documented defaults.
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.control = ControlKind::Adaptive;
+        cfg.queue_limit_s = 3.0;
+        let Json::Obj(mut m) = cfg.to_json() else {
+            panic!("config serializes to an object")
+        };
+        for key in [
+            "control",
+            "control_epoch_s",
+            "control_hysteresis",
+            "queue_limit_s",
+            "drop_policy",
+        ] {
+            m.remove(key);
+        }
+        let back = ClusterConfig::from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.control, ControlKind::StaticUniform);
+        assert_eq!(back.control_epoch_s, 0.25);
+        assert_eq!(back.control_hysteresis, 0.05);
+        assert_eq!(back.queue_limit_s, 0.0);
+        assert_eq!(back.drop_policy, DropPolicy::DropRequest);
+        back.validate().unwrap();
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //!   even split (the PR-1 cluster baseline and the paper's "Mixtral-based"
 //!   allocation); `StaticOptimal` freezes a one-shot P3 pre-solve under an
 //!   equal-expected-load assumption. Both still serve per-block solves to
-//!   the coordinator via [`ControlPlane::allocate_for`].
+//!   the coordinator via [`ControlPlane::allocate_into`].
 //! * [`AdaptivePlane`] — the paper's closed loop inside the DES: on an
 //!   epoch cadence it re-solves P3 from *observed* per-device demand
 //!   (queue backlog + recently served tokens), warm-starting from the
@@ -13,12 +13,17 @@
 //!   expert placement from observed per-expert token counts (replica
 //!   autoscaling). A hysteresis knob suppresses re-solves when the demand
 //!   share barely moved.
+//!
+//! Epoch ticks and per-block solves run inside the DES event loop, so
+//! each plane owns a [`SolverWorkspace`] plus staging buffers: after
+//! construction, a tick (re-solve + service-time refresh + hysteresis
+//! bookkeeping) performs no heap allocation on the solver path.
 
 use super::state::LinkState;
 use crate::cluster::placement::Placement;
 use crate::config::ControlKind;
 use crate::metrics::ControlStats;
-use crate::optim::{PerBlockLoad, SolverOptions};
+use crate::optim::{PerBlockLoad, SolverOptions, SolverWorkspace};
 
 /// Knobs shared by every plane (only the adaptive one reads them all).
 #[derive(Debug, Clone)]
@@ -61,9 +66,16 @@ pub trait ControlPlane: Send {
     /// Current expert → replica map.
     fn placement(&self) -> &Placement;
     /// One-shot allocation for explicit per-block loads — the
-    /// coordinator's "given the selection Q, solve the upper level" step.
-    /// Does not change the plane's own split.
-    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64>;
+    /// coordinator's "given the selection Q, solve the upper level"
+    /// step. Does not change the plane's own split. The split lands in
+    /// `out` (cleared first) so per-block callers can reuse one buffer.
+    fn allocate_into(&mut self, loads: &[PerBlockLoad], out: &mut Vec<f64>);
+    /// Allocating convenience wrapper around [`Self::allocate_into`].
+    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.allocate_into(loads, &mut out);
+        out
+    }
     /// Re-solve cadence for the DES (None = static plane, no ticks).
     fn epoch_s(&self) -> Option<f64>;
     /// Epoch tick: observed per-device demand (backlog + recently served
@@ -121,10 +133,11 @@ pub struct StaticPlane {
     bandwidth: Vec<f64>,
     t_per_token: Vec<f64>,
     placement: Placement,
-    /// Warm start threaded between [`ControlPlane::allocate_for`] calls
+    /// Warm start threaded between [`ControlPlane::allocate_into`] calls
     /// (consecutive blocks have similar loads).
     warm: Option<Vec<f64>>,
     opts: ControlOptions,
+    ws: SolverWorkspace,
     stats: ControlStats,
 }
 
@@ -156,7 +169,7 @@ impl StaticPlane {
         let t_per_token = state.t_per_token(&bandwidth);
         let placement = initial_placement(n_experts, &t_per_token, cache_capacity);
         // The pre-solve doubles as the warm start for the first
-        // allocate_for call, so the coordinator path gets its cost back.
+        // allocate_into call, so the coordinator path gets its cost back.
         let warm = match kind {
             ControlKind::StaticOptimal => Some(bandwidth.clone()),
             _ => None,
@@ -169,6 +182,7 @@ impl StaticPlane {
             placement,
             warm,
             opts,
+            ws: SolverWorkspace::new(),
             stats,
         }
     }
@@ -191,14 +205,16 @@ impl ControlPlane for StaticPlane {
         &self.placement
     }
 
-    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64> {
+    fn allocate_into(&mut self, loads: &[PerBlockLoad], out: &mut Vec<f64>) {
         match self.kind {
-            ControlKind::StaticUniform => self.state.uniform_split(),
+            ControlKind::StaticUniform => self.state.uniform_split_into(out),
             _ => {
-                let r = self.state.solve(loads, &self.opts.solver, self.warm.as_deref());
+                self.state
+                    .solve_into(loads, &self.opts.solver, self.warm.as_deref(), &mut self.ws, out);
                 self.stats.resolves += 1;
-                self.warm = Some(r.bandwidth.clone());
-                r.bandwidth
+                let warm = self.warm.get_or_insert_with(Vec::new);
+                warm.clear();
+                warm.extend_from_slice(out);
             }
         }
     }
@@ -233,6 +249,20 @@ pub struct AdaptivePlane {
     online: Vec<bool>,
     /// Demand share the last solve used (hysteresis reference).
     last_share: Option<Vec<f64>>,
+    ws: SolverWorkspace,
+    /// Staged single-block demand for [`Self::resolve_staged`] — filled
+    /// in place, never rebuilt.
+    staged: [PerBlockLoad; 1],
+    /// Re-solve output buffer (swapped with `bandwidth`).
+    next_bw: Vec<f64>,
+    /// Online-masked demand of the current epoch.
+    masked: Vec<f64>,
+    /// Demand share of the current epoch.
+    share: Vec<f64>,
+    /// Floored expert load for the placement re-balance.
+    eload: Vec<f64>,
+    /// Finite-capped service times for the placement re-balance.
+    t_safe: Vec<f64>,
     stats: ControlStats,
 }
 
@@ -257,6 +287,13 @@ impl AdaptivePlane {
             opts,
             online,
             last_share: None,
+            ws: SolverWorkspace::new(),
+            staged: [PerBlockLoad { tokens: Vec::new() }],
+            next_bw: Vec::new(),
+            masked: Vec::new(),
+            share: Vec::new(),
+            eload: Vec::new(),
+            t_safe: Vec::new(),
             stats: ControlStats::default(),
         }
     }
@@ -276,13 +313,15 @@ impl AdaptivePlane {
         // keeps the greedy projections NaN-free when a device is offline
         // (infinite service time).
         let efloor = etot * 1e-3;
-        let eload: Vec<f64> = expert_tokens.iter().map(|&q| q.max(efloor)).collect();
-        let t_safe: Vec<f64> = self
-            .t_per_token
-            .iter()
-            .map(|&t| if t.is_finite() { t } else { 1e9 })
-            .collect();
-        let p = Placement::optimize(self.n_experts, &t_safe, &eload, self.cache_capacity);
+        self.eload.clear();
+        self.eload.extend(expert_tokens.iter().map(|&q| q.max(efloor)));
+        self.t_safe.clear();
+        self.t_safe.extend(
+            self.t_per_token
+                .iter()
+                .map(|&t| if t.is_finite() { t } else { 1e9 }),
+        );
+        let p = Placement::optimize(self.n_experts, &self.t_safe, &self.eload, self.cache_capacity);
         if p != self.placement {
             self.stats.placement_updates += 1;
             self.placement = p;
@@ -292,17 +331,21 @@ impl AdaptivePlane {
         }
     }
 
-    /// Re-solve P3 for `load`, warm-started from the current split, and
-    /// refresh the service-time vector.
-    fn resolve(&mut self, load: &[f64]) {
-        let loads = [PerBlockLoad {
-            tokens: load.to_vec(),
-        }];
-        let r = self.state.solve(&loads, &self.opts.solver, Some(&self.bandwidth));
+    /// Re-solve P3 for the demand staged in `self.staged`, warm-started
+    /// from the current split, and refresh the service-time vector. Zero
+    /// heap allocation after warm-up.
+    fn resolve_staged(&mut self) {
+        self.state.solve_into(
+            &self.staged,
+            &self.opts.solver,
+            Some(&self.bandwidth),
+            &mut self.ws,
+            &mut self.next_bw,
+        );
         self.stats.churn_frac +=
-            0.5 * l1(&r.bandwidth, &self.bandwidth) / self.state.total_bandwidth_hz();
-        self.bandwidth = r.bandwidth;
-        self.t_per_token = self.state.t_per_token(&self.bandwidth);
+            0.5 * l1(&self.next_bw, &self.bandwidth) / self.state.total_bandwidth_hz();
+        std::mem::swap(&mut self.bandwidth, &mut self.next_bw);
+        self.state.t_per_token_into(&self.bandwidth, &mut self.t_per_token);
         for (k, &on) in self.online.iter().enumerate() {
             if !on {
                 self.t_per_token[k] = f64::INFINITY;
@@ -329,10 +372,10 @@ impl ControlPlane for AdaptivePlane {
         &self.placement
     }
 
-    fn allocate_for(&mut self, loads: &[PerBlockLoad]) -> Vec<f64> {
-        let r = self.state.solve(loads, &self.opts.solver, Some(&self.bandwidth));
+    fn allocate_into(&mut self, loads: &[PerBlockLoad], out: &mut Vec<f64>) {
+        self.state
+            .solve_into(loads, &self.opts.solver, Some(&self.bandwidth), &mut self.ws, out);
         self.stats.resolves += 1;
-        r.bandwidth
     }
 
     fn epoch_s(&self) -> Option<f64> {
@@ -343,36 +386,48 @@ impl ControlPlane for AdaptivePlane {
         let u = self.state.n_devices();
         debug_assert_eq!(demand_tokens.len(), u);
         debug_assert_eq!(expert_tokens.len(), self.n_experts);
-        let masked: Vec<f64> = demand_tokens
-            .iter()
-            .zip(&self.online)
-            .map(|(&q, &on)| if on { q.max(0.0) } else { 0.0 })
-            .collect();
-        let total: f64 = masked.iter().sum();
+        self.masked.clear();
+        self.masked.extend(
+            demand_tokens
+                .iter()
+                .zip(&self.online)
+                .map(|(&q, &on)| if on { q.max(0.0) } else { 0.0 }),
+        );
+        let total: f64 = self.masked.iter().sum();
         if total <= 0.0 || !total.is_finite() {
             return false; // idle epoch: keep the current split
         }
         // Bandwidth re-solve, damped by hysteresis on the per-device
         // demand share.
-        let share: Vec<f64> = masked.iter().map(|q| q / total).collect();
-        let resolved = match &self.last_share {
-            Some(prev) if l1(&share, prev) < self.opts.hysteresis => false,
-            _ => {
-                // Floor online devices at 1% of the mean demand so a
-                // currently idle device keeps a sliver of spectrum
-                // (finite service time) and can win traffic back next
-                // epoch.
-                let n_on = self.online.iter().filter(|&&on| on).count().max(1);
-                let floor = 0.01 * total / n_on as f64;
-                let load: Vec<f64> = masked
+        self.share.clear();
+        self.share.extend(self.masked.iter().map(|q| q / total));
+        let suppressed = match &self.last_share {
+            Some(prev) => l1(&self.share, prev) < self.opts.hysteresis,
+            None => false,
+        };
+        let resolved = if suppressed {
+            false
+        } else {
+            // Floor online devices at 1% of the mean demand so a
+            // currently idle device keeps a sliver of spectrum (finite
+            // service time) and can win traffic back next epoch.
+            let n_on = self.online.iter().filter(|&&on| on).count().max(1);
+            let floor = 0.01 * total / n_on as f64;
+            self.staged[0].tokens.clear();
+            self.staged[0].tokens.extend(
+                self.masked
                     .iter()
                     .zip(&self.online)
-                    .map(|(&q, &on)| if on { q.max(floor) } else { 0.0 })
-                    .collect();
-                self.resolve(&load);
-                self.last_share = Some(share);
-                true
+                    .map(|(&q, &on)| if on { q.max(floor) } else { 0.0 }),
+            );
+            self.resolve_staged();
+            if self.last_share.is_none() {
+                self.last_share = Some(Vec::with_capacity(u));
             }
+            let last = self.last_share.as_mut().expect("just ensured");
+            last.clear();
+            last.extend_from_slice(&self.share);
+            true
         };
         // Replica autoscaling runs on its own trigger: expert popularity
         // can invert while the per-device demand share stays flat (the
@@ -384,17 +439,18 @@ impl ControlPlane for AdaptivePlane {
 
     fn on_topology_change(&mut self, online: &[bool]) {
         debug_assert_eq!(online.len(), self.state.n_devices());
-        self.online = online.to_vec();
-        let load: Vec<f64> = online
-            .iter()
-            .map(|&on| if on { 1.0 } else { 0.0 })
-            .collect();
-        if load.iter().sum::<f64>() <= 0.0 {
+        self.online.clear();
+        self.online.extend_from_slice(online);
+        if !online.iter().any(|&on| on) {
             return; // everything offline: nothing to allocate for
         }
         // Failover re-solve: spread the spectrum over the survivors now
         // rather than waiting for the next epoch's demand signal.
-        self.resolve(&load);
+        self.staged[0].tokens.clear();
+        self.staged[0]
+            .tokens
+            .extend(online.iter().map(|&on| if on { 1.0 } else { 0.0 }));
+        self.resolve_staged();
         self.last_share = None;
     }
 
@@ -466,6 +522,44 @@ mod tests {
             worst_opt < worst_uni,
             "pre-solve should shrink the slowest device: {worst_opt} vs {worst_uni}"
         );
+    }
+
+    #[test]
+    fn allocate_into_reuses_buffer_across_blocks() {
+        let mut plane = StaticPlane::new(
+            ControlKind::StaticOptimal,
+            link_state(),
+            8,
+            2,
+            ControlOptions::default(),
+        );
+        let mut out = Vec::new();
+        let mut prev = Vec::new();
+        for round in 0..3 {
+            let loads = [PerBlockLoad {
+                tokens: (0..8).map(|k| 10.0 + (k + round) as f64).collect(),
+            }];
+            plane.allocate_into(&loads, &mut out);
+            assert_eq!(out.len(), 8);
+            let sum: f64 = out.iter().sum();
+            let total = plane.state().total_bandwidth_hz();
+            assert!((sum - total).abs() / total < 1e-6, "round {round}: {sum}");
+            // The buffer path must agree with the allocating wrapper on a
+            // fresh identically-constructed plane.
+            let mut plane2 = StaticPlane::new(
+                ControlKind::StaticOptimal,
+                link_state(),
+                8,
+                2,
+                ControlOptions::default(),
+            );
+            let mut expect = Vec::new();
+            for loads_prev in prev.iter() {
+                plane2.allocate_into(loads_prev, &mut expect);
+            }
+            assert_eq!(plane2.allocate_for(&loads), out);
+            prev.push(loads);
+        }
     }
 
     #[test]

@@ -11,7 +11,10 @@
 use crate::config::ChannelConfig;
 use crate::latency::TokenLatencies;
 use crate::optim::solver::DeviceLink;
-use crate::optim::{minimize_sum_max_warm, PerBlockLoad, SolverOptions, SolverResult};
+use crate::optim::{
+    minimize_sum_max_warm, minimize_sum_max_ws, PerBlockLoad, SolveStats, SolverOptions,
+    SolverResult, SolverWorkspace,
+};
 use crate::wireless::bandwidth::AllocationInput;
 use crate::wireless::ChannelRealization;
 
@@ -68,14 +71,31 @@ impl LinkState {
         vec![self.total_bandwidth_hz / u as f64; u]
     }
 
+    /// [`Self::uniform_split`] into a reused buffer (cleared first).
+    pub fn uniform_split_into(&self, out: &mut Vec<f64>) {
+        let u = self.links.len();
+        out.clear();
+        out.resize(u, self.total_bandwidth_hz / u as f64);
+    }
+
     /// Per-device service seconds per token (Eq. (8)) under a split.
     pub fn t_per_token(&self, bandwidth: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.links.len());
+        self.t_per_token_into(bandwidth, &mut out);
+        out
+    }
+
+    /// [`Self::t_per_token`] into a reused buffer (cleared first) — the
+    /// control plane's post-re-solve refresh without an allocation.
+    pub fn t_per_token_into(&self, bandwidth: &[f64], out: &mut Vec<f64>) {
         assert_eq!(bandwidth.len(), self.links.len(), "split arity mismatch");
-        self.links
-            .iter()
-            .zip(bandwidth)
-            .map(|(l, &b)| l.t_per_token(b))
-            .collect()
+        out.clear();
+        out.extend(
+            self.links
+                .iter()
+                .zip(bandwidth)
+                .map(|(l, &b)| l.t_per_token(b)),
+        );
     }
 
     /// Service times under the uniform split — what selection policies
@@ -91,6 +111,10 @@ impl LinkState {
 
     /// Solve P3 for the given loads, optionally warm-starting from a
     /// previous allocation (e.g. the last control epoch's split).
+    ///
+    /// Allocating convenience wrapper; hot paths (epoch ticks, per-block
+    /// solves) should hold a [`SolverWorkspace`] and use
+    /// [`Self::solve_into`].
     pub fn solve(
         &self,
         loads: &[PerBlockLoad],
@@ -98,6 +122,27 @@ impl LinkState {
         warm: Option<&[f64]>,
     ) -> SolverResult {
         minimize_sum_max_warm(&self.links, loads, self.total_bandwidth_hz, opts, warm)
+    }
+
+    /// Allocation-free P3 solve: scratch comes from `ws`, the split lands
+    /// in `out` (cleared first). Same mathematics as [`Self::solve`].
+    pub fn solve_into(
+        &self,
+        loads: &[PerBlockLoad],
+        opts: &SolverOptions,
+        warm: Option<&[f64]>,
+        ws: &mut SolverWorkspace,
+        out: &mut Vec<f64>,
+    ) -> SolveStats {
+        minimize_sum_max_ws(
+            &self.links,
+            loads,
+            self.total_bandwidth_hz,
+            opts,
+            warm,
+            ws,
+            out,
+        )
     }
 }
 

@@ -233,14 +233,16 @@ impl Simulator {
         // Phase 2+3: per-block bandwidth allocation + latency. The BS
         // re-splits spectrum at each block boundary for that block's
         // routing (paper Fig. 4); each block's allocation solves P3 for
-        // its own load vector.
+        // its own load vector. The split lands in one reused buffer (the
+        // plane's workspace keeps the solve itself allocation-free); only
+        // the per-block record below copies it out.
         let mut report = LatencyReport::default();
         let mut wlr_total = 0.0;
         let mut bandwidth_per_block = Vec::with_capacity(blocks);
         let mut mean_bw = vec![0.0; u];
+        let mut bw = Vec::with_capacity(u);
         for (i, sel) in selections.iter().enumerate() {
-            let block_loads = [loads[i].clone()];
-            let bw = plane.allocate_for(&block_loads);
+            plane.allocate_into(std::slice::from_ref(&loads[i]), &mut bw);
             let final_lat = plane.state().token_latencies(&bw);
             let bl = block_latency(&final_lat, &loads[i].tokens);
             // Algorithm-2 feedback: observed per-token latency per device.
@@ -251,7 +253,7 @@ impl Simulator {
                 mean_bw[k] += bw[k] / blocks as f64;
             }
             wlr_total += total_wlr(sel, &final_lat);
-            bandwidth_per_block.push(bw);
+            bandwidth_per_block.push(bw.clone());
             report.push(bl);
             self.channel.advance_block();
         }

@@ -1,0 +1,128 @@
+//! # `exec` — deterministic parallel execution of independent work items
+//!
+//! Large rate × control-plane × seed sweeps are embarrassingly parallel:
+//! every point is a pure function of `(config, index)` with its own
+//! deterministically derived RNG seed. This module runs such points on a
+//! `std::thread::scope` worker pool (no external dependencies — the
+//! offline registry has none) and returns results **in canonical index
+//! order**, whatever order workers finished in. A sweep therefore
+//! produces byte-identical tables at any thread count; `threads == 1`
+//! (or a single item) short-circuits to a plain serial loop on the
+//! calling thread.
+//!
+//! Workers claim indices from a shared atomic counter (work stealing by
+//! construction: a worker stuck on a slow point never blocks the others)
+//! and deposit each result into its index's slot. The pool is scoped, so
+//! borrowed inputs (`&ClusterConfig`, rate slices) flow into workers
+//! without `Arc` or cloning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a thread-count knob: `0` means one worker per available core.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Evaluate `f(0), …, f(n-1)` on up to `threads` workers (0 = auto) and
+/// return the results in index order.
+///
+/// `f` must be a pure function of its index for parallel runs to equal
+/// serial ones — derive any per-point randomness from the index, never
+/// from shared mutable state. Panics in `f` propagate after the scope
+/// joins, exactly like the serial loop.
+pub fn map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = resolve_threads(threads).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .expect("result slot poisoned")
+                .expect("every index claimed exactly once")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_index_order() {
+        // Staggered sleeps force out-of-order completion.
+        let out = map_indexed(8, 4, |i| {
+            std::thread::sleep(std::time::Duration::from_millis((8 - i as u64) * 2));
+            i * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let f = |i: usize| (i as f64).sqrt() * 3.0 + i as f64;
+        let serial = map_indexed(33, 1, f);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(map_indexed(33, threads, f), serial);
+        }
+    }
+
+    #[test]
+    fn every_index_evaluated_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let out = map_indexed(100, 7, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+        assert!(out.iter().enumerate().all(|(i, &v)| i == v));
+    }
+
+    #[test]
+    fn handles_empty_and_single_item() {
+        assert_eq!(map_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(map_indexed(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn non_clone_results_supported() {
+        // Results only need Send, not Clone.
+        struct Big(Vec<u8>);
+        let out = map_indexed(5, 2, |i| Big(vec![i as u8; 3]));
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[4].0, vec![4u8; 3]);
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

@@ -103,11 +103,12 @@ pub fn block_latency(lat: &TokenLatencies, counts: &[f64]) -> BlockLatency {
     }
 }
 
-/// Count tokens per device from a selection mask (J × U, row-major).
-/// `mask[j][k]` true ⇔ token j routed to device k — the `q_{j,k}^i` of the
-/// paper; returns `q_k^i = Σ_j q_{j,k}^i` (Eq. (9)).
-pub fn tokens_per_device(mask: &[Vec<bool>], n_devices: usize) -> Vec<f64> {
-    let mut counts = vec![0.0; n_devices];
+/// [`tokens_per_device`] into a reused buffer (cleared first) — the DES
+/// dispatches one selection per block per in-flight request, so the count
+/// reduction must not allocate.
+pub fn tokens_per_device_into(mask: &[Vec<bool>], n_devices: usize, counts: &mut Vec<f64>) {
+    counts.clear();
+    counts.resize(n_devices, 0.0);
     for row in mask {
         debug_assert_eq!(row.len(), n_devices);
         for (k, &sel) in row.iter().enumerate() {
@@ -116,6 +117,14 @@ pub fn tokens_per_device(mask: &[Vec<bool>], n_devices: usize) -> Vec<f64> {
             }
         }
     }
+}
+
+/// Count tokens per device from a selection mask (J × U, row-major).
+/// `mask[j][k]` true ⇔ token j routed to device k — the `q_{j,k}^i` of the
+/// paper; returns `q_k^i = Σ_j q_{j,k}^i` (Eq. (9)).
+pub fn tokens_per_device(mask: &[Vec<bool>], n_devices: usize) -> Vec<f64> {
+    let mut counts = Vec::new();
+    tokens_per_device_into(mask, n_devices, &mut counts);
     counts
 }
 

@@ -36,6 +36,10 @@
 //!   open-loop arrivals, expert replication under cache-capacity
 //!   constraints, load-aware replica dispatch and per-device FIFO
 //!   queues (`repro cluster`).
+//! * [`exec`] — the deterministic parallel sweep engine: a scoped
+//!   worker pool that runs independent sweep points concurrently and
+//!   merges results in canonical order, so parallel output is
+//!   byte-identical to serial.
 //! * [`runtime`] — PJRT execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text → compile once → execute on the
 //!   request path; python never runs at serving time). The PJRT pieces
@@ -54,6 +58,7 @@ pub mod cluster;
 pub mod config;
 pub mod control;
 pub mod coordinator;
+pub mod exec;
 pub mod util;
 pub mod devices;
 pub mod latency;

@@ -12,11 +12,19 @@
 //!           [--cache N] [--dispatch load_aware|static] [--cells N]
 //!           [--control static_uniform|static_optimal|adaptive|compare]
 //!           [--epoch S] [--queue-limit S] [--drop request|shed]
+//!           [--threads N]
 //!                 multi-cell discrete-event serving sweep: throughput,
 //!                 goodput, drop rate, p50/p95/p99 latency, per-device
 //!                 utilization and control-plane activity vs arrival
 //!                 rate (CSV into --out); `--control compare` runs all
-//!                 three control planes on identical arrival streams
+//!                 three control planes on identical arrival streams;
+//!                 sweep points run on the parallel engine (--threads 0 =
+//!                 one worker per core, 1 = serial; output is
+//!                 byte-identical either way)
+//!   bench [--json] [--smoke]
+//!                 named performance harnesses (solver cold/warm, epoch
+//!                 tick, dispatch, DES events/sec); --json writes
+//!                 BENCH_cluster.json, --smoke uses tiny budgets (CI)
 //!   config [simulation|testbed|serving|cluster]
 //!                 print a preset config as JSON
 //!   fig5 fig6 fig7 fig8 fig10 table1 table2 table3 table4
@@ -54,6 +62,9 @@ COMMANDS:
           [--cache N] [--dispatch load_aware|static] [--cells N]
           [--control static_uniform|static_optimal|adaptive|compare]
           [--epoch S] [--queue-limit S] [--drop request|shed]
+          [--threads N]   (0 = one worker per core; output is
+                           byte-identical at any thread count)
+  bench [--json] [--smoke]
   config [simulation|testbed|serving|cluster]
   fig5 | fig6 | fig7 | fig8 | fig10
   table1 | table2 | table3 | table4
@@ -182,6 +193,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "cluster" => cluster_cmd(&args)?,
+        "bench" => bench_cmd(&args)?,
         "fig5" => drop(repro::fig5(&ctx)?),
         "fig6" => drop(repro::fig6(&ctx)?),
         "fig7" => drop(repro::fig7(&ctx)?),
@@ -258,31 +270,53 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         rates.iter().all(|r| r.is_finite() && *r > 0.0),
         "--rates must be finite and positive, got {rates:?}"
     );
+    // 0 = one worker per core (the default). Output is merged in
+    // canonical point order, so any thread count yields the same CSVs.
+    let threads: usize = rest_opt(&args.rest, "--threads")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
 
     println!(
-        "cluster sweep: {} cells, cache {}, dispatch {}, control {}, {} x {} requests, rates {:?}",
+        "cluster sweep: {} cells, cache {}, dispatch {}, control {}, {} x {} requests, \
+         rates {:?}, {} workers",
         cfg.n_cells(),
         cfg.cache_capacity,
         cfg.dispatch.as_str(),
         if compare { "compare" } else { cfg.control.as_str() },
         bench.name(),
         requests,
-        rates
+        rates,
+        wdmoe::exec::resolve_threads(threads)
     );
     if compare {
-        let table = control_plane_sweep(&cfg, &rates, requests, bench, cfg.seed)?;
+        let table = control_plane_sweep(&cfg, &rates, requests, bench, cfg.seed, threads)?;
         println!("{}", table.render());
         let p = table.write_csv(&args.out)?;
         println!("  -> {}\n", p.display());
         return Ok(());
     }
-    let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, cfg.seed)?;
+    let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, cfg.seed, threads)?;
     println!("{}", sweep.summary.render());
     let p = sweep.summary.write_csv(&args.out)?;
     println!("  -> {}\n", p.display());
     println!("{}", sweep.utilization.render());
     let p = sweep.utilization.write_csv(&args.out)?;
     println!("  -> {}\n", p.display());
+    Ok(())
+}
+
+/// `repro bench` — named performance harnesses with optional JSON
+/// output, seeding the perf trajectory with comparable numbers.
+fn bench_cmd(args: &Args) -> anyhow::Result<()> {
+    let json = args.rest.iter().any(|a| a == "--json");
+    let smoke = args.rest.iter().any(|a| a == "--smoke");
+    let suite = wdmoe::repro::benchsuite::run_suite(smoke);
+    if json {
+        let path = std::path::Path::new("BENCH_cluster.json");
+        std::fs::write(path, suite.to_json().to_string())?;
+        println!("  -> {}", path.display());
+    }
     Ok(())
 }
 

@@ -138,6 +138,11 @@ impl Selection {
         crate::latency::tokens_per_device(&self.mask, self.n_experts())
     }
 
+    /// [`Self::tokens_per_device`] into a reused buffer (cleared first).
+    pub fn tokens_per_device_into(&self, counts: &mut Vec<f64>) {
+        crate::latency::tokens_per_device_into(&self.mask, self.n_experts(), counts)
+    }
+
     /// Invariant check: constraint (16) — every token on ≥1 device, and
     /// weights are zero exactly off the mask.
     pub fn validate(&self) -> Result<(), String> {

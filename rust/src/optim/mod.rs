@@ -20,7 +20,8 @@
 pub mod simplex;
 pub mod solver;
 
-pub use simplex::project_simplex;
+pub use simplex::{project_simplex, project_simplex_in_place};
 pub use solver::{
-    minimize_sum_max, minimize_sum_max_warm, PerBlockLoad, SolverOptions, SolverResult,
+    minimize_sum_max, minimize_sum_max_warm, minimize_sum_max_ws, PerBlockLoad, SolveStats,
+    SolverOptions, SolverResult, SolverWorkspace,
 };

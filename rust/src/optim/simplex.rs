@@ -1,18 +1,21 @@
 //! Euclidean projection onto the scaled probability simplex.
 
-/// Project `v` onto `{x : sum x_i = total, x_i >= 0}` in Euclidean norm.
+/// Project `v` onto `{x : sum x_i = total, x_i >= 0}` in Euclidean norm,
+/// in place. `scratch` holds the sorted copy the threshold search needs —
+/// pass a reused buffer and the projection allocates nothing.
 ///
 /// Duchi, Shalev-Shwartz, Singer, Chandra (ICML'08): sort, find the
 /// largest `rho` with `v_(rho) - theta > 0`, clip. O(U log U).
-pub fn project_simplex(v: &[f64], total: f64) -> Vec<f64> {
+pub fn project_simplex_in_place(v: &mut [f64], total: f64, scratch: &mut Vec<f64>) {
     assert!(total > 0.0, "simplex scale must be positive");
     assert!(!v.is_empty(), "cannot project an empty vector");
-    let mut u: Vec<f64> = v.to_vec();
-    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    scratch.clear();
+    scratch.extend_from_slice(v);
+    scratch.sort_by(|a, b| b.partial_cmp(a).unwrap());
     let mut css = 0.0;
     let mut theta = 0.0;
     let mut rho = 0;
-    for (i, &ui) in u.iter().enumerate() {
+    for (i, &ui) in scratch.iter().enumerate() {
         css += ui;
         let t = (css - total) / (i as f64 + 1.0);
         if ui - t > 0.0 {
@@ -21,7 +24,17 @@ pub fn project_simplex(v: &[f64], total: f64) -> Vec<f64> {
         }
     }
     debug_assert!(rho >= 1);
-    v.iter().map(|&x| (x - theta).max(0.0)).collect()
+    for x in v.iter_mut() {
+        *x = (*x - theta).max(0.0);
+    }
+}
+
+/// Allocating convenience wrapper around [`project_simplex_in_place`].
+pub fn project_simplex(v: &[f64], total: f64) -> Vec<f64> {
+    let mut out = v.to_vec();
+    let mut scratch = Vec::with_capacity(v.len());
+    project_simplex_in_place(&mut out, total, &mut scratch);
+    out
 }
 
 #[cfg(test)]
@@ -64,6 +77,20 @@ mod tests {
     fn single_element() {
         let p = project_simplex(&[42.0], 7.0);
         assert_eq!(p, vec![7.0]);
+    }
+
+    #[test]
+    fn in_place_with_reused_scratch_matches_allocating_path() {
+        let mut scratch = Vec::new();
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..100 {
+            let n = 1 + rng.below(10);
+            let v: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let expect = project_simplex(&v, 3.0);
+            let mut got = v.clone();
+            project_simplex_in_place(&mut got, 3.0, &mut scratch);
+            assert_eq!(got, expect);
+        }
     }
 
     // Property tests (hand-rolled; proptest unavailable offline): random

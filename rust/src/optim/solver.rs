@@ -9,8 +9,21 @@
 //! §IV-B), so `F` is convex; the max is smoothed with an annealed
 //! log-sum-exp and minimised by projected gradient with Armijo
 //! backtracking.
+//!
+//! ## Hot-path entry point
+//!
+//! The adaptive control plane re-solves P3 *inside* the DES event loop on
+//! every epoch tick, and the coordinator solves once per MoE block — so
+//! the solver's inner loops must not touch the heap. All real work runs
+//! through [`minimize_sum_max_ws`], which takes a caller-owned
+//! [`SolverWorkspace`] of reusable scratch buffers and writes the
+//! allocation into a caller-owned output vector: after the first call at a
+//! given fleet size, repeated solves perform **zero heap allocation**.
+//! [`minimize_sum_max`] / [`minimize_sum_max_warm`] remain as convenience
+//! wrappers that allocate a fresh workspace per call (tests, one-shot
+//! tooling).
 
-use super::simplex::project_simplex;
+use super::simplex::project_simplex_in_place;
 use crate::wireless::rate::{shannon_rate, shannon_rate_deriv};
 
 /// Per-device link and compute parameters, fixed during allocation.
@@ -54,6 +67,23 @@ impl DeviceLink {
         let dru = shannon_rate_deriv(b, self.p_up, self.g_up, self.n0);
         -self.l_comm_bits * (drd / (rd * rd) + dru / (ru * ru))
     }
+
+    /// Fused [`Self::t_per_token`] + [`Self::t_per_token_deriv`]: both
+    /// need the same Shannon rates `R_d(b)`, `R_u(b)`, so the Newton
+    /// loops that consume value and slope together pay for the (log-heavy)
+    /// rates once instead of twice.
+    pub fn t_and_deriv(&self, b: f64) -> (f64, f64) {
+        let rd = shannon_rate(b, self.p_down, self.g_down, self.n0);
+        let ru = shannon_rate(b, self.p_up, self.g_up, self.n0);
+        if rd <= 0.0 || ru <= 0.0 {
+            return (f64::INFINITY, f64::NEG_INFINITY);
+        }
+        let t = self.l_comm_bits / rd + self.l_comm_bits / ru + self.t_comp_per_token;
+        let drd = shannon_rate_deriv(b, self.p_down, self.g_down, self.n0);
+        let dru = shannon_rate_deriv(b, self.p_up, self.g_up, self.n0);
+        let dt = -self.l_comm_bits * (drd / (rd * rd) + dru / (ru * ru));
+        (t, dt)
+    }
 }
 
 /// Token counts `q_k^i` assigned to each device in one MoE block.
@@ -82,7 +112,7 @@ impl Default for SolverOptions {
     }
 }
 
-/// Result of a P3 solve.
+/// Result of a P3 solve (owning wrapper used by the convenience API).
 #[derive(Debug, Clone)]
 pub struct SolverResult {
     /// Optimal bandwidth split (Hz), on the simplex.
@@ -93,58 +123,134 @@ pub struct SolverResult {
     pub iterations: usize,
 }
 
-/// Exact objective `sum_i max_k f_k^i(B_k)`.
-pub fn exact_objective(links: &[DeviceLink], loads: &[PerBlockLoad], b: &[f64]) -> f64 {
-    let t: Vec<f64> = links.iter().zip(b).map(|(l, &bk)| l.t_per_token(bk)).collect();
+/// Scalar outcome of a workspace solve — the bandwidth lands in the
+/// caller's output buffer instead.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveStats {
+    /// Exact objective `sum_i max_k f_k^i` at the optimum (seconds).
+    pub objective: f64,
+    /// Projected-gradient iterations actually used (0 on the
+    /// water-filling fast path).
+    pub iterations: usize,
+}
+
+/// Caller-owned scratch buffers for [`minimize_sum_max_ws`].
+///
+/// Every vector the solver's inner loops need lives here and is reused
+/// across calls (buffers grow to the fleet size once and stay). One
+/// workspace serves any sequence of solves — sizes may vary between
+/// calls. Not `Sync`: give each thread of a parallel sweep its own.
+#[derive(Debug, Clone, Default)]
+pub struct SolverWorkspace {
+    /// Per-device service times under the current iterate.
+    t: Vec<f64>,
+    /// Per-device service-time derivatives.
+    dt: Vec<f64>,
+    /// Per-device `f_k` of the block being reduced.
+    fb: Vec<f64>,
+    /// Per-device log-sum-exp terms.
+    ex: Vec<f64>,
+    /// Gradient at the accepted iterate.
+    grad: Vec<f64>,
+    /// Gradient at the trial iterate (swapped in on acceptance).
+    grad_cand: Vec<f64>,
+    /// Current iterate.
+    b: Vec<f64>,
+    /// Trial iterate (swapped in on acceptance).
+    cand: Vec<f64>,
+    /// Best iterate under the exact objective / water-filling solution.
+    best: Vec<f64>,
+    /// The uniform split (comparison guard).
+    uniform: Vec<f64>,
+    /// Water-filling per-device inversion warm points.
+    warm: Vec<f64>,
+    /// Simplex-projection sort scratch.
+    sort: Vec<f64>,
+    /// Devices with positive load (water-filling active set).
+    active: Vec<usize>,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Fill `t[k] = t_per_token(b[k])` and return `sum_i max_k q_k^i t_k`.
+fn exact_objective_into(
+    links: &[DeviceLink],
+    loads: &[PerBlockLoad],
+    b: &[f64],
+    t: &mut Vec<f64>,
+) -> f64 {
+    t.clear();
+    t.extend(links.iter().zip(b).map(|(l, &bk)| l.t_per_token(bk)));
     loads
         .iter()
         .map(|load| {
             load.tokens
                 .iter()
-                .zip(&t)
+                .zip(t.iter())
                 .map(|(&q, &tk)| if q > 0.0 { q * tk } else { 0.0 })
                 .fold(0.0f64, f64::max)
         })
         .sum()
 }
 
-/// Smoothed objective and gradient at temperature `tau`.
-fn smoothed(
+/// Exact objective `sum_i max_k f_k^i(B_k)`.
+pub fn exact_objective(links: &[DeviceLink], loads: &[PerBlockLoad], b: &[f64]) -> f64 {
+    let mut t = Vec::with_capacity(links.len());
+    exact_objective_into(links, loads, b, &mut t)
+}
+
+/// Smoothed objective at temperature `tau`; the gradient lands in `grad`.
+/// All buffers are caller scratch — nothing is allocated here.
+#[allow(clippy::too_many_arguments)]
+fn smoothed_into(
     links: &[DeviceLink],
     loads: &[PerBlockLoad],
     b: &[f64],
     tau: f64,
-) -> (f64, Vec<f64>) {
+    t: &mut Vec<f64>,
+    dt: &mut Vec<f64>,
+    fb: &mut Vec<f64>,
+    ex: &mut Vec<f64>,
+    grad: &mut Vec<f64>,
+) -> f64 {
     let u = links.len();
-    let t: Vec<f64> = links.iter().zip(b).map(|(l, &bk)| l.t_per_token(bk)).collect();
-    let dt: Vec<f64> = links
-        .iter()
-        .zip(b)
-        .map(|(l, &bk)| l.t_per_token_deriv(bk))
-        .collect();
+    t.clear();
+    dt.clear();
+    for (l, &bk) in links.iter().zip(b) {
+        let (tv, dv) = l.t_and_deriv(bk);
+        t.push(tv);
+        dt.push(dv);
+    }
+    grad.clear();
+    grad.resize(u, 0.0);
     let mut obj = 0.0;
-    let mut grad = vec![0.0; u];
     for load in loads {
-        let f: Vec<f64> = load
-            .tokens
-            .iter()
-            .zip(&t)
-            .map(|(&q, &tk)| if q > 0.0 { q * tk } else { 0.0 })
-            .collect();
-        let fmax = f.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        fb.clear();
+        fb.extend(
+            load.tokens
+                .iter()
+                .zip(t.iter())
+                .map(|(&q, &tk)| if q > 0.0 { q * tk } else { 0.0 }),
+        );
+        let fmax = fb.iter().copied().fold(f64::NEG_INFINITY, f64::max);
         if !fmax.is_finite() {
-            return (f64::INFINITY, grad);
+            return f64::INFINITY;
         }
-        let e: Vec<f64> = f.iter().map(|&fk| ((fk - fmax) / tau).exp()).collect();
-        let se: f64 = e.iter().sum();
+        ex.clear();
+        ex.extend(fb.iter().map(|&fk| ((fk - fmax) / tau).exp()));
+        let se: f64 = ex.iter().sum();
         obj += fmax + tau * se.ln();
         for k in 0..u {
             if load.tokens[k] > 0.0 {
-                grad[k] += e[k] / se * load.tokens[k] * dt[k];
+                grad[k] += ex[k] / se * load.tokens[k] * dt[k];
             }
         }
     }
-    (obj, grad)
+    obj
 }
 
 /// Exact single-block min–max solve by water filling.
@@ -155,36 +261,45 @@ fn smoothed(
 /// shifted to the argmax device and reduce the max). We find `λ` by
 /// safeguarded Newton on `h(λ) = Σ_k B_k(λ) − B`, inverting each
 /// `q_k·t_k(B_k) = λ` with an inner Newton (both derivatives are
-/// analytic). ~50× faster than the smoothed projected-gradient path and
+/// analytic, evaluated fused so each step pays for the Shannon rates
+/// once). ~50× faster than the smoothed projected-gradient path and
 /// exact; used by the per-block allocation the coordinator performs.
-fn solve_single_block(
+///
+/// The solution lands in `best`; `warm`/`active` are caller scratch.
+fn solve_single_block_ws(
     links: &[DeviceLink],
     tokens: &[f64],
     total: f64,
     warm_init: Option<&[f64]>,
-) -> Option<SolverResult> {
+    active: &mut Vec<usize>,
+    warm: &mut Vec<f64>,
+    best: &mut Vec<f64>,
+) -> Option<f64> {
     let u = links.len();
-    let active: Vec<usize> = (0..u)
-        .filter(|&k| tokens[k] > 0.0 && links[k].t_comp_per_token.is_finite())
-        .collect();
+    active.clear();
+    active.extend((0..u).filter(|&k| tokens[k] > 0.0 && links[k].t_comp_per_token.is_finite()));
     if active.is_empty() {
         return None;
     }
     // f_k(b) = q_k * t_k(b); floor_k = lim_{b->inf} f_k = q_k * t_comp.
     let f = |k: usize, b: f64| tokens[k] * links[k].t_per_token(b);
-    let fp = |k: usize, b: f64| tokens[k] * links[k].t_per_token_deriv(b);
 
-    // Invert f_k(b) = lambda by safeguarded Newton from a warm start.
-    // f_k is convex decreasing, so Newton iterates approach the root from
-    // below monotonically once underneath it.
-    let invert = |k: usize, lambda: f64, warm: f64| -> f64 {
-        let mut b = warm.clamp(total * 1e-9, total * 16.0);
+    // Invert f_k(b) = lambda by safeguarded Newton from a warm start,
+    // returning the root and f'_k there (the outer loop needs the slope
+    // for its own Newton step — no second evaluation). f_k is convex
+    // decreasing, so Newton iterates approach the root from below
+    // monotonically once underneath it.
+    let invert = |k: usize, lambda: f64, warm_b: f64| -> (f64, f64) {
+        let mut b = warm_b.clamp(total * 1e-9, total * 16.0);
+        let mut slope = f64::NAN;
         for _ in 0..60 {
-            let val = f(k, b) - lambda;
+            let (tv, dv) = links[k].t_and_deriv(b);
+            let val = tokens[k] * tv - lambda;
+            let d = tokens[k] * dv;
+            slope = d;
             if val.abs() <= lambda * 1e-12 {
                 break;
             }
-            let d = fp(k, b);
             if !d.is_finite() || d >= 0.0 {
                 b *= if val > 0.0 { 2.0 } else { 0.5 };
                 continue;
@@ -196,7 +311,7 @@ fn solve_single_block(
                 b * if val > 0.0 { 2.0 } else { 0.5 }
             };
         }
-        b
+        (b, slope)
     };
 
     // Bracket: lambda_hi = max_k f_k at the uniform-over-active split is
@@ -218,20 +333,19 @@ fn solve_single_block(
     // bracket above is kept regardless, so a stale warm point only costs
     // iterations, never correctness — warm and cold solves share the
     // unique water-filling fixed point. Sanitization (arity, finiteness,
-    // non-negativity) is the caller's job: `minimize_sum_max_warm`
+    // non-negativity) is the caller's job: `minimize_sum_max_ws`
     // filters before reaching here.
-    let mut warm: Vec<f64> = match warm_init {
+    warm.clear();
+    match warm_init {
         Some(w) => {
             debug_assert!(
                 w.len() == u && w.iter().all(|b| b.is_finite() && *b >= 0.0),
                 "unsanitized warm start"
             );
-            w.iter()
-                .map(|&b| b.clamp(total * 1e-9, total * 16.0))
-                .collect()
+            warm.extend(w.iter().map(|&b| b.clamp(total * 1e-9, total * 16.0)));
         }
-        None => vec![share; u],
-    };
+        None => warm.resize(u, share),
+    }
     let mut lambda = if warm_init.is_some() {
         let l0 = active.iter().map(|&k| f(k, warm[k])).fold(0.0, f64::max);
         if l0.is_finite() {
@@ -242,17 +356,17 @@ fn solve_single_block(
     } else {
         lambda_hi
     };
-    let mut best = vec![0.0; u];
+    best.clear();
+    best.resize(u, 0.0);
     for _ in 0..80 {
         let mut sum = 0.0;
         let mut dsum = 0.0;
-        for &k in &active {
-            let b = invert(k, lambda, warm[k]);
+        for &k in active.iter() {
+            let (b, d) = invert(k, lambda, warm[k]);
             warm[k] = b;
             best[k] = b;
             sum += b;
             // dB_k/dlambda = 1 / f'_k(B_k)  (negative)
-            let d = fp(k, b);
             if d < 0.0 && d.is_finite() {
                 dsum += 1.0 / d;
             }
@@ -279,15 +393,11 @@ fn solve_single_block(
     if sum <= 0.0 || !sum.is_finite() {
         return None;
     }
-    for b in &mut best {
+    for b in best.iter_mut() {
         *b *= total / sum;
     }
     let objective = active.iter().map(|&k| f(k, best[k])).fold(0.0, f64::max);
-    Some(SolverResult {
-        bandwidth: best,
-        objective,
-        iterations: 0,
-    })
+    Some(objective)
 }
 
 /// Solve P3: optimal bandwidth allocation for the given loads.
@@ -296,6 +406,9 @@ fn solve_single_block(
 /// bandwidth; all-zero loads return the uniform split. Single-block loads
 /// take the exact water-filling fast path; multi-block programs fall back
 /// to the smoothed projected-gradient method.
+///
+/// Convenience wrapper: allocates a fresh [`SolverWorkspace`] per call.
+/// Hot paths should hold a workspace and call [`minimize_sum_max_ws`].
 pub fn minimize_sum_max(
     links: &[DeviceLink],
     loads: &[PerBlockLoad],
@@ -320,17 +433,45 @@ pub fn minimize_sum_max_warm(
     opts: &SolverOptions,
     warm: Option<&[f64]>,
 ) -> SolverResult {
+    let mut ws = SolverWorkspace::new();
+    let mut out = Vec::with_capacity(links.len());
+    let stats = minimize_sum_max_ws(links, loads, total_bandwidth, opts, warm, &mut ws, &mut out);
+    SolverResult {
+        bandwidth: out,
+        objective: stats.objective,
+        iterations: stats.iterations,
+    }
+}
+
+/// The allocation-free P3 solve: identical mathematics to
+/// [`minimize_sum_max_warm`], but every scratch vector comes from the
+/// caller's [`SolverWorkspace`] and the allocation is written into `out`
+/// (cleared first). After warm-up at a given fleet size, repeated calls
+/// perform zero heap allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn minimize_sum_max_ws(
+    links: &[DeviceLink],
+    loads: &[PerBlockLoad],
+    total_bandwidth: f64,
+    opts: &SolverOptions,
+    warm: Option<&[f64]>,
+    ws: &mut SolverWorkspace,
+    out: &mut Vec<f64>,
+) -> SolveStats {
     let u = links.len();
     assert!(u > 0, "no devices");
     assert!(
         loads.iter().all(|l| l.tokens.len() == u),
         "load/device arity mismatch"
     );
-    let uniform = vec![total_bandwidth / u as f64; u];
+    let share = total_bandwidth / u as f64;
+    ws.uniform.clear();
+    ws.uniform.resize(u, share);
     let any_load = loads.iter().any(|l| l.tokens.iter().any(|&q| q > 0.0));
     if !any_load {
-        return SolverResult {
-            bandwidth: uniform.clone(),
+        out.clear();
+        out.extend_from_slice(&ws.uniform);
+        return SolveStats {
             objective: 0.0,
             iterations: 0,
         };
@@ -344,26 +485,46 @@ pub fn minimize_sum_max_warm(
 
     // Fast path: the per-block allocation the coordinator performs.
     if loads.len() == 1 {
-        if let Some(r) = solve_single_block(links, &loads[0].tokens, total_bandwidth, warm) {
+        if let Some(obj) = solve_single_block_ws(
+            links,
+            &loads[0].tokens,
+            total_bandwidth,
+            warm,
+            &mut ws.active,
+            &mut ws.warm,
+            &mut ws.best,
+        ) {
             // Guard: never return something worse than uniform.
-            let o_uni = exact_objective(links, loads, &uniform);
-            if r.objective <= o_uni {
-                return r;
+            let o_uni = exact_objective_into(links, loads, &ws.uniform, &mut ws.t);
+            if obj <= o_uni {
+                out.clear();
+                out.extend_from_slice(&ws.best);
+                return SolveStats {
+                    objective: obj,
+                    iterations: 0,
+                };
             }
         }
     }
 
-    let mut b = match warm {
-        Some(w) => project_simplex(w, total_bandwidth),
-        None => uniform.clone(),
-    };
-    let mut best_b = b.clone();
-    let mut best_obj = exact_objective(links, loads, &b);
+    ws.b.clear();
+    match warm {
+        Some(w) => {
+            ws.b.extend_from_slice(w);
+            project_simplex_in_place(&mut ws.b, total_bandwidth, &mut ws.sort);
+        }
+        None => ws.b.extend_from_slice(&ws.uniform),
+    }
+    let mut best_obj = exact_objective_into(links, loads, &ws.b, &mut ws.t);
+    ws.best.clear();
+    ws.best.extend_from_slice(&ws.b);
     // Guard: never start the descent worse than the uniform split.
-    let o_uni = exact_objective(links, loads, &uniform);
+    let o_uni = exact_objective_into(links, loads, &ws.uniform, &mut ws.t);
     if o_uni < best_obj {
-        b = uniform.clone();
-        best_b = uniform.clone();
+        ws.b.clear();
+        ws.b.extend_from_slice(&ws.uniform);
+        ws.best.clear();
+        ws.best.extend_from_slice(&ws.uniform);
         best_obj = o_uni;
     }
     let mut iters_used = 0;
@@ -373,28 +534,51 @@ pub fn minimize_sum_max_warm(
     for stage in 0..opts.anneal_stages {
         let tau = f0 * 0.1 * 0.25f64.powi(stage as i32);
         let mut step = total_bandwidth * 0.25;
-        let (mut obj, mut grad) = smoothed(links, loads, &b, tau);
+        let mut obj = smoothed_into(
+            links,
+            loads,
+            &ws.b,
+            tau,
+            &mut ws.t,
+            &mut ws.dt,
+            &mut ws.fb,
+            &mut ws.ex,
+            &mut ws.grad,
+        );
         for _ in 0..opts.max_iters {
             iters_used += 1;
             // Normalise gradient to bandwidth scale for a stable step.
-            let gnorm = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+            let gnorm = ws.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
             if gnorm < 1e-300 {
                 break;
             }
             let mut accepted = false;
-            // Armijo backtracking on the smoothed objective.
+            // Armijo backtracking on the smoothed objective. On
+            // rejection the previous iterate's gradient must survive, so
+            // trial gradients go to a second buffer swapped in on accept.
             for _ in 0..40 {
-                let cand: Vec<f64> = b
-                    .iter()
-                    .zip(&grad)
-                    .map(|(&bi, &gi)| bi - step * gi / gnorm)
-                    .collect();
-                let cand = project_simplex(&cand, total_bandwidth);
-                let (cobj, cgrad) = smoothed(links, loads, &cand, tau);
+                ws.cand.clear();
+                ws.cand.extend(
+                    ws.b.iter()
+                        .zip(&ws.grad)
+                        .map(|(&bi, &gi)| bi - step * gi / gnorm),
+                );
+                project_simplex_in_place(&mut ws.cand, total_bandwidth, &mut ws.sort);
+                let cobj = smoothed_into(
+                    links,
+                    loads,
+                    &ws.cand,
+                    tau,
+                    &mut ws.t,
+                    &mut ws.dt,
+                    &mut ws.fb,
+                    &mut ws.ex,
+                    &mut ws.grad_cand,
+                );
                 if cobj < obj {
-                    b = cand;
+                    std::mem::swap(&mut ws.b, &mut ws.cand);
+                    std::mem::swap(&mut ws.grad, &mut ws.grad_cand);
                     obj = cobj;
-                    grad = cgrad;
                     accepted = true;
                     break;
                 }
@@ -404,23 +588,25 @@ pub fn minimize_sum_max_warm(
                 break;
             }
             // Track the best iterate under the *exact* objective.
-            let ex = exact_objective(links, loads, &b);
-            if ex < best_obj {
-                if (best_obj - ex) / best_obj.max(1e-300) < opts.tol {
-                    best_obj = ex;
-                    best_b = b.clone();
+            let ex_obj = exact_objective_into(links, loads, &ws.b, &mut ws.t);
+            if ex_obj < best_obj {
+                let converged = (best_obj - ex_obj) / best_obj.max(1e-300) < opts.tol;
+                best_obj = ex_obj;
+                ws.best.clear();
+                ws.best.extend_from_slice(&ws.b);
+                if converged {
                     break;
                 }
-                best_obj = ex;
-                best_b = b.clone();
             }
             step = (step * 2.0).min(total_bandwidth * 0.25);
         }
-        b = best_b.clone();
+        ws.b.clear();
+        ws.b.extend_from_slice(&ws.best);
     }
 
-    SolverResult {
-        bandwidth: best_b,
+    out.clear();
+    out.extend_from_slice(&ws.best);
+    SolveStats {
         objective: best_obj,
         iterations: iters_used,
     }
@@ -666,5 +852,64 @@ mod tests {
         assert!((s - 100e6).abs() < 1.0);
         assert!(r.bandwidth.iter().all(|&b| b >= 0.0));
         assert!(r.objective.is_finite());
+    }
+
+    #[test]
+    fn fused_eval_matches_separate_calls() {
+        let l = link(gain_at(140.0), 2e-5);
+        for &b in &[1e4, 1e6, 12.5e6, 1e8] {
+            let (t, dt) = l.t_and_deriv(b);
+            assert_eq!(t, l.t_per_token(b));
+            assert_eq!(dt, l.t_per_token_deriv(b));
+        }
+        let (t0, dt0) = l.t_and_deriv(0.0);
+        assert!(t0.is_infinite() && dt0 == f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn workspace_solve_matches_wrapper_and_reuses_cleanly() {
+        // One workspace across solves of different sizes and shapes must
+        // reproduce the fresh-allocation wrapper exactly.
+        let mut ws = SolverWorkspace::new();
+        let mut out = Vec::new();
+        let opts = SolverOptions::default();
+        let cases: Vec<(Vec<DeviceLink>, Vec<PerBlockLoad>)> = vec![
+            (
+                [60.0, 120.0, 240.0, 350.0]
+                    .iter()
+                    .map(|&d| link(gain_at(d), 1e-5))
+                    .collect(),
+                vec![PerBlockLoad {
+                    tokens: vec![100.0, 20.0, 70.0, 5.0],
+                }],
+            ),
+            (
+                vec![link(gain_at(80.0), 2e-5), link(gain_at(300.0), 1e-5)],
+                vec![
+                    PerBlockLoad {
+                        tokens: vec![150.0, 80.0],
+                    },
+                    PerBlockLoad {
+                        tokens: vec![10.0, 90.0],
+                    },
+                ],
+            ),
+            (
+                [70.0, 140.0, 280.0]
+                    .iter()
+                    .map(|&d| link(gain_at(d), 1e-5))
+                    .collect(),
+                vec![PerBlockLoad {
+                    tokens: vec![0.0, 0.0, 0.0],
+                }],
+            ),
+        ];
+        for (links, loads) in &cases {
+            let fresh = minimize_sum_max_warm(links, loads, 100e6, &opts, None);
+            let stats = minimize_sum_max_ws(links, loads, 100e6, &opts, None, &mut ws, &mut out);
+            assert_eq!(out, fresh.bandwidth, "reused workspace diverged");
+            assert_eq!(stats.objective, fresh.objective);
+            assert_eq!(stats.iterations, fresh.iterations);
+        }
     }
 }

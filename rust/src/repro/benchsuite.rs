@@ -1,0 +1,196 @@
+//! `repro bench` — named performance harnesses with JSON output.
+//!
+//! The single home of the hot-path harnesses: the P3 solver cold vs warm
+//! (through the zero-allocation [`SolverWorkspace`] entry point the
+//! control plane uses), the adaptive plane's full epoch tick, a
+//! load-aware dispatch decision, and whole-DES throughput in simulated
+//! events per wall second. The `cargo bench` binaries
+//! (`rust/benches/control.rs`, `rust/benches/cluster.rs`) call these
+//! same functions, so the interactive numbers and the
+//! `BENCH_cluster.json` CI artifact can never drift apart. `repro bench
+//! --json` writes the results to `BENCH_cluster.json` at the repo root,
+//! seeding the perf trajectory with named, comparable numbers; the CI
+//! smoke run keeps the harnesses from rotting.
+
+use crate::cluster::{ClusterSim, Dispatcher};
+use crate::config::{ClusterConfig, ControlKind, DispatchKind, SystemConfig};
+use crate::control::LinkState;
+use crate::devices::Fleet;
+use crate::optim::{PerBlockLoad, SolverOptions, SolverWorkspace};
+use crate::util::bench::{bench, bench_quiet, default_budget, smoke_budget, BenchResult};
+use crate::util::Json;
+use crate::wireless::ChannelSimulator;
+use crate::workload::{ArrivalProcess, Benchmark};
+use std::time::Duration;
+
+/// Results of one `repro bench` run.
+pub struct BenchSuite {
+    pub smoke: bool,
+    pub budget_ms: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    /// The `BENCH_cluster.json` document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("wdmoe-bench-v1")),
+            ("smoke", Json::Bool(self.smoke)),
+            ("budget_ms", Json::Num(self.budget_ms as f64)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The §V 8-device cell every solver harness runs against.
+pub fn paper_link_state() -> LinkState {
+    let cfg = SystemConfig::paper_simulation();
+    let chan = ChannelSimulator::new(&cfg.channel, &cfg.devices, 0);
+    let real = chan.expected_realization();
+    let fleet = Fleet::new(&cfg.devices, 0);
+    let t_comp = fleet.t_comp_nominal(cfg.model.l_comp_flops(cfg.activation_eta));
+    LinkState::new(
+        &cfg.channel,
+        &real,
+        &t_comp,
+        cfg.model.l_comm_bits(cfg.channel.quant_bits),
+    )
+}
+
+/// The 8-device load vector the solver harnesses share.
+pub fn solver_load() -> [PerBlockLoad; 1] {
+    [PerBlockLoad {
+        tokens: (0..8).map(|k| (20 + k * 7) as f64).collect(),
+    }]
+}
+
+/// P3 solver, cold and warm, through the zero-allocation workspace —
+/// the exact path the adaptive plane pays at every epoch tick.
+pub fn solver_harnesses(budget: Duration) -> Vec<BenchResult> {
+    let state = paper_link_state();
+    let opts = SolverOptions::default();
+    let loads = solver_load();
+    let mut ws = SolverWorkspace::new();
+    let mut out = Vec::new();
+    let mut results = Vec::new();
+    results.push(bench("solver/cold_8dev_ws", budget, || {
+        state.solve_into(&loads, &opts, None, &mut ws, &mut out).objective
+    }));
+    // Warm solve: previous optimum, loads shifted 10% (the epoch case).
+    let cold = state.solve(&loads, &opts, None);
+    let perturbed = [PerBlockLoad {
+        tokens: loads[0].tokens.iter().map(|q| q * 1.1).collect(),
+    }];
+    results.push(bench("solver/warm_8dev_ws", budget, || {
+        state
+            .solve_into(&perturbed, &opts, Some(&cold.bandwidth), &mut ws, &mut out)
+            .objective
+    }));
+    results
+}
+
+/// Full adaptive epoch tick (re-solve + placement re-balance) inside a
+/// live simulator. Demand alternates so hysteresis never suppresses the
+/// re-solve.
+pub fn epoch_tick_harness(budget: Duration) -> BenchResult {
+    let mut ccfg = ClusterConfig::single_cell();
+    ccfg.control = ControlKind::Adaptive;
+    ccfg.model.n_blocks = 4;
+    let mut sim = ClusterSim::new(&ccfg).expect("preset config is valid");
+    let experts: Vec<f64> = (0..8).map(|k| 5.0 + k as f64).collect();
+    let mut demand = vec![0.0f64; 8];
+    let mut flip = false;
+    bench("control/epoch_tick_adaptive_8dev", budget, || {
+        flip = !flip;
+        for (k, d) in demand.iter_mut().enumerate() {
+            let base = 10.0 + k as f64 * 5.0;
+            *d = if (k % 2 == 0) == flip { base * 3.0 } else { base };
+        }
+        sim.control_epoch(0, &demand, &experts)
+    })
+}
+
+/// One load-aware dispatch decision on a backlogged 16-replica fleet.
+pub fn dispatch_harness(budget: Duration) -> BenchResult {
+    let d = Dispatcher::new(DispatchKind::LoadAware);
+    let t: Vec<f64> = (0..16).map(|k| 2e-5 * (1.0 + k as f64)).collect();
+    let busy: Vec<u64> = (0..16).map(|k| k as u64 * 1_000_000).collect();
+    let online = vec![true; 16];
+    let replicas: Vec<usize> = (0..16).collect();
+    bench("cluster/dispatch_choose_16rep", budget, || {
+        d.choose(&replicas, 40.0, 500_000, &busy, &t, &online)
+    })
+}
+
+/// Whole-DES throughput on the two-cell preset, one reused simulator
+/// (reset between runs), reported as simulated events per wall second.
+pub fn des_harness(budget: Duration, requests: usize) -> BenchResult {
+    let mut dcfg = ClusterConfig::edge_default();
+    dcfg.model.n_blocks = 8;
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(requests, Benchmark::Piqa, 0);
+    let mut des = ClusterSim::new(&dcfg).expect("preset config is valid");
+    // The event count per run is deterministic; measure it once.
+    let events_per_run = des.run(&arrivals).events;
+    let mut r = bench_quiet("cluster/des_run_2cell", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run(&arrivals).completed
+    });
+    let events_per_sec = events_per_run as f64 * 1e9 / r.mean_ns;
+    r.throughput = Some(("sim_events_per_sec".to_string(), events_per_sec));
+    r.report();
+    r
+}
+
+/// Run the full suite (tiny budgets when `smoke`), printing each result.
+pub fn run_suite(smoke: bool) -> BenchSuite {
+    let budget = if smoke { smoke_budget() } else { default_budget() };
+    let mut results = solver_harnesses(budget);
+    results.push(epoch_tick_harness(budget));
+    results.push(dispatch_harness(budget));
+    results.push(des_harness(budget, if smoke { 12 } else { 60 }));
+    BenchSuite {
+        smoke,
+        budget_ms: budget.as_millis() as u64,
+        results,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_suite_runs_and_serializes() {
+        let suite = run_suite(true);
+        let names: Vec<&str> = suite.results.iter().map(|r| r.name.as_str()).collect();
+        for expect in [
+            "solver/cold_8dev_ws",
+            "solver/warm_8dev_ws",
+            "control/epoch_tick_adaptive_8dev",
+            "cluster/dispatch_choose_16rep",
+            "cluster/des_run_2cell",
+        ] {
+            assert!(names.contains(&expect), "missing harness {expect}");
+        }
+        let des = suite
+            .results
+            .iter()
+            .find(|r| r.name == "cluster/des_run_2cell")
+            .unwrap();
+        let (unit, v) = des.throughput.as_ref().expect("DES reports throughput");
+        assert_eq!(unit, "sim_events_per_sec");
+        assert!(*v > 0.0);
+        // The JSON document parses back and keeps every record.
+        let back = Json::parse(&suite.to_json().to_string()).unwrap();
+        assert_eq!(
+            back.get("schema").unwrap().as_str().unwrap(),
+            "wdmoe-bench-v1"
+        );
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 5);
+        assert!(back.get("smoke").unwrap().as_bool().unwrap());
+    }
+}

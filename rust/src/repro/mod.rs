@@ -8,6 +8,7 @@
 //! where crossovers fall — is the reproduction target (EXPERIMENTS.md).
 
 pub mod ablations;
+pub mod benchsuite;
 pub mod capability;
 
 use crate::config::SystemConfig;

@@ -5,6 +5,7 @@
 //! reporting mean / p50 / p95 per-iteration time with a black-box guard
 //! against dead-code elimination.
 
+use crate::util::Json;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -16,6 +17,9 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    /// Optional derived throughput `(unit, value)` — e.g. the DES
+    /// harness reports simulated events per wall second.
+    pub throughput: Option<(String, f64)>,
 }
 
 impl BenchResult {
@@ -32,8 +36,12 @@ impl BenchResult {
     }
 
     pub fn report(&self) {
+        let extra = match &self.throughput {
+            Some((unit, v)) => format!("   {v:.0} {unit}"),
+            None => String::new(),
+        };
         println!(
-            "{:<44} {:>10}   p50 {:>10}   p95 {:>10}   ({} iters)",
+            "{:<44} {:>10}   p50 {:>10}   p95 {:>10}   ({} iters){extra}",
             self.name,
             Self::fmt_ns(self.mean_ns),
             Self::fmt_ns(self.p50_ns),
@@ -41,10 +49,36 @@ impl BenchResult {
             self.iterations
         );
     }
+
+    /// JSON record for `repro bench --json` (BENCH_cluster.json).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+        ];
+        if let Some((unit, v)) = &self.throughput {
+            fields.push((
+                "throughput",
+                Json::obj(vec![("unit", Json::str(unit)), ("value", Json::Num(*v))]),
+            ));
+        }
+        Json::obj(fields)
+    }
 }
 
 /// Time `f` repeatedly for ~`budget` (after one warm-up call) and report.
-pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+pub fn bench<T>(name: &str, budget: Duration, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench_quiet(name, budget, f);
+    r.report();
+    r
+}
+
+/// [`bench`] without the report — for harnesses that attach a derived
+/// metric (e.g. events/sec) to the result before printing it once.
+pub fn bench_quiet<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
     black_box(f()); // warm-up (fills caches, triggers lazy init)
     let mut samples_ns: Vec<f64> = Vec::new();
     let start = Instant::now();
@@ -59,15 +93,14 @@ pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Bench
     let mut sorted = samples_ns.clone();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| sorted[((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)];
-    let r = BenchResult {
+    BenchResult {
         name: name.to_string(),
         iterations: samples_ns.len(),
         mean_ns: samples_ns.iter().sum::<f64>() / samples_ns.len() as f64,
         p50_ns: pct(0.50),
         p95_ns: pct(0.95),
-    };
-    r.report();
-    r
+        throughput: None,
+    }
 }
 
 /// Default per-benchmark budget, overridable via WDMOE_BENCH_MS.
@@ -77,6 +110,13 @@ pub fn default_budget() -> Duration {
         .and_then(|s| s.parse::<u64>().ok())
         .unwrap_or(300);
     Duration::from_millis(ms)
+}
+
+/// Tiny budget for smoke runs (`repro bench --smoke` in CI): just enough
+/// iterations to prove the harnesses still run, not to produce stable
+/// numbers.
+pub fn smoke_budget() -> Duration {
+    Duration::from_millis(10)
 }
 
 #[cfg(test)]
@@ -91,5 +131,18 @@ mod tests {
         assert!(r.iterations >= 5);
         assert!(r.mean_ns > 0.0);
         assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn json_record_roundtrips() {
+        let mut r = bench("j", Duration::from_millis(1), || 1u64);
+        r.throughput = Some(("events_per_sec".to_string(), 1234.5));
+        let j = r.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str().unwrap(), "j");
+        assert!(back.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        let t = back.get("throughput").unwrap();
+        assert_eq!(t.get("unit").unwrap().as_str().unwrap(), "events_per_sec");
+        assert_eq!(t.get("value").unwrap().as_f64().unwrap(), 1234.5);
     }
 }

@@ -24,7 +24,7 @@ fn prop_des_conserves_tokens_across_seeds_and_rates() {
     let mut cfg = ClusterConfig::edge_default();
     cfg.model.n_blocks = 4;
     for (seed, rate) in [(0u64, 0.5f64), (1, 2.0), (2, 6.0), (3, 12.0), (4, 1.0)] {
-        let mut sim = ClusterSim::new(cfg.clone()).unwrap();
+        let mut sim = ClusterSim::new(&cfg).unwrap();
         let arrivals =
             ArrivalProcess::Poisson { rate_rps: rate }.generate(35, Benchmark::Piqa, seed);
         let arrived_tokens: u64 = arrivals.iter().map(|a| a.tokens as u64).sum();
@@ -52,7 +52,7 @@ fn des_runs_trace_driven_arrivals() {
 
     let mut cfg = ClusterConfig::single_cell();
     cfg.model.n_blocks = 4;
-    let mut sim = ClusterSim::new(cfg).unwrap();
+    let mut sim = ClusterSim::new(&cfg).unwrap();
     let out = sim.run(&arrivals);
     assert_eq!(out.completed, n);
     assert_eq!(out.arrived_tokens, out.completed_tokens);
@@ -181,13 +181,13 @@ fn replication_cuts_p99_latency_at_high_load() {
     let mut base_cfg = straggler_cfg();
     base_cfg.cache_capacity = 1;
     base_cfg.dispatch = DispatchKind::Static;
-    let mut base_sim = ClusterSim::new(base_cfg).unwrap();
+    let mut base_sim = ClusterSim::new(&base_cfg).unwrap();
     let base = base_sim.run(&arrivals);
 
     let mut repl_cfg = straggler_cfg();
     repl_cfg.cache_capacity = 2;
     repl_cfg.dispatch = DispatchKind::LoadAware;
-    let mut repl_sim = ClusterSim::new(repl_cfg).unwrap();
+    let mut repl_sim = ClusterSim::new(&repl_cfg).unwrap();
     // The optimizer must actually replicate the straggler's expert.
     assert!(
         repl_sim.placement(0).replicas(7).len() >= 2,
@@ -227,7 +227,7 @@ fn replication_cuts_p99_latency_at_high_load() {
 fn sweep_writes_acceptance_csvs() {
     let mut cfg = ClusterConfig::edge_default();
     cfg.model.n_blocks = 4;
-    let sweep = arrival_rate_sweep(&cfg, &[0.5, 2.0], 20, Benchmark::Piqa, 0).unwrap();
+    let sweep = arrival_rate_sweep(&cfg, &[0.5, 2.0], 20, Benchmark::Piqa, 0, 1).unwrap();
     let dir = wdmoe::util::temp_dir("cluster-sweep");
     let summary = sweep.summary.write_csv(&dir).unwrap();
     let util = sweep.utilization.write_csv(&dir).unwrap();

@@ -6,7 +6,10 @@
 use wdmoe::cluster::{control_plane_sweep, ClusterSim, Dispatcher};
 use wdmoe::config::{ClusterConfig, ControlKind, DispatchKind, DropPolicy, PolicyKind};
 use wdmoe::optim::solver::DeviceLink;
-use wdmoe::optim::{minimize_sum_max, minimize_sum_max_warm, PerBlockLoad, SolverOptions};
+use wdmoe::optim::{
+    minimize_sum_max, minimize_sum_max_warm, minimize_sum_max_ws, PerBlockLoad, SolverOptions,
+    SolverWorkspace,
+};
 use wdmoe::util::Rng;
 use wdmoe::wireless::channel::mean_amplitude;
 use wdmoe::workload::{ArrivalProcess, Benchmark};
@@ -78,6 +81,41 @@ fn prop_warm_start_returns_cold_start_allocation() {
     }
 }
 
+/// Property: a single [`SolverWorkspace`] reused across randomized link
+/// sets (varying fleet sizes, warm and cold starts) produces exactly the
+/// solution of a fresh-allocation solve — stale scratch contents must
+/// never leak into a later solve.
+#[test]
+fn prop_reused_workspace_equals_fresh_allocation_solve() {
+    let mut rng = Rng::seed_from_u64(77);
+    let total = 100e6;
+    let opts = SolverOptions::default();
+    let mut ws = SolverWorkspace::new();
+    let mut out = Vec::new();
+    for trial in 0..30 {
+        let (links, tokens) = random_links(&mut rng);
+        let loads = vec![PerBlockLoad { tokens }];
+        let fresh = minimize_sum_max_warm(&links, &loads, total, &opts, None);
+        let stats = minimize_sum_max_ws(&links, &loads, total, &opts, None, &mut ws, &mut out);
+        assert_eq!(out, fresh.bandwidth, "trial {trial}: cold ws diverged");
+        assert_eq!(stats.objective, fresh.objective, "trial {trial}");
+        // Warm-started through the same (already dirty) workspace.
+        let perturbed: Vec<f64> = fresh.bandwidth.iter().map(|&b| b * 1.1 + 1e4).collect();
+        let fresh_warm = minimize_sum_max_warm(&links, &loads, total, &opts, Some(&perturbed));
+        let stats_warm = minimize_sum_max_ws(
+            &links,
+            &loads,
+            total,
+            &opts,
+            Some(&perturbed),
+            &mut ws,
+            &mut out,
+        );
+        assert_eq!(out, fresh_warm.bandwidth, "trial {trial}: warm ws diverged");
+        assert_eq!(stats_warm.objective, fresh_warm.objective, "trial {trial}");
+    }
+}
+
 // ------------------------------------- adaptive plane vs static uniform
 
 /// Single straggler-free edge cell under overload, vanilla top-2 so the
@@ -98,9 +136,9 @@ fn overload_cfg(control: ControlKind) -> ClusterConfig {
 fn adaptive_beats_static_uniform_p99_under_overload() {
     let arrivals = ArrivalProcess::Poisson { rate_rps: 8.0 }.generate(240, Benchmark::Piqa, 7);
 
-    let mut uni = ClusterSim::new(overload_cfg(ControlKind::StaticUniform)).unwrap();
+    let mut uni = ClusterSim::new(&overload_cfg(ControlKind::StaticUniform)).unwrap();
     let base = uni.run(&arrivals);
-    let mut ada = ClusterSim::new(overload_cfg(ControlKind::Adaptive)).unwrap();
+    let mut ada = ClusterSim::new(&overload_cfg(ControlKind::Adaptive)).unwrap();
     let adapt = ada.run(&arrivals);
 
     assert_eq!(base.completed, 240);
@@ -121,9 +159,9 @@ fn adaptive_beats_static_uniform_p99_under_overload() {
 #[test]
 fn adaptive_not_worse_than_static_uniform_at_moderate_load() {
     let arrivals = ArrivalProcess::Poisson { rate_rps: 1.0 }.generate(120, Benchmark::Piqa, 3);
-    let mut uni = ClusterSim::new(overload_cfg(ControlKind::StaticUniform)).unwrap();
+    let mut uni = ClusterSim::new(&overload_cfg(ControlKind::StaticUniform)).unwrap();
     let base = uni.run(&arrivals);
-    let mut ada = ClusterSim::new(overload_cfg(ControlKind::Adaptive)).unwrap();
+    let mut ada = ClusterSim::new(&overload_cfg(ControlKind::Adaptive)).unwrap();
     let adapt = ada.run(&arrivals);
     assert!(
         adapt.p99_ms() <= base.p99_ms() * 1.15,
@@ -142,7 +180,7 @@ fn control_plane_sweep_shows_adaptive_gain() {
     cfg.model.n_blocks = 8;
     cfg.policy.selection = PolicyKind::VanillaTopK;
     let rate = 8.0;
-    let table = control_plane_sweep(&cfg, &[rate], 160, Benchmark::Piqa, 5).unwrap();
+    let table = control_plane_sweep(&cfg, &[rate], 160, Benchmark::Piqa, 5, 1).unwrap();
     let p99_col = table
         .columns
         .iter()
@@ -174,7 +212,7 @@ fn failover_triggers_adaptive_resolve() {
     let mut cfg = ClusterConfig::single_cell();
     cfg.model.n_blocks = 4;
     cfg.control = ControlKind::Adaptive;
-    let mut sim = ClusterSim::new(cfg).unwrap();
+    let mut sim = ClusterSim::new(&cfg).unwrap();
     assert_eq!(sim.control_stats(0).resolves, 0);
     let bw_before = sim.bandwidth(0).to_vec();
     sim.set_device_online(0, 7, false);
@@ -200,7 +238,7 @@ fn failover_triggers_adaptive_resolve() {
 fn static_plane_split_survives_failover() {
     let mut cfg = ClusterConfig::single_cell();
     cfg.model.n_blocks = 4;
-    let mut sim = ClusterSim::new(cfg).unwrap();
+    let mut sim = ClusterSim::new(&cfg).unwrap();
     let bw_before = sim.bandwidth(0).to_vec();
     sim.set_device_online(0, 3, false);
     assert_eq!(sim.bandwidth(0), bw_before.as_slice());
@@ -216,7 +254,7 @@ fn static_plane_split_survives_failover() {
 fn reallocation_flips_best_replica() {
     let mut cfg = ClusterConfig::single_cell();
     cfg.control = ControlKind::Adaptive;
-    let mut sim = ClusterSim::new(cfg).unwrap();
+    let mut sim = ClusterSim::new(&cfg).unwrap();
     let d = Dispatcher::new(DispatchKind::LoadAware);
     let n_dev = sim.t_per_token(0).len();
     let busy = vec![0u64; n_dev];
@@ -257,7 +295,7 @@ fn bounded_queue_reports_goodput_and_drop_rate() {
     cfg.model.n_blocks = 8;
     cfg.queue_limit_s = 0.25;
     cfg.drop_policy = DropPolicy::DropRequest;
-    let mut sim = ClusterSim::new(cfg).unwrap();
+    let mut sim = ClusterSim::new(&cfg).unwrap();
     let arrivals = ArrivalProcess::Poisson { rate_rps: 40.0 }.generate(120, Benchmark::Piqa, 9);
     let out = sim.run(&arrivals);
     assert_eq!(out.arrived, 120);
@@ -269,7 +307,7 @@ fn bounded_queue_reports_goodput_and_drop_rate() {
     // An unbounded run of the same stream completes everything.
     let mut cfg2 = ClusterConfig::single_cell();
     cfg2.model.n_blocks = 8;
-    let mut sim2 = ClusterSim::new(cfg2).unwrap();
+    let mut sim2 = ClusterSim::new(&cfg2).unwrap();
     let out2 = sim2.run(&arrivals);
     assert_eq!(out2.completed, 120);
     assert_eq!(out2.drop_rate(), 0.0);

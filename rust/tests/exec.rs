@@ -1,0 +1,84 @@
+//! Parallel sweep engine acceptance tests: sweeps distributed over the
+//! worker pool must produce *bit-identical* rows to a serial run — the
+//! contract that makes `--threads` safe to default on for `repro
+//! cluster` CSV artifacts.
+
+use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
+use wdmoe::config::{ClusterConfig, ControlKind};
+use wdmoe::exec::map_indexed;
+use wdmoe::workload::Benchmark;
+
+fn sweep_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::edge_default();
+    cfg.model.n_blocks = 4;
+    cfg
+}
+
+/// `arrival_rate_sweep` with N workers produces bit-identical
+/// `SweepPoint` rows (and therefore CSV bytes) to the serial run, for
+/// several thread counts including oversubscription.
+#[test]
+fn arrival_rate_sweep_parallel_rows_bit_identical_to_serial() {
+    let cfg = sweep_cfg();
+    let rates = [0.5, 1.0, 2.0, 4.0];
+    let serial = arrival_rate_sweep(&cfg, &rates, 20, Benchmark::Piqa, 3, 1).unwrap();
+    for threads in [2, 4, 16] {
+        let par = arrival_rate_sweep(&cfg, &rates, 20, Benchmark::Piqa, 3, threads).unwrap();
+        assert_eq!(
+            serial.summary.to_csv(),
+            par.summary.to_csv(),
+            "summary CSV diverged at {threads} threads"
+        );
+        assert_eq!(
+            serial.utilization.to_csv(),
+            par.utilization.to_csv(),
+            "utilization CSV diverged at {threads} threads"
+        );
+        // Row-level: every point's outcome matches exactly, not just the
+        // formatted tables.
+        assert_eq!(serial.points.len(), par.points.len());
+        for (s, p) in serial.points.iter().zip(&par.points) {
+            assert_eq!(s.rate_rps, p.rate_rps);
+            assert_eq!(s.outcome.completed, p.outcome.completed);
+            assert_eq!(s.outcome.makespan_s, p.outcome.makespan_s);
+            assert_eq!(s.outcome.events, p.outcome.events);
+            assert_eq!(
+                s.outcome.latency_ms.steady_values(),
+                p.outcome.latency_ms.steady_values()
+            );
+            assert_eq!(s.outcome.utilization, p.outcome.utilization);
+            assert_eq!(s.outcome.control, p.outcome.control);
+        }
+    }
+}
+
+/// Same for the plane-comparison sweep — including the adaptive plane,
+/// whose epoch re-solves are the most state-heavy code on the points.
+#[test]
+fn control_plane_sweep_parallel_bit_identical_to_serial() {
+    let mut cfg = sweep_cfg();
+    cfg.control = ControlKind::Adaptive; // overridden per arm, kept for intent
+    let rates = [1.0, 4.0];
+    let serial = control_plane_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 1).unwrap();
+    for threads in [2, 3, 8] {
+        let par = control_plane_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, threads).unwrap();
+        assert_eq!(
+            serial.to_csv(),
+            par.to_csv(),
+            "comparison CSV diverged at {threads} threads"
+        );
+    }
+}
+
+/// The engine itself: indices are evaluated once each and merged in
+/// order even when completion order is scrambled.
+#[test]
+fn map_indexed_merges_in_canonical_order() {
+    let out = map_indexed(16, 8, |i| {
+        // Later indices finish first.
+        std::thread::sleep(std::time::Duration::from_millis((16 - i as u64) % 5));
+        format!("item-{i}")
+    });
+    let expect: Vec<String> = (0..16).map(|i| format!("item-{i}")).collect();
+    assert_eq!(out, expect);
+}
