@@ -20,7 +20,7 @@
 //! ```
 
 use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
-use wdmoe::config::{ClusterConfig, DispatchKind};
+use wdmoe::config::{ClusterConfig, DispatchKind, DropPolicy, HandoverPolicy};
 use wdmoe::workload::Benchmark;
 
 fn main() -> anyhow::Result<()> {
@@ -57,6 +57,31 @@ fn main() -> anyhow::Result<()> {
                 .into_iter()
                 .fold(0.0f64, f64::max)
         );
+    }
+
+    // Inter-cell handover: one crippled cell next to a healthy one.
+    // Under `None`, round-robin pins half the traffic to the saturated
+    // cell and admission control drops it; `rehome` steers arrivals
+    // away, `borrow` ships overflowing expert groups to the neighbor
+    // for a per-token backhaul fee. Watch drop_rate fall and
+    // goodput_tps / handover_rate rise down the table.
+    println!("== inter-cell handover (cell 0 crippled, 0.5 s queue bound) ==");
+    for policy in HandoverPolicy::all() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 6;
+        for cell in &mut cfg.cells {
+            cell.channel.total_bandwidth_hz = 1e9;
+        }
+        for d in &mut cfg.cells[0].devices {
+            d.compute_flops /= 50.0;
+        }
+        cfg.queue_limit_s = 0.5;
+        cfg.drop_policy = DropPolicy::DropRequest;
+        cfg.backhaul_s_per_token = 1e-5;
+        cfg.handover = policy;
+        let sweep = arrival_rate_sweep(&cfg, &[4.0, 6.0], 150, bench, 0, threads)?;
+        println!("-- handover = {} --", policy.as_str());
+        println!("{}", sweep.summary.render());
     }
     Ok(())
 }

@@ -76,9 +76,18 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute virtual time `at`. Scheduling in the
-    /// past is a logic error (would break causality).
+    /// past is a logic error (would break causality), and it stays an
+    /// error in release builds: a mis-computed delay (e.g. a handover
+    /// backhaul) must abort loudly, not silently corrupt virtual time.
+    /// The check runs once per *scheduled* event — off the per-event pop
+    /// hot loop — so promoting it from `debug_assert!` costs nothing
+    /// measurable.
     pub fn schedule_at(&mut self, at: Nanos, event: E) {
-        debug_assert!(at >= self.now(), "event scheduled in the past");
+        assert!(
+            at >= self.now(),
+            "event scheduled in the past (at {at} ns < now {} ns)",
+            self.now()
+        );
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Reverse(Scheduled { at, seq, event }));
@@ -161,6 +170,15 @@ mod tests {
         assert_eq!(nanos_from_secs(1.5), 1_500_000_000);
         assert_eq!(secs_from_nanos(2_000_000_000), 2.0);
         assert_eq!(nanos_from_secs(0.0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn scheduling_in_the_past_panics_in_all_builds() {
+        let mut q = EventQueue::new(VirtualClock::new());
+        q.schedule_at(1_000, "future");
+        q.pop(); // clock is now at 1000 ns
+        q.schedule_at(500, "past"); // causality violation: must abort
     }
 
     #[test]

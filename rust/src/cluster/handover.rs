@@ -1,0 +1,500 @@
+//! Inter-cell handover — the cluster-level dispatch layer above the
+//! per-cell [`crate::cluster::dispatch::Dispatcher`].
+//!
+//! The paper pins each request to one BS cell for its whole lifetime, so
+//! a saturated cell drops work while its neighbors idle. This module
+//! moves work across cells under a [`HandoverPolicy`]:
+//!
+//! * **`RehomeOnArrival`** — at arrival, [`HandoverCoordinator::rehome`]
+//!   homes the request on the cell with the lowest live backlog per
+//!   online device ([`CellLoad::score`]) instead of blind round-robin.
+//!   Ties keep the round-robin home, so an idle cluster behaves exactly
+//!   like the baseline.
+//! * **`BorrowExpert`** — at dispatch, when every *local* replica of a
+//!   selected expert is over the queue bound or unserviceable,
+//!   [`HandoverCoordinator::try_borrow`] routes that token group to the
+//!   least-loaded neighbor cell's best replica. The group pays a
+//!   per-token backhaul latency on each hop: the outbound transfer
+//!   delays the earliest service start, and the return hop lands on the
+//!   block's Eq. (11) attention barrier after the remote device
+//!   finishes. The remote device's FIFO fills like any local dispatch.
+//!
+//! Borrows are **staged**: the remote queue instant is advanced
+//! immediately (so several groups of one block borrowing the same
+//! neighbor device queue behind each other), but utilization and token
+//! accounting land only when the block commits. A
+//! [`crate::config::DropPolicy::DropRequest`] rejection later in the
+//! same block calls [`HandoverCoordinator::rollback`], which restores
+//! every staged queue instant in reverse order — a dropped request
+//! leaves no partial work in *any* cell.
+//!
+//! ## Hot-path discipline
+//!
+//! The coordinator owns reusable scratch (the ranked neighbor-candidate
+//! list and the staged-borrow list), so a borrow attempt performs no
+//! heap allocation after warm-up; with [`HandoverPolicy::None`] every
+//! entry point returns immediately, leaving the simulator's behaviour
+//! unchanged from the pre-handover baseline.
+
+use super::event::{nanos_from_secs, secs_from_nanos, Nanos};
+use crate::config::HandoverPolicy;
+use crate::control::CellLoad;
+
+/// The cell state the handover layer reads and (for borrows) writes.
+/// Implemented by the simulator's per-cell runtime state; keeping it a
+/// trait decouples the coordinator from the simulator and makes the
+/// staging/rollback logic unit-testable with a mock.
+pub trait HandoverCell {
+    /// Devices hosting `expert` in this cell (home replica first).
+    fn replicas(&self, expert: usize) -> &[usize];
+    /// Instant each device's FIFO queue drains.
+    fn busy_until(&self) -> &[Nanos];
+    /// Overwrite one device's queue-drain instant (staging / rollback).
+    fn set_busy_until(&mut self, device: usize, at: Nanos);
+    /// Per-device service seconds per token under the cell's *current*
+    /// bandwidth allocation.
+    fn t_per_token(&self) -> &[f64];
+    /// Device availability mask.
+    fn online(&self) -> &[bool];
+    /// Commit a borrowed group's accounting (utilization + the token
+    /// counters the cell's control plane observes).
+    fn commit_remote(&mut self, device: usize, expert: usize, tokens: f64, service_s: f64);
+}
+
+/// Resolve a global cell index against the simulator's split borrow
+/// around the home cell: `left` holds cells `0..home`, `right` holds
+/// `home + 1..`. Single home of the index arithmetic — staging,
+/// rollback and commit must all route to the same cell.
+pub fn cell_mut<'a, C>(home: usize, ci: usize, left: &'a mut [C], right: &'a mut [C]) -> &'a mut C {
+    debug_assert_ne!(ci, home, "home cell is not reachable through the split");
+    if ci < home {
+        &mut left[ci]
+    } else {
+        &mut right[ci - home - 1]
+    }
+}
+
+/// One staged cross-cell token group (tentative until the block commits).
+#[derive(Debug, Clone, Copy)]
+pub struct StagedBorrow {
+    /// Serving (neighbor) cell.
+    pub cell: usize,
+    /// Serving device within that cell.
+    pub device: usize,
+    pub expert: usize,
+    pub tokens: f64,
+    /// Remote service seconds (`tokens · t_k`), excluding backhaul.
+    pub service_s: f64,
+    /// Remote queue instant before staging (rollback target).
+    prev_busy: Nanos,
+    /// Instant the group clears the Eq. (11) barrier, including the
+    /// return hop.
+    pub barrier: Nanos,
+}
+
+/// Cluster-level dispatch coordinator: load-aware re-homing at arrival
+/// and cross-cell expert borrowing at dispatch, with reusable scratch so
+/// both sit on the DES hot path without allocating.
+pub struct HandoverCoordinator {
+    policy: HandoverPolicy,
+    backhaul_s_per_token: f64,
+    /// Neighbor-candidate scratch: `(load score, cell)` pairs, ranked
+    /// ascending per borrow attempt. Reused — never reallocated.
+    order: Vec<(f64, usize)>,
+    /// Cross-cell groups staged by the current block.
+    staged: Vec<StagedBorrow>,
+}
+
+impl HandoverCoordinator {
+    pub fn new(policy: HandoverPolicy, backhaul_s_per_token: f64) -> Self {
+        Self {
+            policy,
+            backhaul_s_per_token,
+            order: Vec::new(),
+            staged: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> HandoverPolicy {
+        self.policy
+    }
+
+    /// One-way inter-cell transfer seconds per token.
+    pub fn backhaul_s_per_token(&self) -> f64 {
+        self.backhaul_s_per_token
+    }
+
+    /// Drop any scratch state (simulator reset). Stats are accumulated
+    /// by the run loop, so a reset coordinator is indistinguishable from
+    /// a fresh one.
+    pub fn reset(&mut self) {
+        self.order.clear();
+        self.staged.clear();
+    }
+
+    /// Groups staged by the current block (empty unless `BorrowExpert`
+    /// found local dispatch impossible this block).
+    pub fn staged(&self) -> &[StagedBorrow] {
+        &self.staged
+    }
+
+    pub fn has_staged(&self) -> bool {
+        !self.staged.is_empty()
+    }
+
+    /// Forget the staged groups after the block committed them.
+    pub fn clear_staged(&mut self) {
+        self.staged.clear();
+    }
+
+    /// Home cell for a new arrival: the round-robin home unless the
+    /// policy is `RehomeOnArrival`, in which case the cell with the
+    /// lowest live [`CellLoad::score`] wins (ties — including the
+    /// all-idle case — keep the round-robin home, so light traffic still
+    /// spreads across cells).
+    pub fn rehome<C: HandoverCell>(&self, rr_home: usize, now: Nanos, cells: &[C]) -> usize {
+        if self.policy != HandoverPolicy::RehomeOnArrival || cells.len() <= 1 {
+            return rr_home;
+        }
+        let score = |c: &C| CellLoad::observe(now, c.busy_until(), c.online()).score();
+        let home_score = score(&cells[rr_home]);
+        let mut best = (home_score, rr_home);
+        for (ci, c) in cells.iter().enumerate() {
+            if ci == rr_home {
+                continue;
+            }
+            let s = score(c);
+            // Strict < : the round-robin home keeps ties, and among
+            // equally-loaded strangers the lowest index wins.
+            if s < best.0 {
+                best = (s, ci);
+            }
+        }
+        best.1
+    }
+
+    /// Try to serve `tokens` tokens of `expert` on a neighbor cell
+    /// because every local replica is over the queue bound or
+    /// unserviceable. Neighbor cells are ranked by live load score;
+    /// within the least-loaded cell that has a serviceable, under-bound
+    /// replica, the replica with the earliest predicted completion wins
+    /// (ties to the lower device index). On success the remote queue is
+    /// staged forward and the group's barrier instant (including the
+    /// return backhaul hop) is returned.
+    ///
+    /// `left`/`right` are the cells below/above the home cell index —
+    /// the simulator's split borrow around its own (mutably held) home
+    /// cell.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_borrow<C: HandoverCell>(
+        &mut self,
+        home: usize,
+        expert: usize,
+        tokens: f64,
+        now: Nanos,
+        queue_limit_s: f64,
+        left: &mut [C],
+        right: &mut [C],
+    ) -> Option<Nanos> {
+        if self.policy != HandoverPolicy::BorrowExpert {
+            return None;
+        }
+        if left.is_empty() && right.is_empty() {
+            return None;
+        }
+        // Rank neighbors by live load, cheapest first. The load reads
+        // the staged queue instants too, so one block cannot dogpile a
+        // neighbor that only *looked* idle before its own borrows.
+        self.order.clear();
+        for (ci, c) in left.iter().enumerate() {
+            self.order.push((CellLoad::observe(now, c.busy_until(), c.online()).score(), ci));
+        }
+        for (j, c) in right.iter().enumerate() {
+            let ci = home + 1 + j;
+            self.order.push((CellLoad::observe(now, c.busy_until(), c.online()).score(), ci));
+        }
+        self.order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        let backhaul = nanos_from_secs(tokens * self.backhaul_s_per_token);
+        for &(score, ci) in &self.order {
+            if !score.is_finite() {
+                break; // dead cells sort last; nothing serviceable beyond
+            }
+            let cell = cell_mut(home, ci, &mut *left, &mut *right);
+            let t = cell.t_per_token();
+            let online = cell.online();
+            let busy = cell.busy_until();
+            let mut best: Option<(Nanos, usize)> = None;
+            for &k in cell.replicas(expert) {
+                if !online[k] || !t[k].is_finite() {
+                    continue;
+                }
+                // The borrow target must itself be under the queue
+                // bound — handover relieves overload, it must not
+                // launder it into a neighbor that is drowning too. The
+                // bound measures *committed* backlog only, mirroring the
+                // local admission rule: the block's own staged borrows
+                // (whose first stage recorded the committed instant in
+                // `prev_busy`) are barrier work, not overload, so a
+                // multi-group block cannot drop itself on an idle
+                // neighbor.
+                if queue_limit_s > 0.0 {
+                    let committed = self
+                        .staged
+                        .iter()
+                        .find(|s| s.cell == ci && s.device == k)
+                        .map(|s| s.prev_busy)
+                        .unwrap_or(busy[k]);
+                    if secs_from_nanos(committed.saturating_sub(now)) > queue_limit_s {
+                        continue;
+                    }
+                }
+                // Outbound hop: tokens reach the neighbor `backhaul`
+                // after `now`; service starts once both the transfer and
+                // the remote FIFO allow. FIFO reservation semantics: the
+                // remote queue instant advances to the group's finish,
+                // including any idle gap waiting for the transfer to
+                // land — once enqueued, later work queues behind it.
+                let start = busy[k].max(now.saturating_add(backhaul));
+                let done = start.saturating_add(nanos_from_secs(tokens * t[k]));
+                let better = match best {
+                    None => true,
+                    Some((bd, bk)) => done < bd || (done == bd && k < bk),
+                };
+                if better {
+                    best = Some((done, k));
+                }
+            }
+            if let Some((done, k)) = best {
+                let service_s = tokens * cell.t_per_token()[k];
+                let prev_busy = cell.busy_until()[k];
+                cell.set_busy_until(k, done);
+                let barrier = done.saturating_add(backhaul);
+                self.staged.push(StagedBorrow {
+                    cell: ci,
+                    device: k,
+                    expert,
+                    tokens,
+                    service_s,
+                    prev_busy,
+                    barrier,
+                });
+                return Some(barrier);
+            }
+        }
+        None
+    }
+
+    /// Undo every staged borrow (the block was rejected by
+    /// `DropRequest`): restore the remote queue instants in reverse
+    /// staging order, then forget the stages.
+    pub fn rollback<C: HandoverCell>(&mut self, home: usize, left: &mut [C], right: &mut [C]) {
+        for s in self.staged.iter().rev() {
+            cell_mut(home, s.cell, &mut *left, &mut *right).set_busy_until(s.device, s.prev_busy);
+        }
+        self.staged.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal mock cell: every expert is hosted on every device.
+    struct MockCell {
+        busy: Vec<Nanos>,
+        t: Vec<f64>,
+        online: Vec<bool>,
+        all: Vec<usize>,
+        committed: Vec<(usize, usize, f64)>,
+    }
+
+    impl MockCell {
+        fn new(busy: Vec<Nanos>, t: Vec<f64>) -> Self {
+            let n = busy.len();
+            Self {
+                busy,
+                t,
+                online: vec![true; n],
+                all: (0..n).collect(),
+                committed: Vec::new(),
+            }
+        }
+    }
+
+    impl HandoverCell for MockCell {
+        fn replicas(&self, _expert: usize) -> &[usize] {
+            &self.all
+        }
+        fn busy_until(&self) -> &[Nanos] {
+            &self.busy
+        }
+        fn set_busy_until(&mut self, device: usize, at: Nanos) {
+            self.busy[device] = at;
+        }
+        fn t_per_token(&self) -> &[f64] {
+            &self.t
+        }
+        fn online(&self) -> &[bool] {
+            &self.online
+        }
+        fn commit_remote(&mut self, device: usize, expert: usize, tokens: f64, _service_s: f64) {
+            self.committed.push((device, expert, tokens));
+        }
+    }
+
+    #[test]
+    fn none_policy_never_borrows_or_rehomes() {
+        let mut h = HandoverCoordinator::new(HandoverPolicy::None, 1e-4);
+        let mut left = [MockCell::new(vec![0; 2], vec![1e-3; 2])];
+        let mut right: [MockCell; 0] = [];
+        assert_eq!(h.try_borrow(1, 0, 10.0, 0, 0.0, &mut left, &mut right), None);
+        assert!(!h.has_staged());
+        let cells = [
+            MockCell::new(vec![5_000_000_000; 2], vec![1e-3; 2]),
+            MockCell::new(vec![0; 2], vec![1e-3; 2]),
+        ];
+        assert_eq!(h.rehome(0, 0, &cells), 0, "None keeps round-robin home");
+    }
+
+    #[test]
+    fn rehome_picks_least_loaded_and_keeps_home_on_ties() {
+        let h = HandoverCoordinator::new(HandoverPolicy::RehomeOnArrival, 1e-4);
+        // Cell 0 backlogged, cell 1 idle: arrival homed on 0 moves to 1.
+        let cells = [
+            MockCell::new(vec![5_000_000_000; 2], vec![1e-3; 2]),
+            MockCell::new(vec![0; 2], vec![1e-3; 2]),
+        ];
+        assert_eq!(h.rehome(0, 0, &cells), 1);
+        // Arrival homed on the idle cell stays put.
+        assert_eq!(h.rehome(1, 0, &cells), 1);
+        // All idle: round-robin home wins the tie, whichever it is.
+        let idle = [
+            MockCell::new(vec![0; 2], vec![1e-3; 2]),
+            MockCell::new(vec![0; 2], vec![1e-3; 2]),
+        ];
+        assert_eq!(h.rehome(0, 0, &idle), 0);
+        assert_eq!(h.rehome(1, 0, &idle), 1);
+    }
+
+    #[test]
+    fn borrow_targets_least_loaded_neighbor_and_pays_backhaul_both_ways() {
+        // 1 ms/token backhaul, 10 tokens => 10 ms per hop.
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 1e-3);
+        // Home is cell 1. Cell 0 is backlogged, cell 2 idle with
+        // 1 ms/token service.
+        let mut left = [MockCell::new(vec![8_000_000_000; 2], vec![1e-3; 2])];
+        let mut right = [MockCell::new(vec![0; 2], vec![1e-3; 2])];
+        let barrier = h
+            .try_borrow(1, 3, 10.0, 0, 0.0, &mut left, &mut right)
+            .expect("idle neighbor must accept the borrow");
+        // out hop 10 ms + service 10 ms + return hop 10 ms = 30 ms.
+        assert_eq!(barrier, 30_000_000);
+        let s = h.staged()[0];
+        assert_eq!((s.cell, s.device, s.expert), (2, 0, 3));
+        // The remote FIFO advanced to the device-done instant (20 ms),
+        // not the barrier.
+        assert_eq!(right[0].busy[0], 20_000_000);
+        // Untouched neighbor: the backlogged cell keeps its queue.
+        assert_eq!(left[0].busy[0], 8_000_000_000);
+    }
+
+    #[test]
+    fn borrow_respects_remote_queue_bound() {
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        // Only neighbor has 2 s of backlog on every device.
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![2_000_000_000; 2], vec![1e-3; 2])];
+        assert_eq!(
+            h.try_borrow(0, 0, 5.0, 0, 0.5, &mut left, &mut right),
+            None,
+            "a drowning neighbor must not accept borrowed work"
+        );
+        // With a generous bound the same borrow succeeds.
+        assert!(h.try_borrow(0, 0, 5.0, 0, 5.0, &mut left, &mut right).is_some());
+    }
+
+    #[test]
+    fn staged_borrows_queue_behind_each_other_and_rollback_restores() {
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        let mut left: [MockCell; 0] = [];
+        // One neighbor, one device, 1 ms/token.
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        let b1 = h.try_borrow(0, 0, 10.0, 0, 0.0, &mut left, &mut right).unwrap();
+        let b2 = h.try_borrow(0, 1, 10.0, 0, 0.0, &mut left, &mut right).unwrap();
+        // Second group queues behind the first on the same device.
+        assert_eq!(b1, 10_000_000);
+        assert_eq!(b2, 20_000_000);
+        assert_eq!(h.staged().len(), 2);
+        // DropRequest fires: rollback must restore the original queue.
+        h.rollback(0, &mut left, &mut right);
+        assert_eq!(right[0].busy[0], 0);
+        assert!(!h.has_staged());
+    }
+
+    #[test]
+    fn own_staged_borrows_do_not_trip_the_remote_bound() {
+        // The remote queue bound measures committed backlog only,
+        // mirroring the local admission rule: a multi-group block on an
+        // idle neighbor is barrier work, not overload. The first borrow
+        // stages 0.6 s of work — beyond the 0.5 s bound — yet the
+        // second group of the same block must still be admitted, and it
+        // queues behind the first.
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        let b1 = h.try_borrow(0, 0, 600.0, 0, 0.5, &mut left, &mut right).unwrap();
+        assert_eq!(b1, 600_000_000);
+        let b2 = h
+            .try_borrow(0, 1, 100.0, 0, 0.5, &mut left, &mut right)
+            .expect("own staged work must not count against the bound");
+        assert_eq!(b2, 700_000_000);
+        // Committed (non-staged) backlog beyond the bound still refuses.
+        h.clear_staged();
+        assert_eq!(h.try_borrow(0, 2, 10.0, 0, 0.5, &mut left, &mut right), None);
+    }
+
+    #[test]
+    fn borrow_skips_offline_and_unserviceable_replicas() {
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0, 0, 0], vec![f64::INFINITY, 1e-3, 1e-4])];
+        right[0].online[2] = false;
+        // Device 0 starved of spectrum, device 2 offline: device 1 wins.
+        let barrier = h.try_borrow(0, 0, 10.0, 0, 0.0, &mut left, &mut right).unwrap();
+        assert_eq!(h.staged()[0].device, 1);
+        assert_eq!(barrier, 10_000_000);
+        // Everything gone: no borrow.
+        right[0].online[1] = false;
+        h.clear_staged();
+        assert_eq!(h.try_borrow(0, 0, 10.0, 0, 0.0, &mut left, &mut right), None);
+    }
+
+    #[test]
+    fn commit_hands_accounting_to_the_serving_cell() {
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        h.try_borrow(0, 4, 10.0, 0, 0.0, &mut left, &mut right).unwrap();
+        // The block was admitted: the simulator walks the staged groups
+        // and commits each to its serving cell.
+        for s in h.staged() {
+            right[s.cell - 1].commit_remote(s.device, s.expert, s.tokens, s.service_s);
+        }
+        h.clear_staged();
+        assert_eq!(right[0].committed, vec![(0, 4, 10.0)]);
+        assert!(!h.has_staged());
+    }
+
+    #[test]
+    fn reset_clears_scratch() {
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        h.try_borrow(0, 0, 10.0, 0, 0.0, &mut left, &mut right).unwrap();
+        assert!(h.has_staged());
+        h.reset();
+        assert!(!h.has_staged());
+        assert_eq!(h.policy(), HandoverPolicy::BorrowExpert);
+    }
+}

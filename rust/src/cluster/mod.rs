@@ -65,6 +65,23 @@
 //! degraded useful work instead of unbounded queues — whichever policy
 //! absorbs it.
 //!
+//! ## Inter-cell handover
+//!
+//! The [`handover`] layer sits *above* the per-cell dispatcher, selected
+//! by [`crate::config::HandoverPolicy`]: `RehomeOnArrival` homes each
+//! arrival on the cell with the lowest live backlog per online device
+//! (a [`crate::control::CellLoad`] score) instead of blind round-robin,
+//! and `BorrowExpert` routes a token group whose local replicas are all
+//! over the queue bound (or unserviceable) to the least-loaded neighbor
+//! cell's replica, paying `backhaul_s_per_token` per hop. Borrowed
+//! groups ride the same Eq. (11) barrier, are staged-then-committed so a
+//! `DropRequest` rejection leaves no partial work in any cell, and show
+//! up as `handover_rate` / `borrowed_tokens` in both sweep CSVs. With
+//! `HandoverPolicy::None` the simulator's behaviour is unchanged from
+//! the pre-handover baseline (the new CSV columns are always zero), and
+//! its output is byte-identical to a run where handover is configured
+//! but never triggered.
+//!
 //! ## Entry points
 //!
 //! * [`sim::ClusterSim`] — build from a borrowed
@@ -84,16 +101,18 @@
 //! serial. The event loop itself is allocation-free per event (per-cell
 //! scratch + the control plane's solver workspace).
 //!
-//! Follow-ons tracked in ROADMAP.md: inter-cell handover, an energy
+//! Follow-ons tracked in ROADMAP.md: handover hysteresis, an energy
 //! model.
 
 pub mod dispatch;
 pub mod event;
+pub mod handover;
 pub mod placement;
 pub mod sim;
 
 pub use dispatch::Dispatcher;
 pub use event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+pub use handover::{HandoverCell, HandoverCoordinator, StagedBorrow};
 pub use placement::Placement;
 pub use sim::{
     arrival_rate_sweep, control_plane_sweep, ClusterOutcome, ClusterSim, SweepPoint, SweepResult,

@@ -1,7 +1,9 @@
 //! The multi-cell discrete-event serving simulator.
 //!
 //! Requests arrive open-loop (Poisson or trace replay), are assigned to a
-//! cell round-robin, and walk the model's `I` MoE blocks one by one. Per
+//! cell round-robin (or by live load under
+//! [`crate::config::HandoverPolicy::RehomeOnArrival`]), and walk the
+//! model's `I` MoE blocks one by one. Per
 //! block the cell's gate draws weights, the configured selection policy
 //! picks experts (Algorithm 1 / top-k / …), and the dispatcher routes
 //! each selected expert's token group to one of its replicas. Token
@@ -28,6 +30,18 @@
 //! overload degrades goodput and shed rate measurably instead of growing
 //! queues without bound.
 //!
+//! Inter-cell handover: the [`crate::cluster::handover`] layer sits
+//! above the per-cell dispatcher. Under
+//! [`crate::config::HandoverPolicy::BorrowExpert`], a dispatch that
+//! finds every *local* replica of an expert over the bound (or
+//! unserviceable) routes that token group to the least-loaded neighbor
+//! cell's replica, paying a per-token backhaul latency each way; the
+//! group is tracked through the same Eq. (11) barrier, and a
+//! `DropRequest` rejection rolls staged borrows back so no partial work
+//! survives in any cell. With `HandoverPolicy::None` behaviour is
+//! unchanged from the pre-handover simulator, and the output is
+//! byte-identical to a run where handover never triggers.
+//!
 //! ## Hot-path discipline
 //!
 //! The event loop is allocation-free per event: every per-block vector
@@ -42,9 +56,10 @@
 
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+use super::handover::{HandoverCell, HandoverCoordinator};
 use super::placement::Placement;
 use crate::config::{ClusterConfig, ControlKind, DropPolicy, PolicyConfig};
-use crate::control::{make_plane, ControlOptions, ControlPlane, LinkState};
+use crate::control::{make_plane, CellLoad, ControlOptions, ControlPlane, LinkState};
 use crate::devices::Fleet;
 use crate::latency::TokenLatencies;
 use crate::metrics::{ControlStats, SteadyState, Summary, Table, Utilization};
@@ -86,6 +101,32 @@ struct Cell {
     demand: Vec<f64>,
 }
 
+/// What the cluster-level handover layer may read and (for staged
+/// borrows) write on a cell. Accounting mirrors a local placement
+/// commit, so the serving cell's control plane sees borrowed demand.
+impl HandoverCell for Cell {
+    fn replicas(&self, expert: usize) -> &[usize] {
+        self.plane.placement().replicas(expert)
+    }
+    fn busy_until(&self) -> &[Nanos] {
+        &self.busy_until
+    }
+    fn set_busy_until(&mut self, device: usize, at: Nanos) {
+        self.busy_until[device] = at;
+    }
+    fn t_per_token(&self) -> &[f64] {
+        self.plane.t_per_token()
+    }
+    fn online(&self) -> &[bool] {
+        &self.online
+    }
+    fn commit_remote(&mut self, device: usize, expert: usize, tokens: f64, service_s: f64) {
+        self.busy[device].add_busy(service_s);
+        self.served_tokens[device] += tokens;
+        self.expert_tokens[expert] += tokens;
+    }
+}
+
 enum Event {
     Arrive(usize),
     BlockDone(usize),
@@ -98,6 +139,9 @@ struct ReqState {
     cell: usize,
     arrived: Nanos,
     next_block: usize,
+    /// The request experienced a handover action (re-home or borrow) —
+    /// each request counts at most once toward the handover rate.
+    handed_over: bool,
 }
 
 /// Outcome of dispatching one block.
@@ -107,6 +151,10 @@ struct BlockResult {
     end: Option<Nanos>,
     /// Token groups shed by [`DropPolicy::ShedTokens`] in this block.
     shed_tokens: f64,
+    /// Expert groups served by a neighbor cell in this block.
+    borrowed_groups: usize,
+    /// Tokens those borrowed groups carried.
+    borrowed_tokens: f64,
 }
 
 /// Result of one simulation run (all arrivals drained).
@@ -123,6 +171,14 @@ pub struct ClusterOutcome {
     /// Expert token groups shed by [`DropPolicy::ShedTokens`] (requests
     /// continue degraded; not counted in `dropped`).
     pub shed_tokens: f64,
+    /// Requests whose service crossed a cell boundary at least once
+    /// (load-aware re-home at arrival, or a borrowed expert group).
+    pub handovers: usize,
+    /// Expert token groups served by a neighbor cell under
+    /// [`crate::config::HandoverPolicy::BorrowExpert`].
+    pub borrowed_groups: usize,
+    /// Tokens those borrowed groups carried.
+    pub borrowed_tokens: f64,
     /// Requests still in flight when the event queue drained (0 by
     /// construction for finite arrival streams — the conservation law).
     pub in_flight: usize,
@@ -179,6 +235,18 @@ impl ClusterOutcome {
             0.0
         } else {
             self.dropped as f64 / self.arrived as f64
+        }
+    }
+
+    /// Fraction of arrivals whose service crossed a cell boundary — a
+    /// load-aware re-home at arrival or at least one borrowed expert
+    /// group. 0 by construction under
+    /// [`crate::config::HandoverPolicy::None`].
+    pub fn handover_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.handovers as f64 / self.arrived as f64
         }
     }
 
@@ -241,6 +309,9 @@ pub struct ClusterSim {
     copts: ControlOptions,
     cache_capacity: usize,
     dispatcher: Dispatcher,
+    /// Cluster-level dispatch layer: arrival re-homing and cross-cell
+    /// expert borrowing (reused scratch, no hot-path allocation).
+    handover: HandoverCoordinator,
     /// Frozen per-cell link contexts — the rebuild template for
     /// [`Self::reset`].
     states: Vec<LinkState>,
@@ -290,6 +361,7 @@ impl ClusterSim {
             },
             cache_capacity: cfg.cache_capacity,
             dispatcher: Dispatcher::new(cfg.dispatch),
+            handover: HandoverCoordinator::new(cfg.handover, cfg.backhaul_s_per_token),
             states,
             cells: Vec::new(),
         };
@@ -300,6 +372,7 @@ impl ClusterSim {
     /// (Re)construct every cell from the stored link contexts and seeds.
     fn build_cells(&mut self) -> anyhow::Result<()> {
         let n_experts = self.params.n_experts;
+        self.handover.reset();
         self.cells.clear();
         for (ci, state) in self.states.iter().enumerate() {
             let n_dev = state.n_devices();
@@ -371,6 +444,14 @@ impl ClusterSim {
         self.cells[cell].plane.stats()
     }
 
+    /// Live backlog summary of one cell at virtual time `now_s` — the
+    /// same signal the handover layer reads when re-homing arrivals or
+    /// ranking neighbor cells for a borrow (inspection / tests).
+    pub fn cell_load(&self, cell: usize, now_s: f64) -> CellLoad {
+        let c = &self.cells[cell];
+        CellLoad::observe(nanos_from_secs(now_s), &c.busy_until, &c.online)
+    }
+
     /// Force a control epoch now with an explicit demand signal
     /// (tests / tooling; the DES feeds observed backlog automatically).
     pub fn control_epoch(
@@ -408,6 +489,7 @@ impl ClusterSim {
                 cell: i % n_cells,
                 arrived: nanos_from_secs(a.time_s),
                 next_block: 0,
+                handed_over: false,
             })
             .collect();
         for (i, st) in states.iter().enumerate() {
@@ -430,6 +512,9 @@ impl ClusterSim {
         let mut completed_tokens = 0u64;
         let mut dropped_tokens = 0u64;
         let mut shed_tokens = 0.0f64;
+        let mut handovers = 0usize;
+        let mut borrowed_groups = 0usize;
+        let mut borrowed_tokens = 0.0f64;
         let mut events = 0usize;
         let mut latency_ms = SteadyState::new(self.params.warmup_frac);
         // Makespan is the last *work* event: a control tick pending when
@@ -457,6 +542,18 @@ impl ClusterSim {
                     arrived += 1;
                     arrived_tokens += states[i].tokens as u64;
                     last_work_ns = now;
+                    // The final cell choice happens *now*, not at stream
+                    // build time: load-aware re-homing must read the
+                    // live backlog. `states[i].cell` holds the
+                    // round-robin home assigned at build time; under
+                    // `HandoverPolicy::None` rehome returns it as is.
+                    let rr_home = states[i].cell;
+                    let chosen = self.handover.rehome(rr_home, now, &self.cells);
+                    states[i].cell = chosen;
+                    if chosen != rr_home {
+                        states[i].handed_over = true;
+                        handovers += 1;
+                    }
                     i
                 }
                 Event::BlockDone(i) => {
@@ -474,6 +571,12 @@ impl ClusterSim {
             };
             let r = self.start_block(&states[i], now);
             shed_tokens += r.shed_tokens;
+            borrowed_groups += r.borrowed_groups;
+            borrowed_tokens += r.borrowed_tokens;
+            if r.borrowed_groups > 0 && !states[i].handed_over {
+                states[i].handed_over = true;
+                handovers += 1;
+            }
             match r.end {
                 Some(block_end) => queue.schedule_at(block_end, Event::BlockDone(i)),
                 None => {
@@ -499,6 +602,9 @@ impl ClusterSim {
             completed_tokens,
             dropped_tokens,
             shed_tokens,
+            handovers,
+            borrowed_groups,
+            borrowed_tokens,
             in_flight: arrived - completed - dropped,
             events,
             makespan_s,
@@ -545,8 +651,9 @@ impl ClusterSim {
     }
 
     /// Dispatch one block of one request; returns the block's completion
-    /// instant (the Eq. (11) barrier over its token groups), or a drop
-    /// marker when admission control rejects the request.
+    /// instant (the Eq. (11) barrier over its token groups — local *and*
+    /// borrowed), or a drop marker when admission control rejects the
+    /// request.
     fn start_block(&mut self, st: &ReqState, now: Nanos) -> BlockResult {
         let n_experts = self.params.n_experts;
         let queue_limit_s = self.params.queue_limit_s;
@@ -554,7 +661,11 @@ impl ClusterSim {
         let top_k = self.params.top_k;
         let gate_sharpness = self.params.gate_sharpness;
         let gate_bias = self.params.gate_bias;
-        let cell = &mut self.cells[st.cell];
+        // Split borrow around the home cell: `left`/`right` are the
+        // neighbor cells the handover layer may stage borrows into while
+        // the home cell stays mutably held.
+        let (left, rest) = self.cells.split_at_mut(st.cell);
+        let (cell, right) = rest.split_first_mut().expect("valid home cell index");
         let gate = GateWeights::new(cell.gates.synthetic_gate_weights_biased(
             st.tokens,
             n_experts,
@@ -618,7 +729,23 @@ impl ClusterSim {
                     .iter()
                     .any(|&r| cell.online[r] && t_per_token[r].is_finite())
                 {
-                    continue; // no serviceable replica: tokens dropped by selection
+                    // No local replica can serve at all: a neighbor may
+                    // still host one (`BorrowExpert`); otherwise the
+                    // tokens are dropped by selection, as before.
+                    if let Some(barrier) = self.handover.try_borrow(
+                        st.cell,
+                        e,
+                        q,
+                        now,
+                        queue_limit_s,
+                        &mut *left,
+                        &mut *right,
+                    ) {
+                        if barrier > block_end {
+                            block_end = barrier;
+                        }
+                    }
+                    continue;
                 }
                 cell.cand.clear();
                 for &r in placement.replicas(e) {
@@ -642,31 +769,56 @@ impl ClusterSim {
                     &cell.online,
                 ) {
                     Some(k) => k,
-                    None => match drop_policy {
-                        DropPolicy::DropRequest => {
-                            return BlockResult {
-                                end: None,
-                                shed_tokens: 0.0,
-                            }
-                        }
-                        DropPolicy::ShedTokens => {
-                            shed += q;
-                            // Shed demand is still demand: without this
-                            // the autoscaler is blind to exactly the
-                            // experts being shed. (ShedTokens never
-                            // aborts the block, so this needs no
-                            // rollback.)
-                            cell.expert_tokens[e] += q;
-                            let heavier = match best_shed {
-                                None => true,
-                                Some((_, bq)) => q > bq,
-                            };
-                            if heavier {
-                                best_shed = Some((e, q));
+                    None => {
+                        // Every local replica is over the queue bound:
+                        // borrowing a neighbor's replica beats invoking
+                        // the drop policy.
+                        if let Some(barrier) = self.handover.try_borrow(
+                            st.cell,
+                            e,
+                            q,
+                            now,
+                            queue_limit_s,
+                            &mut *left,
+                            &mut *right,
+                        ) {
+                            if barrier > block_end {
+                                block_end = barrier;
                             }
                             continue;
                         }
-                    },
+                        match drop_policy {
+                            DropPolicy::DropRequest => {
+                                // A rejection must leave no partial work
+                                // behind — in *any* cell: un-stage the
+                                // block's cross-cell borrows too.
+                                self.handover.rollback(st.cell, &mut *left, &mut *right);
+                                return BlockResult {
+                                    end: None,
+                                    shed_tokens: 0.0,
+                                    borrowed_groups: 0,
+                                    borrowed_tokens: 0.0,
+                                };
+                            }
+                            DropPolicy::ShedTokens => {
+                                shed += q;
+                                // Shed demand is still demand: without
+                                // this the autoscaler is blind to
+                                // exactly the experts being shed.
+                                // (ShedTokens never aborts the block, so
+                                // this needs no rollback.)
+                                cell.expert_tokens[e] += q;
+                                let heavier = match best_shed {
+                                    None => true,
+                                    Some((_, bq)) => q > bq,
+                                };
+                                if heavier {
+                                    best_shed = Some((e, q));
+                                }
+                                continue;
+                            }
+                        }
+                    }
                 }
             } else {
                 match self.dispatcher.choose(
@@ -678,8 +830,25 @@ impl ClusterSim {
                     &cell.online,
                 ) {
                     Some(k) => k,
-                    // no serviceable replica: tokens dropped by selection
-                    None => continue,
+                    None => {
+                        // No serviceable local replica: try a neighbor's
+                        // (`BorrowExpert`); otherwise the tokens are
+                        // dropped by selection, as before.
+                        if let Some(barrier) = self.handover.try_borrow(
+                            st.cell,
+                            e,
+                            q,
+                            now,
+                            queue_limit_s,
+                            &mut *left,
+                            &mut *right,
+                        ) {
+                            if barrier > block_end {
+                                block_end = barrier;
+                            }
+                        }
+                        continue;
+                    }
                 }
             };
             let service_s = q * t_per_token[k];
@@ -691,10 +860,11 @@ impl ClusterSim {
                 block_end = done;
             }
         }
-        // A block must do *some* work: if shedding removed every group,
-        // serve the heaviest one anyway — the barrier then reflects the
-        // overloaded device instead of a zero-time hop.
-        if cell.placed.is_empty() {
+        // A block must do *some* work: if shedding removed every group
+        // (and nothing was borrowed either), serve the heaviest one
+        // anyway — the barrier then reflects the overloaded device
+        // instead of a zero-time hop.
+        if cell.placed.is_empty() && !self.handover.has_staged() {
             if let Some((e, q)) = best_shed {
                 if let Some(k) = self.dispatcher.choose(
                     placement.replicas(e),
@@ -727,9 +897,30 @@ impl ClusterSim {
             cell.served_tokens[k] += q;
             cell.expert_tokens[e] += q;
         }
+        // Commit the staged cross-cell groups. Accounting lands on the
+        // *serving* cell (its control plane must see borrowed demand);
+        // the home cell's selection policy observes the effective
+        // per-token cost including both backhaul hops, and its
+        // autoscaler still counts the expert as hot locally — so an
+        // adaptive home cell replicates a chronically-borrowed expert
+        // rather than borrowing forever.
+        let mut borrowed_groups = 0usize;
+        let mut borrowed_tokens = 0.0f64;
+        let backhaul = self.handover.backhaul_s_per_token();
+        for s in self.handover.staged() {
+            let serving = super::handover::cell_mut(st.cell, s.cell, &mut *left, &mut *right);
+            serving.commit_remote(s.device, s.expert, s.tokens, s.service_s);
+            cell.policy.observe(s.expert, s.service_s / s.tokens + 2.0 * backhaul);
+            cell.expert_tokens[s.expert] += s.tokens;
+            borrowed_groups += 1;
+            borrowed_tokens += s.tokens;
+        }
+        self.handover.clear_staged();
         BlockResult {
             end: Some(block_end),
             shed_tokens: shed,
+            borrowed_groups,
+            borrowed_tokens,
         }
     }
 }
@@ -800,6 +991,8 @@ pub fn arrival_rate_sweep(
             "util_max",
             "resolves",
             "churn",
+            "handover_rate",
+            "borrowed_tokens",
         ],
     );
     summary.precision = 3;
@@ -818,6 +1011,8 @@ pub fn arrival_rate_sweep(
         let rate = point.rate_rps;
         let out = &point.outcome;
         let s = out.steady_latency();
+        // One sort serves all three percentiles (see Summary::percentiles).
+        let pct = s.percentiles(&[50.0, 95.0, 99.0]);
         let util = out.flat_utilization();
         let util_mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
         let util_max = util.iter().cloned().fold(0.0f64, f64::max);
@@ -830,14 +1025,16 @@ pub fn arrival_rate_sweep(
                 out.goodput_tps(),
                 out.drop_rate(),
                 out.shed_tps(),
-                s.percentile(50.0),
-                s.percentile(95.0),
-                s.percentile(99.0),
+                pct[0],
+                pct[1],
+                pct[2],
                 s.mean(),
                 util_mean,
                 util_max,
                 ctl.resolves as f64,
                 ctl.churn_frac,
+                out.handover_rate(),
+                out.borrowed_tokens,
             ],
         );
         util_t.row(&format!("rate={rate}"), util);
@@ -906,6 +1103,8 @@ pub fn control_plane_sweep(
             "resolves",
             "placement_updates",
             "churn",
+            "handover_rate",
+            "borrowed_tokens",
         ],
     );
     table.precision = 3;
@@ -914,6 +1113,7 @@ pub fn control_plane_sweep(
         let kind = kinds[i / rates_rps.len()];
         let rate = rates_rps[i % rates_rps.len()];
         let s = out.steady_latency();
+        let pct = s.percentiles(&[50.0, 95.0, 99.0]);
         let ctl = out.control_total();
         table.row(
             &format!("{}@rate={rate}", kind.as_str()),
@@ -923,12 +1123,14 @@ pub fn control_plane_sweep(
                 out.goodput_tps(),
                 out.drop_rate(),
                 out.shed_tps(),
-                s.percentile(50.0),
-                s.percentile(95.0),
-                s.percentile(99.0),
+                pct[0],
+                pct[1],
+                pct[2],
                 ctl.resolves as f64,
                 ctl.placement_updates as f64,
                 ctl.churn_frac,
+                out.handover_rate(),
+                out.borrowed_tokens,
             ],
         );
     }
@@ -1141,12 +1343,59 @@ mod tests {
         for p in &r.points {
             assert_eq!(p.outcome.completed, 24);
         }
-        for col in ["goodput_tps", "drop_rate", "shed_tps", "resolves", "churn"] {
+        for col in [
+            "goodput_tps",
+            "drop_rate",
+            "shed_tps",
+            "resolves",
+            "churn",
+            "handover_rate",
+            "borrowed_tokens",
+        ] {
             assert!(
                 r.summary.columns.iter().any(|c| c == col),
                 "missing column {col}"
             );
         }
+    }
+
+    #[test]
+    fn handover_none_reports_zero_handover_metrics() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 4;
+        let out = run_with(cfg, 4.0, 40, 0);
+        assert_eq!(out.handovers, 0);
+        assert_eq!(out.borrowed_groups, 0);
+        assert_eq!(out.borrowed_tokens, 0.0);
+        assert_eq!(out.handover_rate(), 0.0);
+    }
+
+    #[test]
+    fn rehome_on_arrival_still_drains_and_conserves() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 4;
+        cfg.handover = crate::config::HandoverPolicy::RehomeOnArrival;
+        let out = run_with(cfg, 6.0, 40, 1);
+        assert_eq!(out.completed, 40);
+        assert_eq!(out.in_flight, 0);
+        assert_eq!(out.arrived_tokens, out.completed_tokens);
+        // Re-homing never borrows groups.
+        assert_eq!(out.borrowed_groups, 0);
+        assert!(out.handover_rate() <= 1.0);
+    }
+
+    #[test]
+    fn cell_load_reflects_committed_backlog() {
+        let cfg = small_cfg();
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let idle = sim.cell_load(0, 0.0);
+        assert_eq!(idle.backlog_s_total, 0.0);
+        assert_eq!(idle.online_devices, 8);
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 50.0 }.generate(20, Benchmark::Piqa, 0);
+        sim.run(&arrivals);
+        // Queues drained at run end: backlog at a far-future instant is 0.
+        assert_eq!(sim.cell_load(0, 1e6).backlog_s_total, 0.0);
     }
 
     #[test]

@@ -94,6 +94,53 @@ impl DropPolicy {
     }
 }
 
+/// Inter-cell handover: whether (and how) a request's work may cross
+/// cell boundaries (see [`crate::cluster::handover`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandoverPolicy {
+    /// Requests are pinned to their round-robin cell for their whole
+    /// lifetime — the pre-handover baseline behaviour, unchanged
+    /// (handover CSV columns report zero).
+    None,
+    /// Load-aware cell choice at arrival: the request is homed on the
+    /// cell with the lowest live backlog per online device instead of
+    /// blind round-robin (ties keep the round-robin home).
+    RehomeOnArrival,
+    /// Cross-cell expert borrowing at dispatch: when every local replica
+    /// of a selected expert is over the queue bound or unserviceable,
+    /// the token group is routed to the least-loaded neighbor cell's
+    /// replica, paying `backhaul_s_per_token` per token per hop.
+    BorrowExpert,
+}
+
+impl HandoverPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HandoverPolicy::None => "none",
+            HandoverPolicy::RehomeOnArrival => "rehome_on_arrival",
+            HandoverPolicy::BorrowExpert => "borrow_expert",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" | "off" => HandoverPolicy::None,
+            "rehome_on_arrival" | "rehome" => HandoverPolicy::RehomeOnArrival,
+            "borrow_expert" | "borrow" => HandoverPolicy::BorrowExpert,
+            other => anyhow::bail!("unknown handover policy '{other}'"),
+        })
+    }
+
+    /// All policies, in baseline → borrowing order (comparison sweeps).
+    pub fn all() -> [HandoverPolicy; 3] {
+        [
+            HandoverPolicy::None,
+            HandoverPolicy::RehomeOnArrival,
+            HandoverPolicy::BorrowExpert,
+        ]
+    }
+}
+
 /// How the BS picks among the replicas of a selected expert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchKind {
@@ -181,6 +228,12 @@ pub struct ClusterConfig {
     pub queue_limit_s: f64,
     /// Policy applied when a dispatch would exceed the queue bound.
     pub drop_policy: DropPolicy,
+    /// Inter-cell handover policy (cross-cell dispatch layer).
+    pub handover: HandoverPolicy,
+    /// One-way inter-cell transfer latency per token (seconds). Borrowed
+    /// groups pay it twice: once to reach the neighbor, once for the
+    /// result to return through the Eq. (11) barrier.
+    pub backhaul_s_per_token: f64,
     /// Fraction of completed requests discarded as warm-up before
     /// steady-state latency percentiles are computed.
     pub warmup_frac: f64,
@@ -230,6 +283,8 @@ impl ClusterConfig {
             control_hysteresis: 0.05,
             queue_limit_s: 0.0,
             drop_policy: DropPolicy::DropRequest,
+            handover: HandoverPolicy::None,
+            backhaul_s_per_token: 2e-4,
             warmup_frac: 0.2,
             gate_sharpness: 1.5,
             gate_bias: 0.4,
@@ -287,6 +342,8 @@ impl ClusterConfig {
             ("control_hysteresis", Json::Num(self.control_hysteresis)),
             ("queue_limit_s", Json::Num(self.queue_limit_s)),
             ("drop_policy", Json::str(self.drop_policy.as_str())),
+            ("handover", Json::str(self.handover.as_str())),
+            ("backhaul_s_per_token", Json::Num(self.backhaul_s_per_token)),
             ("warmup_frac", Json::Num(self.warmup_frac)),
             ("gate_sharpness", Json::Num(self.gate_sharpness)),
             ("gate_bias", Json::Num(self.gate_bias)),
@@ -324,6 +381,11 @@ impl ClusterConfig {
                 Some(v) => DropPolicy::parse(v.as_str()?)?,
                 None => DropPolicy::DropRequest,
             },
+            handover: match j.opt("handover") {
+                Some(v) => HandoverPolicy::parse(v.as_str()?)?,
+                None => HandoverPolicy::None,
+            },
+            backhaul_s_per_token: opt_f64("backhaul_s_per_token", 2e-4)?,
             warmup_frac: j.get("warmup_frac")?.as_f64()?,
             gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
             gate_bias: j.get("gate_bias")?.as_f64()?,
@@ -356,6 +418,10 @@ impl ClusterConfig {
         anyhow::ensure!(
             self.queue_limit_s.is_finite() && self.queue_limit_s >= 0.0,
             "queue_limit_s must be non-negative and finite (0 = unbounded)"
+        );
+        anyhow::ensure!(
+            self.backhaul_s_per_token.is_finite() && self.backhaul_s_per_token >= 0.0,
+            "backhaul_s_per_token must be non-negative and finite"
         );
         for cell in &self.cells {
             anyhow::ensure!(
@@ -491,6 +557,8 @@ mod tests {
             "control_hysteresis",
             "queue_limit_s",
             "drop_policy",
+            "handover",
+            "backhaul_s_per_token",
         ] {
             m.remove(key);
         }
@@ -500,7 +568,45 @@ mod tests {
         assert_eq!(back.control_hysteresis, 0.05);
         assert_eq!(back.queue_limit_s, 0.0);
         assert_eq!(back.drop_policy, DropPolicy::DropRequest);
+        assert_eq!(back.handover, HandoverPolicy::None);
+        assert_eq!(back.backhaul_s_per_token, 2e-4);
         back.validate().unwrap();
+    }
+
+    #[test]
+    fn handover_policy_parsing_roundtrip() {
+        for p in HandoverPolicy::all() {
+            assert_eq!(HandoverPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(
+            HandoverPolicy::parse("rehome").unwrap(),
+            HandoverPolicy::RehomeOnArrival
+        );
+        assert_eq!(
+            HandoverPolicy::parse("borrow").unwrap(),
+            HandoverPolicy::BorrowExpert
+        );
+        assert!(HandoverPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_handover_fields() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.handover = HandoverPolicy::BorrowExpert;
+        cfg.backhaul_s_per_token = 5e-4;
+        cfg.queue_limit_s = 1.0;
+        let back = ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn validation_rejects_bad_backhaul() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.backhaul_s_per_token = -1e-4;
+        assert!(cfg.validate().is_err());
+        cfg.backhaul_s_per_token = f64::INFINITY;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -14,7 +14,9 @@
 pub mod cluster;
 mod presets; // preset constructors are inherent impls on SystemConfig
 
-pub use cluster::{CellConfig, ClusterConfig, ControlKind, DispatchKind, DropPolicy};
+pub use cluster::{
+    CellConfig, ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy,
+};
 
 use crate::util::Json;
 use anyhow::Result;

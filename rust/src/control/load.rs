@@ -1,0 +1,100 @@
+//! Live per-cell load summaries — the signal the cluster-level dispatch
+//! layer ([`crate::cluster::handover`]) reads before moving work across
+//! cells.
+//!
+//! The control plane owns a cell's *allocation* state; the DES owns its
+//! *queue* state (`busy_until`). [`CellLoad`] is the bridge: a cheap,
+//! allocation-free snapshot of a cell's outstanding backlog at a virtual
+//! instant, comparable across cells of different sizes via
+//! [`CellLoad::score`]. Arrival re-homing picks the cell with the lowest
+//! score; expert borrowing ranks neighbor cells by it.
+
+use crate::cluster::event::{secs_from_nanos, Nanos};
+
+/// Snapshot of one cell's queue backlog at a virtual instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CellLoad {
+    /// Summed backlog seconds over online devices.
+    pub backlog_s_total: f64,
+    /// Worst single-device backlog seconds (online devices only).
+    pub backlog_s_max: f64,
+    /// Devices currently online.
+    pub online_devices: usize,
+}
+
+impl CellLoad {
+    /// Observe a cell's committed queue state: `busy_until[k]` is the
+    /// instant device `k`'s FIFO drains, `online[k]` its availability.
+    /// Runs on the arrival hot path — a single pass over borrowed
+    /// slices, no allocation.
+    pub fn observe(now: Nanos, busy_until: &[Nanos], online: &[bool]) -> Self {
+        debug_assert_eq!(busy_until.len(), online.len());
+        let mut load = CellLoad::default();
+        for (&busy, &on) in busy_until.iter().zip(online) {
+            if !on {
+                continue;
+            }
+            load.online_devices += 1;
+            let backlog_s = secs_from_nanos(busy.saturating_sub(now));
+            load.backlog_s_total += backlog_s;
+            if backlog_s > load.backlog_s_max {
+                load.backlog_s_max = backlog_s;
+            }
+        }
+        load
+    }
+
+    /// Cross-cell comparison score: mean backlog seconds per online
+    /// device (cells with more devices absorb more work before looking
+    /// loaded). A cell with no online device scores infinite — it can
+    /// never win a re-home or a borrow.
+    pub fn score(&self) -> f64 {
+        if self.online_devices == 0 {
+            f64::INFINITY
+        } else {
+            self.backlog_s_total / self.online_devices as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_sums_online_backlog_only() {
+        // now = 1 s; device 0 drains at 3 s (2 s backlog), device 1 is
+        // already idle, device 2 is offline with a huge queue.
+        let busy = [3_000_000_000u64, 500_000_000, 9_000_000_000];
+        let online = [true, true, false];
+        let load = CellLoad::observe(1_000_000_000, &busy, &online);
+        assert_eq!(load.online_devices, 2);
+        assert!((load.backlog_s_total - 2.0).abs() < 1e-12);
+        assert!((load.backlog_s_max - 2.0).abs() < 1e-12);
+        assert!((load.score() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_cell_scores_zero_dead_cell_scores_infinite() {
+        let idle = CellLoad::observe(5_000_000_000, &[0, 0], &[true, true]);
+        assert_eq!(idle.score(), 0.0);
+        let dead = CellLoad::observe(0, &[0, 0], &[false, false]);
+        assert!(dead.score().is_infinite());
+    }
+
+    #[test]
+    fn score_normalizes_by_online_device_count() {
+        // Same total backlog, twice the devices: half the score.
+        let small = CellLoad {
+            backlog_s_total: 4.0,
+            backlog_s_max: 4.0,
+            online_devices: 2,
+        };
+        let big = CellLoad {
+            backlog_s_total: 4.0,
+            backlog_s_max: 1.0,
+            online_devices: 4,
+        };
+        assert!(big.score() < small.score());
+    }
+}

@@ -22,14 +22,21 @@
 //!   backlog, warm-started, plus replica autoscaling from observed
 //!   per-expert token counts).
 //!
+//! * [`CellLoad`] — a live per-cell queue-backlog summary the
+//!   cluster-level dispatch layer ([`crate::cluster::handover`]) reads
+//!   when re-homing arrivals or ranking neighbor cells for expert
+//!   borrowing.
+//!
 //! Re-solve counts and allocation churn are reported through
 //! [`crate::metrics::ControlStats`] so closed-loop activity shows up in
 //! the `repro cluster` CSVs next to latency.
 //!
 //! [`DeviceLink`]: crate::optim::solver::DeviceLink
 
+pub mod load;
 pub mod plane;
 pub mod state;
 
+pub use load::CellLoad;
 pub use plane::{make_plane, AdaptivePlane, ControlOptions, ControlPlane, StaticPlane};
 pub use state::LinkState;

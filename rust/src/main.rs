@@ -12,13 +12,17 @@
 //!           [--cache N] [--dispatch load_aware|static] [--cells N]
 //!           [--control static_uniform|static_optimal|adaptive|compare]
 //!           [--epoch S] [--queue-limit S] [--drop request|shed]
+//!           [--handover none|rehome|borrow] [--backhaul S]
 //!           [--threads N]
 //!                 multi-cell discrete-event serving sweep: throughput,
 //!                 goodput, drop rate, p50/p95/p99 latency, per-device
-//!                 utilization and control-plane activity vs arrival
-//!                 rate (CSV into --out); `--control compare` runs all
-//!                 three control planes on identical arrival streams;
-//!                 sweep points run on the parallel engine (--threads 0 =
+//!                 utilization, control-plane activity and handover
+//!                 metrics vs arrival rate (CSV into --out); `--control
+//!                 compare` runs all three control planes on identical
+//!                 arrival streams; `--handover` enables load-aware
+//!                 arrival re-homing or cross-cell expert borrowing
+//!                 (per-token backhaul latency via --backhaul); sweep
+//!                 points run on the parallel engine (--threads 0 =
 //!                 one worker per core, 1 = serial; output is
 //!                 byte-identical either way)
 //!   bench [--json] [--smoke]
@@ -37,7 +41,9 @@
 
 use std::path::PathBuf;
 use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
-use wdmoe::config::{ClusterConfig, ControlKind, DispatchKind, DropPolicy, SystemConfig};
+use wdmoe::config::{
+    ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy, SystemConfig,
+};
 use wdmoe::repro::{self, ReproContext};
 use wdmoe::workload::Benchmark;
 
@@ -62,6 +68,7 @@ COMMANDS:
           [--cache N] [--dispatch load_aware|static] [--cells N]
           [--control static_uniform|static_optimal|adaptive|compare]
           [--epoch S] [--queue-limit S] [--drop request|shed]
+          [--handover none|rehome|borrow] [--backhaul S]
           [--threads N]   (0 = one worker per core; output is
                            byte-identical at any thread count)
   bench [--json] [--smoke]
@@ -242,6 +249,12 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     if let Some(d) = rest_opt(&args.rest, "--drop") {
         cfg.drop_policy = DropPolicy::parse(&d)?;
     }
+    if let Some(h) = rest_opt(&args.rest, "--handover") {
+        cfg.handover = HandoverPolicy::parse(&h)?;
+    }
+    if let Some(b) = rest_opt(&args.rest, "--backhaul") {
+        cfg.backhaul_s_per_token = b.parse()?;
+    }
     let compare = match rest_opt(&args.rest, "--control") {
         Some(s) if s == "compare" => true,
         Some(s) => {
@@ -278,12 +291,13 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         .unwrap_or(0);
 
     println!(
-        "cluster sweep: {} cells, cache {}, dispatch {}, control {}, {} x {} requests, \
-         rates {:?}, {} workers",
+        "cluster sweep: {} cells, cache {}, dispatch {}, control {}, handover {}, \
+         {} x {} requests, rates {:?}, {} workers",
         cfg.n_cells(),
         cfg.cache_capacity,
         cfg.dispatch.as_str(),
         if compare { "compare" } else { cfg.control.as_str() },
+        cfg.handover.as_str(),
         bench.name(),
         requests,
         rates,

@@ -27,11 +27,21 @@ impl Summary {
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
+    /// Smallest value, 0 on an empty series. Folding from `±inf` let a
+    /// fully-saturated sweep point (zero steady-state completions) leak
+    /// `inf` into reports; an empty series reports 0 like `mean()`.
     pub fn min(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
         self.values.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest value, 0 on an empty series (see [`Self::min`]).
     pub fn max(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -46,12 +56,32 @@ impl Summary {
     }
 
     /// Percentile with linear interpolation, p in [0, 100].
+    ///
+    /// Sorts with [`f64::total_cmp`] (never panics, even on NaN input).
+    /// For several percentiles of one series use [`Self::percentiles`],
+    /// which sorts once instead of once per call.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.values.is_empty() {
             return 0.0;
         }
         let mut v = self.values.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
+        Self::percentile_of_sorted(&v, p)
+    }
+
+    /// Several percentiles from a single clone-and-sort of the series —
+    /// the sweep tables' p50/p95/p99 columns cost one sort per row, not
+    /// three. Returns 0 for every requested point on an empty series.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.values.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        let mut v = self.values.clone();
+        v.sort_by(f64::total_cmp);
+        ps.iter().map(|&p| Self::percentile_of_sorted(&v, p)).collect()
+    }
+
+    fn percentile_of_sorted(v: &[f64], p: f64) -> f64 {
         let pos = (p / 100.0) * (v.len() as f64 - 1.0);
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -298,6 +328,43 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
         assert_eq!(s.std(), 0.0);
+        // Regression: these folded from ±inf and leaked `inf` into
+        // reports for fully-saturated sweep points.
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.percentiles(&[50.0, 95.0, 99.0]), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn percentiles_match_individual_percentile_calls() {
+        // The single-sort batch path must agree bit-for-bit with the
+        // per-call path — sweep CSV bytes cannot change.
+        let mut s = Summary::new();
+        let mut x = 0.37f64;
+        for _ in 0..101 {
+            x = (x * 997.0 + 0.123).fract() * 50.0;
+            s.record(x);
+        }
+        let ps = [0.0, 12.5, 50.0, 75.0, 95.0, 99.0, 100.0];
+        let batch = s.percentiles(&ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i].to_bits(), s.percentile(p).to_bits(), "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_without_panicking() {
+        // partial_cmp().unwrap() used to panic here; total_cmp sorts
+        // NaNs to the top instead.
+        let mut s = Summary::new();
+        for v in [3.0, f64::NAN, 1.0, 2.0] {
+            s.record(v);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert!(s.percentile(100.0).is_nan());
+        let b = s.percentiles(&[0.0, 50.0]);
+        assert_eq!(b[0], 1.0);
+        assert_eq!(b[1], 2.5);
     }
 
     #[test]

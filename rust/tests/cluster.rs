@@ -243,6 +243,8 @@ fn sweep_writes_acceptance_csvs() {
         "p99_ms",
         "resolves",
         "churn",
+        "handover_rate",
+        "borrowed_tokens",
     ] {
         assert!(head.contains(col), "missing column {col} in {head}");
     }

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Bench regression gate: diff the fresh BENCH_cluster.json against the
+committed baseline.
+
+Usage: bench_gate.py BASELINE.json FRESH.json [--tolerance 0.40]
+
+Compares the DES throughput harness (`cluster/des_run_2cell`,
+`sim_events_per_sec`). Fails (exit 1) when the fresh number is more than
+`tolerance` *below* the baseline — a generous gate, because smoke-budget
+numbers are noisy and CI runners vary. Speedups never fail; a speedup
+beyond the tolerance prints a reminder to refresh the baseline.
+
+A baseline marked `"provisional": true` (committed before any CI runner
+measured it) reports the comparison but never fails: it seeds the perf
+trajectory without enforcing numbers no machine has produced yet.
+Refresh it with `repro bench --json --smoke` on a CI-class machine and
+drop the flag to arm the gate.
+"""
+
+import json
+import sys
+
+DES_HARNESS = "cluster/des_run_2cell"
+THROUGHPUT_UNIT = "sim_events_per_sec"
+
+
+def des_events_per_sec(doc, path):
+    for r in doc.get("results", []):
+        if r.get("name") == DES_HARNESS:
+            t = r.get("throughput") or {}
+            if t.get("unit") != THROUGHPUT_UNIT:
+                sys.exit(f"{path}: {DES_HARNESS} reports {t.get('unit')!r}, "
+                         f"expected {THROUGHPUT_UNIT!r}")
+            return float(t["value"])
+    sys.exit(f"{path}: no {DES_HARNESS} result")
+
+
+def main(argv):
+    if len(argv) < 3:
+        sys.exit(__doc__)
+    baseline_path, fresh_path = argv[1], argv[2]
+    tolerance = 0.40
+    if "--tolerance" in argv:
+        tolerance = float(argv[argv.index("--tolerance") + 1])
+
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    base = des_events_per_sec(baseline, baseline_path)
+    now = des_events_per_sec(fresh, fresh_path)
+    ratio = now / base if base > 0 else float("inf")
+    print(f"DES events/sec: baseline {base:,.0f} -> fresh {now:,.0f} "
+          f"(x{ratio:.2f}, gate: >= x{1.0 - tolerance:.2f})")
+
+    if baseline.get("provisional"):
+        print("baseline is provisional (never measured on a CI runner): "
+              "reporting only, not gating. Refresh it with "
+              "`repro bench --json --smoke` and drop the flag to arm the gate.")
+        return 0
+    if ratio < 1.0 - tolerance:
+        print(f"FAIL: DES throughput regressed more than {tolerance:.0%}")
+        return 1
+    if ratio > 1.0 + tolerance:
+        print(f"note: DES throughput improved more than {tolerance:.0%} — "
+              "consider refreshing the committed baseline")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
