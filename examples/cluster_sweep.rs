@@ -1,87 +1,103 @@
-//! Cluster serving sweep — sustained multi-cell traffic, no artifacts
-//! needed.
+//! Cluster serving sweeps through the typed experiment API — sustained
+//! multi-cell traffic, no artifacts needed.
 //!
-//! Runs the discrete-event serving simulator over a range of Poisson
-//! arrival rates on the two-cell edge preset, comparing the three
-//! control planes on identical arrival streams: the frozen uniform
-//! split (PR-1 baseline), the one-shot P3 pre-solve, and the adaptive
-//! closed loop (epoch re-solves from observed backlog + replica
-//! autoscaling). Then contrasts replicated, load-aware serving against
-//! the paper's fixed expert-per-device placement. Watch the adaptive
-//! plane hold p99 down as the cluster saturates, and the `resolves` /
-//! `churn` columns show what the closed loop paid for it.
+//! Three grids over the discrete-event serving simulator:
 //!
-//! Every sweep point runs on the parallel engine (`threads = 0`: one
-//! worker per core); results merge in canonical order, so the tables
-//! match a serial run byte for byte.
+//! 1. **Control planes × arrival rate** — the frozen uniform split, the
+//!    one-shot P3 pre-solve and the adaptive closed loop on identical
+//!    arrival streams. Watch the adaptive plane hold p99 down as the
+//!    cluster saturates, and the `resolves`/`churn` columns show what
+//!    the closed loop paid for it.
+//! 2. **Replication × dispatch × rate** — cache capacity and replica
+//!    dispatch as independent axes; cache 1 + static dispatch is the
+//!    paper's fixed expert-per-device placement.
+//! 3. **Handover × queue limit × rate** — one crippled cell next to a
+//!    healthy one: three heterogeneous axes in a single `Grid` call.
+//!    Watch drop_rate fall and goodput/handover_rate rise as borrowing
+//!    switches on.
+//!
+//! Every grid runs on the parallel engine (`threads = 0`: one worker
+//! per core); results merge in canonical order, so the tables match a
+//! serial run byte for byte. The same grids are one-liners on the CLI:
+//! `repro sweep --axis control=uniform,optimal,adaptive --axis rate=0.5:0.5:6`.
 //!
 //! ```bash
 //! cargo run --release --example cluster_sweep
 //! ```
 
-use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
-use wdmoe::config::{ClusterConfig, DispatchKind, DropPolicy, HandoverPolicy};
+use wdmoe::config::ClusterConfig;
+use wdmoe::experiment::{Axis, AxisValue, Grid, Scenario};
 use wdmoe::workload::Benchmark;
 
 fn main() -> anyhow::Result<()> {
-    let rates = [0.5, 1.0, 2.0, 4.0, 6.0];
-    let requests = 200;
     let bench = Benchmark::Piqa;
     let threads = 0; // one worker per core
 
-    // Control planes head to head on identical arrival streams.
-    let cfg = ClusterConfig::edge_default();
-    println!("== control planes (cache 2, load-aware dispatch) ==");
-    let table = control_plane_sweep(&cfg, &rates, requests, bench, 0, threads)?;
-    println!("{}", table.render());
+    // 1. Control planes head to head on identical arrival streams.
+    let result = Grid::new(Scenario::new(ClusterConfig::edge_default(), 200, bench))
+        .axis(
+            Axis::ControlPlane,
+            AxisValue::words(&["static_uniform", "static_optimal", "adaptive"]),
+        )
+        .axis(Axis::ArrivalRate, AxisValue::nums(&[0.5, 1.0, 2.0, 4.0, 6.0]))
+        .run(threads)?;
+    println!(
+        "{}",
+        result.table("Control planes × arrival rate (cache 2, load-aware)")?.render()
+    );
 
-    // Replication effect, under the static-uniform baseline plane.
-    for (label, cache, dispatch) in [
-        ("no replication (paper placement)", 1, DispatchKind::Static),
-        ("replicated, load-aware dispatch", 2, DispatchKind::LoadAware),
-    ] {
-        let mut cfg = ClusterConfig::edge_default();
-        cfg.cache_capacity = cache;
-        cfg.dispatch = dispatch;
-        println!("== {label} ==");
-        let sweep = arrival_rate_sweep(&cfg, &rates, requests, bench, 0, threads)?;
-        println!("{}", sweep.summary.render());
-        // Tail behaviour at the highest rate.
-        let last = sweep.points.last().unwrap();
-        println!(
-            "at {} rps: p99 {:.1} ms, max device utilization {:.2}\n",
-            last.rate_rps,
-            last.outcome.p99_ms(),
-            last.outcome
-                .flat_utilization()
-                .into_iter()
-                .fold(0.0f64, f64::max)
-        );
-    }
+    // 2. Replication and dispatch as independent axes. cache=1 +
+    // dispatch=static is the paper's fixed placement baseline;
+    // cache=2 + load_aware is the replicated serving arm.
+    let result = Grid::new(Scenario::new(ClusterConfig::edge_default(), 200, bench))
+        .axis(Axis::CacheCapacity, AxisValue::nums(&[1.0, 2.0]))
+        .axis(Axis::Dispatch, AxisValue::words(&["static", "load_aware"]))
+        .axis(Axis::ArrivalRate, AxisValue::nums(&[1.0, 4.0, 6.0]))
+        .run(threads)?;
+    println!("{}", result.table("Replication × dispatch × rate")?.render());
+    let worst = result
+        .runs
+        .iter()
+        .max_by(|a, b| a.outcome.p99_ms().total_cmp(&b.outcome.p99_ms()))
+        .expect("grid is non-empty");
+    println!(
+        "worst tail: p99 {:.1} ms at {}, max device utilization {:.2}\n",
+        worst.outcome.p99_ms(),
+        worst.record.label,
+        worst
+            .outcome
+            .flat_utilization()
+            .into_iter()
+            .fold(0.0f64, f64::max)
+    );
 
-    // Inter-cell handover: one crippled cell next to a healthy one.
-    // Under `None`, round-robin pins half the traffic to the saturated
-    // cell and admission control drops it; `rehome` steers arrivals
-    // away, `borrow` ships overflowing expert groups to the neighbor
-    // for a per-token backhaul fee. Watch drop_rate fall and
-    // goodput_tps / handover_rate rise down the table.
-    println!("== inter-cell handover (cell 0 crippled, 0.5 s queue bound) ==");
-    for policy in HandoverPolicy::all() {
-        let mut cfg = ClusterConfig::edge_default();
-        cfg.model.n_blocks = 6;
-        for cell in &mut cfg.cells {
-            cell.channel.total_bandwidth_hz = 1e9;
-        }
-        for d in &mut cfg.cells[0].devices {
-            d.compute_flops /= 50.0;
-        }
-        cfg.queue_limit_s = 0.5;
-        cfg.drop_policy = DropPolicy::DropRequest;
-        cfg.backhaul_s_per_token = 1e-5;
-        cfg.handover = policy;
-        let sweep = arrival_rate_sweep(&cfg, &[4.0, 6.0], 150, bench, 0, threads)?;
-        println!("-- handover = {} --", policy.as_str());
-        println!("{}", sweep.summary.render());
+    // 3. Inter-cell handover: cell 0 crippled, three heterogeneous axes
+    // in one grid. Under `none`, round-robin pins half the traffic to
+    // the saturated cell and admission control drops it; `rehome`
+    // steers arrivals away; `borrow` ships overflowing expert groups to
+    // the neighbor for a per-token backhaul fee.
+    let mut cfg = ClusterConfig::edge_default();
+    cfg.model.n_blocks = 6;
+    for cell in &mut cfg.cells {
+        cell.channel.total_bandwidth_hz = 1e9;
     }
+    for d in &mut cfg.cells[0].devices {
+        d.compute_flops /= 50.0;
+    }
+    cfg.backhaul_s_per_token = 1e-5;
+    let result = Grid::new(Scenario::new(cfg, 150, bench))
+        .axis(
+            Axis::Handover,
+            AxisValue::words(&["none", "rehome_on_arrival", "borrow_expert"]),
+        )
+        .axis(Axis::QueueLimit, AxisValue::nums(&[0.25, 0.5]))
+        .axis(Axis::ArrivalRate, AxisValue::nums(&[4.0, 6.0]))
+        .run(threads)?;
+    println!(
+        "{}",
+        result
+            .table("Handover × queue limit × rate (cell 0 crippled)")?
+            .render()
+    );
     Ok(())
 }

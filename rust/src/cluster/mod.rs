@@ -91,15 +91,22 @@
 //!   per-device utilization, control-plane activity, events processed);
 //!   [`sim::ClusterSim::reset`] restores the just-built state so one
 //!   simulator serves many runs.
-//! * [`sim::arrival_rate_sweep`] — the `repro cluster` CLI command: sweep
-//!   Poisson arrival rates and emit the summary + utilization CSVs.
-//! * [`sim::control_plane_sweep`] — `repro cluster --control compare`:
-//!   the three planes on identical arrival streams in one CSV.
+//! * [`crate::experiment`] — sweeps over this simulator are typed
+//!   grids: an [`crate::experiment::Axis`] per knob, a
+//!   [`crate::experiment::Grid`] for the cross-product, one
+//!   [`crate::experiment::Record`] metric schema for every CSV/JSON.
+//!   The legacy [`arrival_rate_sweep`] (`repro cluster`) and
+//!   [`control_plane_sweep`] (`repro cluster --control compare`) are
+//!   thin wrappers over it, re-exported here.
 //!
-//! Both sweeps run their points on the [`crate::exec`] worker pool and
-//! merge in canonical order — parallel output is byte-identical to
+//! Every sweep runs its points on the [`crate::exec`] worker pool and
+//! merges in canonical order — parallel output is byte-identical to
 //! serial. The event loop itself is allocation-free per event (per-cell
-//! scratch + the control plane's solver workspace).
+//! scratch + the control plane's solver workspace). With
+//! `control_backlog_delta_s > 0`, an adaptive cell also re-solves
+//! between epoch ticks whenever its total queued seconds drift past the
+//! threshold since the last solve — the queue-state-driven cadence the
+//! allocation-free tick made affordable.
 //!
 //! Follow-ons tracked in ROADMAP.md: handover hysteresis, an energy
 //! model.
@@ -114,6 +121,7 @@ pub use dispatch::Dispatcher;
 pub use event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 pub use handover::{HandoverCell, HandoverCoordinator, StagedBorrow};
 pub use placement::Placement;
-pub use sim::{
-    arrival_rate_sweep, control_plane_sweep, ClusterOutcome, ClusterSim, SweepPoint, SweepResult,
-};
+pub use sim::{ClusterOutcome, ClusterSim};
+// The sweep entry points live in the experiment API now; re-exported so
+// `wdmoe::cluster::arrival_rate_sweep` call sites keep working.
+pub use crate::experiment::{arrival_rate_sweep, control_plane_sweep, SweepPoint, SweepResult};

@@ -62,12 +62,12 @@ use crate::config::{ClusterConfig, ControlKind, DropPolicy, PolicyConfig};
 use crate::control::{make_plane, CellLoad, ControlOptions, ControlPlane, LinkState};
 use crate::devices::Fleet;
 use crate::latency::TokenLatencies;
-use crate::metrics::{ControlStats, SteadyState, Summary, Table, Utilization};
+use crate::metrics::{ControlStats, SteadyState, Summary, Utilization};
 use crate::moe::selection::{make_policy, SelectionContext, SelectionPolicy};
 use crate::moe::GateWeights;
 use crate::util::clock::VirtualClock;
 use crate::wireless::ChannelSimulator;
-use crate::workload::{ArrivalProcess, Benchmark, WorkloadGen};
+use crate::workload::WorkloadGen;
 
 /// One cell's runtime state: control plane, policy and FIFO queues.
 struct Cell {
@@ -99,6 +99,19 @@ struct Cell {
     cand: Vec<usize>,
     /// Reusable per-tick demand vector (backlog → tokens).
     demand: Vec<f64>,
+    /// Total queued seconds at the last control solve — the reference
+    /// the backlog-delta trigger measures drift against.
+    last_solve_backlog_s: f64,
+}
+
+/// Total queued seconds across a cell's devices at `now` — the signal
+/// the backlog-delta trigger compares against the last solve (offline
+/// devices keep their committed backlog; it still has to drain).
+fn cell_backlog_s(cell: &Cell, now: Nanos) -> f64 {
+    cell.busy_until
+        .iter()
+        .map(|&b| secs_from_nanos(b.saturating_sub(now)))
+        .sum()
 }
 
 /// What the cluster-level handover layer may read and (for staged
@@ -293,6 +306,9 @@ struct SimParams {
     vocab: usize,
     queue_limit_s: f64,
     drop_policy: DropPolicy,
+    /// Backlog drift (queued seconds) since the last solve that triggers
+    /// an immediate adaptive re-solve between epoch ticks (0 = off).
+    backlog_delta_s: f64,
     warmup_frac: f64,
     gate_sharpness: f64,
     gate_bias: f64,
@@ -347,6 +363,7 @@ impl ClusterSim {
                 vocab: cfg.model.vocab,
                 queue_limit_s: cfg.queue_limit_s,
                 drop_policy: cfg.drop_policy,
+                backlog_delta_s: cfg.control_backlog_delta_s,
                 warmup_frac: cfg.warmup_frac,
                 gate_sharpness: cfg.gate_sharpness,
                 gate_bias: cfg.gate_bias,
@@ -410,6 +427,7 @@ impl ClusterSim {
                 placed: Vec::with_capacity(n_experts),
                 cand: Vec::with_capacity(n_dev),
                 demand: Vec::with_capacity(n_dev),
+                last_solve_backlog_s: 0.0,
             });
         }
         Ok(())
@@ -569,6 +587,21 @@ impl ClusterSim {
                     i
                 }
             };
+            // Backlog-delta trigger: between epoch ticks, an adaptive
+            // cell whose total queued seconds drifted past the
+            // threshold since its last solve re-solves *now*, before
+            // this block is dispatched (0 disables; static planes have
+            // no epoch and never trigger).
+            if self.params.backlog_delta_s > 0.0 {
+                let ci = states[i].cell;
+                let cell = &self.cells[ci];
+                if cell.plane.epoch_s().is_some()
+                    && (cell_backlog_s(cell, now) - cell.last_solve_backlog_s).abs()
+                        > self.params.backlog_delta_s
+                {
+                    self.control_tick(ci, now);
+                }
+            }
             let r = self.start_block(&states[i], now);
             shed_tokens += r.shed_tokens;
             borrowed_groups += r.borrowed_groups;
@@ -622,10 +655,12 @@ impl ClusterSim {
         let n_dev = cell.busy_until.len();
         cell.demand.clear();
         cell.demand.resize(n_dev, 0.0);
+        let mut backlog_total_s = 0.0;
         {
             let t = cell.plane.t_per_token();
             for k in 0..n_dev {
                 let backlog_s = secs_from_nanos(cell.busy_until[k].saturating_sub(now));
+                backlog_total_s += backlog_s;
                 let backlog_tokens = if t[k].is_finite() && t[k] > 0.0 {
                     backlog_s / t[k]
                 } else {
@@ -642,6 +677,10 @@ impl ClusterSim {
             }
         }
         cell.plane.on_epoch(&cell.demand, &cell.expert_tokens);
+        // The drift reference resets on every solve attempt (even one
+        // hysteresis suppressed), so the trigger measures *new* drift
+        // rather than re-firing on the same backlog every block.
+        cell.last_solve_backlog_s = backlog_total_s;
         for v in &mut cell.served_tokens {
             *v = 0.0;
         }
@@ -925,222 +964,15 @@ impl ClusterSim {
     }
 }
 
-/// One point of an arrival-rate sweep.
-pub struct SweepPoint {
-    pub rate_rps: f64,
-    pub outcome: ClusterOutcome,
-}
-
-/// Sweep output: per-rate outcomes plus rendered tables (the `repro
-/// cluster` CSVs).
-pub struct SweepResult {
-    pub points: Vec<SweepPoint>,
-    pub summary: Table,
-    pub utilization: Table,
-}
-
-/// Sweep Poisson arrival rate over a fresh simulator per point and
-/// tabulate throughput, goodput, drop rate, steady-state latency
-/// percentiles, control-plane activity and per-device utilization.
-///
-/// Points run on the [`crate::exec`] worker pool (`threads` workers,
-/// 0 = one per core, 1 = serial): each point is a pure function of
-/// `(config, rate, derived seed)` and results are merged in rate order,
-/// so the tables are byte-identical at any thread count.
-pub fn arrival_rate_sweep(
-    cfg: &ClusterConfig,
-    rates_rps: &[f64],
-    requests: usize,
-    bench: Benchmark,
-    seed: u64,
-    threads: usize,
-) -> anyhow::Result<SweepResult> {
-    cfg.validate()?;
-    anyhow::ensure!(requests > 0, "need at least one request");
-    let outcomes = crate::exec::map_indexed(
-        rates_rps.len(),
-        threads,
-        |ri| -> anyhow::Result<SweepPoint> {
-            let rate = rates_rps[ri];
-            let mut sim = ClusterSim::new(cfg)?;
-            let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
-                requests,
-                bench,
-                seed.wrapping_add(ri as u64 * 7919),
-            );
-            Ok(SweepPoint {
-                rate_rps: rate,
-                outcome: sim.run(&arrivals),
-            })
-        },
-    );
-
-    let mut summary = Table::new(
-        &format!("Cluster arrival-rate sweep — {}", bench.name()),
-        &[
-            "rate_rps",
-            "throughput_rps",
-            "goodput_tps",
-            "drop_rate",
-            "shed_tps",
-            "p50_ms",
-            "p95_ms",
-            "p99_ms",
-            "mean_ms",
-            "util_mean",
-            "util_max",
-            "resolves",
-            "churn",
-            "handover_rate",
-            "borrowed_tokens",
-        ],
-    );
-    summary.precision = 3;
-    let dev_names: Vec<String> = cfg
-        .cells
-        .iter()
-        .flat_map(|c| c.devices.iter().map(|d| d.name.clone()))
-        .collect();
-    let dev_cols: Vec<&str> = dev_names.iter().map(String::as_str).collect();
-    let mut util_t = Table::new("Cluster per-device utilization", &dev_cols);
-    util_t.precision = 3;
-
-    let mut points = Vec::with_capacity(rates_rps.len());
-    for point in outcomes {
-        let point = point?;
-        let rate = point.rate_rps;
-        let out = &point.outcome;
-        let s = out.steady_latency();
-        // One sort serves all three percentiles (see Summary::percentiles).
-        let pct = s.percentiles(&[50.0, 95.0, 99.0]);
-        let util = out.flat_utilization();
-        let util_mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
-        let util_max = util.iter().cloned().fold(0.0f64, f64::max);
-        let ctl = out.control_total();
-        summary.row(
-            &format!("rate={rate}"),
-            vec![
-                rate,
-                out.throughput_rps(),
-                out.goodput_tps(),
-                out.drop_rate(),
-                out.shed_tps(),
-                pct[0],
-                pct[1],
-                pct[2],
-                s.mean(),
-                util_mean,
-                util_max,
-                ctl.resolves as f64,
-                ctl.churn_frac,
-                out.handover_rate(),
-                out.borrowed_tokens,
-            ],
-        );
-        util_t.row(&format!("rate={rate}"), util);
-        points.push(point);
-    }
-    Ok(SweepResult {
-        points,
-        summary,
-        utilization: util_t,
-    })
-}
-
-/// Compare the three control planes on one workload in a single table:
-/// per (plane, rate) row, throughput/goodput/drops, latency percentiles
-/// and control activity. The same arrival streams are replayed for every
-/// plane, so rows differ only by control behaviour.
-///
-/// `threads` as in [`arrival_rate_sweep`]: all plane × rate points run
-/// concurrently; rows are emitted in the canonical plane-major order.
-pub fn control_plane_sweep(
-    cfg: &ClusterConfig,
-    rates_rps: &[f64],
-    requests: usize,
-    bench: Benchmark,
-    seed: u64,
-    threads: usize,
-) -> anyhow::Result<Table> {
-    cfg.validate()?;
-    anyhow::ensure!(requests > 0, "need at least one request");
-    let kinds = ControlKind::all();
-    // One config clone per plane — never per point.
-    let variants: Vec<ClusterConfig> = kinds
-        .iter()
-        .map(|&kind| {
-            let mut c = cfg.clone();
-            c.control = kind;
-            c
-        })
-        .collect();
-    let n_points = variants.len() * rates_rps.len();
-    let outcomes = crate::exec::map_indexed(
-        n_points,
-        threads,
-        |i| -> anyhow::Result<ClusterOutcome> {
-            let (ki, ri) = (i / rates_rps.len(), i % rates_rps.len());
-            let mut sim = ClusterSim::new(&variants[ki])?;
-            let arrivals = ArrivalProcess::Poisson {
-                rate_rps: rates_rps[ri],
-            }
-            .generate(requests, bench, seed.wrapping_add(ri as u64 * 7919));
-            Ok(sim.run(&arrivals))
-        },
-    );
-
-    let mut table = Table::new(
-        &format!("Cluster control-plane comparison — {}", bench.name()),
-        &[
-            "rate_rps",
-            "throughput_rps",
-            "goodput_tps",
-            "drop_rate",
-            "shed_tps",
-            "p50_ms",
-            "p95_ms",
-            "p99_ms",
-            "resolves",
-            "placement_updates",
-            "churn",
-            "handover_rate",
-            "borrowed_tokens",
-        ],
-    );
-    table.precision = 3;
-    for (i, out) in outcomes.into_iter().enumerate() {
-        let out = out?;
-        let kind = kinds[i / rates_rps.len()];
-        let rate = rates_rps[i % rates_rps.len()];
-        let s = out.steady_latency();
-        let pct = s.percentiles(&[50.0, 95.0, 99.0]);
-        let ctl = out.control_total();
-        table.row(
-            &format!("{}@rate={rate}", kind.as_str()),
-            vec![
-                rate,
-                out.throughput_rps(),
-                out.goodput_tps(),
-                out.drop_rate(),
-                out.shed_tps(),
-                pct[0],
-                pct[1],
-                pct[2],
-                ctl.resolves as f64,
-                ctl.placement_updates as f64,
-                ctl.churn_frac,
-                out.handover_rate(),
-                out.borrowed_tokens,
-            ],
-        );
-    }
-    Ok(table)
-}
+// The arrival-rate and control-plane sweeps moved to
+// `crate::experiment::sweeps` as thin wrappers over the typed
+// `experiment::Grid` API (still re-exported from `crate::cluster`).
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{ClusterConfig, DispatchKind};
+    use crate::workload::{ArrivalProcess, Benchmark};
 
     fn small_cfg() -> ClusterConfig {
         let mut cfg = ClusterConfig::single_cell();
@@ -1333,33 +1165,6 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_consistent_tables() {
-        let cfg = small_cfg();
-        let r = arrival_rate_sweep(&cfg, &[0.5, 2.0], 24, Benchmark::Piqa, 0, 1).unwrap();
-        assert_eq!(r.points.len(), 2);
-        assert_eq!(r.summary.rows.len(), 2);
-        assert_eq!(r.utilization.rows.len(), 2);
-        assert_eq!(r.utilization.columns.len(), 8);
-        for p in &r.points {
-            assert_eq!(p.outcome.completed, 24);
-        }
-        for col in [
-            "goodput_tps",
-            "drop_rate",
-            "shed_tps",
-            "resolves",
-            "churn",
-            "handover_rate",
-            "borrowed_tokens",
-        ] {
-            assert!(
-                r.summary.columns.iter().any(|c| c == col),
-                "missing column {col}"
-            );
-        }
-    }
-
-    #[test]
     fn handover_none_reports_zero_handover_metrics() {
         let mut cfg = ClusterConfig::edge_default();
         cfg.model.n_blocks = 4;
@@ -1399,28 +1204,59 @@ mod tests {
     }
 
     #[test]
-    fn parallel_sweep_is_byte_identical_to_serial() {
+    fn backlog_delta_disabled_matches_epoch_only_exactly() {
+        // The default (0) must leave adaptive behaviour bit-identical to
+        // the pre-trigger simulator: the knob is opt-in.
         let mut cfg = small_cfg();
-        cfg.model.n_blocks = 4;
-        let rates = [0.5, 2.0, 4.0];
-        let serial = arrival_rate_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 1).unwrap();
-        let parallel = arrival_rate_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 4).unwrap();
-        assert_eq!(serial.summary.to_csv(), parallel.summary.to_csv());
-        assert_eq!(serial.utilization.to_csv(), parallel.utilization.to_csv());
+        cfg.control = ControlKind::Adaptive;
+        let base = run_with(cfg.clone(), 6.0, 60, 0);
+        cfg.control_backlog_delta_s = 0.0;
+        let same = run_with(cfg, 6.0, 60, 0);
+        assert_eq!(base.makespan_s, same.makespan_s);
+        assert_eq!(base.control, same.control);
+        assert_eq!(base.events, same.events);
     }
 
     #[test]
-    fn control_plane_sweep_rows_cover_all_kinds() {
+    fn backlog_delta_resolves_between_epochs() {
+        // Epoch far beyond the run horizon: the cadence alone never
+        // solves. A small drift threshold under overload must.
         let mut cfg = small_cfg();
-        cfg.model.n_blocks = 4;
-        let t = control_plane_sweep(&cfg, &[1.0, 4.0], 16, Benchmark::Piqa, 0, 1).unwrap();
-        assert_eq!(t.rows.len(), 3 * 2);
-        for kind in ControlKind::all() {
-            assert!(
-                t.rows.iter().any(|(label, _)| label.starts_with(kind.as_str())),
-                "missing rows for {}",
-                kind.as_str()
-            );
-        }
+        cfg.control = ControlKind::Adaptive;
+        cfg.control_epoch_s = 1e6;
+        let epoch_only = run_with(cfg.clone(), 20.0, 60, 1);
+        assert_eq!(
+            epoch_only.control_total().resolves,
+            0,
+            "cadence should never fire inside the horizon"
+        );
+        cfg.control_backlog_delta_s = 0.05;
+        let triggered = run_with(cfg, 20.0, 60, 1);
+        assert_eq!(triggered.completed, 60);
+        assert!(
+            triggered.control_total().resolves >= 1,
+            "backlog drift never triggered a re-solve"
+        );
+    }
+
+    #[test]
+    fn backlog_delta_is_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.control = ControlKind::Adaptive;
+        cfg.control_backlog_delta_s = 0.1;
+        let a = run_with(cfg.clone(), 8.0, 40, 3);
+        let b = run_with(cfg, 8.0, 40, 3);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.control, b.control);
+        assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
+    }
+
+    #[test]
+    fn backlog_delta_ignored_by_static_planes() {
+        let mut cfg = small_cfg();
+        cfg.control_backlog_delta_s = 0.01; // StaticUniform: no epochs
+        let out = run_with(cfg, 20.0, 40, 0);
+        assert_eq!(out.completed, 40);
+        assert_eq!(out.control_total().resolves, 0);
     }
 }

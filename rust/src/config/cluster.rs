@@ -224,6 +224,11 @@ pub struct ClusterConfig {
     /// Minimum relative L1 shift of the per-device demand share since the
     /// last solve before the adaptive plane re-solves (churn damping).
     pub control_hysteresis: f64,
+    /// Backlog-delta trigger for the adaptive plane: when a cell's total
+    /// queued seconds drift more than this since its last solve, it
+    /// re-solves immediately instead of waiting for the next epoch tick
+    /// (0 = epoch cadence only). Ignored by the static planes.
+    pub control_backlog_delta_s: f64,
     /// Per-device queue bound in seconds of backlog (0 = unbounded).
     pub queue_limit_s: f64,
     /// Policy applied when a dispatch would exceed the queue bound.
@@ -281,6 +286,7 @@ impl ClusterConfig {
             control: ControlKind::StaticUniform,
             control_epoch_s: 0.25,
             control_hysteresis: 0.05,
+            control_backlog_delta_s: 0.0,
             queue_limit_s: 0.0,
             drop_policy: DropPolicy::DropRequest,
             handover: HandoverPolicy::None,
@@ -340,6 +346,10 @@ impl ClusterConfig {
             ("control", Json::str(self.control.as_str())),
             ("control_epoch_s", Json::Num(self.control_epoch_s)),
             ("control_hysteresis", Json::Num(self.control_hysteresis)),
+            (
+                "control_backlog_delta_s",
+                Json::Num(self.control_backlog_delta_s),
+            ),
             ("queue_limit_s", Json::Num(self.queue_limit_s)),
             ("drop_policy", Json::str(self.drop_policy.as_str())),
             ("handover", Json::str(self.handover.as_str())),
@@ -376,6 +386,7 @@ impl ClusterConfig {
             },
             control_epoch_s: opt_f64("control_epoch_s", 0.25)?,
             control_hysteresis: opt_f64("control_hysteresis", 0.05)?,
+            control_backlog_delta_s: opt_f64("control_backlog_delta_s", 0.0)?,
             queue_limit_s: opt_f64("queue_limit_s", 0.0)?,
             drop_policy: match j.opt("drop_policy") {
                 Some(v) => DropPolicy::parse(v.as_str()?)?,
@@ -414,6 +425,10 @@ impl ClusterConfig {
         anyhow::ensure!(
             self.control_hysteresis.is_finite() && self.control_hysteresis >= 0.0,
             "control_hysteresis must be non-negative and finite"
+        );
+        anyhow::ensure!(
+            self.control_backlog_delta_s.is_finite() && self.control_backlog_delta_s >= 0.0,
+            "control_backlog_delta_s must be non-negative and finite (0 = epoch cadence only)"
         );
         anyhow::ensure!(
             self.queue_limit_s.is_finite() && self.queue_limit_s >= 0.0,
@@ -555,6 +570,7 @@ mod tests {
             "control",
             "control_epoch_s",
             "control_hysteresis",
+            "control_backlog_delta_s",
             "queue_limit_s",
             "drop_policy",
             "handover",
@@ -566,6 +582,7 @@ mod tests {
         assert_eq!(back.control, ControlKind::StaticUniform);
         assert_eq!(back.control_epoch_s, 0.25);
         assert_eq!(back.control_hysteresis, 0.05);
+        assert_eq!(back.control_backlog_delta_s, 0.0);
         assert_eq!(back.queue_limit_s, 0.0);
         assert_eq!(back.drop_policy, DropPolicy::DropRequest);
         assert_eq!(back.handover, HandoverPolicy::None);
@@ -615,6 +632,7 @@ mod tests {
         cfg.control = ControlKind::Adaptive;
         cfg.control_epoch_s = 0.5;
         cfg.control_hysteresis = 0.1;
+        cfg.control_backlog_delta_s = 0.2;
         cfg.queue_limit_s = 2.0;
         cfg.drop_policy = DropPolicy::ShedTokens;
         let back = ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
@@ -629,6 +647,9 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = ClusterConfig::edge_default();
         cfg.control_hysteresis = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.control_backlog_delta_s = -0.5;
         assert!(cfg.validate().is_err());
         let mut cfg = ClusterConfig::edge_default();
         cfg.queue_limit_s = f64::NAN;

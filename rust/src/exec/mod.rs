@@ -70,6 +70,17 @@ where
         .collect()
 }
 
+/// Fallible variant of [`map_indexed`]: evaluate every point, then
+/// return the first error in *index* order (not completion order), so a
+/// failing sweep reports the same point at any thread count.
+pub fn try_map_indexed<T, F>(n: usize, threads: usize, f: F) -> anyhow::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> anyhow::Result<T> + Sync,
+{
+    map_indexed(n, threads, f).into_iter().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +135,21 @@ mod tests {
     fn resolve_threads_zero_is_auto() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn try_map_indexed_reports_first_error_by_index() {
+        let ok = try_map_indexed(5, 2, |i| Ok(i * 2)).unwrap();
+        assert_eq!(ok, vec![0, 2, 4, 6, 8]);
+        for threads in [1, 2, 8] {
+            let err = try_map_indexed(8, threads, |i| {
+                if i >= 3 {
+                    anyhow::bail!("boom at {i}")
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "boom at 3", "threads={threads}");
+        }
     }
 }

@@ -1,0 +1,554 @@
+//! Sweep axes: every knob a grid can vary, behind one typed dispatch.
+//!
+//! An [`Axis`] names a scenario knob (arrival rate, control plane,
+//! handover policy, backhaul, queue limit, cache capacity, cell/device
+//! count, seed, epoch cadence, hysteresis, backlog-delta trigger); an
+//! [`AxisValue`] is one setting of it. [`Axis::apply`] is the *single*
+//! place any axis mutates a [`Scenario`] — adding a knob to the
+//! experiment API is one new variant plus one `apply` arm, not a third
+//! hand-rolled sweep function. [`AxisSpec::parse`] turns the CLI's
+//! `--axis name=spec` strings (comma lists and `start:step:end` ranges)
+//! into validated axes.
+
+use super::grid::Scenario;
+use crate::config::{ControlKind, DispatchKind, DropPolicy, HandoverPolicy};
+use anyhow::Result;
+
+/// A sweepable scenario knob. Numeric axes carry [`AxisValue::Num`]
+/// settings and appear as a CSV coordinate column ([`Axis::key`]);
+/// word axes ([`ControlKind`], [`HandoverPolicy`], …) carry
+/// [`AxisValue::Word`] settings and appear in the row label only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Axis {
+    /// Poisson arrival rate (requests/s). The only axis that varies the
+    /// workload instead of the [`crate::config::ClusterConfig`]: points
+    /// that differ only in *other* axes replay identical arrival
+    /// streams, so rows compare policies on the same traffic.
+    ArrivalRate,
+    /// [`ControlKind`] (static_uniform / static_optimal / adaptive).
+    ControlPlane,
+    /// [`HandoverPolicy`] (none / rehome_on_arrival / borrow_expert).
+    Handover,
+    /// One-way inter-cell backhaul seconds per token.
+    Backhaul,
+    /// Per-device queue bound in seconds of backlog (0 = unbounded).
+    QueueLimit,
+    /// [`DropPolicy`] applied at the queue bound.
+    Drop,
+    /// Experts a device can cache (1 = no replication).
+    CacheCapacity,
+    /// [`DispatchKind`] (load_aware / static).
+    Dispatch,
+    /// Cell count (extra cells synthesized from cell 0's template).
+    Cells,
+    /// Devices per cell, truncating each cell's fleet to its first `n`.
+    Devices,
+    /// RNG seed (gates, channels *and* the arrival stream).
+    Seed,
+    /// Adaptive re-solve cadence in virtual seconds.
+    ControlEpoch,
+    /// Demand-share hysteresis damping adaptive re-solves.
+    ControlHysteresis,
+    /// Backlog-delta trigger in queued seconds (0 = epoch cadence only).
+    BacklogDelta,
+}
+
+/// One setting of an axis.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AxisValue {
+    Num(f64),
+    Word(String),
+}
+
+impl AxisValue {
+    pub fn num(v: f64) -> Self {
+        AxisValue::Num(v)
+    }
+
+    pub fn word(s: &str) -> Self {
+        AxisValue::Word(s.to_string())
+    }
+
+    /// Numeric value lists (`Axis::ArrivalRate`, bounds, counts, …).
+    pub fn nums(vs: &[f64]) -> Vec<Self> {
+        vs.iter().map(|&v| AxisValue::Num(v)).collect()
+    }
+
+    /// Word value lists (`Axis::ControlPlane`, `Axis::Handover`, …).
+    pub fn words(ws: &[&str]) -> Vec<Self> {
+        ws.iter().map(|w| AxisValue::word(w)).collect()
+    }
+
+    pub fn as_num(&self) -> Result<f64> {
+        match self {
+            AxisValue::Num(v) => Ok(*v),
+            AxisValue::Word(w) => anyhow::bail!("expected a number, got '{w}'"),
+        }
+    }
+
+    pub fn as_word(&self) -> Result<&str> {
+        match self {
+            AxisValue::Word(w) => Ok(w),
+            AxisValue::Num(v) => anyhow::bail!("expected a word, got {v}"),
+        }
+    }
+}
+
+impl std::fmt::Display for AxisValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AxisValue::Num(v) => write!(f, "{v}"),
+            AxisValue::Word(w) => write!(f, "{w}"),
+        }
+    }
+}
+
+/// `v` as a positive integer count (cache slots, cells, devices).
+fn as_count(v: &AxisValue, what: &str, min: usize) -> Result<usize> {
+    let n = v.as_num()?;
+    anyhow::ensure!(
+        n.is_finite() && n.fract() == 0.0 && n >= min as f64 && n <= u32::MAX as f64,
+        "{what} must be an integer >= {min}, got {n}"
+    );
+    Ok(n as usize)
+}
+
+/// `v` as a seed (non-negative integer exactly representable in f64).
+fn as_seed(v: &AxisValue) -> Result<u64> {
+    let n = v.as_num()?;
+    anyhow::ensure!(
+        n.is_finite() && n.fract() == 0.0 && (0.0..=9.007_199_254_740_992e15).contains(&n),
+        "seed must be a non-negative integer <= 2^53, got {n}"
+    );
+    Ok(n as u64)
+}
+
+impl Axis {
+    /// Every axis, in the order the CLI help lists them.
+    pub fn all() -> [Axis; 14] {
+        [
+            Axis::ArrivalRate,
+            Axis::ControlPlane,
+            Axis::Handover,
+            Axis::Backhaul,
+            Axis::QueueLimit,
+            Axis::Drop,
+            Axis::CacheCapacity,
+            Axis::Dispatch,
+            Axis::Cells,
+            Axis::Devices,
+            Axis::Seed,
+            Axis::ControlEpoch,
+            Axis::ControlHysteresis,
+            Axis::BacklogDelta,
+        ]
+    }
+
+    /// Canonical CLI name (`--axis <name>=<spec>`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Axis::ArrivalRate => "rate",
+            Axis::ControlPlane => "control",
+            Axis::Handover => "handover",
+            Axis::Backhaul => "backhaul",
+            Axis::QueueLimit => "queue_limit",
+            Axis::Drop => "drop",
+            Axis::CacheCapacity => "cache",
+            Axis::Dispatch => "dispatch",
+            Axis::Cells => "cells",
+            Axis::Devices => "devices",
+            Axis::Seed => "seed",
+            Axis::ControlEpoch => "epoch",
+            Axis::ControlHysteresis => "hysteresis",
+            Axis::BacklogDelta => "backlog_delta",
+        }
+    }
+
+    /// Schema key: the CSV coordinate column header for numeric axes and
+    /// the JSON coordinate key for every axis.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Axis::ArrivalRate => "rate_rps",
+            Axis::ControlPlane => "control",
+            Axis::Handover => "handover",
+            Axis::Backhaul => "backhaul_s_per_token",
+            Axis::QueueLimit => "queue_limit_s",
+            Axis::Drop => "drop_policy",
+            Axis::CacheCapacity => "cache_capacity",
+            Axis::Dispatch => "dispatch",
+            Axis::Cells => "cells",
+            Axis::Devices => "devices_per_cell",
+            Axis::Seed => "seed",
+            Axis::ControlEpoch => "control_epoch_s",
+            Axis::ControlHysteresis => "control_hysteresis",
+            Axis::BacklogDelta => "control_backlog_delta_s",
+        }
+    }
+
+    /// Whether settings are numbers (and get a CSV coordinate column).
+    pub fn is_numeric(&self) -> bool {
+        !matches!(
+            self,
+            Axis::ControlPlane | Axis::Handover | Axis::Drop | Axis::Dispatch
+        )
+    }
+
+    /// Whether applying a setting mutates the
+    /// [`crate::config::ClusterConfig`]. [`Grid`](super::Grid) clones one
+    /// scenario per distinct combination of these axes — never per point
+    /// — so a pure arrival-rate sweep shares the caller's config.
+    pub fn touches_config(&self) -> bool {
+        !matches!(self, Axis::ArrivalRate)
+    }
+
+    /// Parse an axis name: canonical CLI name, schema key, or alias
+    /// (`-` and `_` are interchangeable).
+    pub fn parse(name: &str) -> Result<Axis> {
+        let n = name.trim().to_lowercase().replace('-', "_");
+        Ok(match n.as_str() {
+            "rate" | "rate_rps" | "arrival_rate" => Axis::ArrivalRate,
+            "control" | "control_plane" | "plane" => Axis::ControlPlane,
+            "handover" => Axis::Handover,
+            "backhaul" | "backhaul_s_per_token" => Axis::Backhaul,
+            "queue_limit" | "queue_limit_s" => Axis::QueueLimit,
+            "drop" | "drop_policy" => Axis::Drop,
+            "cache" | "cache_capacity" => Axis::CacheCapacity,
+            "dispatch" => Axis::Dispatch,
+            "cells" | "n_cells" => Axis::Cells,
+            "devices" | "devices_per_cell" => Axis::Devices,
+            "seed" => Axis::Seed,
+            "epoch" | "control_epoch" | "control_epoch_s" => Axis::ControlEpoch,
+            "hysteresis" | "control_hysteresis" => Axis::ControlHysteresis,
+            "backlog_delta" | "control_backlog_delta_s" => Axis::BacklogDelta,
+            other => anyhow::bail!(
+                "unknown axis '{other}' (valid: {})",
+                Axis::all().map(|a| a.as_str()).join(", ")
+            ),
+        })
+    }
+
+    /// Parse one CLI value for this axis. Word values are normalised to
+    /// their canonical spelling (`rehome` -> `rehome_on_arrival`), so
+    /// labels and JSON coordinates are alias-independent.
+    pub fn parse_value(&self, s: &str) -> Result<AxisValue> {
+        let s = s.trim();
+        if self.is_numeric() {
+            let v: f64 = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("axis {}: bad number '{s}': {e}", self.as_str()))?;
+            return Ok(AxisValue::Num(v));
+        }
+        Ok(match self {
+            Axis::ControlPlane => AxisValue::word(ControlKind::parse(s)?.as_str()),
+            Axis::Handover => AxisValue::word(HandoverPolicy::parse(s)?.as_str()),
+            Axis::Drop => AxisValue::word(DropPolicy::parse(s)?.as_str()),
+            Axis::Dispatch => AxisValue::word(DispatchKind::parse(s)?.as_str()),
+            _ => unreachable!("numeric axes handled above"),
+        })
+    }
+
+    /// The single dispatch every axis mutates a scenario through.
+    /// Out-of-range numeric settings that map onto config fields are
+    /// left to [`crate::config::ClusterConfig::validate`], so axis
+    /// application and `--config` files share one validation story.
+    pub fn apply(&self, sc: &mut Scenario, v: &AxisValue) -> Result<()> {
+        match self {
+            Axis::ArrivalRate => {
+                let r = v.as_num()?;
+                anyhow::ensure!(
+                    r.is_finite() && r > 0.0,
+                    "arrival rate must be finite and positive, got {r}"
+                );
+                sc.rate_rps = r;
+            }
+            Axis::ControlPlane => sc.cluster.control = ControlKind::parse(v.as_word()?)?,
+            Axis::Handover => sc.cluster.handover = HandoverPolicy::parse(v.as_word()?)?,
+            Axis::Backhaul => sc.cluster.backhaul_s_per_token = v.as_num()?,
+            Axis::QueueLimit => sc.cluster.queue_limit_s = v.as_num()?,
+            Axis::Drop => sc.cluster.drop_policy = DropPolicy::parse(v.as_word()?)?,
+            Axis::CacheCapacity => {
+                sc.cluster.cache_capacity = as_count(v, "cache capacity", 1)?;
+            }
+            Axis::Dispatch => sc.cluster.dispatch = DispatchKind::parse(v.as_word()?)?,
+            Axis::Cells => {
+                let n = as_count(v, "cell count", 1)?;
+                sc.cluster = sc.cluster.clone().with_n_cells(n);
+            }
+            Axis::Devices => {
+                let n = as_count(v, "devices per cell", 1)?;
+                for cell in &mut sc.cluster.cells {
+                    anyhow::ensure!(
+                        n <= cell.devices.len(),
+                        "{}: cannot grow the fleet ({} devices) to {n} via the devices axis",
+                        cell.name,
+                        cell.devices.len()
+                    );
+                    cell.devices.truncate(n);
+                }
+            }
+            Axis::Seed => {
+                let s = as_seed(v)?;
+                sc.cluster.seed = s;
+                sc.workload_seed = s;
+            }
+            Axis::ControlEpoch => sc.cluster.control_epoch_s = v.as_num()?,
+            Axis::ControlHysteresis => sc.cluster.control_hysteresis = v.as_num()?,
+            Axis::BacklogDelta => sc.cluster.control_backlog_delta_s = v.as_num()?,
+        }
+        Ok(())
+    }
+
+    /// One coordinate of a row label. Control-plane settings label bare
+    /// (`adaptive@rate=2`), matching the legacy comparison-sweep rows;
+    /// every other axis labels `name=value`.
+    pub fn coord_label(&self, v: &AxisValue) -> String {
+        match self {
+            Axis::ControlPlane => v.to_string(),
+            _ => format!("{}={v}", self.as_str()),
+        }
+    }
+}
+
+/// One parsed `--axis name=spec` argument: the axis plus its settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisSpec {
+    pub axis: Axis,
+    pub values: Vec<AxisValue>,
+}
+
+impl AxisSpec {
+    /// Parse `name=spec`, where `spec` is a comma list (`0.5,1,2` or
+    /// `none,rehome,borrow`) or an inclusive numeric range
+    /// `start:step:end` (`0:0.5:2` -> 0, 0.5, 1, 1.5, 2; descending
+    /// ranges use a negative step).
+    pub fn parse(s: &str) -> Result<AxisSpec> {
+        let (name, spec) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("axis spec must be name=values, got '{s}'"))?;
+        let axis = Axis::parse(name)?;
+        let spec = spec.trim();
+        anyhow::ensure!(!spec.is_empty(), "axis {} has an empty spec", axis.as_str());
+        let values = if axis.is_numeric() && spec.contains(':') {
+            Self::parse_range(axis, spec)?
+        } else {
+            spec.split(',')
+                .map(|w| axis.parse_value(w))
+                .collect::<Result<Vec<_>>>()?
+        };
+        anyhow::ensure!(!values.is_empty(), "axis {} has no values", axis.as_str());
+        Ok(AxisSpec { axis, values })
+    }
+
+    fn parse_range(axis: Axis, spec: &str) -> Result<Vec<AxisValue>> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "axis {}: range spec must be start:step:end, got '{spec}'",
+            axis.as_str()
+        );
+        let mut nums = [0.0f64; 3];
+        for (slot, part) in nums.iter_mut().zip(&parts) {
+            *slot = axis.parse_value(part)?.as_num()?;
+        }
+        let [start, step, end] = nums;
+        anyhow::ensure!(
+            start.is_finite() && step.is_finite() && end.is_finite(),
+            "axis {}: range '{spec}' must be finite",
+            axis.as_str()
+        );
+        anyhow::ensure!(
+            step != 0.0,
+            "axis {}: range step must be non-zero",
+            axis.as_str()
+        );
+        anyhow::ensure!(
+            (end - start) * step >= 0.0,
+            "axis {}: range '{spec}' steps away from its end",
+            axis.as_str()
+        );
+        // `start + i*step` (not repeated addition) keeps long ranges
+        // from accumulating float drift; the epsilon keeps an exact-end
+        // range inclusive. Each value is then rounded to 12 significant
+        // digits so labels/CSV/JSON coordinates print as typed
+        // (0.1:0.1:0.4 yields 0.3, not 0.30000000000000004) — the same
+        // values a comma list would parse.
+        let eps = step.abs() * 1e-9;
+        let mut values = Vec::new();
+        for i in 0..=100_000u32 {
+            let raw = start + step * f64::from(i);
+            let v: f64 = format!("{raw:.12e}").parse().expect("formatted float");
+            let past_end = if step > 0.0 { v > end + eps } else { v < end - eps };
+            if past_end {
+                return Ok(values);
+            }
+            values.push(AxisValue::Num(v));
+        }
+        anyhow::bail!(
+            "axis {}: range '{spec}' expands to more than 100000 values",
+            axis.as_str()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::util::Json;
+    use crate::workload::Benchmark;
+
+    fn scenario() -> Scenario {
+        Scenario::new(ClusterConfig::edge_default(), 16, Benchmark::Piqa)
+    }
+
+    #[test]
+    fn parse_accepts_canonical_names_keys_and_aliases() {
+        for a in Axis::all() {
+            assert_eq!(Axis::parse(a.as_str()).unwrap(), a, "{}", a.as_str());
+            assert_eq!(Axis::parse(a.key()).unwrap(), a, "{}", a.key());
+        }
+        assert_eq!(Axis::parse("queue-limit").unwrap(), Axis::QueueLimit);
+        assert_eq!(Axis::parse("backlog-delta").unwrap(), Axis::BacklogDelta);
+        assert_eq!(Axis::parse("RATE").unwrap(), Axis::ArrivalRate);
+        assert!(Axis::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_value_normalises_word_aliases() {
+        let v = Axis::Handover.parse_value("rehome").unwrap();
+        assert_eq!(v, AxisValue::word("rehome_on_arrival"));
+        let v = Axis::ControlPlane.parse_value("uniform").unwrap();
+        assert_eq!(v, AxisValue::word("static_uniform"));
+        let v = Axis::Drop.parse_value("shed").unwrap();
+        assert_eq!(v, AxisValue::word("shed_tokens"));
+        assert!(Axis::Handover.parse_value("bogus").is_err());
+        assert!(Axis::ArrivalRate.parse_value("fast").is_err());
+    }
+
+    #[test]
+    fn spec_parses_lists_and_ranges() {
+        let s = AxisSpec::parse("rate=0.5,1,2").unwrap();
+        assert_eq!(s.axis, Axis::ArrivalRate);
+        assert_eq!(s.values, AxisValue::nums(&[0.5, 1.0, 2.0]));
+
+        let s = AxisSpec::parse("queue_limit=0:0.5:2").unwrap();
+        assert_eq!(s.axis, Axis::QueueLimit);
+        assert_eq!(s.values, AxisValue::nums(&[0.0, 0.5, 1.0, 1.5, 2.0]));
+
+        // Descending range, negative step. The 12-significant-digit
+        // clean-up makes non-dyadic steps land exactly on the values a
+        // comma list would parse.
+        let s = AxisSpec::parse("backhaul=3e-4:-1e-4:1e-4").unwrap();
+        assert_eq!(s.values.len(), 3);
+        assert_eq!(s.values[0], AxisValue::Num(3e-4));
+        assert_eq!(s.values[1], AxisValue::Num(2e-4));
+        assert_eq!(s.values[2], AxisValue::Num(1e-4));
+
+        // The classic accumulation case: 0.1 steps print as typed.
+        let s = AxisSpec::parse("rate=0.1:0.1:0.4").unwrap();
+        assert_eq!(s.values, AxisValue::nums(&[0.1, 0.2, 0.3, 0.4]));
+
+        // Degenerate range: one point.
+        let s = AxisSpec::parse("rate=2:1:2").unwrap();
+        assert_eq!(s.values, AxisValue::nums(&[2.0]));
+
+        let s = AxisSpec::parse("handover=none,rehome,borrow").unwrap();
+        assert_eq!(
+            s.values,
+            AxisValue::words(&["none", "rehome_on_arrival", "borrow_expert"])
+        );
+    }
+
+    #[test]
+    fn spec_rejects_bad_input() {
+        assert!(AxisSpec::parse("rate").is_err(), "missing '='");
+        assert!(AxisSpec::parse("bogus=1,2").is_err(), "unknown axis");
+        assert!(AxisSpec::parse("rate=").is_err(), "empty spec");
+        assert!(AxisSpec::parse("rate=1,x").is_err(), "bad number in list");
+        assert!(AxisSpec::parse("rate=0:0:2").is_err(), "zero step");
+        assert!(AxisSpec::parse("rate=0:1").is_err(), "two-part range");
+        assert!(AxisSpec::parse("rate=0:1:2:3").is_err(), "four-part range");
+        assert!(AxisSpec::parse("rate=2:1:0").is_err(), "step away from end");
+        assert!(AxisSpec::parse("handover=none,bogus").is_err(), "bad word");
+    }
+
+    /// Every axis variant applies onto a scenario that still passes
+    /// `ClusterConfig::validate` and survives the JSON round-trip — the
+    /// guarantee that grid points and `--config` files agree on what a
+    /// valid configuration is.
+    #[test]
+    fn apply_round_trips_every_variant_against_config_validation() {
+        for axis in Axis::all() {
+            let value = match axis {
+                Axis::ArrivalRate => AxisValue::num(3.5),
+                Axis::ControlPlane => AxisValue::word("adaptive"),
+                Axis::Handover => AxisValue::word("borrow_expert"),
+                Axis::Backhaul => AxisValue::num(5e-4),
+                Axis::QueueLimit => AxisValue::num(1.5),
+                Axis::Drop => AxisValue::word("shed_tokens"),
+                Axis::CacheCapacity => AxisValue::num(3.0),
+                Axis::Dispatch => AxisValue::word("static"),
+                Axis::Cells => AxisValue::num(3.0),
+                Axis::Devices => AxisValue::num(6.0),
+                Axis::Seed => AxisValue::num(42.0),
+                Axis::ControlEpoch => AxisValue::num(0.5),
+                Axis::ControlHysteresis => AxisValue::num(0.1),
+                Axis::BacklogDelta => AxisValue::num(0.25),
+            };
+            let mut sc = scenario();
+            // Devices truncates below 8 experts/cell feasibility at
+            // cache 1; edge_default has cache 2, 6*2 >= 8 holds.
+            axis.apply(&mut sc, &value).unwrap_or_else(|e| {
+                panic!("axis {} failed to apply: {e}", axis.as_str());
+            });
+            sc.cluster
+                .validate()
+                .unwrap_or_else(|e| panic!("axis {} broke validation: {e}", axis.as_str()));
+            let back = ClusterConfig::from_json(
+                &Json::parse(&sc.cluster.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, sc.cluster, "axis {} lost in JSON", axis.as_str());
+            // The applied setting must actually have landed somewhere.
+            let base = scenario();
+            assert!(
+                sc.cluster != base.cluster
+                    || sc.rate_rps != base.rate_rps
+                    || sc.workload_seed != base.workload_seed,
+                "axis {} was a no-op",
+                axis.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn apply_rejects_type_mismatch_and_bad_counts() {
+        let mut sc = scenario();
+        assert!(Axis::ArrivalRate.apply(&mut sc, &AxisValue::word("x")).is_err());
+        assert!(Axis::ControlPlane.apply(&mut sc, &AxisValue::num(1.0)).is_err());
+        assert!(Axis::ArrivalRate.apply(&mut sc, &AxisValue::num(0.0)).is_err());
+        assert!(Axis::ArrivalRate.apply(&mut sc, &AxisValue::num(-2.0)).is_err());
+        assert!(Axis::CacheCapacity.apply(&mut sc, &AxisValue::num(0.0)).is_err());
+        assert!(Axis::CacheCapacity.apply(&mut sc, &AxisValue::num(1.5)).is_err());
+        assert!(Axis::Cells.apply(&mut sc, &AxisValue::num(0.0)).is_err());
+        assert!(Axis::Devices.apply(&mut sc, &AxisValue::num(99.0)).is_err());
+        assert!(Axis::Seed.apply(&mut sc, &AxisValue::num(-1.0)).is_err());
+    }
+
+    #[test]
+    fn coord_labels_match_legacy_row_format() {
+        assert_eq!(
+            Axis::ArrivalRate.coord_label(&AxisValue::num(0.5)),
+            "rate=0.5"
+        );
+        assert_eq!(Axis::ArrivalRate.coord_label(&AxisValue::num(2.0)), "rate=2");
+        assert_eq!(
+            Axis::ControlPlane.coord_label(&AxisValue::word("adaptive")),
+            "adaptive"
+        );
+        assert_eq!(
+            Axis::QueueLimit.coord_label(&AxisValue::num(1.5)),
+            "queue_limit=1.5"
+        );
+    }
+}

@@ -1,0 +1,544 @@
+//! Typed scenario grids: declare axes, get the cross-product, run it on
+//! the deterministic parallel engine.
+//!
+//! A [`Scenario`] is one runnable configuration (cluster config +
+//! workload); a [`Grid`] is a base scenario plus N axes, expanded in
+//! declaration order (first axis outermost, last fastest — exactly the
+//! rows N nested `for` loops would emit). [`Grid::run`] evaluates every
+//! point through [`crate::exec::try_map_indexed`], so any grid is
+//! parallel and byte-identical to serial, and pre-applies config axes
+//! once per distinct config combination — a pure arrival-rate sweep
+//! never clones the config per point, a 3-plane comparison clones it
+//! three times, whatever the axes demand.
+//!
+//! Determinism contract: a point is a pure function of `(base scenario,
+//! coordinates)`. The arrival stream's seed is derived from the
+//! scenario's workload seed plus the point's *arrival-rate index only*,
+//! so points that differ in policy axes replay identical traffic — the
+//! property the legacy control-plane comparison relied on, now true of
+//! every grid.
+
+use super::axis::{Axis, AxisSpec, AxisValue};
+use super::record::{records_table, Record, METRIC_KEYS};
+use crate::cluster::{ClusterOutcome, ClusterSim};
+use crate::config::ClusterConfig;
+use crate::metrics::Table;
+use crate::util::Json;
+use crate::workload::{ArrivalProcess, Benchmark};
+use anyhow::Result;
+
+/// One runnable experiment point: the cluster configuration plus the
+/// open-loop workload driving it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub cluster: ClusterConfig,
+    /// Poisson arrival rate (requests/s) when no
+    /// [`Axis::ArrivalRate`] overrides it.
+    pub rate_rps: f64,
+    /// Requests per run.
+    pub requests: usize,
+    /// Token-length distribution of the requests.
+    pub bench: Benchmark,
+    /// Base seed of the arrival stream. Defaults to the cluster seed;
+    /// the legacy sweep signatures allow them to differ.
+    pub workload_seed: u64,
+}
+
+impl Scenario {
+    pub fn new(cluster: ClusterConfig, requests: usize, bench: Benchmark) -> Self {
+        let workload_seed = cluster.seed;
+        Self {
+            cluster,
+            rate_rps: 2.0,
+            requests,
+            bench,
+            workload_seed,
+        }
+    }
+
+    pub fn with_workload_seed(mut self, seed: u64) -> Self {
+        self.workload_seed = seed;
+        self
+    }
+}
+
+/// A base scenario plus N typed axes — the experiment cross-product.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    base: Scenario,
+    axes: Vec<(Axis, Vec<AxisValue>)>,
+}
+
+/// One expanded (not yet run) grid point. `scenario` is fully
+/// self-contained: its `workload_seed` already includes the point's
+/// arrival-stream offset, so simulating it directly reproduces the
+/// corresponding [`Grid::run`] row exactly.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub index: usize,
+    pub coords: Vec<(Axis, AxisValue)>,
+    pub scenario: Scenario,
+}
+
+/// One completed grid point.
+#[derive(Debug)]
+pub struct GridRun {
+    /// The arrival rate this point actually ran at.
+    pub rate_rps: f64,
+    pub outcome: ClusterOutcome,
+    pub record: Record,
+}
+
+/// All completed points of one grid, in canonical expansion order.
+#[derive(Debug)]
+pub struct GridResult {
+    pub axes: Vec<Axis>,
+    pub runs: Vec<GridRun>,
+}
+
+/// Decompose `i` into per-axis value indices (last axis fastest).
+fn value_indices(mut i: usize, dims: &[usize], out: &mut [usize]) {
+    for k in (0..dims.len()).rev() {
+        out[k] = i % dims[k];
+        i /= dims[k];
+    }
+}
+
+impl Grid {
+    pub fn new(base: Scenario) -> Self {
+        Self {
+            base,
+            axes: Vec::new(),
+        }
+    }
+
+    /// Add an axis (builder style). Declaration order is expansion
+    /// order: the first axis varies slowest. Duplicates and empty value
+    /// lists are rejected when the grid expands or runs.
+    pub fn axis(mut self, axis: Axis, values: Vec<AxisValue>) -> Self {
+        self.axes.push((axis, values));
+        self
+    }
+
+    /// Add a parsed `--axis name=spec` argument.
+    pub fn axis_spec(self, spec: AxisSpec) -> Self {
+        self.axis(spec.axis, spec.values)
+    }
+
+    pub fn axes(&self) -> &[(Axis, Vec<AxisValue>)] {
+        &self.axes
+    }
+
+    /// Number of points the grid expands to (1 for an axis-free grid).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|(_, vs)| vs.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn check(&self) -> Result<Vec<usize>> {
+        anyhow::ensure!(self.base.requests > 0, "need at least one request");
+        for (i, (a, vs)) in self.axes.iter().enumerate() {
+            anyhow::ensure!(!vs.is_empty(), "axis {} has no values", a.as_str());
+            anyhow::ensure!(
+                !self.axes[..i].iter().any(|(b, _)| b == a),
+                "duplicate axis {}",
+                a.as_str()
+            );
+        }
+        let mut n = 1usize;
+        for (a, vs) in &self.axes {
+            n = n
+                .checked_mul(vs.len())
+                .ok_or_else(|| anyhow::anyhow!("grid size overflows"))?;
+            anyhow::ensure!(
+                n <= 1_000_000,
+                "grid expands past 1e6 points at axis {}",
+                a.as_str()
+            );
+        }
+        Ok(self.axes.iter().map(|(_, vs)| vs.len()).collect())
+    }
+
+    /// Expand the full cross-product: every point's coordinates and
+    /// fully-applied scenario, in canonical order. [`Grid::run`] derives
+    /// the same scenarios without cloning one per point; this
+    /// materialized form serves tests and tooling.
+    pub fn points(&self) -> Result<Vec<GridPoint>> {
+        let dims = self.check()?;
+        let n: usize = dims.iter().product();
+        let rate_axis = self.axes.iter().position(|(a, _)| *a == Axis::ArrivalRate);
+        let mut idx = vec![0usize; dims.len()];
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            value_indices(i, &dims, &mut idx);
+            let mut scenario = self.base.clone();
+            let mut coords = Vec::with_capacity(self.axes.len());
+            for (k, (a, vs)) in self.axes.iter().enumerate() {
+                a.apply(&mut scenario, &vs[idx[k]])?;
+                coords.push((*a, vs[idx[k]].clone()));
+            }
+            // The same arrival-seed derivation `run()` uses, folded in
+            // so the materialized scenario reproduces the run row.
+            if let Some(ai) = rate_axis {
+                scenario.workload_seed =
+                    scenario.workload_seed.wrapping_add(idx[ai] as u64 * 7919);
+            }
+            // The same validation story as `run()`: an out-of-range
+            // axis value is an error on every expansion path.
+            scenario.cluster.validate()?;
+            out.push(GridPoint {
+                index: i,
+                coords,
+                scenario,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Run every point on the [`crate::exec`] pool (`threads` workers,
+    /// 0 = one per core, 1 = serial) and return outcomes in canonical
+    /// order — byte-identical tables at any thread count.
+    pub fn run(&self, threads: usize) -> Result<GridResult> {
+        self.base.cluster.validate()?;
+        let dims = self.check()?;
+        let n: usize = dims.iter().product();
+
+        // Pre-apply config axes once per distinct config combination.
+        let cfg_axes: Vec<usize> = (0..self.axes.len())
+            .filter(|&k| self.axes[k].0.touches_config())
+            .collect();
+        let cfg_dims: Vec<usize> = cfg_axes.iter().map(|&k| dims[k]).collect();
+        let n_variants: usize = cfg_dims.iter().product();
+        let mut variants = Vec::with_capacity(n_variants);
+        let mut vis = vec![0usize; cfg_axes.len()];
+        for combo in 0..n_variants {
+            // Decompose fully first, then apply in *declaration* order —
+            // order-sensitive axis pairs (e.g. cells before devices)
+            // must behave exactly as `points()` and the docs promise.
+            value_indices(combo, &cfg_dims, &mut vis);
+            let mut sc = self.base.clone();
+            for (pos, &ai) in cfg_axes.iter().enumerate() {
+                let (axis, values) = &self.axes[ai];
+                axis.apply(&mut sc, &values[vis[pos]])?;
+            }
+            sc.cluster.validate()?;
+            variants.push(sc);
+        }
+
+        let rate_axis = self.axes.iter().position(|(a, _)| *a == Axis::ArrivalRate);
+        // Every rate a point can run at is validated up front — axis
+        // values and the base scenario's fallback alike — so a bad rate
+        // is an error here, never a panic inside a worker.
+        match rate_axis {
+            Some(ai) => {
+                for v in &self.axes[ai].1 {
+                    let r = v.as_num()?;
+                    anyhow::ensure!(
+                        r.is_finite() && r > 0.0,
+                        "arrival rate must be finite and positive, got {r}"
+                    );
+                }
+            }
+            None => {
+                anyhow::ensure!(
+                    self.base.rate_rps.is_finite() && self.base.rate_rps > 0.0,
+                    "scenario arrival rate must be finite and positive, got {}",
+                    self.base.rate_rps
+                );
+            }
+        }
+
+        let runs = crate::exec::try_map_indexed(n, threads, |i| -> Result<GridRun> {
+            let mut idx = vec![0usize; dims.len()];
+            value_indices(i, &dims, &mut idx);
+            let mut combo = 0usize;
+            for (pos, &ai) in cfg_axes.iter().enumerate() {
+                combo = combo * cfg_dims[pos] + idx[ai];
+            }
+            let sc = &variants[combo];
+            let (rate, rate_idx) = match rate_axis {
+                Some(ai) => (self.axes[ai].1[idx[ai]].as_num()?, idx[ai]),
+                None => (sc.rate_rps, 0),
+            };
+            let mut sim = ClusterSim::new(&sc.cluster)?;
+            let arrivals = ArrivalProcess::Poisson { rate_rps: rate }.generate(
+                sc.requests,
+                sc.bench,
+                sc.workload_seed.wrapping_add(rate_idx as u64 * 7919),
+            );
+            let outcome = sim.run(&arrivals);
+            let coords: Vec<(Axis, AxisValue)> = self
+                .axes
+                .iter()
+                .enumerate()
+                .map(|(k, (a, vs))| (*a, vs[idx[k]].clone()))
+                .collect();
+            let label = if coords.is_empty() {
+                "base".to_string()
+            } else {
+                coords
+                    .iter()
+                    .map(|(a, v)| a.coord_label(v))
+                    .collect::<Vec<_>>()
+                    .join("@")
+            };
+            let record = Record::new(label, coords, &outcome);
+            Ok(GridRun {
+                rate_rps: rate,
+                outcome,
+                record,
+            })
+        })?;
+        Ok(GridResult {
+            axes: self.axes.iter().map(|(a, _)| *a).collect(),
+            runs,
+        })
+    }
+}
+
+impl GridResult {
+    /// Iterate the unified records in canonical order.
+    pub fn records(&self) -> impl Iterator<Item = &Record> {
+        self.runs.iter().map(|r| &r.record)
+    }
+
+    /// The full-schema table: numeric-axis coordinate columns followed
+    /// by every metric in [`METRIC_KEYS`].
+    pub fn table(&self, title: &str) -> Result<Table> {
+        records_table(title, &self.axes, &METRIC_KEYS, self.records())
+    }
+
+    /// The full grid as one JSON document (the CSV's machine-readable
+    /// twin; word-axis coordinates survive here).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("wdmoe-grid-v1")),
+            (
+                "axes",
+                Json::Arr(self.axes.iter().map(|a| Json::str(a.key())).collect()),
+            ),
+            (
+                "points",
+                Json::Arr(self.runs.iter().map(|r| r.record.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ControlKind, HandoverPolicy};
+
+    fn base() -> Scenario {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.model.n_blocks = 4;
+        Scenario::new(cfg, 12, Benchmark::Piqa)
+    }
+
+    #[test]
+    fn expansion_matches_hand_nested_loops() {
+        let grid = Grid::new(base())
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[1.0, 2.0]))
+            .axis(Axis::Handover, AxisValue::words(&["none", "rehome_on_arrival"]))
+            .axis(Axis::QueueLimit, AxisValue::nums(&[0.0, 0.5, 1.0]));
+        assert_eq!(grid.len(), 12);
+        let points = grid.points().unwrap();
+        assert_eq!(points.len(), 12);
+        // The exact rows three nested for loops would produce, in order.
+        let mut expect = Vec::new();
+        for &rate in &[1.0, 2.0] {
+            for h in ["none", "rehome_on_arrival"] {
+                for &q in &[0.0, 0.5, 1.0] {
+                    expect.push(vec![
+                        (Axis::ArrivalRate, AxisValue::num(rate)),
+                        (Axis::Handover, AxisValue::word(h)),
+                        (Axis::QueueLimit, AxisValue::num(q)),
+                    ]);
+                }
+            }
+        }
+        for (p, e) in points.iter().zip(&expect) {
+            assert_eq!(&p.coords, e, "point {}", p.index);
+        }
+        // And the scenarios carry the applied coordinates.
+        assert_eq!(points[0].scenario.rate_rps, 1.0);
+        assert_eq!(points[11].scenario.rate_rps, 2.0);
+        assert_eq!(points[11].scenario.cluster.queue_limit_s, 1.0);
+        assert_eq!(
+            points[11].scenario.cluster.handover,
+            HandoverPolicy::RehomeOnArrival
+        );
+    }
+
+    #[test]
+    fn rejects_duplicate_and_empty_axes() {
+        let g = Grid::new(base())
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[1.0]))
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[2.0]));
+        assert!(g.run(1).is_err());
+        let g = Grid::new(base()).axis(Axis::QueueLimit, vec![]);
+        assert!(g.points().is_err());
+    }
+
+    #[test]
+    fn axis_free_grid_runs_one_base_point() {
+        let result = Grid::new(base()).run(1).unwrap();
+        assert_eq!(result.runs.len(), 1);
+        assert_eq!(result.runs[0].record.label, "base");
+        assert_eq!(result.runs[0].outcome.completed, 12);
+        assert_eq!(result.runs[0].rate_rps, base().rate_rps);
+    }
+
+    #[test]
+    fn policy_axes_replay_identical_arrival_streams() {
+        // Points that differ only in a config axis must see the same
+        // traffic: same arrivals, same token volume.
+        let result = Grid::new(base())
+            .axis(
+                Axis::ControlPlane,
+                AxisValue::words(&["static_uniform", "adaptive"]),
+            )
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[1.0, 4.0]))
+            .run(1)
+            .unwrap();
+        assert_eq!(result.runs.len(), 4);
+        for ri in 0..2 {
+            let a = &result.runs[ri].outcome; // static_uniform @ rate ri
+            let b = &result.runs[2 + ri].outcome; // adaptive @ rate ri
+            assert_eq!(a.arrived, b.arrived);
+            assert_eq!(a.arrived_tokens, b.arrived_tokens);
+        }
+    }
+
+    #[test]
+    fn run_applies_config_axes_per_variant() {
+        let result = Grid::new(base())
+            .axis(Axis::ControlPlane, AxisValue::words(&["adaptive"]))
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[2.0]))
+            .run(1)
+            .unwrap();
+        // The adaptive plane actually ran: control ticks happened.
+        assert_eq!(result.runs.len(), 1);
+        assert!(result.runs[0].outcome.control_total().resolves >= 1);
+    }
+
+    #[test]
+    fn invalid_base_rate_errors_instead_of_panicking() {
+        // No ArrivalRate axis: the base scenario's rate is the fallback
+        // and must be validated up front, not panic in a worker.
+        let mut sc = base();
+        sc.rate_rps = 0.0;
+        let err = Grid::new(sc)
+            .axis(Axis::QueueLimit, AxisValue::nums(&[0.0, 0.5]))
+            .run(1)
+            .unwrap_err();
+        assert!(err.to_string().contains("arrival rate"), "{err}");
+    }
+
+    #[test]
+    fn invalid_axis_value_surfaces_config_validation_error() {
+        // Negative backhaul passes apply (range left to validate) and
+        // must be rejected on every expansion path before anything runs.
+        let g = Grid::new(base()).axis(Axis::Backhaul, AxisValue::nums(&[-1.0]));
+        assert!(g.run(1).is_err());
+        assert!(g.points().is_err());
+    }
+
+    #[test]
+    fn materialized_points_reproduce_run_rows() {
+        // A GridPoint's scenario is self-contained: simulating it
+        // directly (config + workload fields, arrival seed as stored)
+        // must give exactly the outcome `run()` reported for that row —
+        // including rate indices > 0, whose arrival-seed offset is
+        // folded into the scenario.
+        let grid = Grid::new(base())
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[1.0, 4.0]))
+            .axis(Axis::CacheCapacity, AxisValue::nums(&[1.0, 2.0]));
+        let result = grid.run(1).unwrap();
+        let points = grid.points().unwrap();
+        assert_eq!(points.len(), result.runs.len());
+        for (p, run) in points.iter().zip(&result.runs) {
+            let sc = &p.scenario;
+            let mut sim = ClusterSim::new(&sc.cluster).unwrap();
+            let arrivals = ArrivalProcess::Poisson {
+                rate_rps: sc.rate_rps,
+            }
+            .generate(sc.requests, sc.bench, sc.workload_seed);
+            let out = sim.run(&arrivals);
+            assert_eq!(out.makespan_s, run.outcome.makespan_s, "point {}", p.index);
+            assert_eq!(out.utilization, run.outcome.utilization, "point {}", p.index);
+        }
+    }
+
+    #[test]
+    fn grid_table_and_json_share_the_run_order() {
+        let result = Grid::new(base())
+            .axis(Axis::ArrivalRate, AxisValue::nums(&[1.0, 2.0]))
+            .axis(Axis::QueueLimit, AxisValue::nums(&[0.0, 0.5]))
+            .run(1)
+            .unwrap();
+        let t = result.table("grid").unwrap();
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.columns[0], "rate_rps");
+        assert_eq!(t.columns[1], "queue_limit_s");
+        assert_eq!(t.rows[0].0, "rate=1@queue_limit=0");
+        assert_eq!(t.rows[3].0, "rate=2@queue_limit=0.5");
+        let j = Json::parse(&result.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "wdmoe-grid-v1");
+        let pts = j.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(
+            pts[3].get("label").unwrap().as_str().unwrap(),
+            "rate=2@queue_limit=0.5"
+        );
+    }
+
+    #[test]
+    fn seed_axis_changes_traffic_and_gates() {
+        let result = Grid::new(base())
+            .axis(Axis::Seed, AxisValue::nums(&[0.0, 1.0]))
+            .run(1)
+            .unwrap();
+        let (a, b) = (&result.runs[0].outcome, &result.runs[1].outcome);
+        assert_eq!(a.completed, 12);
+        assert_eq!(b.completed, 12);
+        assert!(
+            a.arrived_tokens != b.arrived_tokens || a.makespan_s != b.makespan_s,
+            "different seeds should draw different workloads"
+        );
+    }
+
+    #[test]
+    fn run_applies_order_sensitive_config_axes_in_declaration_order() {
+        // Cell 1 has only 4 devices, so `devices=6` is only feasible
+        // *after* `cells=1` drops it: if run() applied config axes in
+        // any order other than declaration order (as points() does),
+        // this grid would error instead of running.
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 4;
+        cfg.cells[1].devices.truncate(4);
+        let grid = Grid::new(Scenario::new(cfg, 8, Benchmark::Piqa))
+            .axis(Axis::Cells, AxisValue::nums(&[1.0]))
+            .axis(Axis::Devices, AxisValue::nums(&[6.0]));
+        let points = grid.points().unwrap();
+        assert_eq!(points[0].scenario.cluster.n_cells(), 1);
+        assert_eq!(points[0].scenario.cluster.cells[0].devices.len(), 6);
+        let result = grid.run(1).unwrap();
+        assert_eq!(result.runs.len(), 1);
+        assert_eq!(result.runs[0].outcome.utilization.len(), 1);
+        assert_eq!(result.runs[0].outcome.utilization[0].len(), 6);
+    }
+
+    #[test]
+    fn control_kind_words_cover_all_kinds() {
+        // Guard: the wrapper sweeps build their plane axis from
+        // ControlKind::all(); the words must stay parseable.
+        for k in ControlKind::all() {
+            Axis::ControlPlane.parse_value(k.as_str()).unwrap();
+        }
+    }
+}

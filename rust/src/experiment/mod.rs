@@ -1,0 +1,41 @@
+//! # `experiment` — typed scenario/axis sweep grids
+//!
+//! The paper's evaluation is a grid — arrival rates × bandwidth ×
+//! placement × availability — but until this module every sweep was a
+//! hand-rolled function with its own loop and its own CSV header:
+//! two existed (`arrival_rate_sweep`, `control_plane_sweep`) and every
+//! new knob (handover, backhaul, queue limits, replication, …) would
+//! have demanded a third ~100-line copy. This module makes the grid a
+//! first-class value instead:
+//!
+//! * [`Axis`] — every sweepable knob as one enum variant; a setting is
+//!   applied through the single [`Axis::apply`] dispatch onto a
+//!   [`Scenario`] (cluster config + workload). Adding a knob is one
+//!   variant + one match arm, and it is immediately sweepable from the
+//!   CLI, the JSON output and every test.
+//! * [`Grid`] — a base scenario plus N axes, expanded in declaration
+//!   order (exactly the rows hand-nested `for` loops would emit) and
+//!   run through [`crate::exec::try_map_indexed`]: any grid is parallel
+//!   and byte-identical to serial. Config axes are pre-applied once per
+//!   distinct config combination — never once per point.
+//! * [`Record`] — one metric schema ([`METRIC_KEYS`]) derived from a
+//!   [`crate::cluster::ClusterOutcome`] in one place, serialized to CSV
+//!   tables ([`records_table`]) and JSON from this module only. The
+//!   legacy sweeps are column projections of it, byte-for-byte.
+//! * [`arrival_rate_sweep`] / [`control_plane_sweep`] — the legacy
+//!   entry points, now thin wrappers over a one- and two-axis grid
+//!   (still re-exported from [`crate::cluster`]).
+//!
+//! CLI: `repro sweep --axis rate=0.5:0.5:4 --axis handover=none,borrow
+//! --axis queue_limit=0.5,1` runs a three-axis grid; `repro cluster`
+//! keeps its historical shape on top of the same machinery.
+
+pub mod axis;
+pub mod grid;
+pub mod record;
+pub mod sweeps;
+
+pub use axis::{Axis, AxisSpec, AxisValue};
+pub use grid::{Grid, GridPoint, GridResult, GridRun, Scenario};
+pub use record::{records_table, Record, METRIC_KEYS};
+pub use sweeps::{arrival_rate_sweep, control_plane_sweep, SweepPoint, SweepResult};

@@ -1,0 +1,266 @@
+//! The unified sweep record: one metric schema, one writer.
+//!
+//! Every sweep row used to be a hand-rolled `Vec<f64>` pushed against a
+//! per-function string header — adding a metric meant editing every
+//! sweep in lockstep or silently drifting. A [`Record`] instead derives
+//! *all* of [`METRIC_KEYS`] from a [`ClusterOutcome`] once (single
+//! percentile sort, shared utilization fold), tags the row with its
+//! grid coordinates, and serializes to CSV ([`records_table`]) and JSON
+//! ([`Record::to_json`]) from this module only. Legacy sweep tables are
+//! column *projections* of this schema, so their CSV bytes are
+//! unchanged while new sweeps get every column for free.
+
+use super::axis::{Axis, AxisValue};
+use crate::cluster::ClusterOutcome;
+use crate::metrics::Table;
+use crate::util::Json;
+use anyhow::Result;
+
+/// The full metric schema, in canonical column order. Every sweep CSV's
+/// metric columns are a subsequence of this list.
+pub const METRIC_KEYS: [&str; 15] = [
+    "throughput_rps",
+    "goodput_tps",
+    "drop_rate",
+    "shed_tps",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "mean_ms",
+    "util_mean",
+    "util_max",
+    "resolves",
+    "placement_updates",
+    "churn",
+    "handover_rate",
+    "borrowed_tokens",
+];
+
+/// One sweep row: grid coordinates plus the full metric vector.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// Row label, coordinates joined with `@` (`adaptive@rate=2`).
+    pub label: String,
+    coords: Vec<(Axis, AxisValue)>,
+    metrics: [f64; METRIC_KEYS.len()],
+}
+
+impl Record {
+    /// Derive every metric from one outcome. The latency series is
+    /// sorted once for all three percentiles, exactly as the legacy
+    /// sweep rows computed them — projections stay bit-identical.
+    pub fn new(label: String, coords: Vec<(Axis, AxisValue)>, out: &ClusterOutcome) -> Self {
+        let s = out.steady_latency();
+        let pct = s.percentiles(&[50.0, 95.0, 99.0]);
+        let util = out.flat_utilization();
+        let util_mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
+        let util_max = util.iter().cloned().fold(0.0f64, f64::max);
+        let ctl = out.control_total();
+        let metrics = [
+            out.throughput_rps(),
+            out.goodput_tps(),
+            out.drop_rate(),
+            out.shed_tps(),
+            pct[0],
+            pct[1],
+            pct[2],
+            s.mean(),
+            util_mean,
+            util_max,
+            ctl.resolves as f64,
+            ctl.placement_updates as f64,
+            ctl.churn_frac,
+            out.handover_rate(),
+            out.borrowed_tokens,
+        ];
+        Self {
+            label,
+            coords,
+            metrics,
+        }
+    }
+
+    pub fn coords(&self) -> &[(Axis, AxisValue)] {
+        &self.coords
+    }
+
+    /// Numeric coordinate of `axis`, if this record has one.
+    pub fn coord_num(&self, axis: Axis) -> Option<f64> {
+        self.coords.iter().find(|(a, _)| *a == axis).and_then(|(_, v)| match v {
+            AxisValue::Num(n) => Some(*n),
+            AxisValue::Word(_) => None,
+        })
+    }
+
+    /// Metric by schema key.
+    pub fn metric(&self, key: &str) -> Result<f64> {
+        let i = METRIC_KEYS
+            .iter()
+            .position(|k| *k == key)
+            .ok_or_else(|| anyhow::anyhow!("unknown metric '{key}'"))?;
+        Ok(self.metrics[i])
+    }
+
+    /// `{label, coords: {key: value}, metrics: {key: value}}`.
+    pub fn to_json(&self) -> Json {
+        let coords = Json::obj(
+            self.coords
+                .iter()
+                .map(|(a, v)| {
+                    let j = match v {
+                        AxisValue::Num(n) => Json::Num(*n),
+                        AxisValue::Word(w) => Json::str(w),
+                    };
+                    (a.key(), j)
+                })
+                .collect(),
+        );
+        let metrics = Json::obj(
+            METRIC_KEYS
+                .iter()
+                .zip(&self.metrics)
+                .map(|(k, v)| (*k, Json::Num(*v)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("coords", coords),
+            ("metrics", metrics),
+        ])
+    }
+}
+
+/// The one CSV/table writer every sweep output goes through: one row per
+/// record, labelled by its coordinates; columns are the numeric-axis
+/// coordinates (in `axes` order) followed by `metric_keys` (a
+/// subsequence of [`METRIC_KEYS`], or the whole schema).
+pub fn records_table<'a, I>(
+    title: &str,
+    axes: &[Axis],
+    metric_keys: &[&str],
+    records: I,
+) -> Result<Table>
+where
+    I: IntoIterator<Item = &'a Record>,
+{
+    let num_axes: Vec<Axis> = axes.iter().copied().filter(Axis::is_numeric).collect();
+    let mut cols: Vec<&str> = num_axes.iter().map(Axis::key).collect();
+    cols.extend_from_slice(metric_keys);
+    let mut t = Table::new(title, &cols);
+    t.precision = 3;
+    for r in records {
+        let mut vals = Vec::with_capacity(cols.len());
+        for a in &num_axes {
+            vals.push(r.coord_num(*a).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "record '{}' has no numeric coordinate for {}",
+                    r.label,
+                    a.as_str()
+                )
+            })?);
+        }
+        for k in metric_keys {
+            vals.push(r.metric(k)?);
+        }
+        t.row(&r.label, vals);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSim;
+    use crate::config::ClusterConfig;
+    use crate::workload::{ArrivalProcess, Benchmark};
+
+    fn outcome() -> ClusterOutcome {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.model.n_blocks = 4;
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 2.0 }.generate(16, Benchmark::Piqa, 0);
+        sim.run(&arrivals)
+    }
+
+    #[test]
+    fn record_metrics_match_outcome_accessors() {
+        let out = outcome();
+        let r = Record::new(
+            "rate=2".into(),
+            vec![(Axis::ArrivalRate, AxisValue::num(2.0))],
+            &out,
+        );
+        assert_eq!(r.metric("throughput_rps").unwrap(), out.throughput_rps());
+        assert_eq!(r.metric("goodput_tps").unwrap(), out.goodput_tps());
+        assert_eq!(r.metric("p99_ms").unwrap(), out.p99_ms());
+        assert_eq!(r.metric("borrowed_tokens").unwrap(), out.borrowed_tokens);
+        assert_eq!(r.coord_num(Axis::ArrivalRate), Some(2.0));
+        assert_eq!(r.coord_num(Axis::QueueLimit), None);
+        assert!(r.metric("bogus").is_err());
+    }
+
+    #[test]
+    fn records_table_orders_coords_before_metrics() {
+        let out = outcome();
+        let r = Record::new(
+            "adaptive@rate=2@queue_limit=0.5".into(),
+            vec![
+                (Axis::ControlPlane, AxisValue::word("adaptive")),
+                (Axis::ArrivalRate, AxisValue::num(2.0)),
+                (Axis::QueueLimit, AxisValue::num(0.5)),
+            ],
+            &out,
+        );
+        let t = records_table(
+            "t",
+            &[Axis::ControlPlane, Axis::ArrivalRate, Axis::QueueLimit],
+            &METRIC_KEYS,
+            [&r],
+        )
+        .unwrap();
+        // Word axes contribute no column; numeric axes lead in order.
+        assert_eq!(t.columns[0], "rate_rps");
+        assert_eq!(t.columns[1], "queue_limit_s");
+        assert_eq!(t.columns[2], "throughput_rps");
+        assert_eq!(t.columns.len(), 2 + METRIC_KEYS.len());
+        let (label, vals) = &t.rows[0];
+        assert_eq!(label, "adaptive@rate=2@queue_limit=0.5");
+        assert_eq!(vals[0], 2.0);
+        assert_eq!(vals[1], 0.5);
+        assert_eq!(vals[2], out.throughput_rps());
+    }
+
+    #[test]
+    fn record_json_round_trips() {
+        let out = outcome();
+        let r = Record::new(
+            "rate=2".into(),
+            vec![
+                (Axis::ArrivalRate, AxisValue::num(2.0)),
+                (Axis::Handover, AxisValue::word("none")),
+            ],
+            &out,
+        );
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("label").unwrap().as_str().unwrap(), "rate=2");
+        let coords = j.get("coords").unwrap();
+        assert_eq!(coords.get("rate_rps").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(coords.get("handover").unwrap().as_str().unwrap(), "none");
+        let metrics = j.get("metrics").unwrap();
+        for k in METRIC_KEYS {
+            assert_eq!(
+                metrics.get(k).unwrap().as_f64().unwrap(),
+                r.metric(k).unwrap(),
+                "metric {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn records_table_rejects_missing_coordinate() {
+        let out = outcome();
+        let r = Record::new("base".into(), vec![], &out);
+        assert!(records_table("t", &[Axis::ArrivalRate], &["p50_ms"], [&r]).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Legacy sweep entry points, reduced to thin wrappers over [`Grid`].
+//!
+//! `arrival_rate_sweep` is a one-axis grid; `control_plane_sweep` is a
+//! two-axis grid (plane-major, rate fastest — the legacy row order).
+//! Their CSV output is **byte-compatible** with the hand-rolled
+//! pre-grid implementations: the row labels, the column subsets and
+//! every value formula are projections of the unified
+//! [`Record`](super::Record) schema (see `rust/tests/experiment.rs` for
+//! the byte-level regression test). New experiments should build a
+//! [`Grid`] directly and get every axis and metric; these wrappers
+//! exist so `repro cluster` and the existing tests/benches keep their
+//! exact shape.
+
+use super::axis::{Axis, AxisValue};
+use super::grid::{Grid, Scenario};
+use super::record::records_table;
+use crate::cluster::ClusterOutcome;
+use crate::config::{ClusterConfig, ControlKind};
+use crate::metrics::Table;
+use crate::workload::Benchmark;
+
+/// The legacy arrival-rate summary columns: the unified schema minus
+/// `placement_updates` (the static-plane sweeps predate it).
+const ARRIVAL_METRICS: [&str; 14] = [
+    "throughput_rps",
+    "goodput_tps",
+    "drop_rate",
+    "shed_tps",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "mean_ms",
+    "util_mean",
+    "util_max",
+    "resolves",
+    "churn",
+    "handover_rate",
+    "borrowed_tokens",
+];
+
+/// The legacy control-plane comparison columns: no utilization or mean
+/// latency, but the placement-update counter.
+const CONTROL_METRICS: [&str; 12] = [
+    "throughput_rps",
+    "goodput_tps",
+    "drop_rate",
+    "shed_tps",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "resolves",
+    "placement_updates",
+    "churn",
+    "handover_rate",
+    "borrowed_tokens",
+];
+
+/// One point of an arrival-rate sweep.
+pub struct SweepPoint {
+    pub rate_rps: f64,
+    pub outcome: ClusterOutcome,
+}
+
+/// Sweep output: per-rate outcomes plus rendered tables (the `repro
+/// cluster` CSVs).
+pub struct SweepResult {
+    pub points: Vec<SweepPoint>,
+    pub summary: Table,
+    pub utilization: Table,
+}
+
+/// Sweep Poisson arrival rate and tabulate throughput, goodput, drop
+/// rate, steady-state latency percentiles, control-plane activity and
+/// per-device utilization — a one-axis [`Grid`].
+///
+/// Points run on the [`crate::exec`] worker pool (`threads` workers,
+/// 0 = one per core, 1 = serial): each point is a pure function of
+/// `(config, rate, derived seed)` and results are merged in rate order,
+/// so the tables are byte-identical at any thread count.
+pub fn arrival_rate_sweep(
+    cfg: &ClusterConfig,
+    rates_rps: &[f64],
+    requests: usize,
+    bench: Benchmark,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<SweepResult> {
+    let base = Scenario::new(cfg.clone(), requests, bench).with_workload_seed(seed);
+    let result = Grid::new(base)
+        .axis(Axis::ArrivalRate, AxisValue::nums(rates_rps))
+        .run(threads)?;
+
+    let summary = records_table(
+        &format!("Cluster arrival-rate sweep — {}", bench.name()),
+        &result.axes,
+        &ARRIVAL_METRICS,
+        result.records(),
+    )?;
+    let dev_names: Vec<String> = cfg
+        .cells
+        .iter()
+        .flat_map(|c| c.devices.iter().map(|d| d.name.clone()))
+        .collect();
+    let dev_cols: Vec<&str> = dev_names.iter().map(String::as_str).collect();
+    let mut util_t = Table::new("Cluster per-device utilization", &dev_cols);
+    util_t.precision = 3;
+    for run in &result.runs {
+        util_t.row(&run.record.label, run.outcome.flat_utilization());
+    }
+    let points = result
+        .runs
+        .into_iter()
+        .map(|r| SweepPoint {
+            rate_rps: r.rate_rps,
+            outcome: r.outcome,
+        })
+        .collect();
+    Ok(SweepResult {
+        points,
+        summary,
+        utilization: util_t,
+    })
+}
+
+/// Compare the three control planes on one workload in a single table —
+/// a two-axis [`Grid`] (plane × rate, plane-major rows). The same
+/// arrival streams are replayed for every plane, so rows differ only by
+/// control behaviour.
+///
+/// `threads` as in [`arrival_rate_sweep`]: all plane × rate points run
+/// concurrently; rows are emitted in the canonical plane-major order.
+pub fn control_plane_sweep(
+    cfg: &ClusterConfig,
+    rates_rps: &[f64],
+    requests: usize,
+    bench: Benchmark,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Table> {
+    let base = Scenario::new(cfg.clone(), requests, bench).with_workload_seed(seed);
+    let planes: Vec<AxisValue> = ControlKind::all()
+        .iter()
+        .map(|k| AxisValue::word(k.as_str()))
+        .collect();
+    let result = Grid::new(base)
+        .axis(Axis::ControlPlane, planes)
+        .axis(Axis::ArrivalRate, AxisValue::nums(rates_rps))
+        .run(threads)?;
+    records_table(
+        &format!("Cluster control-plane comparison — {}", bench.name()),
+        &result.axes,
+        &CONTROL_METRICS,
+        result.records(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn small_cfg() -> ClusterConfig {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.model.n_blocks = 8;
+        cfg
+    }
+
+    #[test]
+    fn sweep_emits_consistent_tables() {
+        let cfg = small_cfg();
+        let r = arrival_rate_sweep(&cfg, &[0.5, 2.0], 24, Benchmark::Piqa, 0, 1).unwrap();
+        assert_eq!(r.points.len(), 2);
+        assert_eq!(r.summary.rows.len(), 2);
+        assert_eq!(r.utilization.rows.len(), 2);
+        assert_eq!(r.utilization.columns.len(), 8);
+        for p in &r.points {
+            assert_eq!(p.outcome.completed, 24);
+        }
+        for col in [
+            "goodput_tps",
+            "drop_rate",
+            "shed_tps",
+            "resolves",
+            "churn",
+            "handover_rate",
+            "borrowed_tokens",
+        ] {
+            assert!(
+                r.summary.columns.iter().any(|c| c == col),
+                "missing column {col}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        let mut cfg = small_cfg();
+        cfg.model.n_blocks = 4;
+        let rates = [0.5, 2.0, 4.0];
+        let serial = arrival_rate_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 1).unwrap();
+        let parallel = arrival_rate_sweep(&cfg, &rates, 16, Benchmark::Piqa, 0, 4).unwrap();
+        assert_eq!(serial.summary.to_csv(), parallel.summary.to_csv());
+        assert_eq!(serial.utilization.to_csv(), parallel.utilization.to_csv());
+    }
+
+    #[test]
+    fn control_plane_sweep_rows_cover_all_kinds() {
+        let mut cfg = small_cfg();
+        cfg.model.n_blocks = 4;
+        let t = control_plane_sweep(&cfg, &[1.0, 4.0], 16, Benchmark::Piqa, 0, 1).unwrap();
+        assert_eq!(t.rows.len(), 3 * 2);
+        for kind in ControlKind::all() {
+            assert!(
+                t.rows.iter().any(|(label, _)| label.starts_with(kind.as_str())),
+                "missing rows for {}",
+                kind.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_headers_are_schema_projections() {
+        let cfg = small_cfg();
+        let r = arrival_rate_sweep(&cfg, &[1.0], 8, Benchmark::Piqa, 0, 1).unwrap();
+        let expect: Vec<String> = std::iter::once("rate_rps".to_string())
+            .chain(ARRIVAL_METRICS.iter().map(|s| s.to_string()))
+            .collect();
+        assert_eq!(r.summary.columns, expect);
+        let t = control_plane_sweep(&cfg, &[1.0], 8, Benchmark::Piqa, 0, 1).unwrap();
+        let expect: Vec<String> = std::iter::once("rate_rps".to_string())
+            .chain(CONTROL_METRICS.iter().map(|s| s.to_string()))
+            .collect();
+        assert_eq!(t.columns, expect);
+    }
+}

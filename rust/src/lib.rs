@@ -40,6 +40,11 @@
 //!   worker pool that runs independent sweep points concurrently and
 //!   merges results in canonical order, so parallel output is
 //!   byte-identical to serial.
+//! * [`experiment`] — the typed experiment API: [`experiment::Axis`]
+//!   (every sweepable knob behind one `apply` dispatch),
+//!   [`experiment::Grid`] (cross-product expansion run on the `exec`
+//!   pool) and the unified [`experiment::Record`] metric schema that
+//!   every sweep CSV/JSON is written from (`repro sweep --axis …`).
 //! * [`runtime`] — PJRT execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text → compile once → execute on the
 //!   request path; python never runs at serving time). The PJRT pieces
@@ -59,6 +64,7 @@ pub mod config;
 pub mod control;
 pub mod coordinator;
 pub mod exec;
+pub mod experiment;
 pub mod util;
 pub mod devices;
 pub mod latency;

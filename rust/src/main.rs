@@ -11,9 +11,9 @@
 //!   cluster [--rates CSV] [--requests N] [--benchmark NAME]
 //!           [--cache N] [--dispatch load_aware|static] [--cells N]
 //!           [--control static_uniform|static_optimal|adaptive|compare]
-//!           [--epoch S] [--queue-limit S] [--drop request|shed]
-//!           [--handover none|rehome|borrow] [--backhaul S]
-//!           [--threads N]
+//!           [--epoch S] [--backlog-delta S] [--queue-limit S]
+//!           [--drop request|shed] [--handover none|rehome|borrow]
+//!           [--backhaul S] [--threads N]
 //!                 multi-cell discrete-event serving sweep: throughput,
 //!                 goodput, drop rate, p50/p95/p99 latency, per-device
 //!                 utilization, control-plane activity and handover
@@ -25,6 +25,16 @@
 //!                 points run on the parallel engine (--threads 0 =
 //!                 one worker per core, 1 = serial; output is
 //!                 byte-identical either way)
+//!   sweep --axis NAME=SPEC [--axis NAME=SPEC ...] [--requests N]
+//!         [--benchmark NAME] [--threads N] [--json]
+//!         [+ the cluster base-config flags above]
+//!                 typed experiment grid: the cross-product of every
+//!                 --axis (comma list `0.5,1,2` or inclusive range
+//!                 `start:step:end`; axes: rate, control, handover,
+//!                 backhaul, queue_limit, drop, cache, dispatch, cells,
+//!                 devices, seed, epoch, hysteresis, backlog_delta)
+//!                 through the parallel engine, one unified-schema
+//!                 CSV (+ JSON with --json) into --out
 //!   bench [--json] [--smoke]
 //!                 named performance harnesses (solver cold/warm, epoch
 //!                 tick, dispatch, DES events/sec); --json writes
@@ -44,6 +54,7 @@ use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
 use wdmoe::config::{
     ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy, SystemConfig,
 };
+use wdmoe::experiment::{AxisSpec, Grid, Scenario};
 use wdmoe::repro::{self, ReproContext};
 use wdmoe::workload::Benchmark;
 
@@ -67,10 +78,19 @@ COMMANDS:
   cluster [--rates CSV] [--requests N] [--benchmark NAME]
           [--cache N] [--dispatch load_aware|static] [--cells N]
           [--control static_uniform|static_optimal|adaptive|compare]
-          [--epoch S] [--queue-limit S] [--drop request|shed]
-          [--handover none|rehome|borrow] [--backhaul S]
-          [--threads N]   (0 = one worker per core; output is
+          [--epoch S] [--backlog-delta S] [--queue-limit S]
+          [--drop request|shed] [--handover none|rehome|borrow]
+          [--backhaul S] [--threads N]
+                          (--threads 0 = one worker per core; output is
                            byte-identical at any thread count)
+  sweep --axis NAME=SPEC [--axis NAME=SPEC ...]
+        [--requests N] [--benchmark NAME] [--threads N] [--json]
+        [+ the cluster base-config flags]
+                          SPEC is a comma list (0.5,1,2 / none,borrow)
+                          or an inclusive range start:step:end; axes:
+                          rate control handover backhaul queue_limit
+                          drop cache dispatch cells devices seed epoch
+                          hysteresis backlog_delta
   bench [--json] [--smoke]
   config [simulation|testbed|serving|cluster]
   fig5 | fig6 | fig7 | fig8 | fig10
@@ -141,6 +161,76 @@ fn rest_opt(rest: &[String], key: &str) -> Option<String> {
         .and_then(|i| rest.get(i + 1).cloned())
 }
 
+/// Every value of a repeatable option (`--axis a=1 --axis b=2`).
+fn rest_all(rest: &[String], key: &str) -> anyhow::Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        if rest[i] == key {
+            let v = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("{key} needs a value"))?;
+            out.push(v.clone());
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// The base-config flags `cluster` and `sweep` share: load/override a
+/// [`ClusterConfig`] before rates or axes are applied on top.
+fn cluster_base_config(args: &Args) -> anyhow::Result<ClusterConfig> {
+    // --config takes a ClusterConfig JSON here (the format
+    // `repro config cluster` prints), not a SystemConfig.
+    let mut cfg = match &args.config {
+        Some(p) => ClusterConfig::from_json_file(p)?,
+        None => ClusterConfig::edge_default(),
+    };
+    // --seed overrides; otherwise a --config file's seed stands.
+    if let Some(seed) = args.seed {
+        cfg.seed = seed;
+    }
+    let rest = &args.rest;
+    if let Some(n) = rest_opt(rest, "--cells") {
+        let n: usize = n.parse()?;
+        anyhow::ensure!(n >= 1, "--cells must be >= 1");
+        cfg = cfg.with_n_cells(n);
+    }
+    if let Some(c) = rest_opt(rest, "--cache") {
+        cfg.cache_capacity = c.parse()?;
+    }
+    if let Some(d) = rest_opt(rest, "--dispatch") {
+        cfg.dispatch = DispatchKind::parse(&d)?;
+    }
+    if let Some(e) = rest_opt(rest, "--epoch") {
+        cfg.control_epoch_s = e.parse()?;
+    }
+    if let Some(b) = rest_opt(rest, "--backlog-delta") {
+        cfg.control_backlog_delta_s = b.parse()?;
+    }
+    if let Some(q) = rest_opt(rest, "--queue-limit") {
+        cfg.queue_limit_s = q.parse()?;
+    }
+    if let Some(d) = rest_opt(rest, "--drop") {
+        cfg.drop_policy = DropPolicy::parse(&d)?;
+    }
+    if let Some(h) = rest_opt(rest, "--handover") {
+        cfg.handover = HandoverPolicy::parse(&h)?;
+    }
+    if let Some(b) = rest_opt(rest, "--backhaul") {
+        cfg.backhaul_s_per_token = b.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn bench_arg(rest: &[String]) -> anyhow::Result<Benchmark> {
+    let bench_name = rest_opt(rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
+    Benchmark::from_name(&bench_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))
+}
+
 #[cfg(feature = "pjrt")]
 fn parse_policy(s: &str) -> anyhow::Result<wdmoe::config::PolicyKind> {
     use wdmoe::config::PolicyKind;
@@ -200,6 +290,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "cluster" => cluster_cmd(&args)?,
+        "sweep" => sweep_cmd(&args)?,
         "bench" => bench_cmd(&args)?,
         "fig5" => drop(repro::fig5(&ctx)?),
         "fig6" => drop(repro::fig6(&ctx)?),
@@ -217,44 +308,10 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `repro cluster` — multi-cell DES arrival-rate sweep.
+/// `repro cluster` — multi-cell DES arrival-rate sweep (a one-axis grid
+/// of the experiment API, kept in its historical shape).
 fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
-    // --config takes a ClusterConfig JSON here (the format
-    // `repro config cluster` prints), not a SystemConfig.
-    let mut cfg = match &args.config {
-        Some(p) => ClusterConfig::from_json_file(p)?,
-        None => ClusterConfig::edge_default(),
-    };
-    // --seed overrides; otherwise a --config file's seed stands.
-    if let Some(seed) = args.seed {
-        cfg.seed = seed;
-    }
-    if let Some(n) = rest_opt(&args.rest, "--cells") {
-        let n: usize = n.parse()?;
-        anyhow::ensure!(n >= 1, "--cells must be >= 1");
-        cfg = cfg.with_n_cells(n);
-    }
-    if let Some(c) = rest_opt(&args.rest, "--cache") {
-        cfg.cache_capacity = c.parse()?;
-    }
-    if let Some(d) = rest_opt(&args.rest, "--dispatch") {
-        cfg.dispatch = DispatchKind::parse(&d)?;
-    }
-    if let Some(e) = rest_opt(&args.rest, "--epoch") {
-        cfg.control_epoch_s = e.parse()?;
-    }
-    if let Some(q) = rest_opt(&args.rest, "--queue-limit") {
-        cfg.queue_limit_s = q.parse()?;
-    }
-    if let Some(d) = rest_opt(&args.rest, "--drop") {
-        cfg.drop_policy = DropPolicy::parse(&d)?;
-    }
-    if let Some(h) = rest_opt(&args.rest, "--handover") {
-        cfg.handover = HandoverPolicy::parse(&h)?;
-    }
-    if let Some(b) = rest_opt(&args.rest, "--backhaul") {
-        cfg.backhaul_s_per_token = b.parse()?;
-    }
+    let mut cfg = cluster_base_config(args)?;
     let compare = match rest_opt(&args.rest, "--control") {
         Some(s) if s == "compare" => true,
         Some(s) => {
@@ -263,9 +320,7 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         }
         None => false,
     };
-    let bench_name = rest_opt(&args.rest, "--benchmark").unwrap_or_else(|| "PIQA".to_string());
-    let bench = Benchmark::from_name(&bench_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
+    let bench = bench_arg(&args.rest)?;
     let requests: usize = rest_opt(&args.rest, "--requests")
         .map(|s| s.parse())
         .transpose()?
@@ -317,6 +372,58 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     println!("{}", sweep.utilization.render());
     let p = sweep.utilization.write_csv(&args.out)?;
     println!("  -> {}\n", p.display());
+    Ok(())
+}
+
+/// `repro sweep` — a typed experiment grid over any set of axes.
+fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = cluster_base_config(args)?;
+    if let Some(c) = rest_opt(&args.rest, "--control") {
+        cfg.control = ControlKind::parse(&c)?; // base plane; sweep planes via --axis control=…
+    }
+    let bench = bench_arg(&args.rest)?;
+    let requests: usize = rest_opt(&args.rest, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(if args.quick { 60 } else { 200 });
+    let threads: usize = rest_opt(&args.rest, "--threads")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let specs = rest_all(&args.rest, "--axis")?;
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "repro sweep needs at least one --axis NAME=SPEC \
+         (e.g. --axis rate=0.5,1,2 or --axis queue_limit=0:0.5:2)"
+    );
+    let mut grid = Grid::new(Scenario::new(cfg, requests, bench));
+    for s in &specs {
+        grid = grid.axis_spec(AxisSpec::parse(s)?);
+    }
+    println!(
+        "experiment grid: {} points over {} axes ({}), {} x {} requests, {} workers",
+        grid.len(),
+        grid.axes().len(),
+        grid.axes()
+            .iter()
+            .map(|(a, vs)| format!("{}[{}]", a.as_str(), vs.len()))
+            .collect::<Vec<_>>()
+            .join(" x "),
+        bench.name(),
+        requests,
+        wdmoe::exec::resolve_threads(threads)
+    );
+    let result = grid.run(threads)?;
+    let table = result.table(&format!("Experiment grid — {}", bench.name()))?;
+    println!("{}", table.render());
+    let p = table.write_csv(&args.out)?;
+    println!("  -> {}\n", p.display());
+    if args.rest.iter().any(|a| a == "--json") {
+        std::fs::create_dir_all(&args.out)?;
+        let jp = args.out.join("experiment_grid.json");
+        std::fs::write(&jp, result.to_json().to_string())?;
+        println!("  -> {}", jp.display());
+    }
     Ok(())
 }
 

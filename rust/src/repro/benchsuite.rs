@@ -31,10 +31,15 @@ pub struct BenchSuite {
 }
 
 impl BenchSuite {
-    /// The `BENCH_cluster.json` document.
+    /// The `BENCH_cluster.json` document. A suite written by an actual
+    /// run is by definition *measured*, so it carries
+    /// `"provisional": false` — `scripts/bench_gate.py` arms its
+    /// regression gate against any baseline without the provisional
+    /// flag (the hand-seeded pre-measurement baseline set it to true).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("schema", Json::str("wdmoe-bench-v1")),
+            ("provisional", Json::Bool(false)),
             ("smoke", Json::Bool(self.smoke)),
             ("budget_ms", Json::Num(self.budget_ms as f64)),
             (
@@ -192,5 +197,8 @@ mod tests {
         );
         assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 5);
         assert!(back.get("smoke").unwrap().as_bool().unwrap());
+        // A measured run must never mark itself provisional: the CI
+        // regression gate arms against it.
+        assert!(!back.get("provisional").unwrap().as_bool().unwrap());
     }
 }
