@@ -41,4 +41,5 @@ fn main() {
     // (events/sec) — the shared harnesses `repro bench` serializes.
     wdmoe::repro::benchsuite::dispatch_harness(budget);
     wdmoe::repro::benchsuite::des_harness(budget, 60);
+    wdmoe::repro::benchsuite::des_nullprobe_harness(budget, 60);
 }

@@ -18,6 +18,7 @@
 
 use super::event::{nanos_from_secs, Nanos};
 use crate::config::DispatchKind;
+use crate::telemetry::{Probe, TelemetryEvent};
 
 /// Replica chooser. Stateless: queue state is passed per call so the
 /// simulator remains the single owner of device state.
@@ -84,6 +85,36 @@ impl Dispatcher {
                 best.map(|(_, k)| k)
             }
         }
+    }
+
+    /// [`Self::choose`] plus a [`TelemetryEvent::DispatchDecision`]
+    /// emitted into `probe`. With [`crate::telemetry::NullProbe`] this
+    /// monomorphizes to exactly `choose` — the event construction is
+    /// dead code the optimizer drops.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn choose_probed<P: Probe>(
+        &self,
+        probe: &mut P,
+        cell: usize,
+        expert: usize,
+        replicas: &[usize],
+        tokens: f64,
+        now: Nanos,
+        busy_until: &[Nanos],
+        t_per_token: &[f64],
+        online: &[bool],
+    ) -> Option<usize> {
+        let device = self.choose(replicas, tokens, now, busy_until, t_per_token, online);
+        probe.on_event(&TelemetryEvent::DispatchDecision {
+            cell,
+            expert,
+            tokens,
+            device,
+            candidates: replicas.len(),
+            t: now,
+        });
+        device
     }
 }
 

@@ -39,6 +39,7 @@
 use super::event::{nanos_from_secs, secs_from_nanos, Nanos};
 use crate::config::HandoverPolicy;
 use crate::control::CellLoad;
+use crate::telemetry::{Probe, TelemetryEvent};
 
 /// The cell state the handover layer reads and (for borrows) writes.
 /// Implemented by the simulator's per-cell runtime state; keeping it a
@@ -87,6 +88,11 @@ pub struct StagedBorrow {
     pub service_s: f64,
     /// Remote queue instant before staging (rollback target).
     prev_busy: Nanos,
+    /// Instant the tokens left the home cell (the borrow attempt).
+    pub sent: Nanos,
+    /// Instant remote service begins: the outbound hop has landed and
+    /// the remote FIFO has drained to this group.
+    pub start: Nanos,
     /// Instant the group clears the Eq. (11) barrier, including the
     /// return hop.
     pub barrier: Nanos,
@@ -268,6 +274,7 @@ impl HandoverCoordinator {
             if let Some((done, k)) = best {
                 let service_s = tokens * cell.t_per_token()[k];
                 let prev_busy = cell.busy_until()[k];
+                let start = prev_busy.max(now.saturating_add(backhaul));
                 cell.set_busy_until(k, done);
                 let barrier = done.saturating_add(backhaul);
                 self.staged.push(StagedBorrow {
@@ -277,6 +284,8 @@ impl HandoverCoordinator {
                     tokens,
                     service_s,
                     prev_busy,
+                    sent: now,
+                    start,
                     barrier,
                 });
                 return Some(barrier);
@@ -293,6 +302,63 @@ impl HandoverCoordinator {
             cell_mut(home, s.cell, &mut *left, &mut *right).set_busy_until(s.device, s.prev_busy);
         }
         self.staged.clear();
+    }
+
+    /// [`Self::try_borrow`] plus a [`TelemetryEvent::BorrowStaged`]
+    /// emitted for a successful stage. With
+    /// [`crate::telemetry::NullProbe`] this monomorphizes to exactly
+    /// `try_borrow`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_borrow_probed<C: HandoverCell, P: Probe>(
+        &mut self,
+        probe: &mut P,
+        req: usize,
+        home: usize,
+        expert: usize,
+        tokens: f64,
+        now: Nanos,
+        queue_limit_s: f64,
+        left: &mut [C],
+        right: &mut [C],
+    ) -> Option<Nanos> {
+        let got = self.try_borrow(home, expert, tokens, now, queue_limit_s, left, right);
+        if got.is_some() {
+            // try_borrow pushed exactly one stage on success.
+            let s = self.staged.last().expect("successful borrow stages a group");
+            probe.on_event(&TelemetryEvent::BorrowStaged {
+                req,
+                home,
+                cell: s.cell,
+                device: s.device,
+                expert: s.expert,
+                tokens: s.tokens,
+                t: now,
+                barrier: s.barrier,
+            });
+        }
+        got
+    }
+
+    /// [`Self::rollback`] plus a [`TelemetryEvent::BorrowRolledBack`]
+    /// when any stages were undone.
+    pub fn rollback_probed<C: HandoverCell, P: Probe>(
+        &mut self,
+        probe: &mut P,
+        req: usize,
+        home: usize,
+        now: Nanos,
+        left: &mut [C],
+        right: &mut [C],
+    ) {
+        if !self.staged.is_empty() {
+            probe.on_event(&TelemetryEvent::BorrowRolledBack {
+                req,
+                home,
+                staged: self.staged.len(),
+                t: now,
+            });
+        }
+        self.rollback(home, left, right);
     }
 }
 
@@ -484,6 +550,52 @@ mod tests {
         h.clear_staged();
         assert_eq!(right[0].committed, vec![(0, 4, 10.0)]);
         assert!(!h.has_staged());
+    }
+
+    #[test]
+    fn staged_borrow_records_send_and_start_instants() {
+        // 1 ms/token backhaul, 10 tokens => the outbound hop lands at
+        // 10 ms; the idle remote device starts right then.
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 1e-3);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        h.try_borrow(0, 0, 10.0, 5_000, 0.0, &mut left, &mut right).unwrap();
+        let s = h.staged()[0];
+        assert_eq!(s.sent, 5_000);
+        assert_eq!(s.start, 10_005_000);
+        assert_eq!(s.barrier, 30_005_000);
+    }
+
+    #[test]
+    fn probed_wrappers_emit_stage_and_rollback_events() {
+        use crate::telemetry::{Probe, TelemetryEvent};
+        #[derive(Default)]
+        struct Collect(Vec<TelemetryEvent>);
+        impl Probe for Collect {
+            fn on_event(&mut self, e: &TelemetryEvent) {
+                self.0.push(*e);
+            }
+        }
+        let mut probe = Collect::default();
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 0.0);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        h.try_borrow_probed(&mut probe, 7, 0, 3, 10.0, 0, 0.0, &mut left, &mut right)
+            .unwrap();
+        h.rollback_probed(&mut probe, 7, 0, 42, &mut left, &mut right);
+        assert_eq!(right[0].busy[0], 0, "rollback must still restore the queue");
+        assert!(matches!(
+            probe.0[0],
+            TelemetryEvent::BorrowStaged { req: 7, cell: 1, expert: 3, .. }
+        ));
+        assert!(matches!(
+            probe.0[1],
+            TelemetryEvent::BorrowRolledBack { req: 7, staged: 1, t: 42, .. }
+        ));
+        // An empty rollback emits nothing.
+        let n = probe.0.len();
+        h.rollback_probed(&mut probe, 7, 0, 43, &mut left, &mut right);
+        assert_eq!(probe.0.len(), n);
     }
 
     #[test]

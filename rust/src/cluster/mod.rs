@@ -99,6 +99,21 @@
 //!   [`control_plane_sweep`] (`repro cluster --control compare`) are
 //!   thin wrappers over it, re-exported here.
 //!
+//! ## Telemetry
+//!
+//! The DES is instrumented for [`crate::telemetry`]: the probed entry
+//! points ([`sim::ClusterSim::run_probed`], `choose_probed`,
+//! `try_borrow_probed`) emit structured
+//! [`crate::telemetry::TelemetryEvent`]s — arrivals, dispatch
+//! decisions, placements, sheds, borrow stage/commit/rollback, drops,
+//! control re-solves with their P3 solver cost — and, on a
+//! probe-chosen cadence, per-cell state snapshots. `run` is
+//! `run_probed` with [`crate::telemetry::NullProbe`], whose empty
+//! inline hooks monomorphize to the pre-telemetry hot path; probes
+//! observe and never perturb, so a probed run's outcome is bit-equal
+//! to an unprobed one (regression-tested, and watched by the
+//! `cluster/des_run_2cell_nullprobe` bench harness).
+//!
 //! Every sweep runs its points on the [`crate::exec`] worker pool and
 //! merges in canonical order — parallel output is byte-identical to
 //! serial. The event loop itself is allocation-free per event (per-cell

@@ -53,18 +53,35 @@
 //! [`ClusterConfig`] — sweeps never clone the config per point — and
 //! [`ClusterSim::reset`] restores the just-built state so one simulator
 //! can serve many runs.
+//!
+//! ## Telemetry
+//!
+//! [`ClusterSim::run_probed`] is the one true event loop; `run` is the
+//! same loop with [`crate::telemetry::NullProbe`], whose empty inlined
+//! callbacks monomorphize away — so "telemetry off" *is* the
+//! pre-telemetry hot path, and the byte-identity of its outputs is
+//! structural rather than maintained by hand. A real
+//! [`crate::telemetry::Probe`] receives arrivals, dispatch decisions,
+//! placements (queue enter / service start / finish), sheds, borrow
+//! staging/commit/rollback, drops, device toggles and control re-solves
+//! (with their solver cost), plus per-cell state snapshots on a
+//! sim-time cadence. Probes observe and never perturb: nothing a probe
+//! returns feeds back into the simulation.
 
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 use super::handover::{HandoverCell, HandoverCoordinator};
 use super::placement::Placement;
 use crate::config::{ClusterConfig, ControlKind, DropPolicy, PolicyConfig};
-use crate::control::{make_plane, CellLoad, ControlOptions, ControlPlane, LinkState};
+use crate::control::{
+    make_plane, CellLoad, ControlOptions, ControlPlane, LinkState, SolverIntrospection,
+};
 use crate::devices::Fleet;
 use crate::latency::TokenLatencies;
 use crate::metrics::{ControlStats, SteadyState, Summary, Utilization};
 use crate::moe::selection::{make_policy, SelectionContext, SelectionPolicy};
 use crate::moe::GateWeights;
+use crate::telemetry::{CellSample, NullProbe, Probe, TelemetryEvent};
 use crate::util::clock::VirtualClock;
 use crate::wireless::ChannelSimulator;
 use crate::workload::WorkloadGen;
@@ -95,13 +112,29 @@ struct Cell {
     expert_online: Vec<bool>,
     counts: Vec<f64>,
     scratch_busy: Vec<Nanos>,
-    placed: Vec<(usize, usize, f64, f64)>,
+    placed: Vec<PlacedGroup>,
     cand: Vec<usize>,
     /// Reusable per-tick demand vector (backlog → tokens).
     demand: Vec<f64>,
     /// Total queued seconds at the last control solve — the reference
     /// the backlog-delta trigger measures drift against.
     last_solve_backlog_s: f64,
+}
+
+/// One admitted local placement of a block, staged in pass 1 and
+/// committed (accounting + telemetry) in pass 2. Carrying the service
+/// window means the commit pass — and only the commit pass — can emit
+/// `GroupPlaced`, so rolled-back placements never reach a probe.
+#[derive(Debug, Clone, Copy)]
+struct PlacedGroup {
+    expert: usize,
+    device: usize,
+    tokens: f64,
+    service_s: f64,
+    /// Service start (queue drained to this group).
+    start: Nanos,
+    /// Service finish (device-local, before any barrier).
+    done: Nanos,
 }
 
 /// Total queued seconds across a cell's devices at `now` — the signal
@@ -207,6 +240,10 @@ pub struct ClusterOutcome {
     /// Per-cell control-plane activity (re-solves, placement updates,
     /// allocation churn).
     pub control: Vec<ControlStats>,
+    /// P3 solver cost aggregated over every plane solve of the run
+    /// (pre-solves, epoch/failover re-solves): the
+    /// [`crate::optim::SolveStats`] the re-solve path used to drop.
+    pub solver: SolverIntrospection,
 }
 
 impl ClusterOutcome {
@@ -270,6 +307,17 @@ impl ClusterOutcome {
             total.absorb(c);
         }
         total
+    }
+
+    /// Mean P3 solver iterations per solve over the whole run (0 when
+    /// nothing was solved — static-uniform planes).
+    pub fn solver_iters_mean(&self) -> f64 {
+        self.solver.iters_mean()
+    }
+
+    /// Largest single-solve iteration count of the run.
+    pub fn solver_iters_max(&self) -> f64 {
+        self.solver.iterations_max as f64
     }
 
     /// Steady-state latency summary (warm-up discarded).
@@ -485,17 +533,76 @@ impl ClusterSim {
     /// dispatches. Work already queued on it still completes. Adaptive
     /// planes re-solve the allocation for the survivors immediately.
     pub fn set_device_online(&mut self, cell: usize, device: usize, online: bool) {
+        self.set_device_online_probed(cell, device, online, &mut NullProbe);
+    }
+
+    /// [`Self::set_device_online`] with a telemetry probe: an effective
+    /// toggle emits [`TelemetryEvent::DeviceOnline`] (idempotent no-ops
+    /// emit nothing, mirroring the re-solve suppression).
+    pub fn set_device_online_probed<P: Probe>(
+        &mut self,
+        cell: usize,
+        device: usize,
+        online: bool,
+        probe: &mut P,
+    ) {
         let c = &mut self.cells[cell];
         if c.online[device] == online {
             return; // idempotent: a no-op change must not trigger a re-solve
         }
         c.online[device] = online;
+        probe.on_event(&TelemetryEvent::DeviceOnline {
+            cell,
+            device,
+            online,
+        });
         // Split borrow: the plane reads the mask it does not own.
         c.plane.on_topology_change(&c.online);
     }
 
+    /// Per-cell state snapshot for [`Probe::on_sample`], written into
+    /// the caller's reused buffer.
+    fn snapshot_cells(&self, now: Nanos, out: &mut Vec<CellSample>) {
+        out.clear();
+        for c in &self.cells {
+            let placement = c.plane.placement();
+            let n_experts = c.expert_tokens.len();
+            let mut live_replicas = 0usize;
+            for e in 0..n_experts {
+                live_replicas += placement
+                    .replicas(e)
+                    .iter()
+                    .filter(|&&k| c.online[k])
+                    .count();
+            }
+            out.push(CellSample {
+                backlog_s: cell_backlog_s(c, now),
+                busy_s: c.busy.iter().map(|u| u.busy_seconds()).sum(),
+                devices: c.busy_until.len(),
+                online_devices: c.online.iter().filter(|&&on| on).count(),
+                live_replicas,
+            });
+        }
+    }
+
     /// Run the arrival stream to drain and report.
+    ///
+    /// Delegates to [`Self::run_probed`] with [`NullProbe`]; the no-op
+    /// callbacks inline to nothing, so this *is* the pre-telemetry hot
+    /// path.
     pub fn run(&mut self, arrivals: &[crate::workload::Arrival]) -> ClusterOutcome {
+        self.run_probed(arrivals, &mut NullProbe)
+    }
+
+    /// Run the arrival stream with a telemetry [`Probe`] observing the
+    /// event stream (and, if the probe requests a cadence, per-cell
+    /// snapshots). Probes observe and never perturb: the returned
+    /// outcome is bit-equal to [`Self::run`] on the same stream.
+    pub fn run_probed<P: Probe>(
+        &mut self,
+        arrivals: &[crate::workload::Arrival],
+        probe: &mut P,
+    ) -> ClusterOutcome {
         let n_blocks = self.params.n_blocks;
         let n_cells = self.cells.len();
         let mut queue: EventQueue<Event> = EventQueue::new(VirtualClock::new());
@@ -539,8 +646,21 @@ impl ClusterSim {
         // the final request completes must not pad the horizon (it would
         // bias throughput/utilization against adaptive planes).
         let mut last_work_ns: Nanos = 0;
+        // Sim-time sampling: piecewise-constant on the event sequence —
+        // ticks due at or before the popped event's time observe the
+        // state as of the previous event. Without a cadence (NullProbe)
+        // the next tick sits at Nanos::MAX and the check never fires.
+        let cadence = probe.sample_cadence().map(|c| c.max(1));
+        let mut next_sample = cadence.unwrap_or(Nanos::MAX);
+        let mut samples: Vec<CellSample> = Vec::new();
 
         while let Some((now, ev)) = queue.pop() {
+            while next_sample <= now {
+                self.snapshot_cells(next_sample, &mut samples);
+                probe.on_sample(next_sample, &samples);
+                next_sample = next_sample
+                    .saturating_add(cadence.expect("a due sample implies a cadence"));
+            }
             events += 1;
             let i = match ev {
                 Event::ControlTick(ci) => {
@@ -549,7 +669,7 @@ impl ClusterSim {
                     // resolves/churn columns with work that can't matter)
                     // nor reschedule.
                     if outstanding > 0 {
-                        self.control_tick(ci, now);
+                        self.control_tick_probed(ci, now, probe);
                         if let Some(e) = self.cells[ci].plane.epoch_s() {
                             queue.schedule_in(nanos_from_secs(e), Event::ControlTick(ci));
                         }
@@ -572,6 +692,13 @@ impl ClusterSim {
                         states[i].handed_over = true;
                         handovers += 1;
                     }
+                    probe.on_event(&TelemetryEvent::Arrive {
+                        req: i,
+                        tokens: states[i].tokens,
+                        rr_home,
+                        cell: chosen,
+                        t: now,
+                    });
                     i
                 }
                 Event::BlockDone(i) => {
@@ -581,7 +708,14 @@ impl ClusterSim {
                         completed += 1;
                         completed_tokens += states[i].tokens as u64;
                         outstanding -= 1;
-                        latency_ms.record(secs_from_nanos(now - states[i].arrived) * 1e3);
+                        let lat_ms = secs_from_nanos(now - states[i].arrived) * 1e3;
+                        latency_ms.record(lat_ms);
+                        probe.on_event(&TelemetryEvent::Completed {
+                            req: i,
+                            cell: states[i].cell,
+                            t: now,
+                            latency_ms: lat_ms,
+                        });
                         continue;
                     }
                     i
@@ -599,10 +733,10 @@ impl ClusterSim {
                     && (cell_backlog_s(cell, now) - cell.last_solve_backlog_s).abs()
                         > self.params.backlog_delta_s
                 {
-                    self.control_tick(ci, now);
+                    self.control_tick_probed(ci, now, probe);
                 }
             }
-            let r = self.start_block(&states[i], now);
+            let r = self.start_block(&states[i], i, now, probe);
             shed_tokens += r.shed_tokens;
             borrowed_groups += r.borrowed_groups;
             borrowed_tokens += r.borrowed_tokens;
@@ -611,11 +745,25 @@ impl ClusterSim {
                 handovers += 1;
             }
             match r.end {
-                Some(block_end) => queue.schedule_at(block_end, Event::BlockDone(i)),
+                Some(block_end) => {
+                    probe.on_event(&TelemetryEvent::Block {
+                        req: i,
+                        cell: states[i].cell,
+                        block: states[i].next_block,
+                        start: now,
+                        end: block_end,
+                    });
+                    queue.schedule_at(block_end, Event::BlockDone(i));
+                }
                 None => {
                     dropped += 1;
                     dropped_tokens += states[i].tokens as u64;
                     outstanding -= 1;
+                    probe.on_event(&TelemetryEvent::Dropped {
+                        req: i,
+                        cell: states[i].cell,
+                        t: now,
+                    });
                 }
             }
         }
@@ -627,6 +775,10 @@ impl ClusterSim {
             .map(|c| c.busy.iter().map(|u| u.fraction(makespan_s)).collect())
             .collect();
         let control = self.cells.iter().map(|c| c.plane.stats()).collect();
+        let mut solver = SolverIntrospection::default();
+        for c in &self.cells {
+            solver.absorb(&c.plane.solver_stats());
+        }
         ClusterOutcome {
             arrived,
             completed,
@@ -644,13 +796,20 @@ impl ClusterSim {
             latency_ms,
             utilization,
             control,
+            solver,
         }
     }
 
     /// Epoch boundary for one cell: convert queue backlog to a token
     /// demand vector (in the cell's reused scratch) and hand it — with
     /// the per-expert counts since the last tick — to the control plane.
-    fn control_tick(&mut self, ci: usize, now: Nanos) {
+    ///
+    /// A [`TelemetryEvent::ControlResolve`] fires only when the plane
+    /// actually solved (its [`SolverIntrospection::solves`] counter
+    /// advanced) — hysteresis-suppressed epochs and static planes stay
+    /// silent.
+    fn control_tick_probed<P: Probe>(&mut self, ci: usize, now: Nanos, probe: &mut P) {
+        let solves_before = self.cells[ci].plane.solver_stats().solves;
         let cell = &mut self.cells[ci];
         let n_dev = cell.busy_until.len();
         cell.demand.clear();
@@ -687,13 +846,30 @@ impl ClusterSim {
         for v in &mut cell.expert_tokens {
             *v = 0.0;
         }
+        let after = cell.plane.solver_stats();
+        if after.solves > solves_before {
+            probe.on_event(&TelemetryEvent::ControlResolve {
+                cell: ci,
+                t: now,
+                iterations: after.last_iterations,
+                objective: after.last_objective,
+                warm: after.last_warm,
+                converged: after.last_converged,
+            });
+        }
     }
 
     /// Dispatch one block of one request; returns the block's completion
     /// instant (the Eq. (11) barrier over its token groups — local *and*
     /// borrowed), or a drop marker when admission control rejects the
     /// request.
-    fn start_block(&mut self, st: &ReqState, now: Nanos) -> BlockResult {
+    fn start_block<P: Probe>(
+        &mut self,
+        st: &ReqState,
+        req: usize,
+        now: Nanos,
+        probe: &mut P,
+    ) -> BlockResult {
         let n_experts = self.params.n_experts;
         let queue_limit_s = self.params.queue_limit_s;
         let drop_policy = self.params.drop_policy;
@@ -771,7 +947,9 @@ impl ClusterSim {
                     // No local replica can serve at all: a neighbor may
                     // still host one (`BorrowExpert`); otherwise the
                     // tokens are dropped by selection, as before.
-                    if let Some(barrier) = self.handover.try_borrow(
+                    if let Some(barrier) = self.handover.try_borrow_probed(
+                        probe,
+                        req,
                         st.cell,
                         e,
                         q,
@@ -799,7 +977,10 @@ impl ClusterSim {
                         cell.cand.push(r);
                     }
                 }
-                match self.dispatcher.choose(
+                match self.dispatcher.choose_probed(
+                    probe,
+                    st.cell,
+                    e,
                     &cell.cand,
                     q,
                     now,
@@ -812,7 +993,9 @@ impl ClusterSim {
                         // Every local replica is over the queue bound:
                         // borrowing a neighbor's replica beats invoking
                         // the drop policy.
-                        if let Some(barrier) = self.handover.try_borrow(
+                        if let Some(barrier) = self.handover.try_borrow_probed(
+                            probe,
+                            req,
                             st.cell,
                             e,
                             q,
@@ -831,7 +1014,14 @@ impl ClusterSim {
                                 // A rejection must leave no partial work
                                 // behind — in *any* cell: un-stage the
                                 // block's cross-cell borrows too.
-                                self.handover.rollback(st.cell, &mut *left, &mut *right);
+                                self.handover.rollback_probed(
+                                    probe,
+                                    req,
+                                    st.cell,
+                                    now,
+                                    &mut *left,
+                                    &mut *right,
+                                );
                                 return BlockResult {
                                     end: None,
                                     shed_tokens: 0.0,
@@ -847,6 +1037,13 @@ impl ClusterSim {
                                 // (ShedTokens never aborts the block, so
                                 // this needs no rollback.)
                                 cell.expert_tokens[e] += q;
+                                probe.on_event(&TelemetryEvent::GroupShed {
+                                    req,
+                                    cell: st.cell,
+                                    expert: e,
+                                    tokens: q,
+                                    t: now,
+                                });
                                 let heavier = match best_shed {
                                     None => true,
                                     Some((_, bq)) => q > bq,
@@ -860,7 +1057,10 @@ impl ClusterSim {
                     }
                 }
             } else {
-                match self.dispatcher.choose(
+                match self.dispatcher.choose_probed(
+                    probe,
+                    st.cell,
+                    e,
                     placement.replicas(e),
                     q,
                     now,
@@ -873,7 +1073,9 @@ impl ClusterSim {
                         // No serviceable local replica: try a neighbor's
                         // (`BorrowExpert`); otherwise the tokens are
                         // dropped by selection, as before.
-                        if let Some(barrier) = self.handover.try_borrow(
+                        if let Some(barrier) = self.handover.try_borrow_probed(
+                            probe,
+                            req,
                             st.cell,
                             e,
                             q,
@@ -894,7 +1096,14 @@ impl ClusterSim {
             let start = cell.scratch_busy[k].max(now);
             let done = start.saturating_add(nanos_from_secs(service_s));
             cell.scratch_busy[k] = done;
-            cell.placed.push((e, k, q, service_s));
+            cell.placed.push(PlacedGroup {
+                expert: e,
+                device: k,
+                tokens: q,
+                service_s,
+                start,
+                done,
+            });
             if done > block_end {
                 block_end = done;
             }
@@ -905,7 +1114,10 @@ impl ClusterSim {
         // instead of a zero-time hop.
         if cell.placed.is_empty() && !self.handover.has_staged() {
             if let Some((e, q)) = best_shed {
-                if let Some(k) = self.dispatcher.choose(
+                if let Some(k) = self.dispatcher.choose_probed(
+                    probe,
+                    st.cell,
+                    e,
                     placement.replicas(e),
                     q,
                     now,
@@ -916,12 +1128,21 @@ impl ClusterSim {
                     shed -= q;
                     // Un-count the shed-side demand: the commit pass
                     // below records this group like any other placement.
+                    // (The earlier `GroupShed` event stands: a rescued
+                    // group appears as shed *then* placed in a trace.)
                     cell.expert_tokens[e] -= q;
                     let service_s = q * t_per_token[k];
                     let start = cell.scratch_busy[k].max(now);
                     let done = start.saturating_add(nanos_from_secs(service_s));
                     cell.scratch_busy[k] = done;
-                    cell.placed.push((e, k, q, service_s));
+                    cell.placed.push(PlacedGroup {
+                        expert: e,
+                        device: k,
+                        tokens: q,
+                        service_s,
+                        start,
+                        done,
+                    });
                     if done > block_end {
                         block_end = done;
                     }
@@ -929,12 +1150,24 @@ impl ClusterSim {
             }
         }
         // Pass 2: the block was admitted — commit the placements.
+        // `GroupPlaced` fires only here, so a trace never contains a
+        // group from a rolled-back (dropped) block.
         cell.busy_until.copy_from_slice(&cell.scratch_busy);
-        for &(e, k, q, service_s) in &cell.placed {
-            cell.busy[k].add_busy(service_s);
-            cell.policy.observe(e, t_per_token[k]);
-            cell.served_tokens[k] += q;
-            cell.expert_tokens[e] += q;
+        for g in &cell.placed {
+            cell.busy[g.device].add_busy(g.service_s);
+            cell.policy.observe(g.expert, t_per_token[g.device]);
+            cell.served_tokens[g.device] += g.tokens;
+            cell.expert_tokens[g.expert] += g.tokens;
+            probe.on_event(&TelemetryEvent::GroupPlaced {
+                req,
+                cell: st.cell,
+                device: g.device,
+                expert: g.expert,
+                tokens: g.tokens,
+                enqueue: now,
+                start: g.start,
+                done: g.done,
+            });
         }
         // Commit the staged cross-cell groups. Accounting lands on the
         // *serving* cell (its control plane must see borrowed demand);
@@ -953,6 +1186,19 @@ impl ClusterSim {
             cell.expert_tokens[s.expert] += s.tokens;
             borrowed_groups += 1;
             borrowed_tokens += s.tokens;
+            probe.on_event(&TelemetryEvent::BorrowCommitted {
+                req,
+                home: st.cell,
+                cell: s.cell,
+                device: s.device,
+                expert: s.expert,
+                tokens: s.tokens,
+                sent: s.sent,
+                landed: s.sent.saturating_add(nanos_from_secs(s.tokens * backhaul)),
+                start: s.start,
+                done: s.start.saturating_add(nanos_from_secs(s.service_s)),
+                barrier: s.barrier,
+            });
         }
         self.handover.clear_staged();
         BlockResult {
@@ -1023,6 +1269,73 @@ mod tests {
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
         assert_eq!(a.control, b.control);
+    }
+
+    /// The telemetry contract: probes observe, never perturb. A run
+    /// with a live (counting, sampling) probe must be bit-equal to the
+    /// plain `run()` on every outcome field.
+    #[test]
+    fn probed_run_is_bit_equal_to_unprobed() {
+        struct Counting {
+            events: usize,
+            arrives: usize,
+            samples: usize,
+        }
+        impl Probe for Counting {
+            fn sample_cadence(&self) -> Option<Nanos> {
+                Some(10_000_000) // 10 ms of sim time
+            }
+            fn on_event(&mut self, event: &TelemetryEvent) {
+                self.events += 1;
+                if matches!(event, TelemetryEvent::Arrive { .. }) {
+                    self.arrives += 1;
+                }
+            }
+            fn on_sample(&mut self, _t: Nanos, cells: &[CellSample]) {
+                self.samples += 1;
+                assert!(!cells.is_empty());
+            }
+        }
+
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 8;
+        cfg.control = ControlKind::Adaptive;
+        let arrivals =
+            ArrivalProcess::Poisson { rate_rps: 6.0 }.generate(30, Benchmark::Piqa, 7);
+
+        let base = ClusterSim::new(&cfg).unwrap().run(&arrivals);
+        let mut probe = Counting { events: 0, arrives: 0, samples: 0 };
+        let probed = ClusterSim::new(&cfg).unwrap().run_probed(&arrivals, &mut probe);
+
+        assert_eq!(base.makespan_s, probed.makespan_s);
+        assert_eq!(base.latency_ms.steady_values(), probed.latency_ms.steady_values());
+        assert_eq!(base.utilization, probed.utilization);
+        assert_eq!(base.control, probed.control);
+        assert_eq!(base.solver, probed.solver);
+        assert_eq!(base.events, probed.events);
+        // ... and the probe actually saw the run.
+        assert_eq!(probe.arrives, probed.arrived);
+        assert!(probe.events > probe.arrives, "block/placement events too");
+        assert!(probe.samples > 0, "cadence produced timeline samples");
+    }
+
+    /// `run()` must report aggregated solver introspection: the
+    /// adaptive plane re-solves at least once under load, and means
+    /// stay consistent with the raw counters.
+    #[test]
+    fn outcome_surfaces_solver_introspection() {
+        let mut cfg = small_cfg();
+        cfg.control = ControlKind::Adaptive;
+        let out = run_with(cfg, 6.0, 40, 5);
+        assert!(out.solver.solves > 0);
+        assert!(out.solver_iters_max() >= out.solver_iters_mean());
+        assert_eq!(
+            out.solver_iters_mean(),
+            out.solver.iterations_total as f64 / out.solver.solves as f64
+        );
+        let uniform = run_with(small_cfg(), 6.0, 40, 5);
+        assert_eq!(uniform.solver.solves, 0, "uniform plane never solves");
+        assert_eq!(uniform.solver_iters_mean(), 0.0);
     }
 
     #[test]

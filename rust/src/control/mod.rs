@@ -29,7 +29,10 @@
 //!
 //! Re-solve counts and allocation churn are reported through
 //! [`crate::metrics::ControlStats`] so closed-loop activity shows up in
-//! the `repro cluster` CSVs next to latency.
+//! the `repro cluster` CSVs next to latency; per-solve cost (iterations,
+//! warm-vs-cold, convergence) is aggregated in [`SolverIntrospection`]
+//! and surfaced as `solver_iters_mean` / `solver_iters_max` metric
+//! columns and through the telemetry layer's `ControlResolve` events.
 //!
 //! [`DeviceLink`]: crate::optim::solver::DeviceLink
 
@@ -38,5 +41,7 @@ pub mod plane;
 pub mod state;
 
 pub use load::CellLoad;
-pub use plane::{make_plane, AdaptivePlane, ControlOptions, ControlPlane, StaticPlane};
+pub use plane::{
+    make_plane, AdaptivePlane, ControlOptions, ControlPlane, SolverIntrospection, StaticPlane,
+};
 pub use state::LinkState;

@@ -23,7 +23,7 @@ use super::state::LinkState;
 use crate::cluster::placement::Placement;
 use crate::config::ControlKind;
 use crate::metrics::ControlStats;
-use crate::optim::{PerBlockLoad, SolverOptions, SolverWorkspace};
+use crate::optim::{PerBlockLoad, SolveStats, SolverOptions, SolverWorkspace};
 
 /// Knobs shared by every plane (only the adaptive one reads them all).
 #[derive(Debug, Clone)]
@@ -43,6 +43,93 @@ impl Default for ControlOptions {
             epoch_s: 0.25,
             hysteresis: 0.05,
             solver: SolverOptions::default(),
+        }
+    }
+}
+
+/// Aggregated P3 solver cost — every [`SolveStats`] a plane would
+/// otherwise drop on the floor, folded into one summary. Accumulated at
+/// each solve the plane performs (the static-optimal pre-solve,
+/// per-block `allocate_into` solves, epoch and failover re-solves) and
+/// surfaced per run through [`ControlPlane::solver_stats`]; the DES
+/// folds cells together with [`Self::absorb`] so `solver_iters_mean` /
+/// `solver_iters_max` land in the experiment [`Record`] schema.
+///
+/// Deliberately a *parallel* aggregate to [`ControlStats`]: the latter's
+/// construction is pinned by tests and sweep-CSV schemas, so solver cost
+/// rides alongside rather than inside it.
+///
+/// [`Record`]: crate::experiment::Record
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SolverIntrospection {
+    /// Total P3 solves performed.
+    pub solves: u64,
+    /// Solves that were warm-started from a previous split.
+    pub warm: u64,
+    /// Cold solves (no warm start available).
+    pub cold: u64,
+    /// Sum of projected-gradient iterations over all solves (0-iteration
+    /// water-filling fast-path solves count as 0).
+    pub iterations_total: u64,
+    /// Largest single-solve iteration count.
+    pub iterations_max: u64,
+    /// Solves that stopped before the iteration cap.
+    pub converged: u64,
+    /// Iterations of the most recent solve.
+    pub last_iterations: usize,
+    /// Objective of the most recent solve (seconds).
+    pub last_objective: f64,
+    /// Whether the most recent solve was warm-started.
+    pub last_warm: bool,
+    /// Whether the most recent solve converged before the cap.
+    pub last_converged: bool,
+}
+
+impl SolverIntrospection {
+    /// Fold one solve's [`SolveStats`] into the aggregate. `max_iters`
+    /// is the solver's iteration cap; stopping strictly below it means
+    /// the tolerance was reached (converged).
+    pub fn record(&mut self, stats: &SolveStats, warm: bool, max_iters: usize) {
+        let converged = stats.iterations < max_iters;
+        self.solves += 1;
+        if warm {
+            self.warm += 1;
+        } else {
+            self.cold += 1;
+        }
+        self.iterations_total += stats.iterations as u64;
+        self.iterations_max = self.iterations_max.max(stats.iterations as u64);
+        if converged {
+            self.converged += 1;
+        }
+        self.last_iterations = stats.iterations;
+        self.last_objective = stats.objective;
+        self.last_warm = warm;
+        self.last_converged = converged;
+    }
+
+    /// Merge another aggregate (e.g. another cell's) into this one.
+    pub fn absorb(&mut self, other: &SolverIntrospection) {
+        self.solves += other.solves;
+        self.warm += other.warm;
+        self.cold += other.cold;
+        self.iterations_total += other.iterations_total;
+        self.iterations_max = self.iterations_max.max(other.iterations_max);
+        self.converged += other.converged;
+        if other.solves > 0 {
+            self.last_iterations = other.last_iterations;
+            self.last_objective = other.last_objective;
+            self.last_warm = other.last_warm;
+            self.last_converged = other.last_converged;
+        }
+    }
+
+    /// Mean iterations per solve (0.0 when nothing was solved).
+    pub fn iters_mean(&self) -> f64 {
+        if self.solves == 0 {
+            0.0
+        } else {
+            self.iterations_total as f64 / self.solves as f64
         }
     }
 }
@@ -85,6 +172,8 @@ pub trait ControlPlane: Send {
     /// Device liveness changed (failure injection / recovery).
     fn on_topology_change(&mut self, online: &[bool]);
     fn stats(&self) -> ControlStats;
+    /// Aggregated cost of every P3 solve this plane performed.
+    fn solver_stats(&self) -> SolverIntrospection;
 }
 
 /// `Σ|a-b|`.
@@ -139,6 +228,7 @@ pub struct StaticPlane {
     opts: ControlOptions,
     ws: SolverWorkspace,
     stats: ControlStats,
+    solver: SolverIntrospection,
 }
 
 impl StaticPlane {
@@ -154,6 +244,7 @@ impl StaticPlane {
             ControlKind::StaticUniform | ControlKind::StaticOptimal
         ));
         let mut stats = ControlStats::default();
+        let mut solver = SolverIntrospection::default();
         let bandwidth = match kind {
             ControlKind::StaticOptimal => {
                 // One-shot pre-solve assuming every device carries equal
@@ -162,7 +253,16 @@ impl StaticPlane {
                     tokens: vec![1.0; state.n_devices()],
                 }];
                 stats.resolves = 1;
-                state.solve(&loads, &opts.solver, None).bandwidth
+                let r = state.solve(&loads, &opts.solver, None);
+                solver.record(
+                    &SolveStats {
+                        objective: r.objective,
+                        iterations: r.iterations,
+                    },
+                    false,
+                    opts.solver.max_iters,
+                );
+                r.bandwidth
             }
             _ => state.uniform_split(),
         };
@@ -184,6 +284,7 @@ impl StaticPlane {
             opts,
             ws: SolverWorkspace::new(),
             stats,
+            solver,
         }
     }
 }
@@ -209,8 +310,15 @@ impl ControlPlane for StaticPlane {
         match self.kind {
             ControlKind::StaticUniform => self.state.uniform_split_into(out),
             _ => {
-                self.state
-                    .solve_into(loads, &self.opts.solver, self.warm.as_deref(), &mut self.ws, out);
+                let warm_started = self.warm.is_some();
+                let solve = self.state.solve_into(
+                    loads,
+                    &self.opts.solver,
+                    self.warm.as_deref(),
+                    &mut self.ws,
+                    out,
+                );
+                self.solver.record(&solve, warm_started, self.opts.solver.max_iters);
                 self.stats.resolves += 1;
                 let warm = self.warm.get_or_insert_with(Vec::new);
                 warm.clear();
@@ -231,6 +339,9 @@ impl ControlPlane for StaticPlane {
     }
     fn stats(&self) -> ControlStats {
         self.stats
+    }
+    fn solver_stats(&self) -> SolverIntrospection {
+        self.solver
     }
 }
 
@@ -264,6 +375,7 @@ pub struct AdaptivePlane {
     /// Finite-capped service times for the placement re-balance.
     t_safe: Vec<f64>,
     stats: ControlStats,
+    solver: SolverIntrospection,
 }
 
 impl AdaptivePlane {
@@ -295,6 +407,7 @@ impl AdaptivePlane {
             eload: Vec::new(),
             t_safe: Vec::new(),
             stats: ControlStats::default(),
+            solver: SolverIntrospection::default(),
         }
     }
 
@@ -335,13 +448,15 @@ impl AdaptivePlane {
     /// from the current split, and refresh the service-time vector. Zero
     /// heap allocation after warm-up.
     fn resolve_staged(&mut self) {
-        self.state.solve_into(
+        let solve = self.state.solve_into(
             &self.staged,
             &self.opts.solver,
             Some(&self.bandwidth),
             &mut self.ws,
             &mut self.next_bw,
         );
+        // Epoch/failover re-solves always warm-start from the live split.
+        self.solver.record(&solve, true, self.opts.solver.max_iters);
         self.stats.churn_frac +=
             0.5 * l1(&self.next_bw, &self.bandwidth) / self.state.total_bandwidth_hz();
         std::mem::swap(&mut self.bandwidth, &mut self.next_bw);
@@ -373,8 +488,14 @@ impl ControlPlane for AdaptivePlane {
     }
 
     fn allocate_into(&mut self, loads: &[PerBlockLoad], out: &mut Vec<f64>) {
-        self.state
-            .solve_into(loads, &self.opts.solver, Some(&self.bandwidth), &mut self.ws, out);
+        let solve = self.state.solve_into(
+            loads,
+            &self.opts.solver,
+            Some(&self.bandwidth),
+            &mut self.ws,
+            out,
+        );
+        self.solver.record(&solve, true, self.opts.solver.max_iters);
         self.stats.resolves += 1;
     }
 
@@ -456,6 +577,9 @@ impl ControlPlane for AdaptivePlane {
 
     fn stats(&self) -> ControlStats {
         self.stats
+    }
+    fn solver_stats(&self) -> SolverIntrospection {
+        self.solver
     }
 }
 
@@ -645,5 +769,88 @@ mod tests {
             assert_eq!(p.t_per_token().len(), 8);
             p.placement().validate().unwrap();
         }
+    }
+
+    #[test]
+    fn solver_introspection_tracks_every_solve() {
+        // Static uniform never solves.
+        let uni = StaticPlane::new(
+            ControlKind::StaticUniform,
+            link_state(),
+            8,
+            2,
+            ControlOptions::default(),
+        );
+        assert_eq!(uni.solver_stats(), SolverIntrospection::default());
+        assert_eq!(uni.solver_stats().iters_mean(), 0.0);
+
+        // Static optimal: one cold pre-solve, then warm per-block solves.
+        let mut opt = StaticPlane::new(
+            ControlKind::StaticOptimal,
+            link_state(),
+            8,
+            2,
+            ControlOptions::default(),
+        );
+        let s = opt.solver_stats();
+        assert_eq!(s.solves, 1);
+        assert_eq!(s.cold, 1);
+        assert_eq!(s.warm, 0);
+        assert_eq!(s.converged, 1, "default-tolerance pre-solve must converge");
+        let loads = [PerBlockLoad {
+            tokens: (0..8).map(|k| 10.0 + k as f64).collect(),
+        }];
+        opt.allocate_for(&loads);
+        let s = opt.solver_stats();
+        assert_eq!(s.solves, 2);
+        assert_eq!(s.warm, 1, "per-block solve warm-starts from the pre-solve");
+        assert!(s.last_warm);
+        assert!(s.iterations_max >= s.last_iterations as u64);
+
+        // Adaptive: epoch re-solves are warm-started.
+        let mut ad = AdaptivePlane::new(link_state(), 8, 2, ControlOptions::default());
+        let mut demand = vec![10.0; 8];
+        demand[7] = 200.0;
+        assert!(ad.on_epoch(&demand, &[1.0; 8]));
+        let s = ad.solver_stats();
+        assert_eq!(s.solves, 1);
+        assert_eq!(s.warm, 1);
+        assert_eq!(s.solves, ad.stats().resolves as u64);
+    }
+
+    #[test]
+    fn solver_introspection_absorb_merges() {
+        let mut a = SolverIntrospection::default();
+        a.record(
+            &SolveStats {
+                objective: 1.0,
+                iterations: 10,
+            },
+            false,
+            400,
+        );
+        let mut b = SolverIntrospection::default();
+        b.record(
+            &SolveStats {
+                objective: 2.0,
+                iterations: 30,
+            },
+            true,
+            30, // hit the cap: not converged
+        );
+        a.absorb(&b);
+        assert_eq!(a.solves, 2);
+        assert_eq!(a.warm, 1);
+        assert_eq!(a.cold, 1);
+        assert_eq!(a.iterations_total, 40);
+        assert_eq!(a.iterations_max, 30);
+        assert_eq!(a.converged, 1);
+        assert_eq!(a.last_iterations, 30);
+        assert!(!a.last_converged);
+        assert!((a.iters_mean() - 20.0).abs() < 1e-12);
+        // Absorbing an empty aggregate keeps the last-solve fields.
+        a.absorb(&SolverIntrospection::default());
+        assert_eq!(a.last_iterations, 30);
+        assert_eq!(a.solves, 2);
     }
 }

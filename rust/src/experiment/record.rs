@@ -18,7 +18,7 @@ use anyhow::Result;
 
 /// The full metric schema, in canonical column order. Every sweep CSV's
 /// metric columns are a subsequence of this list.
-pub const METRIC_KEYS: [&str; 15] = [
+pub const METRIC_KEYS: [&str; 17] = [
     "throughput_rps",
     "goodput_tps",
     "drop_rate",
@@ -34,6 +34,8 @@ pub const METRIC_KEYS: [&str; 15] = [
     "churn",
     "handover_rate",
     "borrowed_tokens",
+    "solver_iters_mean",
+    "solver_iters_max",
 ];
 
 /// One sweep row: grid coordinates plus the full metric vector.
@@ -72,6 +74,8 @@ impl Record {
             ctl.churn_frac,
             out.handover_rate(),
             out.borrowed_tokens,
+            out.solver_iters_mean(),
+            out.solver_iters_max(),
         ];
         Self {
             label,
@@ -195,6 +199,8 @@ mod tests {
         assert_eq!(r.metric("goodput_tps").unwrap(), out.goodput_tps());
         assert_eq!(r.metric("p99_ms").unwrap(), out.p99_ms());
         assert_eq!(r.metric("borrowed_tokens").unwrap(), out.borrowed_tokens);
+        assert_eq!(r.metric("solver_iters_mean").unwrap(), out.solver_iters_mean());
+        assert_eq!(r.metric("solver_iters_max").unwrap(), out.solver_iters_max());
         assert_eq!(r.coord_num(Axis::ArrivalRate), Some(2.0));
         assert_eq!(r.coord_num(Axis::QueueLimit), None);
         assert!(r.metric("bogus").is_err());

@@ -55,6 +55,10 @@
 //!   latency history, Algorithm 2, WiFi-like channel process).
 //! * [`metrics`] — latency recording and the table/figure formatting used
 //!   by the `repro` binary.
+//! * [`telemetry`] — deterministic, opt-in observability for the DES: a
+//!   [`telemetry::Probe`] event stream (no-op by default on the hot
+//!   path), a Chrome-trace request tracer and a sim-time timeline
+//!   sampler (`repro trace`).
 //!
 //! See `DESIGN.md` for the per-experiment index and substitution notes,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -75,6 +79,7 @@ pub mod moe;
 pub mod optim;
 pub mod repro;
 pub mod runtime;
+pub mod telemetry;
 pub mod testbed;
 pub mod wireless;
 pub mod workload;

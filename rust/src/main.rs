@@ -35,9 +35,21 @@
 //!                 devices, seed, epoch, hysteresis, backlog_delta)
 //!                 through the parallel engine, one unified-schema
 //!                 CSV (+ JSON with --json) into --out
+//!   trace [--rate R] [--requests N] [--benchmark NAME]
+//!         [--trace FILE.json] [--timeline FILE.csv]
+//!         [--sample-every N] [--timeline-dt S]
+//!         [+ the cluster base-config flags above]
+//!                 one telemetry-instrumented DES run: a Chrome
+//!                 trace-event JSON (load in Perfetto / chrome://tracing;
+//!                 one lane per device, spans for queue/compute/backhaul)
+//!                 plus a sim-time timeline CSV (per-cell backlog,
+//!                 utilization, drop rate, live replicas on a --timeline-dt
+//!                 cadence); probes only observe — the run's outcome is
+//!                 bit-equal to the same `repro cluster` point
 //!   bench [--json] [--smoke]
 //!                 named performance harnesses (solver cold/warm, epoch
-//!                 tick, dispatch, DES events/sec); --json writes
+//!                 tick, dispatch, DES events/sec with and without the
+//!                 no-op telemetry probe); --json writes
 //!                 BENCH_cluster.json, --smoke uses tiny budgets (CI)
 //!   config [simulation|testbed|serving|cluster]
 //!                 print a preset config as JSON
@@ -49,14 +61,15 @@
 //! (Arg parsing is hand-rolled; clap is unavailable in the offline build
 //! environment — DESIGN.md §Substitutions.)
 
-use std::path::PathBuf;
-use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep};
+use std::path::{Path, PathBuf};
+use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep, ClusterOutcome, ClusterSim};
 use wdmoe::config::{
     ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy, SystemConfig,
 };
 use wdmoe::experiment::{AxisSpec, Grid, Scenario};
 use wdmoe::repro::{self, ReproContext};
-use wdmoe::workload::Benchmark;
+use wdmoe::telemetry::{ChromeTracer, TimelineSampler};
+use wdmoe::workload::{ArrivalProcess, Benchmark};
 
 const USAGE: &str = "\
 repro — WDMoE: Wireless Distributed Mixture of Experts (reproduction CLI)
@@ -81,8 +94,17 @@ COMMANDS:
           [--epoch S] [--backlog-delta S] [--queue-limit S]
           [--drop request|shed] [--handover none|rehome|borrow]
           [--backhaul S] [--threads N]
+          [--trace FILE.json] [--timeline FILE.csv]
                           (--threads 0 = one worker per core; output is
-                           byte-identical at any thread count)
+                           byte-identical at any thread count; --trace /
+                           --timeline additionally export telemetry for
+                           the first rate — not with --control compare)
+  trace [--rate R] [--requests N] [--benchmark NAME]
+        [--trace FILE.json] [--timeline FILE.csv]
+        [--sample-every N] [--timeline-dt S]
+        [+ the cluster base-config flags]
+                          one instrumented DES run: Chrome trace-event
+                          JSON (Perfetto) + sim-time timeline CSV
   sweep --axis NAME=SPEC [--axis NAME=SPEC ...]
         [--requests N] [--benchmark NAME] [--threads N] [--json]
         [+ the cluster base-config flags]
@@ -290,6 +312,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "cluster" => cluster_cmd(&args)?,
+        "trace" => trace_cmd(&args)?,
         "sweep" => sweep_cmd(&args)?,
         "bench" => bench_cmd(&args)?,
         "fig5" => drop(repro::fig5(&ctx)?),
@@ -344,6 +367,12 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(0);
+    let trace_path = rest_opt(&args.rest, "--trace").map(PathBuf::from);
+    let timeline_path = rest_opt(&args.rest, "--timeline").map(PathBuf::from);
+    anyhow::ensure!(
+        !(compare && (trace_path.is_some() || timeline_path.is_some())),
+        "--trace/--timeline export a single run; not available with --control compare"
+    );
 
     println!(
         "cluster sweep: {} cells, cache {}, dispatch {}, control {}, handover {}, \
@@ -372,7 +401,170 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     println!("{}", sweep.utilization.render());
     let p = sweep.utilization.write_csv(&args.out)?;
     println!("  -> {}\n", p.display());
+    // A one-rate sweep is a single run: surface the control-plane and
+    // solver activity the CSV only aggregates.
+    if rates.len() == 1 {
+        print_single_run(rates[0], &sweep.points[0].outcome);
+    }
+    // Telemetry export replays the *first* rate's exact arrival stream
+    // through an instrumented run; probes never perturb, so the traced
+    // outcome is bit-equal to the sweep's first row.
+    if trace_path.is_some() || timeline_path.is_some() {
+        run_traced(
+            &cfg,
+            rates[0],
+            requests,
+            bench,
+            1,
+            0.05,
+            trace_path.as_deref(),
+            timeline_path.as_deref(),
+        )?;
+    }
     Ok(())
+}
+
+/// `repro trace` — one telemetry-instrumented DES run: Chrome
+/// trace-event JSON (Perfetto / chrome://tracing) plus a sim-time
+/// timeline CSV.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = cluster_base_config(args)?;
+    if let Some(c) = rest_opt(&args.rest, "--control") {
+        cfg.control = ControlKind::parse(&c)?;
+    }
+    let bench = bench_arg(&args.rest)?;
+    let rate: f64 = rest_opt(&args.rest, "--rate")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4.0);
+    anyhow::ensure!(
+        rate.is_finite() && rate > 0.0,
+        "--rate must be finite and positive, got {rate}"
+    );
+    let requests: usize = rest_opt(&args.rest, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(if args.quick { 40 } else { 120 });
+    // Keep every Nth request's lane in the trace (1 = all of them).
+    let sample_every: usize = rest_opt(&args.rest, "--sample-every")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    let timeline_dt: f64 = rest_opt(&args.rest, "--timeline-dt")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.05);
+    anyhow::ensure!(
+        timeline_dt.is_finite() && timeline_dt > 0.0,
+        "--timeline-dt must be finite and positive, got {timeline_dt}"
+    );
+    let trace_path = rest_opt(&args.rest, "--trace")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| args.out.join("trace.json"));
+    let timeline_path = rest_opt(&args.rest, "--timeline")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| args.out.join("timeline.csv"));
+    println!(
+        "trace: {} cells, control {}, handover {}, {} x {} requests @ {} rps",
+        cfg.n_cells(),
+        cfg.control.as_str(),
+        cfg.handover.as_str(),
+        bench.name(),
+        requests,
+        rate
+    );
+    let out = run_traced(
+        &cfg,
+        rate,
+        requests,
+        bench,
+        sample_every,
+        timeline_dt,
+        Some(&trace_path),
+        Some(&timeline_path),
+    )?;
+    print_single_run(rate, &out);
+    Ok(())
+}
+
+/// Run one instrumented simulation and write the requested artifacts.
+/// The arrival stream is the one `repro cluster`'s first sweep point
+/// uses (same seed derivation), so the outcomes line up exactly.
+#[allow(clippy::too_many_arguments)]
+fn run_traced(
+    cfg: &ClusterConfig,
+    rate: f64,
+    requests: usize,
+    bench: Benchmark,
+    sample_every: usize,
+    timeline_dt: f64,
+    trace_path: Option<&Path>,
+    timeline_path: Option<&Path>,
+) -> anyhow::Result<ClusterOutcome> {
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: rate }.generate(requests, bench, cfg.seed);
+    let mut sim = ClusterSim::new(cfg)?;
+    let mut probe = (
+        ChromeTracer::with_sample_every(sample_every),
+        TimelineSampler::new((timeline_dt * 1e9) as u64),
+    );
+    let out = sim.run_probed(&arrivals, &mut probe);
+    let (tracer, sampler) = probe;
+    if let Some(p) = trace_path {
+        if let Some(dir) = p.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(p, tracer.to_json().to_string())?;
+        println!("  trace ({} events) -> {}", tracer.len(), p.display());
+    }
+    if let Some(p) = timeline_path {
+        if let Some(dir) = p.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(p, sampler.to_csv())?;
+        println!(
+            "  timeline ({} samples) -> {}",
+            sampler.rows().len(),
+            p.display()
+        );
+    }
+    Ok(out)
+}
+
+/// Human-readable detail for a single DES run: outcome counters plus
+/// the per-cell control-plane activity and aggregated P3 solver cost
+/// the sweep CSVs only carry as totals.
+fn print_single_run(rate: f64, out: &ClusterOutcome) {
+    println!(
+        "single run @ {rate} rps: {} arrived, {} completed, {} dropped, \
+         makespan {:.3} s, p95 {:.2} ms",
+        out.arrived,
+        out.completed,
+        out.dropped,
+        out.makespan_s,
+        out.p95_ms()
+    );
+    for (ci, ctl) in out.control.iter().enumerate() {
+        println!(
+            "  cell {ci}: resolves {}, placement updates {}, churn {:.3}",
+            ctl.resolves, ctl.placement_updates, ctl.churn_frac
+        );
+    }
+    let s = &out.solver;
+    if s.solves > 0 {
+        println!(
+            "  solver: {} solves ({} warm / {} cold), iterations mean {:.1} max {}, \
+             {} converged",
+            s.solves,
+            s.warm,
+            s.cold,
+            out.solver_iters_mean(),
+            s.iterations_max,
+            s.converged
+        );
+    } else {
+        println!("  solver: no P3 solves (static-uniform plane)");
+    }
 }
 
 /// `repro sweep` — a typed experiment grid over any set of axes.

@@ -13,6 +13,7 @@
 //! smoke run keeps the harnesses from rotting.
 
 use crate::cluster::{ClusterSim, Dispatcher};
+use crate::telemetry::NullProbe;
 use crate::config::{ClusterConfig, ControlKind, DispatchKind, SystemConfig};
 use crate::control::LinkState;
 use crate::devices::Fleet;
@@ -150,13 +151,38 @@ pub fn des_harness(budget: Duration, requests: usize) -> BenchResult {
     r
 }
 
+/// The same whole-DES run through the explicit `run_probed(NullProbe)`
+/// entry point. The telemetry contract says the no-op probe
+/// monomorphizes away entirely, so this harness should report the same
+/// events/sec as `cluster/des_run_2cell` to within noise — a widening
+/// gap in `BENCH_cluster.json` means probe hooks leaked cost onto the
+/// hot path.
+pub fn des_nullprobe_harness(budget: Duration, requests: usize) -> BenchResult {
+    let mut dcfg = ClusterConfig::edge_default();
+    dcfg.model.n_blocks = 8;
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(requests, Benchmark::Piqa, 0);
+    let mut des = ClusterSim::new(&dcfg).expect("preset config is valid");
+    let events_per_run = des.run(&arrivals).events;
+    let mut r = bench_quiet("cluster/des_run_2cell_nullprobe", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run_probed(&arrivals, &mut NullProbe).completed
+    });
+    let events_per_sec = events_per_run as f64 * 1e9 / r.mean_ns;
+    r.throughput = Some(("sim_events_per_sec".to_string(), events_per_sec));
+    r.report();
+    r
+}
+
 /// Run the full suite (tiny budgets when `smoke`), printing each result.
 pub fn run_suite(smoke: bool) -> BenchSuite {
     let budget = if smoke { smoke_budget() } else { default_budget() };
+    let requests = if smoke { 12 } else { 60 };
     let mut results = solver_harnesses(budget);
     results.push(epoch_tick_harness(budget));
     results.push(dispatch_harness(budget));
-    results.push(des_harness(budget, if smoke { 12 } else { 60 }));
+    results.push(des_harness(budget, requests));
+    results.push(des_nullprobe_harness(budget, requests));
     BenchSuite {
         smoke,
         budget_ms: budget.as_millis() as u64,
@@ -178,6 +204,7 @@ mod tests {
             "control/epoch_tick_adaptive_8dev",
             "cluster/dispatch_choose_16rep",
             "cluster/des_run_2cell",
+            "cluster/des_run_2cell_nullprobe",
         ] {
             assert!(names.contains(&expect), "missing harness {expect}");
         }
@@ -195,7 +222,7 @@ mod tests {
             back.get("schema").unwrap().as_str().unwrap(),
             "wdmoe-bench-v1"
         );
-        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 6);
         assert!(back.get("smoke").unwrap().as_bool().unwrap());
         // A measured run must never mark itself provisional: the CI
         // regression gate arms against it.

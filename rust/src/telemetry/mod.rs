@@ -1,0 +1,320 @@
+//! # `telemetry` — deterministic, opt-in observability for the cluster DES
+//!
+//! Every latency number the repo reports elsewhere is an end-of-run
+//! aggregate; this module is where a *single* token group's journey
+//! becomes visible — queue vs compute vs backhaul vs the Eq. 11
+//! barrier. It is threaded through the serving stack as a typed event
+//! stream:
+//!
+//! * [`Probe`] — the observer trait. [`crate::cluster::sim::ClusterSim`]
+//!   (and through it `cluster/dispatch`, `cluster/handover` and the
+//!   control planes) pushes [`TelemetryEvent`]s into the probe at every
+//!   structurally interesting point: arrivals, dispatch decisions,
+//!   group placements (queue enter / service start / service finish),
+//!   sheds, borrow staging / commit / rollback, drops, device on/off
+//!   toggles and control re-solves carrying their
+//!   [`crate::optim::SolveStats`].
+//! * [`NullProbe`] — the default no-op observer. Every trait method has
+//!   an empty default body, so `run()` (which delegates to
+//!   `run_probed(.., &mut NullProbe)`) monomorphizes to exactly the
+//!   pre-telemetry hot path: no branches, no stores, nothing for the
+//!   optimizer to keep. The `cluster/des_run_2cell_nullprobe` bench
+//!   harness pins this down against the events/sec ratchet.
+//! * [`ChromeTracer`] — follows sampled requests and exports Chrome
+//!   trace-event JSON (one lane per device, spans for
+//!   queue/compute/backhaul/barrier) that loads directly in Perfetto.
+//! * [`TimelineSampler`] — samples per-cell backlog seconds,
+//!   utilization, drop rate and live replica count on a fixed sim-time
+//!   cadence and renders a timeline CSV.
+//!
+//! ## The contract: probes observe, never perturb
+//!
+//! Probes receive copies of simulator state; nothing they return feeds
+//! back. The DES takes no decision based on whether a probe is
+//! attached, so simulated outcomes with telemetry on are bit-equal to
+//! telemetry off — `rust/tests/telemetry.rs` enforces this, and the
+//! pre-existing byte-identity sweep tests in `rust/tests/experiment.rs`
+//! pin the telemetry-off CSVs to their pre-telemetry bytes.
+//!
+//! Determinism carries over: events are emitted in DES event order and
+//! carry integer-nanosecond sim time, so two runs of the same config
+//! and seed produce byte-identical trace JSON and timeline CSVs.
+
+pub mod timeline;
+pub mod trace;
+
+pub use timeline::{TimelineRow, TimelineSampler};
+pub use trace::ChromeTracer;
+
+use crate::cluster::Nanos;
+
+/// One structured observation from the serving stack. All fields are
+/// plain copies — holding an event never borrows simulator state.
+///
+/// Times are integer sim nanoseconds ([`Nanos`]); token counts are the
+/// same `f64` group sizes the dispatch layer works in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TelemetryEvent {
+    /// A request entered the system. `rr_home` is the round-robin home
+    /// cell; `cell` is where it actually landed after any
+    /// rehome-on-arrival handover.
+    Arrive {
+        req: usize,
+        tokens: usize,
+        rr_home: usize,
+        cell: usize,
+        t: Nanos,
+    },
+    /// The dispatcher ranked `candidates` replicas of `expert` and
+    /// picked `device` (`None` when no replica was serviceable).
+    DispatchDecision {
+        cell: usize,
+        expert: usize,
+        tokens: f64,
+        device: Option<usize>,
+        candidates: usize,
+        t: Nanos,
+    },
+    /// A token group was committed onto a local device queue: it
+    /// enqueued at `enqueue` (dispatch time), starts service at
+    /// `start` and finishes at `done`. Emitted only for placements
+    /// that survive to the commit pass — never for ones rolled back
+    /// by a queue-limit drop.
+    GroupPlaced {
+        req: usize,
+        cell: usize,
+        device: usize,
+        expert: usize,
+        tokens: f64,
+        enqueue: Nanos,
+        start: Nanos,
+        done: Nanos,
+    },
+    /// A token group was shed (dropped tokens, request continues).
+    /// A later rescue of the heaviest shed group re-places it, in
+    /// which case the same group also appears as [`Self::GroupPlaced`].
+    GroupShed {
+        req: usize,
+        cell: usize,
+        expert: usize,
+        tokens: f64,
+        t: Nanos,
+    },
+    /// Cross-cell borrow staged on `cell` (serving) for `home`'s
+    /// request; `barrier` is the Eq. 11 completion barrier including
+    /// the return backhaul hop.
+    BorrowStaged {
+        req: usize,
+        home: usize,
+        cell: usize,
+        device: usize,
+        expert: usize,
+        tokens: f64,
+        t: Nanos,
+        barrier: Nanos,
+    },
+    /// All `staged` borrows for the block were rolled back because the
+    /// block itself was dropped.
+    BorrowRolledBack {
+        req: usize,
+        home: usize,
+        staged: usize,
+        t: Nanos,
+    },
+    /// A staged borrow survived to commit: tokens left `home` at
+    /// `sent`, landed on the serving `cell` at `landed`, computed over
+    /// `start..done` and cleared the return barrier at `barrier`.
+    BorrowCommitted {
+        req: usize,
+        home: usize,
+        cell: usize,
+        device: usize,
+        expert: usize,
+        tokens: f64,
+        sent: Nanos,
+        landed: Nanos,
+        start: Nanos,
+        done: Nanos,
+        barrier: Nanos,
+    },
+    /// One MoE block of a request completed: dispatched at `start`,
+    /// all its groups (and barriers) cleared at `end`.
+    Block {
+        req: usize,
+        cell: usize,
+        block: usize,
+        start: Nanos,
+        end: Nanos,
+    },
+    /// A request finished its last block.
+    Completed {
+        req: usize,
+        cell: usize,
+        t: Nanos,
+        latency_ms: f64,
+    },
+    /// A request was dropped by the queue-limit admission gate.
+    Dropped { req: usize, cell: usize, t: Nanos },
+    /// A device was toggled on or off mid-run (failover experiments).
+    DeviceOnline {
+        cell: usize,
+        device: usize,
+        online: bool,
+    },
+    /// A control plane re-solved P3. `iterations`/`objective` are the
+    /// solver's own [`crate::optim::SolveStats`]; `warm` says whether
+    /// the solve was warm-started and `converged` whether it stopped
+    /// before the iteration cap.
+    ControlResolve {
+        cell: usize,
+        t: Nanos,
+        iterations: usize,
+        objective: f64,
+        warm: bool,
+        converged: bool,
+    },
+}
+
+/// Per-cell state snapshot handed to [`Probe::on_sample`] on the
+/// probe's requested cadence.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CellSample {
+    /// Outstanding queued work in seconds (same quantity the handover
+    /// layer ranks cells by).
+    pub backlog_s: f64,
+    /// Cumulative busy seconds summed over the cell's devices.
+    pub busy_s: f64,
+    /// Device count in the cell.
+    pub devices: usize,
+    /// Devices currently online.
+    pub online_devices: usize,
+    /// Expert replicas currently hosted on online devices.
+    pub live_replicas: usize,
+}
+
+/// An observer of the serving stack. Every method has a no-op default
+/// body, so implementors opt into exactly the callbacks they need and
+/// [`NullProbe`] monomorphizes to nothing.
+///
+/// The contract, enforced by `rust/tests/telemetry.rs`: probes receive
+/// copies and return nothing the simulator reads — attaching any probe
+/// leaves simulated outcomes bit-identical to running without one.
+pub trait Probe {
+    /// Sim-time sampling cadence for [`Self::on_sample`], or `None`
+    /// (the default) to disable sampling entirely.
+    #[inline]
+    fn sample_cadence(&self) -> Option<Nanos> {
+        None
+    }
+
+    /// Called once per structured event, in deterministic DES order.
+    #[inline]
+    fn on_event(&mut self, _event: &TelemetryEvent) {}
+
+    /// Called with a per-cell snapshot at each cadence tick `t`
+    /// (piecewise-constant sampling: the state is as of the last event
+    /// at or before `t`).
+    #[inline]
+    fn on_sample(&mut self, _t: Nanos, _cells: &[CellSample]) {}
+}
+
+/// The default observer: observes nothing, costs nothing. With this
+/// probe the generic `run_probed` path compiles to the identical
+/// machine code the pre-telemetry `run` produced.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullProbe;
+
+impl Probe for NullProbe {}
+
+/// Probes compose as tuples: `(ChromeTracer, TimelineSampler)` drives
+/// both from one run. Cadence is the finer of the two (sampling fires
+/// for the pair; each member still only sees what it asked for via its
+/// own default/overridden `on_sample`).
+impl<A: Probe, B: Probe> Probe for (A, B) {
+    #[inline]
+    fn sample_cadence(&self) -> Option<Nanos> {
+        match (self.0.sample_cadence(), self.1.sample_cadence()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
+        }
+    }
+
+    #[inline]
+    fn on_event(&mut self, event: &TelemetryEvent) {
+        self.0.on_event(event);
+        self.1.on_event(event);
+    }
+
+    #[inline]
+    fn on_sample(&mut self, t: Nanos, cells: &[CellSample]) {
+        self.0.on_sample(t, cells);
+        self.1.on_sample(t, cells);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter {
+        events: usize,
+        samples: usize,
+        cadence: Option<Nanos>,
+    }
+
+    impl Probe for Counter {
+        fn sample_cadence(&self) -> Option<Nanos> {
+            self.cadence
+        }
+        fn on_event(&mut self, _event: &TelemetryEvent) {
+            self.events += 1;
+        }
+        fn on_sample(&mut self, _t: Nanos, _cells: &[CellSample]) {
+            self.samples += 1;
+        }
+    }
+
+    #[test]
+    fn null_probe_has_no_cadence() {
+        assert_eq!(NullProbe.sample_cadence(), None);
+    }
+
+    #[test]
+    fn tuple_probe_forwards_to_both_and_takes_finer_cadence() {
+        let a = Counter {
+            events: 0,
+            samples: 0,
+            cadence: Some(500),
+        };
+        let b = Counter {
+            events: 0,
+            samples: 0,
+            cadence: Some(200),
+        };
+        let mut pair = (a, b);
+        assert_eq!(pair.sample_cadence(), Some(200));
+        let ev = TelemetryEvent::Dropped {
+            req: 0,
+            cell: 0,
+            t: 1,
+        };
+        pair.on_event(&ev);
+        pair.on_sample(7, &[CellSample::default()]);
+        assert_eq!(pair.0.events, 1);
+        assert_eq!(pair.1.events, 1);
+        assert_eq!(pair.0.samples, 1);
+        assert_eq!(pair.1.samples, 1);
+    }
+
+    #[test]
+    fn tuple_probe_cadence_with_nulls() {
+        let c = Counter {
+            events: 0,
+            samples: 0,
+            cadence: Some(9),
+        };
+        assert_eq!((NullProbe, NullProbe).sample_cadence(), None);
+        assert_eq!((c, NullProbe).sample_cadence(), Some(9));
+    }
+}

@@ -1,0 +1,717 @@
+//! Chrome trace-event export — follow sampled requests through the DES.
+//!
+//! [`ChromeTracer`] is a [`Probe`] that buffers structured events and
+//! renders the Chrome trace-event JSON format (the `{"traceEvents":
+//! [...]}` flavor), which loads directly in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! ## Lane layout
+//!
+//! * **Process "requests"** — one thread lane per sampled request;
+//!   `B`/`E` duration spans per MoE block (blocks of one request are
+//!   strictly sequential, so the pairs nest trivially), instants for
+//!   arrive / completed / dropped.
+//! * **Process "cell N"** — thread 0 is the control lane (instants for
+//!   re-solves, device on/off, sheds, borrow staging/rollback); thread
+//!   `k+1` is device `k`'s lane, carrying `B`/`E` compute spans (the
+//!   device queue is FIFO over a single `busy_until` clock, so compute
+//!   spans never overlap) plus async `b`/`e` spans for queue waits,
+//!   backhaul hops and Eq. 11 barriers — those *can* overlap each
+//!   other, which is exactly what the async phases exist for.
+//!
+//! ## Well-formedness
+//!
+//! Export sorts events by `(ts, phase-rank)` with ends before instants
+//! before begins at equal timestamps, so every `B` closes with a
+//! matching `E` on its lane, every `b` has an `e` with the same id, and
+//! timestamps are monotone per lane. `scripts/check_trace.py` and
+//! `rust/tests/telemetry.rs` verify these properties on real output.
+
+use super::{Probe, TelemetryEvent};
+use crate::cluster::Nanos;
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// One buffered trace event, pre-serialization.
+#[derive(Debug, Clone)]
+struct Ev {
+    ph: char,
+    name: String,
+    cat: &'static str,
+    pid: u64,
+    tid: u64,
+    ts: Nanos,
+    /// Async span id (`b`/`e` phases only).
+    id: Option<u64>,
+    args: Vec<(&'static str, Json)>,
+}
+
+/// Process id of the per-request lanes.
+const PID_REQUESTS: u64 = 1;
+
+/// Process id of cell `ci`'s lanes.
+fn pid_cell(ci: usize) -> u64 {
+    ci as u64 + 2
+}
+
+/// Sort rank at equal timestamps: close spans, then mark instants,
+/// then open new spans. Keeps zero-gap back-to-back spans well nested.
+fn phase_rank(ph: char) -> u8 {
+    match ph {
+        'E' | 'e' => 0,
+        'i' => 1,
+        _ => 2,
+    }
+}
+
+/// A [`Probe`] that records sampled requests' journeys and exports
+/// Chrome trace-event JSON. Construct with [`ChromeTracer::new`] (trace
+/// every request) or [`ChromeTracer::with_sample_every`] (every n-th).
+#[derive(Debug, Clone)]
+pub struct ChromeTracer {
+    sample_every: usize,
+    next_async_id: u64,
+    events: Vec<Ev>,
+    /// pid → process_name metadata.
+    procs: BTreeMap<u64, String>,
+    /// (pid, tid) → thread_name metadata.
+    threads: BTreeMap<(u64, u64), String>,
+}
+
+impl Default for ChromeTracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChromeTracer {
+    /// Trace every request.
+    pub fn new() -> Self {
+        Self::with_sample_every(1)
+    }
+
+    /// Trace every `sample_every`-th request (`req % n == 0`). A value
+    /// of 0 is treated as 1.
+    pub fn with_sample_every(sample_every: usize) -> Self {
+        Self {
+            sample_every: sample_every.max(1),
+            next_async_id: 0,
+            events: Vec::new(),
+            procs: BTreeMap::new(),
+            threads: BTreeMap::new(),
+        }
+    }
+
+    /// Number of buffered trace events (metadata excluded).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn sampled(&self, req: usize) -> bool {
+        req % self.sample_every == 0
+    }
+
+    fn req_lane(&mut self, req: usize) -> (u64, u64) {
+        self.procs
+            .entry(PID_REQUESTS)
+            .or_insert_with(|| "requests".to_string());
+        let tid = req as u64;
+        self.threads
+            .entry((PID_REQUESTS, tid))
+            .or_insert_with(|| format!("req {req}"));
+        (PID_REQUESTS, tid)
+    }
+
+    fn control_lane(&mut self, cell: usize) -> (u64, u64) {
+        let pid = pid_cell(cell);
+        self.procs
+            .entry(pid)
+            .or_insert_with(|| format!("cell {cell}"));
+        self.threads
+            .entry((pid, 0))
+            .or_insert_with(|| "control".to_string());
+        (pid, 0)
+    }
+
+    fn device_lane(&mut self, cell: usize, device: usize) -> (u64, u64) {
+        let pid = pid_cell(cell);
+        self.procs
+            .entry(pid)
+            .or_insert_with(|| format!("cell {cell}"));
+        let tid = device as u64 + 1;
+        self.threads
+            .entry((pid, tid))
+            .or_insert_with(|| format!("dev {device}"));
+        (pid, tid)
+    }
+
+    fn instant(
+        &mut self,
+        lane: (u64, u64),
+        ts: Nanos,
+        name: String,
+        cat: &'static str,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.events.push(Ev {
+            ph: 'i',
+            name,
+            cat,
+            pid: lane.0,
+            tid: lane.1,
+            ts,
+            id: None,
+            args,
+        });
+    }
+
+    /// `B`/`E` duration pair — only for structurally non-overlapping
+    /// lanes (device compute, request blocks). Degenerate zero-length
+    /// spans collapse to an instant so the pair ordering stays valid.
+    fn span(
+        &mut self,
+        lane: (u64, u64),
+        start: Nanos,
+        end: Nanos,
+        name: String,
+        cat: &'static str,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        if end <= start {
+            self.instant(lane, start, name, cat, args);
+            return;
+        }
+        self.events.push(Ev {
+            ph: 'B',
+            name: name.clone(),
+            cat,
+            pid: lane.0,
+            tid: lane.1,
+            ts: start,
+            id: None,
+            args,
+        });
+        self.events.push(Ev {
+            ph: 'E',
+            name,
+            cat,
+            pid: lane.0,
+            tid: lane.1,
+            ts: end,
+            id: None,
+            args: Vec::new(),
+        });
+    }
+
+    /// Async `b`/`e` pair with a fresh id — for spans that may overlap
+    /// others on the same lane (queue waits, backhaul hops, barriers).
+    fn async_span(
+        &mut self,
+        lane: (u64, u64),
+        start: Nanos,
+        end: Nanos,
+        name: String,
+        cat: &'static str,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        if end <= start {
+            return;
+        }
+        let id = self.next_async_id;
+        self.next_async_id += 1;
+        self.events.push(Ev {
+            ph: 'b',
+            name: name.clone(),
+            cat,
+            pid: lane.0,
+            tid: lane.1,
+            ts: start,
+            id: Some(id),
+            args,
+        });
+        self.events.push(Ev {
+            ph: 'e',
+            name,
+            cat,
+            pid: lane.0,
+            tid: lane.1,
+            ts: end,
+            id: Some(id),
+            args: Vec::new(),
+        });
+    }
+
+    /// Render the buffered events as the Chrome trace-event JSON
+    /// document. Deterministic: metadata first (sorted by lane), then
+    /// events stably sorted by `(ts, phase-rank, emission order)`.
+    pub fn to_json(&self) -> Json {
+        let mut out: Vec<Json> = Vec::new();
+        for (&pid, name) in &self.procs {
+            out.push(Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+        }
+        for (&(pid, tid), name) in &self.threads {
+            out.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+        }
+        let mut order: Vec<usize> = (0..self.events.len()).collect();
+        order.sort_by_key(|&i| {
+            let e = &self.events[i];
+            (e.ts, phase_rank(e.ph), i)
+        });
+        for i in order {
+            let e = &self.events[i];
+            let mut fields = vec![
+                ("name", Json::str(&e.name)),
+                ("cat", Json::str(e.cat)),
+                ("ph", Json::str(&e.ph.to_string())),
+                ("pid", Json::Num(e.pid as f64)),
+                ("tid", Json::Num(e.tid as f64)),
+                // Chrome trace ts is in microseconds.
+                ("ts", Json::Num(e.ts as f64 / 1000.0)),
+            ];
+            if let Some(id) = e.id {
+                fields.push(("id", Json::str(&format!("0x{id:x}"))));
+            }
+            if !e.args.is_empty() {
+                fields.push(("args", Json::obj(e.args.clone())));
+            }
+            out.push(Json::obj(fields));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(out)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+impl Probe for ChromeTracer {
+    fn on_event(&mut self, event: &TelemetryEvent) {
+        match *event {
+            TelemetryEvent::Arrive {
+                req,
+                tokens,
+                rr_home,
+                cell,
+                t,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.req_lane(req);
+                    self.instant(
+                        lane,
+                        t,
+                        "arrive".to_string(),
+                        "mark",
+                        vec![
+                            ("tokens", Json::Num(tokens as f64)),
+                            ("cell", Json::Num(cell as f64)),
+                            ("rr_home", Json::Num(rr_home as f64)),
+                        ],
+                    );
+                }
+            }
+            TelemetryEvent::GroupPlaced {
+                req,
+                cell,
+                device,
+                expert,
+                tokens,
+                enqueue,
+                start,
+                done,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.device_lane(cell, device);
+                    self.async_span(
+                        lane,
+                        enqueue,
+                        start,
+                        format!("queue e{expert}"),
+                        "queue",
+                        vec![
+                            ("req", Json::Num(req as f64)),
+                            ("tokens", Json::Num(tokens)),
+                        ],
+                    );
+                    self.span(
+                        lane,
+                        start,
+                        done,
+                        format!("compute e{expert}"),
+                        "compute",
+                        vec![
+                            ("req", Json::Num(req as f64)),
+                            ("tokens", Json::Num(tokens)),
+                        ],
+                    );
+                }
+            }
+            TelemetryEvent::GroupShed {
+                req,
+                cell,
+                expert,
+                tokens,
+                t,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.control_lane(cell);
+                    self.instant(
+                        lane,
+                        t,
+                        format!("shed e{expert}"),
+                        "mark",
+                        vec![
+                            ("req", Json::Num(req as f64)),
+                            ("tokens", Json::Num(tokens)),
+                        ],
+                    );
+                }
+            }
+            TelemetryEvent::BorrowStaged {
+                req,
+                home,
+                cell,
+                device,
+                expert,
+                tokens,
+                t,
+                barrier,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.control_lane(cell);
+                    self.instant(
+                        lane,
+                        t,
+                        format!("borrow_staged e{expert}"),
+                        "mark",
+                        vec![
+                            ("req", Json::Num(req as f64)),
+                            ("home", Json::Num(home as f64)),
+                            ("device", Json::Num(device as f64)),
+                            ("tokens", Json::Num(tokens)),
+                            ("barrier_us", Json::Num(barrier as f64 / 1000.0)),
+                        ],
+                    );
+                }
+            }
+            TelemetryEvent::BorrowRolledBack {
+                req,
+                home,
+                staged,
+                t,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.control_lane(home);
+                    self.instant(
+                        lane,
+                        t,
+                        "borrow_rollback".to_string(),
+                        "mark",
+                        vec![
+                            ("req", Json::Num(req as f64)),
+                            ("staged", Json::Num(staged as f64)),
+                        ],
+                    );
+                }
+            }
+            TelemetryEvent::BorrowCommitted {
+                req,
+                home,
+                cell,
+                device,
+                expert,
+                tokens,
+                sent,
+                landed,
+                start,
+                done,
+                barrier,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.device_lane(cell, device);
+                    let args = vec![
+                        ("req", Json::Num(req as f64)),
+                        ("home", Json::Num(home as f64)),
+                        ("tokens", Json::Num(tokens)),
+                    ];
+                    self.async_span(
+                        lane,
+                        sent,
+                        landed,
+                        format!("backhaul e{expert}"),
+                        "backhaul",
+                        args.clone(),
+                    );
+                    self.async_span(
+                        lane,
+                        landed,
+                        start,
+                        format!("queue e{expert}"),
+                        "queue",
+                        args.clone(),
+                    );
+                    self.span(
+                        lane,
+                        start,
+                        done,
+                        format!("compute e{expert} (borrowed)"),
+                        "compute",
+                        args.clone(),
+                    );
+                    self.async_span(
+                        lane,
+                        done,
+                        barrier,
+                        format!("barrier e{expert}"),
+                        "barrier",
+                        args,
+                    );
+                }
+            }
+            TelemetryEvent::Block {
+                req,
+                cell,
+                block,
+                start,
+                end,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.req_lane(req);
+                    self.span(
+                        lane,
+                        start,
+                        end,
+                        format!("block {block}"),
+                        "block",
+                        vec![("cell", Json::Num(cell as f64))],
+                    );
+                }
+            }
+            TelemetryEvent::Completed {
+                req,
+                cell,
+                t,
+                latency_ms,
+            } => {
+                if self.sampled(req) {
+                    let lane = self.req_lane(req);
+                    self.instant(
+                        lane,
+                        t,
+                        "completed".to_string(),
+                        "mark",
+                        vec![
+                            ("cell", Json::Num(cell as f64)),
+                            ("latency_ms", Json::Num(latency_ms)),
+                        ],
+                    );
+                }
+            }
+            TelemetryEvent::Dropped { req, cell, t } => {
+                if self.sampled(req) {
+                    let lane = self.req_lane(req);
+                    self.instant(
+                        lane,
+                        t,
+                        "dropped".to_string(),
+                        "mark",
+                        vec![("cell", Json::Num(cell as f64))],
+                    );
+                }
+            }
+            TelemetryEvent::DeviceOnline {
+                cell,
+                device,
+                online,
+            } => {
+                let lane = self.control_lane(cell);
+                let name = if online {
+                    format!("device_online dev{device}")
+                } else {
+                    format!("device_offline dev{device}")
+                };
+                self.instant(lane, 0, name, "control", Vec::new());
+            }
+            TelemetryEvent::ControlResolve {
+                cell,
+                t,
+                iterations,
+                objective,
+                warm,
+                converged,
+            } => {
+                let lane = self.control_lane(cell);
+                self.instant(
+                    lane,
+                    t,
+                    "resolve".to_string(),
+                    "control",
+                    vec![
+                        ("iterations", Json::Num(iterations as f64)),
+                        ("objective", Json::Num(objective)),
+                        ("warm", Json::Bool(warm)),
+                        ("converged", Json::Bool(converged)),
+                    ],
+                );
+            }
+            // High-volume per-decision events are aggregated elsewhere;
+            // the tracer keeps lanes readable.
+            TelemetryEvent::DispatchDecision { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placed(req: usize, start: Nanos, done: Nanos) -> TelemetryEvent {
+        TelemetryEvent::GroupPlaced {
+            req,
+            cell: 0,
+            device: 2,
+            expert: 3,
+            tokens: 10.0,
+            enqueue: start.saturating_sub(500),
+            start,
+            done,
+        }
+    }
+
+    #[test]
+    fn spans_pair_up_and_sort_by_time() {
+        let mut tr = ChromeTracer::new();
+        // Out-of-order emission: the later span first.
+        tr.on_event(&placed(1, 5_000, 9_000));
+        tr.on_event(&placed(0, 1_000, 5_000));
+        let doc = tr.to_json().to_string();
+        let back = Json::parse(&doc).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let phases: Vec<String> = evs
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap().to_string())
+            .collect();
+        let n_b = phases.iter().filter(|p| *p == "B").count();
+        let n_e = phases.iter().filter(|p| *p == "E").count();
+        assert_eq!(n_b, 2);
+        assert_eq!(n_b, n_e);
+        // Back-to-back at ts 5000: the E closes before the next B opens.
+        let first_b = phases.iter().position(|p| p == "B").unwrap();
+        let first_e = phases.iter().position(|p| p == "E").unwrap();
+        assert!(first_b < first_e, "first span must open before it closes");
+        let ts: Vec<f64> = evs
+            .iter()
+            .filter(|e| {
+                let p = e.get("ph").unwrap().as_str().unwrap();
+                p == "B" || p == "E"
+            })
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ts not monotone: {ts:?}");
+    }
+
+    #[test]
+    fn async_spans_carry_matching_ids() {
+        let mut tr = ChromeTracer::new();
+        tr.on_event(&placed(0, 2_000, 4_000)); // queue wait 1500..2000
+        let back = Json::parse(&tr.to_json().to_string()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let open: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "b")
+            .collect();
+        let close: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "e")
+            .collect();
+        assert_eq!(open.len(), 1);
+        assert_eq!(close.len(), 1);
+        assert_eq!(
+            open[0].get("id").unwrap().as_str().unwrap(),
+            close[0].get("id").unwrap().as_str().unwrap()
+        );
+    }
+
+    #[test]
+    fn sampling_skips_unsampled_requests() {
+        let mut tr = ChromeTracer::with_sample_every(2);
+        tr.on_event(&placed(0, 1_000, 2_000));
+        tr.on_event(&placed(1, 1_000, 2_000));
+        tr.on_event(&placed(2, 3_000, 4_000));
+        // Requests 0 and 2 traced, request 1 skipped.
+        let back = Json::parse(&tr.to_json().to_string()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let n_b = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "B")
+            .count();
+        assert_eq!(n_b, 2);
+    }
+
+    #[test]
+    fn zero_length_span_degrades_to_instant() {
+        let mut tr = ChromeTracer::new();
+        tr.on_event(&TelemetryEvent::Block {
+            req: 0,
+            cell: 0,
+            block: 0,
+            start: 7_000,
+            end: 7_000,
+        });
+        let back = Json::parse(&tr.to_json().to_string()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs
+            .iter()
+            .all(|e| e.get("ph").unwrap().as_str().unwrap() != "B"));
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").unwrap().as_str().unwrap() == "i"));
+    }
+
+    #[test]
+    fn metadata_names_every_lane() {
+        let mut tr = ChromeTracer::new();
+        tr.on_event(&placed(0, 1_000, 2_000));
+        tr.on_event(&TelemetryEvent::ControlResolve {
+            cell: 0,
+            t: 500,
+            iterations: 12,
+            objective: 0.5,
+            warm: true,
+            converged: true,
+        });
+        let back = Json::parse(&tr.to_json().to_string()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let meta: Vec<String> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+            .map(|e| {
+                e.get("args")
+                    .unwrap()
+                    .get("name")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert!(meta.iter().any(|n| n == "cell 0"));
+        assert!(meta.iter().any(|n| n == "dev 2"));
+        assert!(meta.iter().any(|n| n == "control"));
+    }
+}

@@ -1,0 +1,273 @@
+//! Telemetry-layer integration tests: the observe-never-perturb
+//! contract (probed outcomes bit-equal to unprobed), well-formedness of
+//! the Chrome trace-event export and the timeline CSV on real DES
+//! output, byte-level determinism of both artifacts, and the solver
+//! introspection columns of the unified record schema.
+
+use std::collections::HashMap;
+use wdmoe::cluster::{ClusterOutcome, ClusterSim};
+use wdmoe::config::{ClusterConfig, ControlKind, DropPolicy, HandoverPolicy};
+use wdmoe::experiment::{Axis, AxisValue, Record};
+use wdmoe::telemetry::{ChromeTracer, TimelineSampler};
+use wdmoe::util::Json;
+use wdmoe::workload::{Arrival, ArrivalProcess, Benchmark};
+
+/// Two-cell deployment with a crippled cell 0 under adaptive control,
+/// borrowing and shedding — the config that exercises every telemetry
+/// event kind in one run.
+fn busy_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::edge_default();
+    cfg.model.n_blocks = 6;
+    for cell in &mut cfg.cells {
+        cell.channel.total_bandwidth_hz = 1e9;
+    }
+    for d in &mut cfg.cells[0].devices {
+        d.compute_flops /= 50.0;
+    }
+    cfg.control = ControlKind::Adaptive;
+    cfg.handover = HandoverPolicy::BorrowExpert;
+    cfg.queue_limit_s = 0.5;
+    cfg.drop_policy = DropPolicy::ShedTokens;
+    cfg.backhaul_s_per_token = 1e-5;
+    cfg
+}
+
+fn arrivals(rate: f64, n: usize, seed: u64) -> Vec<Arrival> {
+    ArrivalProcess::Poisson { rate_rps: rate }.generate(n, Benchmark::Piqa, seed)
+}
+
+fn assert_outcomes_bit_equal(a: &ClusterOutcome, b: &ClusterOutcome) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.arrived_tokens, b.arrived_tokens);
+    assert_eq!(a.completed_tokens, b.completed_tokens);
+    assert_eq!(a.dropped_tokens, b.dropped_tokens);
+    assert_eq!(a.shed_tokens, b.shed_tokens);
+    assert_eq!(a.handovers, b.handovers);
+    assert_eq!(a.borrowed_groups, b.borrowed_groups);
+    assert_eq!(a.borrowed_tokens, b.borrowed_tokens);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
+    assert_eq!(a.utilization, b.utilization);
+    assert_eq!(a.control, b.control);
+    assert_eq!(a.solver, b.solver);
+}
+
+// ------------------------------------------ observe, never perturb
+
+/// The hard contract: attaching the full `(ChromeTracer,
+/// TimelineSampler)` probe pair leaves every outcome field bit-equal to
+/// the plain `run()` — across drop policies and handover modes.
+#[test]
+fn probed_outcomes_are_bit_equal_to_unprobed() {
+    for (drop, label) in [
+        (DropPolicy::ShedTokens, "shed"),
+        (DropPolicy::DropRequest, "drop"),
+    ] {
+        let mut cfg = busy_cfg();
+        cfg.drop_policy = drop;
+        let arr = arrivals(6.0, 60, 7);
+
+        let base = ClusterSim::new(&cfg).unwrap().run(&arr);
+        let mut probe = (ChromeTracer::new(), TimelineSampler::new(10_000_000));
+        let probed = ClusterSim::new(&cfg).unwrap().run_probed(&arr, &mut probe);
+        assert!(!probe.0.is_empty(), "{label}: tracer saw nothing");
+        assert!(!probe.1.rows().is_empty(), "{label}: sampler saw nothing");
+        assert_outcomes_bit_equal(&base, &probed);
+    }
+}
+
+// ------------------------------------------ trace well-formedness
+
+fn trace_events(cfg: &ClusterConfig, rate: f64, n: usize, seed: u64) -> Vec<Json> {
+    let arr = arrivals(rate, n, seed);
+    let mut probe = ChromeTracer::new();
+    ClusterSim::new(cfg).unwrap().run_probed(&arr, &mut probe);
+    let doc = Json::parse(&probe.to_json().to_string()).unwrap();
+    doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec()
+}
+
+fn field_str(e: &Json, k: &str) -> String {
+    e.get(k).unwrap().as_str().unwrap().to_string()
+}
+
+fn lane(e: &Json) -> (u64, u64) {
+    (
+        e.get("pid").unwrap().as_f64().unwrap() as u64,
+        e.get("tid").unwrap().as_f64().unwrap() as u64,
+    )
+}
+
+/// Every `B` has a matching `E` on its lane (stack-balanced), every
+/// async `b` has exactly one `e` with the same id, and timestamps are
+/// monotone non-decreasing per lane.
+#[test]
+fn trace_json_is_well_formed() {
+    let evs = trace_events(&busy_cfg(), 6.0, 60, 7);
+    assert!(!evs.is_empty());
+
+    let mut depth: HashMap<(u64, u64), i64> = HashMap::new();
+    let mut last_ts: HashMap<(u64, u64), f64> = HashMap::new();
+    let mut open_async: HashMap<String, usize> = HashMap::new();
+    let mut saw_compute_span = false;
+    for e in &evs {
+        let ph = field_str(e, "ph");
+        if ph == "M" {
+            continue;
+        }
+        let l = lane(e);
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let prev = last_ts.insert(l, ts).unwrap_or(f64::NEG_INFINITY);
+        assert!(ts >= prev, "lane {l:?}: ts {ts} after {prev}");
+        match ph.as_str() {
+            "B" => {
+                saw_compute_span = true;
+                *depth.entry(l).or_insert(0) += 1;
+            }
+            "E" => {
+                let d = depth.entry(l).or_insert(0);
+                *d -= 1;
+                assert!(*d >= 0, "lane {l:?}: E with no open B");
+            }
+            "b" => {
+                *open_async.entry(field_str(e, "id")).or_insert(0) += 1;
+            }
+            "e" => {
+                let id = field_str(e, "id");
+                let c = open_async.get_mut(&id).expect("e with unknown id");
+                *c -= 1;
+                assert_eq!(*c, 0, "async id {id} closed more than once");
+            }
+            "i" => {}
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert!(saw_compute_span, "no duration spans recorded");
+    for (l, d) in depth {
+        assert_eq!(d, 0, "lane {l:?}: unclosed B span(s)");
+    }
+    for (id, c) in open_async {
+        assert_eq!(c, 0, "async span {id} never closed");
+    }
+}
+
+/// The busy scenario exercises borrow/shed/resolve marks, and the trace
+/// names every lane it uses.
+#[test]
+fn trace_covers_event_kinds_and_names_lanes() {
+    let evs = trace_events(&busy_cfg(), 6.0, 60, 7);
+    let names: Vec<String> = evs.iter().map(|e| field_str(e, "name")).collect();
+    for expect in ["arrive", "completed", "resolve"] {
+        assert!(
+            names.iter().any(|n| n == expect),
+            "no '{expect}' event in trace"
+        );
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("compute e")),
+        "no compute spans"
+    );
+    assert!(
+        names.iter().any(|n| n.starts_with("block ")),
+        "no block spans"
+    );
+    let meta: Vec<&Json> = evs.iter().filter(|e| field_str(e, "ph") == "M").collect();
+    let lane_names: Vec<String> = meta
+        .iter()
+        .map(|e| field_str(e.get("args").unwrap(), "name"))
+        .collect();
+    assert!(lane_names.iter().any(|n| n == "requests"));
+    assert!(lane_names.iter().any(|n| n == "cell 0"));
+    assert!(lane_names.iter().any(|n| n == "control"));
+    // Every (pid, tid) an event uses has thread_name metadata.
+    let named: Vec<(u64, u64)> = meta
+        .iter()
+        .filter(|e| field_str(e, "name") == "thread_name")
+        .map(|e| lane(e))
+        .collect();
+    for e in evs.iter().filter(|e| field_str(e, "ph") != "M") {
+        assert!(named.contains(&lane(e)), "unnamed lane {:?}", lane(e));
+    }
+}
+
+// ------------------------------------------ timeline well-formedness
+
+#[test]
+fn timeline_rows_are_strictly_increasing_per_cell() {
+    let cfg = busy_cfg();
+    let arr = arrivals(6.0, 60, 7);
+    let mut probe = TimelineSampler::new(20_000_000); // 20 ms
+    ClusterSim::new(&cfg).unwrap().run_probed(&arr, &mut probe);
+    let rows = probe.rows();
+    assert!(rows.len() >= 2 * cfg.n_cells());
+    for cell in 0..cfg.n_cells() {
+        let ts: Vec<u64> = rows.iter().filter(|r| r.cell == cell).map(|r| r.t).collect();
+        assert!(!ts.is_empty(), "cell {cell} never sampled");
+        assert!(
+            ts.windows(2).all(|w| w[0] < w[1]),
+            "cell {cell}: sample times not strictly increasing"
+        );
+    }
+    // The CSV mirrors the rows: header plus one line each, finite values.
+    let csv = probe.to_csv();
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices"
+    );
+    assert_eq!(csv.lines().count(), rows.len() + 1);
+    for r in rows {
+        assert!(r.backlog_s.is_finite() && r.backlog_s >= 0.0);
+        assert!(r.utilization.is_finite() && r.utilization >= 0.0);
+        assert!((0.0..=1.0).contains(&r.drop_rate));
+    }
+}
+
+// ------------------------------------------ determinism
+
+/// Same config and seed ⇒ byte-identical trace JSON and timeline CSV.
+#[test]
+fn trace_and_timeline_are_deterministic() {
+    let cfg = busy_cfg();
+    let arr = arrivals(6.0, 40, 3);
+    let render = || {
+        let mut probe = (ChromeTracer::new(), TimelineSampler::new(25_000_000));
+        ClusterSim::new(&cfg).unwrap().run_probed(&arr, &mut probe);
+        (probe.0.to_json().to_string(), probe.1.to_csv())
+    };
+    let (trace_a, tl_a) = render();
+    let (trace_b, tl_b) = render();
+    assert_eq!(trace_a, trace_b, "trace JSON not deterministic");
+    assert_eq!(tl_a, tl_b, "timeline CSV not deterministic");
+}
+
+// ------------------------------------------ solver introspection
+
+/// The new record columns surface the DES solver cost: consistent with
+/// the outcome accessors, zero for the uniform plane, positive for the
+/// adaptive plane under load.
+#[test]
+fn solver_metrics_flow_into_record_schema() {
+    let cfg = busy_cfg();
+    let arr = arrivals(6.0, 60, 7);
+    let out = ClusterSim::new(&cfg).unwrap().run(&arr);
+    assert!(out.solver.solves > 0, "adaptive plane never solved");
+    assert_eq!(out.solver.solves, out.solver.warm + out.solver.cold);
+    let r = Record::new(
+        "rate=6".into(),
+        vec![(Axis::ArrivalRate, AxisValue::num(6.0))],
+        &out,
+    );
+    assert_eq!(r.metric("solver_iters_mean").unwrap(), out.solver_iters_mean());
+    assert_eq!(r.metric("solver_iters_max").unwrap(), out.solver_iters_max());
+    assert!(out.solver_iters_max() >= out.solver_iters_mean());
+
+    let mut uniform = busy_cfg();
+    uniform.control = ControlKind::StaticUniform;
+    let u = ClusterSim::new(&uniform).unwrap().run(&arr);
+    assert_eq!(u.solver.solves, 0);
+    assert_eq!(u.solver_iters_mean(), 0.0);
+    assert_eq!(u.solver_iters_max(), 0.0);
+}

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Validate `repro trace` artifacts.
+
+Usage: check_trace.py TRACE.json [TIMELINE.csv]
+
+Checks the Chrome trace-event JSON the telemetry layer exports:
+
+* the document parses and has a non-empty `traceEvents` array;
+* every `B` (duration begin) is closed by a matching `E` on the same
+  `(pid, tid)` lane, stack-balanced;
+* every async `b` has exactly one `e` with the same id;
+* timestamps are monotone non-decreasing per lane (the exporter sorts
+  ends before instants before begins at equal timestamps);
+* every lane an event uses carries `thread_name` metadata.
+
+And, when given, the timeline CSV:
+
+* the pinned header;
+* sample times strictly increasing per cell;
+* finite, non-negative backlog/utilization and drop_rate in [0, 1].
+
+Exits non-zero with a message on the first violation — CI runs this
+against a fresh `repro trace` smoke artifact.
+"""
+
+import csv
+import json
+import math
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_trace(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+
+    depth = {}          # lane -> open B count
+    last_ts = {}        # lane -> last timestamp seen
+    open_async = {}     # id -> open b count
+    named_lanes = set()
+    counts = {}
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        counts[ph] = counts.get(ph, 0) + 1
+        if ph == "M":
+            if e.get("name") == "thread_name":
+                named_lanes.add((e.get("pid"), e.get("tid")))
+            continue
+        lane = (e.get("pid"), e.get("tid"))
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            fail(f"{path}: event {i} has no numeric ts")
+        if ts < last_ts.get(lane, float("-inf")):
+            fail(f"{path}: lane {lane} ts {ts} after {last_ts[lane]}")
+        last_ts[lane] = ts
+        if lane not in named_lanes:
+            fail(f"{path}: lane {lane} used before thread_name metadata")
+        if ph == "B":
+            depth[lane] = depth.get(lane, 0) + 1
+        elif ph == "E":
+            depth[lane] = depth.get(lane, 0) - 1
+            if depth[lane] < 0:
+                fail(f"{path}: lane {lane} has E with no open B")
+        elif ph == "b":
+            aid = e.get("id")
+            if aid is None:
+                fail(f"{path}: event {i} is 'b' without an id")
+            open_async[aid] = open_async.get(aid, 0) + 1
+        elif ph == "e":
+            aid = e.get("id")
+            if aid not in open_async:
+                fail(f"{path}: 'e' id {aid} was never opened")
+            open_async[aid] -= 1
+            if open_async[aid] != 0:
+                fail(f"{path}: async id {aid} closed more than once")
+        elif ph != "i":
+            fail(f"{path}: unexpected phase {ph!r}")
+    for lane, d in depth.items():
+        if d != 0:
+            fail(f"{path}: lane {lane} has {d} unclosed B span(s)")
+    for aid, c in open_async.items():
+        if c != 0:
+            fail(f"{path}: async span {aid} never closed")
+    if counts.get("B", 0) == 0:
+        fail(f"{path}: no duration spans at all")
+    print(
+        f"check_trace: {path} OK — "
+        + ", ".join(f"{counts.get(p, 0)} {p}" for p in ["M", "B", "E", "b", "e", "i"])
+    )
+
+
+TIMELINE_HEADER = [
+    "t_s",
+    "cell",
+    "backlog_s",
+    "utilization",
+    "drop_rate",
+    "live_replicas",
+    "online_devices",
+]
+
+
+def check_timeline(path):
+    with open(path, newline="") as f:
+        rows = list(csv.reader(f))
+    if not rows or rows[0] != TIMELINE_HEADER:
+        fail(f"{path}: header mismatch: {rows[0] if rows else 'empty file'}")
+    if len(rows) < 2:
+        fail(f"{path}: no samples")
+    last_t = {}
+    for i, row in enumerate(rows[1:], start=2):
+        t, cell = float(row[0]), int(row[1])
+        backlog, util, drop = float(row[2]), float(row[3]), float(row[4])
+        if cell in last_t and t <= last_t[cell]:
+            fail(f"{path}:{i}: cell {cell} t {t} not after {last_t[cell]}")
+        last_t[cell] = t
+        for name, v in [("backlog_s", backlog), ("utilization", util)]:
+            if not math.isfinite(v) or v < 0.0:
+                fail(f"{path}:{i}: {name} = {v}")
+        if not 0.0 <= drop <= 1.0:
+            fail(f"{path}:{i}: drop_rate = {drop}")
+    print(f"check_trace: {path} OK — {len(rows) - 1} samples, {len(last_t)} cells")
+
+
+def main():
+    if len(sys.argv) < 2 or len(sys.argv) > 3:
+        print(__doc__)
+        sys.exit(2)
+    check_trace(sys.argv[1])
+    if len(sys.argv) == 3:
+        check_timeline(sys.argv[2])
+
+
+if __name__ == "__main__":
+    main()
