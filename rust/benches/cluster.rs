@@ -42,4 +42,5 @@ fn main() {
     wdmoe::repro::benchsuite::dispatch_harness(budget);
     wdmoe::repro::benchsuite::des_harness(budget, 60);
     wdmoe::repro::benchsuite::des_nullprobe_harness(budget, 60);
+    wdmoe::repro::benchsuite::des_8cell_harnesses(budget, 60);
 }

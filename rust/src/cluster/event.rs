@@ -1,10 +1,19 @@
 //! Deterministic discrete-event core: virtual time + event heap.
 //!
-//! Events are ordered by `(time, insertion sequence)`, so two events at
-//! the same virtual instant fire in the order they were scheduled — the
-//! whole simulation is a pure function of its inputs and seeds. Time is
-//! integer nanoseconds ([`Nanos`]): total order, no float-comparison
-//! pitfalls in the heap. The queue advances a shared
+//! Events are ordered by `(time, lane, insertion sequence)`: two events
+//! at the same virtual instant fire lowest lane first, and within a
+//! lane in the order they were scheduled — the whole simulation is a
+//! pure function of its inputs and seeds. The lane is an arbitrary
+//! small integer supplied at scheduling time ([`EventQueue::schedule_at`]
+//! uses lane 0); the cluster DES uses the owning *cell* index, which
+//! makes the serial pop order exactly the canonical k-way merge of the
+//! per-cell event streams by `(time, cell, seq)` — the order the
+//! sharded engine ([`crate::cluster::shard`]) reproduces when it drains
+//! its per-shard mailboxes, so sharded output can be byte-identical to
+//! serial by construction rather than by luck.
+//!
+//! Time is integer nanoseconds ([`Nanos`]): total order, no
+//! float-comparison pitfalls in the heap. The queue advances a shared
 //! [`VirtualClock`] as it pops, so components holding a clone of the
 //! clock (e.g. a [`crate::coordinator::batcher::DynamicBatcher`]) observe
 //! simulation time for free.
@@ -30,13 +39,14 @@ pub fn secs_from_nanos(n: Nanos) -> f64 {
 
 struct Scheduled<E> {
     at: Nanos,
+    lane: u32,
     seq: u64,
     event: E,
 }
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.at == other.at && self.lane == other.lane && self.seq == other.seq
     }
 }
 
@@ -50,7 +60,7 @@ impl<E> PartialOrd for Scheduled<E> {
 
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
+        (self.at, self.lane, self.seq).cmp(&(other.at, other.lane, other.seq))
     }
 }
 
@@ -75,14 +85,20 @@ impl<E> EventQueue<E> {
         self.clock.nanos()
     }
 
-    /// Schedule `event` at absolute virtual time `at`. Scheduling in the
-    /// past is a logic error (would break causality), and it stays an
-    /// error in release builds: a mis-computed delay (e.g. a handover
-    /// backhaul) must abort loudly, not silently corrupt virtual time.
-    /// The check runs once per *scheduled* event — off the per-event pop
-    /// hot loop — so promoting it from `debug_assert!` costs nothing
-    /// measurable.
+    /// Schedule `event` at absolute virtual time `at`, on lane 0.
     pub fn schedule_at(&mut self, at: Nanos, event: E) {
+        self.schedule_at_in_lane(at, 0, event);
+    }
+
+    /// Schedule `event` at absolute virtual time `at` on `lane`.
+    /// Simultaneous events fire lowest lane first (then scheduling
+    /// order within a lane). Scheduling in the past is a logic error
+    /// (would break causality), and it stays an error in release
+    /// builds: a mis-computed delay (e.g. a handover backhaul) must
+    /// abort loudly, not silently corrupt virtual time. The check runs
+    /// once per *scheduled* event — off the per-event pop hot loop —
+    /// so promoting it from `debug_assert!` costs nothing measurable.
+    pub fn schedule_at_in_lane(&mut self, at: Nanos, lane: u32, event: E) {
         assert!(
             at >= self.now(),
             "event scheduled in the past (at {at} ns < now {} ns)",
@@ -90,13 +106,23 @@ impl<E> EventQueue<E> {
         );
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse(Scheduled { at, seq, event }));
+        self.heap.push(Reverse(Scheduled {
+            at,
+            lane,
+            seq,
+            event,
+        }));
     }
 
-    /// Schedule `event` `delay` after the current virtual time.
+    /// Schedule `event` `delay` after the current virtual time, lane 0.
     pub fn schedule_in(&mut self, delay: Nanos, event: E) {
+        self.schedule_in_lane(delay, 0, event);
+    }
+
+    /// Schedule `event` `delay` after the current virtual time on `lane`.
+    pub fn schedule_in_lane(&mut self, delay: Nanos, lane: u32, event: E) {
         let at = self.now().saturating_add(delay);
-        self.schedule_at(at, event);
+        self.schedule_at_in_lane(at, lane, event);
     }
 
     /// Pop the earliest event, advancing the virtual clock to its time.
@@ -143,6 +169,28 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, 1);
         assert_eq!(q.pop().unwrap().1, 2);
         assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn ties_break_by_lane_before_insertion_order() {
+        let mut q = EventQueue::new(VirtualClock::new());
+        q.schedule_at_in_lane(5, 2, "lane2-first");
+        q.schedule_at_in_lane(5, 0, "lane0");
+        q.schedule_at_in_lane(5, 2, "lane2-second");
+        q.schedule_at_in_lane(5, 1, "lane1");
+        assert_eq!(q.pop().unwrap().1, "lane0");
+        assert_eq!(q.pop().unwrap().1, "lane1");
+        assert_eq!(q.pop().unwrap().1, "lane2-first");
+        assert_eq!(q.pop().unwrap().1, "lane2-second");
+    }
+
+    #[test]
+    fn time_still_dominates_lane() {
+        let mut q = EventQueue::new(VirtualClock::new());
+        q.schedule_at_in_lane(10, 0, "later-low-lane");
+        q.schedule_at_in_lane(5, 7, "earlier-high-lane");
+        assert_eq!(q.pop().unwrap().1, "earlier-high-lane");
+        assert_eq!(q.pop().unwrap().1, "later-low-lane");
     }
 
     #[test]

@@ -100,10 +100,17 @@ pub struct StagedBorrow {
 
 /// Cluster-level dispatch coordinator: load-aware re-homing at arrival
 /// and cross-cell expert borrowing at dispatch, with reusable scratch so
-/// both sit on the DES hot path without allocating.
+/// both sit on the DES hot path without allocating. `Clone` so the
+/// sharded engine can hand each [`crate::cluster::shard`] shard its own
+/// coordinator.
+#[derive(Clone)]
 pub struct HandoverCoordinator {
     policy: HandoverPolicy,
     backhaul_s_per_token: f64,
+    /// Optional per-pair backhaul (seconds/token, `[from][to]`);
+    /// validated square by [`crate::config::ClusterConfig::validate`].
+    /// `None` means every hop pays the uniform scalar.
+    backhaul_matrix: Option<Vec<Vec<f64>>>,
     /// Neighbor-candidate scratch: `(load score, cell)` pairs, ranked
     /// ascending per borrow attempt. Reused — never reallocated.
     order: Vec<(f64, usize)>,
@@ -116,18 +123,34 @@ impl HandoverCoordinator {
         Self {
             policy,
             backhaul_s_per_token,
+            backhaul_matrix: None,
             order: Vec::new(),
             staged: Vec::new(),
         }
+    }
+
+    /// Attach (or clear) a per-cell-pair backhaul matrix.
+    pub fn with_backhaul_matrix(mut self, matrix: Option<Vec<Vec<f64>>>) -> Self {
+        self.backhaul_matrix = matrix;
+        self
     }
 
     pub fn policy(&self) -> HandoverPolicy {
         self.policy
     }
 
-    /// One-way inter-cell transfer seconds per token.
+    /// One-way inter-cell transfer seconds per token (uniform default).
     pub fn backhaul_s_per_token(&self) -> f64 {
         self.backhaul_s_per_token
+    }
+
+    /// One-way transfer seconds per token for the directed hop
+    /// `from → to`: the matrix entry when configured, else the scalar.
+    pub fn backhaul_pair(&self, from: usize, to: usize) -> f64 {
+        match &self.backhaul_matrix {
+            Some(m) => m[from][to],
+            None => self.backhaul_s_per_token,
+        }
     }
 
     /// Drop any scratch state (simulator reset). Stats are accumulated
@@ -221,11 +244,15 @@ impl HandoverCoordinator {
         }
         self.order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
-        let backhaul = nanos_from_secs(tokens * self.backhaul_s_per_token);
         for &(score, ci) in &self.order {
             if !score.is_finite() {
                 break; // dead cells sort last; nothing serviceable beyond
             }
+            // Directed hop costs: the outbound transfer pays
+            // `home → ci`, the barrier return pays `ci → home` (they
+            // differ under an asymmetric backhaul matrix).
+            let backhaul = nanos_from_secs(tokens * self.backhaul_pair(home, ci));
+            let backhaul_return = nanos_from_secs(tokens * self.backhaul_pair(ci, home));
             let cell = cell_mut(home, ci, &mut *left, &mut *right);
             let t = cell.t_per_token();
             let online = cell.online();
@@ -276,7 +303,7 @@ impl HandoverCoordinator {
                 let prev_busy = cell.busy_until()[k];
                 let start = prev_busy.max(now.saturating_add(backhaul));
                 cell.set_busy_until(k, done);
-                let barrier = done.saturating_add(backhaul);
+                let barrier = done.saturating_add(backhaul_return);
                 self.staged.push(StagedBorrow {
                     cell: ci,
                     device: k,
@@ -463,6 +490,29 @@ mod tests {
         assert_eq!(right[0].busy[0], 20_000_000);
         // Untouched neighbor: the backlogged cell keeps its queue.
         assert_eq!(left[0].busy[0], 8_000_000_000);
+    }
+
+    #[test]
+    fn borrow_pays_directed_per_pair_backhaul() {
+        // Asymmetric matrix: home(0) → neighbor(1) costs 1 ms/token,
+        // the return hop 2 ms/token. 10 tokens at 1 ms/token service:
+        // out 10 ms + service 10 ms + return 20 ms = 40 ms barrier.
+        let mut h = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 1e-3)
+            .with_backhaul_matrix(Some(vec![vec![0.0, 1e-3], vec![2e-3, 0.0]]));
+        assert_eq!(h.backhaul_pair(0, 1), 1e-3);
+        assert_eq!(h.backhaul_pair(1, 0), 2e-3);
+        let mut left: [MockCell; 0] = [];
+        let mut right = [MockCell::new(vec![0], vec![1e-3])];
+        let barrier = h.try_borrow(0, 0, 10.0, 0, 0.0, &mut left, &mut right).unwrap();
+        assert_eq!(barrier, 40_000_000);
+        let s = h.staged()[0];
+        assert_eq!(s.start, 10_000_000, "outbound hop uses the home→cell entry");
+        // Remote FIFO advances to device-done (20 ms), not the barrier.
+        assert_eq!(right[0].busy[0], 20_000_000);
+        // Without a matrix the same coordinator falls back to the scalar.
+        let h2 = HandoverCoordinator::new(HandoverPolicy::BorrowExpert, 5e-4);
+        assert_eq!(h2.backhaul_pair(0, 1), 5e-4);
+        assert_eq!(h2.backhaul_pair(1, 0), 5e-4);
     }
 
     #[test]

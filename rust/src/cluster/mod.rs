@@ -11,9 +11,12 @@
 //!
 //! Virtual time is integer nanoseconds on a shared
 //! [`crate::util::clock::VirtualClock`]; the [`event::EventQueue`] orders
-//! events by `(time, insertion seq)` so simultaneous events fire in
-//! scheduling order and every run is a pure function of config + seeds.
-//! Two event kinds drive the simulation:
+//! events by `(time, lane, insertion seq)` — the lane is the owning cell
+//! index, so simultaneous events fire lowest cell first, then in
+//! scheduling order, and every run is a pure function of config + seeds.
+//! That makes the serial pop order the canonical k-way merge of per-cell
+//! event streams, which is what lets the sharded engine ([`shard`])
+//! reproduce it exactly. Two event kinds drive the simulation:
 //!
 //! * **`Arrive(req)`** — an open-loop arrival
 //!   ([`crate::workload::ArrivalProcess`]: Poisson or trace replay). The
@@ -91,6 +94,13 @@
 //!   per-device utilization, control-plane activity, events processed);
 //!   [`sim::ClusterSim::reset`] restores the just-built state so one
 //!   simulator serves many runs.
+//! * [`shard`] — the sharded engine: `run_sharded(arrivals, threads)`
+//!   gives each cell its own event queue and advances the shards
+//!   concurrently inside conservative sync windows, draining per-shard
+//!   mailboxes in canonical `(time, cell, seq)` order so outcomes,
+//!   traces and timelines are byte-identical to the serial loop at any
+//!   thread count (interacting handover policies fall back to serial —
+//!   they read neighbor state at zero lookahead).
 //! * [`crate::experiment`] — sweeps over this simulator are typed
 //!   grids: an [`crate::experiment::Axis`] per knob, a
 //!   [`crate::experiment::Grid`] for the cross-product, one
@@ -130,6 +140,7 @@ pub mod dispatch;
 pub mod event;
 pub mod handover;
 pub mod placement;
+pub mod shard;
 pub mod sim;
 
 pub use dispatch::Dispatcher;

@@ -1,0 +1,813 @@
+//! # `shard` — the sharded cluster DES: per-cell event queues with
+//! conservative time-window sync
+//!
+//! [`ClusterSim::run_probed`] drives every cell from one global event
+//! heap; its pop order is `(time, cell lane, seq)` — exactly the k-way
+//! merge of per-cell event streams. This module exploits that: each
+//! cell becomes a [`CellShard`] owning its *own* [`EventQueue`], local
+//! request table, counters and sample log, and the shards advance
+//! concurrently on the [`crate::exec`] scoped worker pool. Because the
+//! serial order is a merge of independent per-cell streams, replaying
+//! the shard-local logs in canonical `(time, cell, seq)` order at the
+//! end rebuilds the serial observable sequence *by construction* —
+//! outcomes, latency records, telemetry event streams and samples are
+//! byte-identical to the serial engine, not merely statistically equal.
+//!
+//! ## Conservative lookahead
+//!
+//! Shards may only run ahead of each other as far as no cross-cell
+//! interaction can reach them. The minimum inter-cell backhaul latency
+//! ([`crate::config::ClusterConfig::min_backhaul_s_per_token`], per-pair
+//! under a backhaul matrix) bounds how fast work can cross a cell
+//! boundary, so it is the natural conservative sync window. Under
+//! [`HandoverPolicy::None`] cells never interact at all — the lookahead
+//! is infinite and the whole run is a single window per shard. The
+//! interacting policies (`RehomeOnArrival`, `BorrowExpert`) read remote
+//! cell state at *zero* latency (re-homing inspects live neighbor
+//! backlog at the arrival instant), which gives them zero usable
+//! lookahead — those runs fall back to the serial engine rather than
+//! risk divergence. [`ClusterSim::set_sync_window_s`] forces a finite
+//! window so tests exercise the window/barrier machinery; any positive
+//! window yields identical output, smaller ones just synchronize more.
+//!
+//! ## Determinism contract
+//!
+//! * `run_sharded(arrivals, threads)` equals `run(arrivals)` bit-for-bit
+//!   on every outcome field, at every thread count, for every config —
+//!   enforced by `rust/tests/cluster.rs`.
+//! * With a probe attached, the replayed event/sample streams are
+//!   identical to the serial probe callbacks, so Chrome traces and
+//!   timeline CSVs are byte-identical too.
+//! * `threads == 1` (or one cell, or an interacting handover policy)
+//!   *is* the serial engine — the entry point short-circuits to
+//!   [`ClusterSim::run_probed`].
+//!
+//! Cross-shard effects (latency records, probe events, samples, shed
+//! accounting) travel through per-shard ordered logs — the inter-shard
+//! mailbox — drained on the coordinating thread in canonical order.
+//! Floating-point accumulators that the serial loop updates in global
+//! event order (steady-state latency, shed tokens) are *replayed* in
+//! that order rather than summed per shard, so rounding is identical.
+//!
+//! ## Recorder monomorphization
+//!
+//! The shard loop is generic over a [`Recorder`] — [`NullProbe`] for
+//! telemetry-off runs and [`EventLog`] when a real probe is attached —
+//! selected once via [`Probe::is_null`]. The null recorder's empty
+//! inlined methods monomorphize away, so "sharded, telemetry off"
+//! carries no event-buffering cost, mirroring the serial engine's
+//! `NullProbe` hot path.
+
+use super::dispatch::Dispatcher;
+use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+use super::handover::HandoverCoordinator;
+use super::sim::{
+    cell_backlog_s, control_tick_at, sample_cell, start_block_at, Cell, ClusterOutcome,
+    ClusterSim, Event, ReqState, SimParams,
+};
+use crate::config::HandoverPolicy;
+use crate::exec;
+use crate::metrics::SteadyState;
+use crate::telemetry::{CellSample, NullProbe, Probe, TelemetryEvent};
+use crate::util::clock::VirtualClock;
+use crate::workload::Arrival;
+use std::sync::Mutex;
+
+/// Per-shard event sink: every probe event a shard emits is recorded
+/// (with enough structure to replay it in canonical order later) or
+/// provably discarded. Runs are the mailbox unit: all events emitted
+/// while processing one popped DES event share the pop's timestamp, and
+/// the drain interleaves whole runs with due samples exactly as the
+/// serial loop would.
+trait Recorder: Probe + Default + Send {
+    /// Close the run for the pop at `at` (no-op when it emitted nothing).
+    fn mark(&mut self, at: Nanos);
+    /// Recorded `(pop time, events in run)` pairs, in shard-local order.
+    fn runs(&self) -> &[(Nanos, u32)] {
+        &[]
+    }
+    /// All recorded events, concatenated in run order.
+    fn events(&self) -> &[TelemetryEvent] {
+        &[]
+    }
+}
+
+/// Telemetry off: record nothing, cost nothing.
+impl Recorder for NullProbe {
+    #[inline]
+    fn mark(&mut self, _at: Nanos) {}
+}
+
+/// Telemetry on: buffer every event with its run boundary for the
+/// canonical-order replay at the window drain.
+#[derive(Default)]
+struct EventLog {
+    events: Vec<TelemetryEvent>,
+    runs: Vec<(Nanos, u32)>,
+    pending: u32,
+}
+
+impl Probe for EventLog {
+    #[inline]
+    fn on_event(&mut self, event: &TelemetryEvent) {
+        self.events.push(*event);
+        self.pending += 1;
+    }
+}
+
+impl Recorder for EventLog {
+    fn mark(&mut self, at: Nanos) {
+        if self.pending > 0 {
+            self.runs.push((at, self.pending));
+            self.pending = 0;
+        }
+    }
+    fn runs(&self) -> &[(Nanos, u32)] {
+        &self.runs
+    }
+    fn events(&self) -> &[TelemetryEvent] {
+        &self.events
+    }
+}
+
+/// One cell's independent slice of the DES: its cell state, event
+/// queue, the requests homed to it, and ordered logs of everything the
+/// serial loop would have observed globally.
+struct CellShard {
+    ci: usize,
+    n_cells: usize,
+    params: SimParams,
+    dispatcher: Dispatcher,
+    /// Shard-local coordinator clone (policy is always
+    /// [`HandoverPolicy::None`] here, so it never reads neighbors).
+    handover: HandoverCoordinator,
+    cell: Cell,
+    queue: EventQueue<Event>,
+    /// Requests homed to this cell; global request `i` lives at local
+    /// index `i / n_cells` (arrivals are dealt round-robin).
+    states: Vec<ReqState>,
+    outstanding: usize,
+    cadence: Option<Nanos>,
+    next_sample: Nanos,
+    /// This cell's sample rows, one per global cadence tick, recorded
+    /// with the state the serial sampler would have seen.
+    samples: Vec<CellSample>,
+    /// `(completion time, latency ms)` in shard-local completion order.
+    completions: Vec<(Nanos, f64)>,
+    /// `(event time, shed tokens)` per block that shed, so the global
+    /// f64 accumulation replays in serial order (addition order matters
+    /// for bit-identity).
+    sheds: Vec<(Nanos, f64)>,
+    arrived: usize,
+    completed: usize,
+    dropped: usize,
+    arrived_tokens: u64,
+    completed_tokens: u64,
+    dropped_tokens: u64,
+    handovers: usize,
+    borrowed_groups: usize,
+    borrowed_tokens: f64,
+    events: usize,
+    last_work_ns: Nanos,
+    /// Last pop of *any* kind (control ticks included) — the global max
+    /// bounds which trailing samples the serial loop would have fired.
+    last_pop_ns: Nanos,
+}
+
+impl CellShard {
+    fn new(
+        ci: usize,
+        n_cells: usize,
+        cell: Cell,
+        params: SimParams,
+        dispatcher: Dispatcher,
+        handover: HandoverCoordinator,
+        cadence: Option<Nanos>,
+    ) -> Self {
+        Self {
+            ci,
+            n_cells,
+            params,
+            dispatcher,
+            handover,
+            cell,
+            queue: EventQueue::new(VirtualClock::new()),
+            states: Vec::new(),
+            outstanding: 0,
+            cadence,
+            next_sample: cadence.unwrap_or(Nanos::MAX),
+            samples: Vec::new(),
+            completions: Vec::new(),
+            sheds: Vec::new(),
+            arrived: 0,
+            completed: 0,
+            dropped: 0,
+            arrived_tokens: 0,
+            completed_tokens: 0,
+            dropped_tokens: 0,
+            handovers: 0,
+            borrowed_groups: 0,
+            borrowed_tokens: 0.0,
+            events: 0,
+            last_work_ns: 0,
+            last_pop_ns: 0,
+        }
+    }
+
+    /// Home global request `i` here (round-robin deal, in `i` order, so
+    /// shard-local scheduling order matches the serial per-cell order).
+    fn push_arrival(&mut self, i: usize, a: &Arrival) {
+        debug_assert_eq!(i % self.n_cells, self.ci);
+        let st = ReqState {
+            tokens: a.tokens.max(1),
+            cell: self.ci,
+            arrived: nanos_from_secs(a.time_s),
+            next_block: 0,
+            handed_over: false,
+        };
+        self.queue.schedule_at(st.arrived, Event::Arrive(i));
+        self.states.push(st);
+        self.outstanding += 1;
+    }
+
+    /// Mirror of the serial loop's initial control tick (scheduled after
+    /// all arrivals, matching the serial per-cell seq order).
+    fn schedule_control_tick(&mut self) {
+        if let Some(e) = self.cell.plane.epoch_s() {
+            self.queue
+                .schedule_at(nanos_from_secs(e), Event::ControlTick(self.ci));
+        }
+    }
+
+    /// Pop and process every event strictly before `window_end`.
+    ///
+    /// With a finite window, `record_idle` also records the cell's
+    /// sample rows for every cadence tick up to the window edge — the
+    /// cell is quiescent past its last pop, but a *later* window may
+    /// mutate it, so rows must be captured before the barrier. With the
+    /// infinite window the final post-drain state serves instead.
+    fn advance<R: Recorder>(&mut self, rec: &mut R, window_end: Nanos, record_idle: bool) {
+        while let Some(t) = self.queue.next_time() {
+            if t >= window_end {
+                break;
+            }
+            let (now, ev) = self.queue.pop().expect("peeked event present");
+            while self.next_sample <= now {
+                let row = sample_cell(&self.cell, self.next_sample);
+                self.samples.push(row);
+                self.next_sample = self
+                    .next_sample
+                    .saturating_add(self.cadence.expect("a due sample implies a cadence"));
+            }
+            self.events += 1;
+            self.last_pop_ns = now;
+            self.step(ev, now, rec);
+            rec.mark(now);
+        }
+        if let (true, Some(c)) = (record_idle, self.cadence) {
+            while self.next_sample < window_end {
+                let row = sample_cell(&self.cell, self.next_sample);
+                self.samples.push(row);
+                self.next_sample = self.next_sample.saturating_add(c);
+            }
+        }
+    }
+
+    /// One DES event — the shard-local mirror of the serial match arms.
+    /// Under [`HandoverPolicy::None`] an arrival's re-home is the
+    /// identity and block dispatch never reads neighbor cells, so empty
+    /// neighbor slices are passed to [`start_block_at`].
+    fn step<R: Recorder>(&mut self, ev: Event, now: Nanos, rec: &mut R) {
+        let i = match ev {
+            Event::ControlTick(ci) => {
+                debug_assert_eq!(ci, self.ci);
+                if self.outstanding > 0 {
+                    control_tick_at(&mut self.cell, self.ci, now, rec);
+                    if let Some(e) = self.cell.plane.epoch_s() {
+                        self.queue
+                            .schedule_in(nanos_from_secs(e), Event::ControlTick(self.ci));
+                    }
+                }
+                return;
+            }
+            Event::Arrive(i) => {
+                let st = &self.states[i / self.n_cells];
+                self.arrived += 1;
+                self.arrived_tokens += st.tokens as u64;
+                self.last_work_ns = now;
+                rec.on_event(&TelemetryEvent::Arrive {
+                    req: i,
+                    tokens: st.tokens,
+                    rr_home: self.ci,
+                    cell: self.ci,
+                    t: now,
+                });
+                i
+            }
+            Event::BlockDone(i) => {
+                self.last_work_ns = now;
+                let st = &mut self.states[i / self.n_cells];
+                st.next_block += 1;
+                if st.next_block >= self.params.n_blocks {
+                    self.completed += 1;
+                    self.completed_tokens += st.tokens as u64;
+                    self.outstanding -= 1;
+                    let lat_ms = secs_from_nanos(now - st.arrived) * 1e3;
+                    self.completions.push((now, lat_ms));
+                    rec.on_event(&TelemetryEvent::Completed {
+                        req: i,
+                        cell: self.ci,
+                        t: now,
+                        latency_ms: lat_ms,
+                    });
+                    return;
+                }
+                i
+            }
+        };
+        if self.params.backlog_delta_s > 0.0 {
+            let cell = &self.cell;
+            if cell.plane.epoch_s().is_some()
+                && (cell_backlog_s(cell, now) - cell.last_solve_backlog_s).abs()
+                    > self.params.backlog_delta_s
+            {
+                control_tick_at(&mut self.cell, self.ci, now, rec);
+            }
+        }
+        let li = i / self.n_cells;
+        let r = start_block_at(
+            &self.params,
+            &self.dispatcher,
+            &mut self.handover,
+            &mut self.cell,
+            &mut [],
+            &mut [],
+            &self.states[li],
+            i,
+            now,
+            rec,
+        );
+        if r.shed_tokens > 0.0 {
+            // Adding 0.0 is exact, so zero-shed blocks need no log entry.
+            self.sheds.push((now, r.shed_tokens));
+        }
+        self.borrowed_groups += r.borrowed_groups;
+        self.borrowed_tokens += r.borrowed_tokens;
+        if r.borrowed_groups > 0 && !self.states[li].handed_over {
+            self.states[li].handed_over = true;
+            self.handovers += 1;
+        }
+        match r.end {
+            Some(block_end) => {
+                rec.on_event(&TelemetryEvent::Block {
+                    req: i,
+                    cell: self.ci,
+                    block: self.states[li].next_block,
+                    start: now,
+                    end: block_end,
+                });
+                self.queue.schedule_at(block_end, Event::BlockDone(i));
+            }
+            None => {
+                self.dropped += 1;
+                self.dropped_tokens += self.states[li].tokens as u64;
+                self.outstanding -= 1;
+                rec.on_event(&TelemetryEvent::Dropped {
+                    req: i,
+                    cell: self.ci,
+                    t: now,
+                });
+            }
+        }
+    }
+}
+
+/// Deliver one sample tick: assemble the per-cell rows (recorded shard
+/// rows where present; a shard that went quiet before `t` — infinite
+/// window only — is read from its final, already-correct state).
+fn deliver_sample<P: Probe, R>(
+    shards: &[(CellShard, R)],
+    probe: &mut P,
+    t: Nanos,
+    idx: usize,
+    rows: &mut Vec<CellSample>,
+) {
+    rows.clear();
+    for (sh, _) in shards {
+        rows.push(match sh.samples.get(idx) {
+            Some(&row) => row,
+            None => sample_cell(&sh.cell, t),
+        });
+    }
+    probe.on_sample(t, rows);
+}
+
+/// K-way merge of per-shard `(time, value)` logs in canonical
+/// `(time, cell)` order — ties resolve lowest cell first, preserving
+/// shard-local order within a cell, i.e. the serial pop order.
+fn merge_in_order<R, T: Copy>(
+    shards: &[(CellShard, R)],
+    get: impl Fn(&CellShard) -> &[(Nanos, T)],
+    mut emit: impl FnMut(T),
+) {
+    let mut cur = vec![0usize; shards.len()];
+    loop {
+        let mut best: Option<(Nanos, usize)> = None;
+        for (ci, (sh, _)) in shards.iter().enumerate() {
+            if let Some(&(at, _)) = get(sh).get(cur[ci]) {
+                let better = match best {
+                    None => true,
+                    Some((bat, _)) => at < bat,
+                };
+                if better {
+                    best = Some((at, ci));
+                }
+            }
+        }
+        let Some((_, ci)) = best else { break };
+        let (_, v) = get(&shards[ci].0)[cur[ci]];
+        cur[ci] += 1;
+        emit(v);
+    }
+}
+
+impl ClusterSim {
+    /// Sharded counterpart of [`ClusterSim::run`]: per-cell shards on up
+    /// to `threads` workers (0 = one per core), byte-identical outcome.
+    pub fn run_sharded(&mut self, arrivals: &[Arrival], threads: usize) -> ClusterOutcome {
+        self.run_sharded_probed(arrivals, threads, &mut NullProbe)
+    }
+
+    /// Sharded counterpart of [`ClusterSim::run_probed`]. The probe
+    /// observes the replayed canonical event/sample streams — identical
+    /// callbacks, in identical order, to the serial engine.
+    ///
+    /// Falls back to the serial loop when sharding cannot help or would
+    /// require zero-lookahead cross-cell reads: a single cell, a single
+    /// worker, or an interacting handover policy (re-homing and borrow
+    /// both inspect live neighbor state at the event instant).
+    pub fn run_sharded_probed<P: Probe>(
+        &mut self,
+        arrivals: &[Arrival],
+        threads: usize,
+        probe: &mut P,
+    ) -> ClusterOutcome {
+        let n_cells = self.cells.len();
+        let workers = exec::resolve_threads(threads).min(n_cells.max(1));
+        if n_cells <= 1 || workers <= 1 || self.handover.policy() != HandoverPolicy::None {
+            return self.run_probed(arrivals, probe);
+        }
+        if probe.is_null() {
+            self.run_sharded_inner::<P, NullProbe>(arrivals, threads, probe)
+        } else {
+            self.run_sharded_inner::<P, EventLog>(arrivals, threads, probe)
+        }
+    }
+
+    fn run_sharded_inner<P: Probe, R: Recorder>(
+        &mut self,
+        arrivals: &[Arrival],
+        threads: usize,
+        probe: &mut P,
+    ) -> ClusterOutcome {
+        let n_cells = self.cells.len();
+        let cadence = probe.sample_cadence().map(|c| c.max(1));
+        // Conservative sync window. Under `HandoverPolicy::None` (the
+        // only policy that reaches here) cells are fully independent:
+        // the lookahead is unbounded and the run is one window. A
+        // `set_sync_window_s` override exercises the finite-window
+        // barrier machinery; output is identical for any positive value.
+        let window = self
+            .sync_window_s
+            .map(nanos_from_secs)
+            .filter(|&w| w > 0)
+            .unwrap_or(Nanos::MAX);
+        let finite = window != Nanos::MAX;
+
+        let cells = std::mem::take(&mut self.cells);
+        let mut shards: Vec<CellShard> = cells
+            .into_iter()
+            .enumerate()
+            .map(|(ci, cell)| {
+                CellShard::new(
+                    ci,
+                    n_cells,
+                    cell,
+                    self.params,
+                    self.dispatcher,
+                    self.handover.clone(),
+                    cadence,
+                )
+            })
+            .collect();
+        for (i, a) in arrivals.iter().enumerate() {
+            shards[i % n_cells].push_arrival(i, a);
+        }
+        for sh in &mut shards {
+            sh.schedule_control_tick();
+        }
+
+        // Window barrier loop: every shard advances to the window edge
+        // in parallel, the coordinator re-arms, until all queues drain.
+        // Slots hand each worker exclusive ownership of its shard (and
+        // recorder) without moving them across the scope boundary.
+        let slots: Vec<Mutex<Option<(CellShard, R)>>> = shards
+            .into_iter()
+            .map(|s| Mutex::new(Some((s, R::default()))))
+            .collect();
+        let mut window_end = window;
+        loop {
+            exec::map_indexed(n_cells, threads, |ci| {
+                let mut slot = slots[ci].lock().expect("shard slot poisoned");
+                let (shard, rec) = slot.as_mut().expect("shard present");
+                shard.advance(rec, window_end, finite);
+            });
+            let drained = slots.iter().all(|s| {
+                s.lock()
+                    .expect("shard slot poisoned")
+                    .as_ref()
+                    .expect("shard present")
+                    .0
+                    .queue
+                    .is_empty()
+            });
+            if drained {
+                break;
+            }
+            window_end = window_end.saturating_add(window);
+        }
+        let shards: Vec<(CellShard, R)> = slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("shard slot poisoned")
+                    .expect("shard present")
+            })
+            .collect();
+
+        // ---- Drain the mailboxes in canonical (time, cell, seq) order.
+        // The serial loop fires a sample tick at `s` on the first pop at
+        // or after `s`, so the last tick fired is bounded by the last
+        // pop anywhere (control ticks included).
+        let t_pop_max = shards
+            .iter()
+            .map(|(sh, _)| sh.last_pop_ns)
+            .max()
+            .unwrap_or(0);
+        let mut next_sample = cadence.unwrap_or(Nanos::MAX);
+        let mut sample_idx = 0usize;
+        let mut rows: Vec<CellSample> = Vec::with_capacity(n_cells);
+        let mut run_cur = vec![0usize; n_cells];
+        let mut ev_cur = vec![0usize; n_cells];
+        loop {
+            let mut best: Option<(Nanos, usize)> = None;
+            for (ci, (_, rec)) in shards.iter().enumerate() {
+                if let Some(&(at, _)) = rec.runs().get(run_cur[ci]) {
+                    let better = match best {
+                        None => true,
+                        Some((bat, _)) => at < bat,
+                    };
+                    if better {
+                        best = Some((at, ci));
+                    }
+                }
+            }
+            let Some((at, ci)) = best else { break };
+            while next_sample <= at {
+                deliver_sample(&shards, probe, next_sample, sample_idx, &mut rows);
+                sample_idx += 1;
+                next_sample = next_sample
+                    .saturating_add(cadence.expect("a due sample implies a cadence"));
+            }
+            let (_, count) = shards[ci].1.runs()[run_cur[ci]];
+            run_cur[ci] += 1;
+            let start = ev_cur[ci];
+            ev_cur[ci] = start + count as usize;
+            for e in &shards[ci].1.events()[start..start + count as usize] {
+                probe.on_event(e);
+            }
+        }
+        // Trailing ticks past the last recorded run but within the pop
+        // horizon (the serial loop fires them off event-less pops).
+        while next_sample <= t_pop_max {
+            deliver_sample(&shards, probe, next_sample, sample_idx, &mut rows);
+            sample_idx += 1;
+            next_sample = next_sample
+                .saturating_add(cadence.expect("a due sample implies a cadence"));
+        }
+
+        // Latency and shed-token accumulators replay in serial order so
+        // floating-point rounding is bit-identical, not just close.
+        let mut latency_ms = SteadyState::new(self.params.warmup_frac);
+        merge_in_order(&shards, |sh| &sh.completions, |lat| latency_ms.record(lat));
+        let mut shed_tokens = 0.0f64;
+        merge_in_order(&shards, |sh| &sh.sheds, |s| shed_tokens += s);
+
+        let mut arrived = 0usize;
+        let mut completed = 0usize;
+        let mut dropped = 0usize;
+        let mut arrived_tokens = 0u64;
+        let mut completed_tokens = 0u64;
+        let mut dropped_tokens = 0u64;
+        let mut handovers = 0usize;
+        let mut borrowed_groups = 0usize;
+        let mut borrowed_tokens = 0.0f64;
+        let mut events = 0usize;
+        let mut last_work_ns: Nanos = 0;
+        for (sh, _) in &shards {
+            arrived += sh.arrived;
+            completed += sh.completed;
+            dropped += sh.dropped;
+            arrived_tokens += sh.arrived_tokens;
+            completed_tokens += sh.completed_tokens;
+            dropped_tokens += sh.dropped_tokens;
+            handovers += sh.handovers;
+            borrowed_groups += sh.borrowed_groups;
+            borrowed_tokens += sh.borrowed_tokens;
+            events += sh.events;
+            last_work_ns = last_work_ns.max(sh.last_work_ns);
+        }
+
+        self.cells = shards.into_iter().map(|(sh, _)| sh.cell).collect();
+
+        let makespan_s = secs_from_nanos(last_work_ns);
+        let utilization = self
+            .cells
+            .iter()
+            .map(|c| c.dev.busy.iter().map(|u| u.fraction(makespan_s)).collect())
+            .collect();
+        let control = self.cells.iter().map(|c| c.plane.stats()).collect();
+        let mut solver = crate::control::SolverIntrospection::default();
+        for c in &self.cells {
+            solver.absorb(&c.plane.solver_stats());
+        }
+        ClusterOutcome {
+            arrived,
+            completed,
+            dropped,
+            arrived_tokens,
+            completed_tokens,
+            dropped_tokens,
+            shed_tokens,
+            handovers,
+            borrowed_groups,
+            borrowed_tokens,
+            in_flight: arrived - completed - dropped,
+            events,
+            makespan_s,
+            latency_ms,
+            utilization,
+            control,
+            solver,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ControlKind};
+    use crate::workload::{ArrivalProcess, Benchmark};
+
+    fn cfg(n_cells: usize) -> ClusterConfig {
+        let mut cfg = ClusterConfig::edge_default().with_n_cells(n_cells);
+        cfg.model.n_blocks = 4; // keep tests fast
+        cfg
+    }
+
+    fn arrivals(n: usize, rate: f64, seed: u64) -> Vec<Arrival> {
+        ArrivalProcess::Poisson { rate_rps: rate }.generate(n, Benchmark::Piqa, seed)
+    }
+
+    fn assert_outcomes_identical(a: &ClusterOutcome, b: &ClusterOutcome) {
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.arrived_tokens, b.arrived_tokens);
+        assert_eq!(a.completed_tokens, b.completed_tokens);
+        assert_eq!(a.dropped_tokens, b.dropped_tokens);
+        assert_eq!(a.shed_tokens, b.shed_tokens);
+        assert_eq!(a.handovers, b.handovers);
+        assert_eq!(a.borrowed_groups, b.borrowed_groups);
+        assert_eq!(a.borrowed_tokens, b.borrowed_tokens);
+        assert_eq!(a.in_flight, b.in_flight);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
+        assert_eq!(a.utilization, b.utilization);
+        assert_eq!(a.control, b.control);
+        assert_eq!(a.solver, b.solver);
+    }
+
+    #[test]
+    fn sharded_matches_serial_bitwise() {
+        let arr = arrivals(48, 12.0, 7);
+        let mut serial = ClusterSim::new(&cfg(4)).unwrap();
+        let base = serial.run(&arr);
+        for threads in [2, 4] {
+            let mut sim = ClusterSim::new(&cfg(4)).unwrap();
+            let out = sim.run_sharded(&arr, threads);
+            assert_outcomes_identical(&base, &out);
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_with_adaptive_control() {
+        let mut c = cfg(4);
+        c.control = ControlKind::Adaptive;
+        let arr = arrivals(40, 16.0, 11);
+        let mut serial = ClusterSim::new(&c).unwrap();
+        let base = serial.run(&arr);
+        let mut sim = ClusterSim::new(&c).unwrap();
+        let out = sim.run_sharded(&arr, 4);
+        assert_outcomes_identical(&base, &out);
+    }
+
+    #[test]
+    fn finite_sync_window_changes_nothing() {
+        let mut c = cfg(3);
+        c.control = ControlKind::Adaptive;
+        let arr = arrivals(30, 9.0, 5);
+        let mut serial = ClusterSim::new(&c).unwrap();
+        let base = serial.run(&arr);
+        for window_s in [0.01, 0.2, 5.0] {
+            let mut sim = ClusterSim::new(&c).unwrap();
+            sim.set_sync_window_s(Some(window_s));
+            let out = sim.run_sharded(&arr, 3);
+            assert_outcomes_identical(&base, &out);
+        }
+    }
+
+    #[test]
+    fn single_cell_and_single_thread_fall_back_to_serial() {
+        let arr = arrivals(20, 4.0, 1);
+        let mut one_cell = ClusterSim::new(&cfg(1)).unwrap();
+        let a = one_cell.run_sharded(&arr, 4);
+        let mut serial = ClusterSim::new(&cfg(1)).unwrap();
+        assert_outcomes_identical(&serial.run(&arr), &a);
+
+        let mut one_thread = ClusterSim::new(&cfg(4)).unwrap();
+        let b = one_thread.run_sharded(&arr, 1);
+        let mut serial4 = ClusterSim::new(&cfg(4)).unwrap();
+        assert_outcomes_identical(&serial4.run(&arr), &b);
+    }
+
+    #[test]
+    fn interacting_handover_policies_fall_back_to_serial() {
+        for policy in [HandoverPolicy::RehomeOnArrival, HandoverPolicy::BorrowExpert] {
+            let mut c = cfg(3);
+            c.handover = policy;
+            let arr = arrivals(24, 8.0, 2);
+            let mut serial = ClusterSim::new(&c).unwrap();
+            let base = serial.run(&arr);
+            let mut sim = ClusterSim::new(&c).unwrap();
+            let out = sim.run_sharded(&arr, 3);
+            assert_outcomes_identical(&base, &out);
+        }
+    }
+
+    #[test]
+    fn probe_streams_replay_in_serial_order() {
+        #[derive(Default)]
+        struct Trail {
+            log: Vec<String>,
+        }
+        impl Probe for Trail {
+            fn sample_cadence(&self) -> Option<Nanos> {
+                Some(5_000_000) // 5 ms of sim time
+            }
+            fn on_event(&mut self, event: &TelemetryEvent) {
+                self.log.push(format!("{event:?}"));
+            }
+            fn on_sample(&mut self, t: Nanos, cells: &[CellSample]) {
+                self.log.push(format!("sample@{t}:{cells:?}"));
+            }
+        }
+
+        let mut c = cfg(4);
+        c.control = ControlKind::Adaptive;
+        let arr = arrivals(32, 20.0, 13);
+
+        let mut serial = ClusterSim::new(&c).unwrap();
+        let mut base_probe = Trail::default();
+        let base = serial.run_probed(&arr, &mut base_probe);
+
+        let mut sim = ClusterSim::new(&c).unwrap();
+        let mut probe = Trail::default();
+        let out = sim.run_sharded_probed(&arr, 4, &mut probe);
+
+        assert_outcomes_identical(&base, &out);
+        assert_eq!(base_probe.log.len(), probe.log.len());
+        assert_eq!(base_probe.log, probe.log);
+    }
+
+    #[test]
+    fn reset_after_sharded_run_restores_fresh_behaviour() {
+        let arr = arrivals(24, 8.0, 3);
+        let mut sim = ClusterSim::new(&cfg(2)).unwrap();
+        let a = sim.run_sharded(&arr, 2);
+        sim.reset().unwrap();
+        let b = sim.run_sharded(&arr, 2);
+        assert_outcomes_identical(&a, &b);
+    }
+}

@@ -86,39 +86,73 @@ use crate::util::clock::VirtualClock;
 use crate::wireless::ChannelSimulator;
 use crate::workload::WorkloadGen;
 
+/// Per-device hot state of one cell, struct-of-arrays: every array is
+/// indexed by device, so the event loop's innermost scans (queue
+/// instants for dispatch, availability masks, token accounting) each
+/// walk one dense array instead of striding across per-device structs.
+pub(super) struct DeviceState {
+    /// Instant each device's FIFO queue drains.
+    pub(super) busy_until: Vec<Nanos>,
+    pub(super) busy: Vec<Utilization>,
+    pub(super) online: Vec<bool>,
+    /// Tokens dispatched per device since the last control epoch.
+    pub(super) served_tokens: Vec<f64>,
+    /// Tentative queue instants while a block is placed (pass 1).
+    pub(super) scratch_busy: Vec<Nanos>,
+}
+
+impl DeviceState {
+    fn new(n_dev: usize) -> Self {
+        Self {
+            busy_until: vec![0; n_dev],
+            busy: vec![Utilization::default(); n_dev],
+            online: vec![true; n_dev],
+            served_tokens: vec![0.0; n_dev],
+            scratch_busy: vec![0; n_dev],
+        }
+    }
+
+    pub(super) fn len(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    /// Total committed busy seconds across devices.
+    pub(super) fn busy_seconds(&self) -> f64 {
+        self.busy.iter().map(|u| u.busy_seconds()).sum()
+    }
+
+    pub(super) fn online_count(&self) -> usize {
+        self.online.iter().filter(|&&on| on).count()
+    }
+}
+
 /// One cell's runtime state: control plane, policy and FIFO queues.
-struct Cell {
+pub(super) struct Cell {
     /// Owns (bandwidth, t_per_token, placement); service times are read
     /// through it on every dispatch so re-allocations take effect
     /// immediately.
-    plane: Box<dyn ControlPlane>,
-    policy: Box<dyn SelectionPolicy>,
-    gates: WorkloadGen,
-    /// Instant each device's FIFO queue drains.
-    busy_until: Vec<Nanos>,
-    busy: Vec<Utilization>,
-    online: Vec<bool>,
-    /// Tokens dispatched per device since the last control epoch.
-    served_tokens: Vec<f64>,
+    pub(super) plane: Box<dyn ControlPlane>,
+    pub(super) policy: Box<dyn SelectionPolicy>,
+    pub(super) gates: WorkloadGen,
+    /// Per-device hot state (struct-of-arrays).
+    pub(super) dev: DeviceState,
     /// Tokens dispatched per expert since the last control epoch.
-    expert_tokens: Vec<f64>,
+    pub(super) expert_tokens: Vec<f64>,
     /// Reusable per-block staging state (no per-block allocation):
     /// per-expert latency estimate fed to the selection policy, expert
-    /// liveness, the selection's per-expert token counts, queue instants
-    /// as groups are tentatively placed, the admitted
+    /// liveness, the selection's per-expert token counts, the admitted
     /// `(expert, device, tokens, service seconds)` placements, and the
     /// under-queue-bound replica candidates.
-    est: TokenLatencies,
-    expert_online: Vec<bool>,
-    counts: Vec<f64>,
-    scratch_busy: Vec<Nanos>,
-    placed: Vec<PlacedGroup>,
-    cand: Vec<usize>,
+    pub(super) est: TokenLatencies,
+    pub(super) expert_online: Vec<bool>,
+    pub(super) counts: Vec<f64>,
+    pub(super) placed: Vec<PlacedGroup>,
+    pub(super) cand: Vec<usize>,
     /// Reusable per-tick demand vector (backlog → tokens).
-    demand: Vec<f64>,
+    pub(super) demand: Vec<f64>,
     /// Total queued seconds at the last control solve — the reference
     /// the backlog-delta trigger measures drift against.
-    last_solve_backlog_s: f64,
+    pub(super) last_solve_backlog_s: f64,
 }
 
 /// One admitted local placement of a block, staged in pass 1 and
@@ -140,11 +174,35 @@ struct PlacedGroup {
 /// Total queued seconds across a cell's devices at `now` — the signal
 /// the backlog-delta trigger compares against the last solve (offline
 /// devices keep their committed backlog; it still has to drain).
-fn cell_backlog_s(cell: &Cell, now: Nanos) -> f64 {
-    cell.busy_until
+pub(super) fn cell_backlog_s(cell: &Cell, now: Nanos) -> f64 {
+    cell.dev
+        .busy_until
         .iter()
         .map(|&b| secs_from_nanos(b.saturating_sub(now)))
         .sum()
+}
+
+/// One cell's [`CellSample`] snapshot at virtual time `now` — shared by
+/// the serial sampler ([`ClusterSim::run_probed`]) and the sharded
+/// engine's per-shard recorders so both observe identical rows.
+pub(super) fn sample_cell(cell: &Cell, now: Nanos) -> CellSample {
+    let placement = cell.plane.placement();
+    let n_experts = cell.expert_tokens.len();
+    let mut live_replicas = 0usize;
+    for e in 0..n_experts {
+        live_replicas += placement
+            .replicas(e)
+            .iter()
+            .filter(|&&k| cell.dev.online[k])
+            .count();
+    }
+    CellSample {
+        backlog_s: cell_backlog_s(cell, now),
+        busy_s: cell.dev.busy_seconds(),
+        devices: cell.dev.len(),
+        online_devices: cell.dev.online_count(),
+        live_replicas,
+    }
 }
 
 /// What the cluster-level handover layer may read and (for staged
@@ -155,52 +213,52 @@ impl HandoverCell for Cell {
         self.plane.placement().replicas(expert)
     }
     fn busy_until(&self) -> &[Nanos] {
-        &self.busy_until
+        &self.dev.busy_until
     }
     fn set_busy_until(&mut self, device: usize, at: Nanos) {
-        self.busy_until[device] = at;
+        self.dev.busy_until[device] = at;
     }
     fn t_per_token(&self) -> &[f64] {
         self.plane.t_per_token()
     }
     fn online(&self) -> &[bool] {
-        &self.online
+        &self.dev.online
     }
     fn commit_remote(&mut self, device: usize, expert: usize, tokens: f64, service_s: f64) {
-        self.busy[device].add_busy(service_s);
-        self.served_tokens[device] += tokens;
+        self.dev.busy[device].add_busy(service_s);
+        self.dev.served_tokens[device] += tokens;
         self.expert_tokens[expert] += tokens;
     }
 }
 
-enum Event {
+pub(super) enum Event {
     Arrive(usize),
     BlockDone(usize),
     /// Epoch boundary for one cell's adaptive control plane.
     ControlTick(usize),
 }
 
-struct ReqState {
-    tokens: usize,
-    cell: usize,
-    arrived: Nanos,
-    next_block: usize,
+pub(super) struct ReqState {
+    pub(super) tokens: usize,
+    pub(super) cell: usize,
+    pub(super) arrived: Nanos,
+    pub(super) next_block: usize,
     /// The request experienced a handover action (re-home or borrow) —
     /// each request counts at most once toward the handover rate.
-    handed_over: bool,
+    pub(super) handed_over: bool,
 }
 
 /// Outcome of dispatching one block.
-struct BlockResult {
+pub(super) struct BlockResult {
     /// Completion instant, or `None` when admission control rejected the
     /// request.
-    end: Option<Nanos>,
+    pub(super) end: Option<Nanos>,
     /// Token groups shed by [`DropPolicy::ShedTokens`] in this block.
-    shed_tokens: f64,
+    pub(super) shed_tokens: f64,
     /// Expert groups served by a neighbor cell in this block.
-    borrowed_groups: usize,
+    pub(super) borrowed_groups: usize,
     /// Tokens those borrowed groups carried.
-    borrowed_tokens: f64,
+    pub(super) borrowed_tokens: f64,
 }
 
 /// Result of one simulation run (all arrivals drained).
@@ -347,39 +405,43 @@ impl ClusterOutcome {
 /// borrowed [`ClusterConfig`] at construction so sweeps never clone the
 /// full config (cell/device lists stay with the caller).
 #[derive(Debug, Clone, Copy)]
-struct SimParams {
-    n_blocks: usize,
-    n_experts: usize,
-    top_k: usize,
-    vocab: usize,
-    queue_limit_s: f64,
-    drop_policy: DropPolicy,
+pub(super) struct SimParams {
+    pub(super) n_blocks: usize,
+    pub(super) n_experts: usize,
+    pub(super) top_k: usize,
+    pub(super) vocab: usize,
+    pub(super) queue_limit_s: f64,
+    pub(super) drop_policy: DropPolicy,
     /// Backlog drift (queued seconds) since the last solve that triggers
     /// an immediate adaptive re-solve between epoch ticks (0 = off).
-    backlog_delta_s: f64,
-    warmup_frac: f64,
-    gate_sharpness: f64,
-    gate_bias: f64,
-    seed: u64,
+    pub(super) backlog_delta_s: f64,
+    pub(super) warmup_frac: f64,
+    pub(super) gate_sharpness: f64,
+    pub(super) gate_bias: f64,
+    pub(super) seed: u64,
 }
 
 /// The simulator. Construction borrows the config; [`ClusterSim::run`]
 /// consumes one arrival stream and leaves queues drained —
 /// [`ClusterSim::reset`] restores the just-built state for the next run.
 pub struct ClusterSim {
-    params: SimParams,
+    pub(super) params: SimParams,
     policy_cfg: PolicyConfig,
     control: ControlKind,
     copts: ControlOptions,
     cache_capacity: usize,
-    dispatcher: Dispatcher,
+    pub(super) dispatcher: Dispatcher,
     /// Cluster-level dispatch layer: arrival re-homing and cross-cell
     /// expert borrowing (reused scratch, no hot-path allocation).
-    handover: HandoverCoordinator,
+    pub(super) handover: HandoverCoordinator,
     /// Frozen per-cell link contexts — the rebuild template for
     /// [`Self::reset`].
     states: Vec<LinkState>,
-    cells: Vec<Cell>,
+    pub(super) cells: Vec<Cell>,
+    /// Explicit conservative sync-window override for the sharded engine
+    /// (seconds). `None` lets [`crate::cluster::shard`] pick the natural
+    /// bound for the configured handover policy.
+    pub(super) sync_window_s: Option<f64>,
 }
 
 impl ClusterSim {
@@ -426,9 +488,11 @@ impl ClusterSim {
             },
             cache_capacity: cfg.cache_capacity,
             dispatcher: Dispatcher::new(cfg.dispatch),
-            handover: HandoverCoordinator::new(cfg.handover, cfg.backhaul_s_per_token),
+            handover: HandoverCoordinator::new(cfg.handover, cfg.backhaul_s_per_token)
+                .with_backhaul_matrix(cfg.backhaul_matrix.clone()),
             states,
             cells: Vec::new(),
+            sync_window_s: None,
         };
         sim.build_cells()?;
         Ok(sim)
@@ -461,17 +525,13 @@ impl ClusterSim {
                     self.params.seed.wrapping_add(0xce11).wrapping_add(ci as u64),
                     self.params.vocab,
                 ),
-                busy_until: vec![0; n_dev],
-                busy: vec![Utilization::default(); n_dev],
-                online: vec![true; n_dev],
-                served_tokens: vec![0.0; n_dev],
+                dev: DeviceState::new(n_dev),
                 expert_tokens: vec![0.0; n_experts],
                 est: TokenLatencies {
                     per_token: Vec::with_capacity(n_experts),
                 },
                 expert_online: Vec::with_capacity(n_experts),
                 counts: Vec::with_capacity(n_experts),
-                scratch_busy: vec![0; n_dev],
                 placed: Vec::with_capacity(n_experts),
                 cand: Vec::with_capacity(n_dev),
                 demand: Vec::with_capacity(n_dev),
@@ -487,6 +547,18 @@ impl ClusterSim {
     /// config, so sweeps and benches can reuse one instance across runs.
     pub fn reset(&mut self) -> anyhow::Result<()> {
         self.build_cells()
+    }
+
+    /// Override the sharded engine's conservative sync window (seconds;
+    /// `None` restores the policy-derived default). Any positive window
+    /// yields byte-identical output — smaller windows just synchronize
+    /// more often — so this knob exists for tests that exercise the
+    /// finite-window machinery and for experiments on sync overhead.
+    pub fn set_sync_window_s(&mut self, window_s: Option<f64>) {
+        if let Some(w) = window_s {
+            assert!(w.is_finite() && w > 0.0, "sync window must be positive");
+        }
+        self.sync_window_s = window_s;
     }
 
     /// Expert placement of one cell (inspection / tests).
@@ -515,7 +587,7 @@ impl ClusterSim {
     /// ranking neighbor cells for a borrow (inspection / tests).
     pub fn cell_load(&self, cell: usize, now_s: f64) -> CellLoad {
         let c = &self.cells[cell];
-        CellLoad::observe(nanos_from_secs(now_s), &c.busy_until, &c.online)
+        CellLoad::observe(nanos_from_secs(now_s), &c.dev.busy_until, &c.dev.online)
     }
 
     /// Force a control epoch now with an explicit demand signal
@@ -547,17 +619,17 @@ impl ClusterSim {
         probe: &mut P,
     ) {
         let c = &mut self.cells[cell];
-        if c.online[device] == online {
+        if c.dev.online[device] == online {
             return; // idempotent: a no-op change must not trigger a re-solve
         }
-        c.online[device] = online;
+        c.dev.online[device] = online;
         probe.on_event(&TelemetryEvent::DeviceOnline {
             cell,
             device,
             online,
         });
         // Split borrow: the plane reads the mask it does not own.
-        c.plane.on_topology_change(&c.online);
+        c.plane.on_topology_change(&c.dev.online);
     }
 
     /// Per-cell state snapshot for [`Probe::on_sample`], written into
@@ -565,23 +637,7 @@ impl ClusterSim {
     fn snapshot_cells(&self, now: Nanos, out: &mut Vec<CellSample>) {
         out.clear();
         for c in &self.cells {
-            let placement = c.plane.placement();
-            let n_experts = c.expert_tokens.len();
-            let mut live_replicas = 0usize;
-            for e in 0..n_experts {
-                live_replicas += placement
-                    .replicas(e)
-                    .iter()
-                    .filter(|&&k| c.online[k])
-                    .count();
-            }
-            out.push(CellSample {
-                backlog_s: cell_backlog_s(c, now),
-                busy_s: c.busy.iter().map(|u| u.busy_seconds()).sum(),
-                devices: c.busy_until.len(),
-                online_devices: c.online.iter().filter(|&&on| on).count(),
-                live_replicas,
-            });
+            out.push(sample_cell(c, now));
         }
     }
 
@@ -617,16 +673,26 @@ impl ClusterSim {
                 handed_over: false,
             })
             .collect();
+        // Events are scheduled on the owning cell's lane: simultaneous
+        // events across cells fire in cell order, which makes the serial
+        // pop order the canonical k-way merge of per-cell streams by
+        // `(time, cell, seq)` — the order the sharded engine reproduces.
         for (i, st) in states.iter().enumerate() {
-            queue.schedule_at(st.arrived, Event::Arrive(i));
+            queue.schedule_at_in_lane(st.arrived, st.cell as u32, Event::Arrive(i));
         }
-        // Adaptive cells tick on their epoch cadence while requests are
-        // outstanding; ticks stop rescheduling once every request has
-        // completed or been dropped, so finite streams still drain.
-        let mut outstanding = states.len();
+        // Adaptive cells tick on their epoch cadence while the cell has
+        // requests outstanding; ticks stop rescheduling once every
+        // request homed there has completed or been dropped, so finite
+        // streams still drain. The count is per cell (a re-home at
+        // arrival moves it), so an idle cell's plane stops re-solving
+        // while its neighbors still serve.
+        let mut outstanding = vec![0usize; n_cells];
+        for st in &states {
+            outstanding[st.cell] += 1;
+        }
         for ci in 0..n_cells {
             if let Some(e) = self.cells[ci].plane.epoch_s() {
-                queue.schedule_at(nanos_from_secs(e), Event::ControlTick(ci));
+                queue.schedule_at_in_lane(nanos_from_secs(e), ci as u32, Event::ControlTick(ci));
             }
         }
 
@@ -664,14 +730,18 @@ impl ClusterSim {
             events += 1;
             let i = match ev {
                 Event::ControlTick(ci) => {
-                    // A tick popping after the last request completed
-                    // must neither re-solve (it would inflate the
-                    // resolves/churn columns with work that can't matter)
-                    // nor reschedule.
-                    if outstanding > 0 {
+                    // A tick popping after the cell's last request
+                    // completed must neither re-solve (it would inflate
+                    // the resolves/churn columns with work that can't
+                    // matter) nor reschedule.
+                    if outstanding[ci] > 0 {
                         self.control_tick_probed(ci, now, probe);
                         if let Some(e) = self.cells[ci].plane.epoch_s() {
-                            queue.schedule_in(nanos_from_secs(e), Event::ControlTick(ci));
+                            queue.schedule_in_lane(
+                                nanos_from_secs(e),
+                                ci as u32,
+                                Event::ControlTick(ci),
+                            );
                         }
                     }
                     continue;
@@ -691,6 +761,8 @@ impl ClusterSim {
                     if chosen != rr_home {
                         states[i].handed_over = true;
                         handovers += 1;
+                        outstanding[rr_home] -= 1;
+                        outstanding[chosen] += 1;
                     }
                     probe.on_event(&TelemetryEvent::Arrive {
                         req: i,
@@ -707,7 +779,7 @@ impl ClusterSim {
                     if states[i].next_block >= n_blocks {
                         completed += 1;
                         completed_tokens += states[i].tokens as u64;
-                        outstanding -= 1;
+                        outstanding[states[i].cell] -= 1;
                         let lat_ms = secs_from_nanos(now - states[i].arrived) * 1e3;
                         latency_ms.record(lat_ms);
                         probe.on_event(&TelemetryEvent::Completed {
@@ -753,12 +825,16 @@ impl ClusterSim {
                         start: now,
                         end: block_end,
                     });
-                    queue.schedule_at(block_end, Event::BlockDone(i));
+                    queue.schedule_at_in_lane(
+                        block_end,
+                        states[i].cell as u32,
+                        Event::BlockDone(i),
+                    );
                 }
                 None => {
                     dropped += 1;
                     dropped_tokens += states[i].tokens as u64;
-                    outstanding -= 1;
+                    outstanding[states[i].cell] -= 1;
                     probe.on_event(&TelemetryEvent::Dropped {
                         req: i,
                         cell: states[i].cell,
@@ -772,7 +848,7 @@ impl ClusterSim {
         let utilization = self
             .cells
             .iter()
-            .map(|c| c.busy.iter().map(|u| u.fraction(makespan_s)).collect())
+            .map(|c| c.dev.busy.iter().map(|u| u.fraction(makespan_s)).collect())
             .collect();
         let control = self.cells.iter().map(|c| c.plane.stats()).collect();
         let mut solver = SolverIntrospection::default();
@@ -809,54 +885,7 @@ impl ClusterSim {
     /// advanced) — hysteresis-suppressed epochs and static planes stay
     /// silent.
     fn control_tick_probed<P: Probe>(&mut self, ci: usize, now: Nanos, probe: &mut P) {
-        let solves_before = self.cells[ci].plane.solver_stats().solves;
-        let cell = &mut self.cells[ci];
-        let n_dev = cell.busy_until.len();
-        cell.demand.clear();
-        cell.demand.resize(n_dev, 0.0);
-        let mut backlog_total_s = 0.0;
-        {
-            let t = cell.plane.t_per_token();
-            for k in 0..n_dev {
-                let backlog_s = secs_from_nanos(cell.busy_until[k].saturating_sub(now));
-                backlog_total_s += backlog_s;
-                let backlog_tokens = if t[k].is_finite() && t[k] > 0.0 {
-                    backlog_s / t[k]
-                } else {
-                    0.0
-                };
-                // Demand proxy: the larger of current backlog and the
-                // epoch's dispatches. Tokens routed this epoch that are
-                // still queued appear in both signals, so summing would
-                // double-count momentarily backlogged devices and make
-                // the re-solve overshoot; the max never double-counts,
-                // and recent dispatches keep a device's share alive even
-                // when its queue happens to be drained.
-                cell.demand[k] = backlog_tokens.max(cell.served_tokens[k]);
-            }
-        }
-        cell.plane.on_epoch(&cell.demand, &cell.expert_tokens);
-        // The drift reference resets on every solve attempt (even one
-        // hysteresis suppressed), so the trigger measures *new* drift
-        // rather than re-firing on the same backlog every block.
-        cell.last_solve_backlog_s = backlog_total_s;
-        for v in &mut cell.served_tokens {
-            *v = 0.0;
-        }
-        for v in &mut cell.expert_tokens {
-            *v = 0.0;
-        }
-        let after = cell.plane.solver_stats();
-        if after.solves > solves_before {
-            probe.on_event(&TelemetryEvent::ControlResolve {
-                cell: ci,
-                t: now,
-                iterations: after.last_iterations,
-                objective: after.last_objective,
-                warm: after.last_warm,
-                converged: after.last_converged,
-            });
-        }
+        control_tick_at(&mut self.cells[ci], ci, now, probe);
     }
 
     /// Dispatch one block of one request; returns the block's completion
@@ -870,84 +899,307 @@ impl ClusterSim {
         now: Nanos,
         probe: &mut P,
     ) -> BlockResult {
-        let n_experts = self.params.n_experts;
-        let queue_limit_s = self.params.queue_limit_s;
-        let drop_policy = self.params.drop_policy;
-        let top_k = self.params.top_k;
-        let gate_sharpness = self.params.gate_sharpness;
-        let gate_bias = self.params.gate_bias;
         // Split borrow around the home cell: `left`/`right` are the
         // neighbor cells the handover layer may stage borrows into while
         // the home cell stays mutably held.
         let (left, rest) = self.cells.split_at_mut(st.cell);
         let (cell, right) = rest.split_first_mut().expect("valid home cell index");
-        let gate = GateWeights::new(cell.gates.synthetic_gate_weights_biased(
-            st.tokens,
-            n_experts,
-            gate_sharpness,
-            gate_bias,
-        ));
-        // Service times and placement come from the control plane *now*:
-        // an epoch re-solve between blocks redirects this dispatch.
-        let t_per_token = cell.plane.t_per_token();
-        let placement = cell.plane.placement();
-        // Per-expert latency estimate (best online replica) and liveness,
-        // in the cell's reused scratch.
-        cell.est.per_token.clear();
-        cell.est.per_token.resize(n_experts, f64::INFINITY);
-        cell.expert_online.clear();
-        cell.expert_online.resize(n_experts, false);
-        for e in 0..n_experts {
-            for &k in placement.replicas(e) {
-                if cell.online[k] {
-                    cell.expert_online[e] = true;
-                    if t_per_token[k] < cell.est.per_token[e] {
-                        cell.est.per_token[e] = t_per_token[k];
-                    }
+        start_block_at(
+            &self.params,
+            &self.dispatcher,
+            &mut self.handover,
+            cell,
+            left,
+            right,
+            st,
+            req,
+            now,
+            probe,
+        )
+    }
+}
+
+/// Epoch boundary for one cell: convert queue backlog to a token demand
+/// vector (in the cell's reused scratch) and hand it — with the
+/// per-expert counts since the last tick — to the control plane. Shared
+/// by the serial loop and the sharded engine (a control tick touches
+/// only its own cell, so a shard runs it without synchronization).
+///
+/// A [`TelemetryEvent::ControlResolve`] fires only when the plane
+/// actually solved (its [`SolverIntrospection::solves`] counter
+/// advanced) — hysteresis-suppressed epochs and static planes stay
+/// silent.
+pub(super) fn control_tick_at<P: Probe>(cell: &mut Cell, ci: usize, now: Nanos, probe: &mut P) {
+    let solves_before = cell.plane.solver_stats().solves;
+    let n_dev = cell.dev.len();
+    cell.demand.clear();
+    cell.demand.resize(n_dev, 0.0);
+    let mut backlog_total_s = 0.0;
+    {
+        let t = cell.plane.t_per_token();
+        for k in 0..n_dev {
+            let backlog_s = secs_from_nanos(cell.dev.busy_until[k].saturating_sub(now));
+            backlog_total_s += backlog_s;
+            let backlog_tokens = if t[k].is_finite() && t[k] > 0.0 {
+                backlog_s / t[k]
+            } else {
+                0.0
+            };
+            // Demand proxy: the larger of current backlog and the
+            // epoch's dispatches. Tokens routed this epoch that are
+            // still queued appear in both signals, so summing would
+            // double-count momentarily backlogged devices and make
+            // the re-solve overshoot; the max never double-counts,
+            // and recent dispatches keep a device's share alive even
+            // when its queue happens to be drained.
+            cell.demand[k] = backlog_tokens.max(cell.dev.served_tokens[k]);
+        }
+    }
+    cell.plane.on_epoch(&cell.demand, &cell.expert_tokens);
+    // The drift reference resets on every solve attempt (even one
+    // hysteresis suppressed), so the trigger measures *new* drift
+    // rather than re-firing on the same backlog every block.
+    cell.last_solve_backlog_s = backlog_total_s;
+    for v in &mut cell.dev.served_tokens {
+        *v = 0.0;
+    }
+    for v in &mut cell.expert_tokens {
+        *v = 0.0;
+    }
+    let after = cell.plane.solver_stats();
+    if after.solves > solves_before {
+        probe.on_event(&TelemetryEvent::ControlResolve {
+            cell: ci,
+            t: now,
+            iterations: after.last_iterations,
+            objective: after.last_objective,
+            warm: after.last_warm,
+            converged: after.last_converged,
+        });
+    }
+}
+
+/// Dispatch one block of one request against its home `cell`; returns
+/// the block's completion instant (the Eq. (11) barrier over its token
+/// groups — local *and* borrowed), or a drop marker when admission
+/// control rejects the request.
+///
+/// Free function shared by [`ClusterSim::run_probed`] (which passes the
+/// split borrow around the home cell) and the sharded engine (which
+/// passes empty neighbor slices: under
+/// [`crate::config::HandoverPolicy::None`] — the only policy the shards
+/// parallelize — the handover layer never reads them).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn start_block_at<P: Probe>(
+    params: &SimParams,
+    dispatcher: &Dispatcher,
+    handover: &mut HandoverCoordinator,
+    cell: &mut Cell,
+    left: &mut [Cell],
+    right: &mut [Cell],
+    st: &ReqState,
+    req: usize,
+    now: Nanos,
+    probe: &mut P,
+) -> BlockResult {
+    let n_experts = params.n_experts;
+    let queue_limit_s = params.queue_limit_s;
+    let drop_policy = params.drop_policy;
+    let top_k = params.top_k;
+    let gate_sharpness = params.gate_sharpness;
+    let gate_bias = params.gate_bias;
+    let gate = GateWeights::new(cell.gates.synthetic_gate_weights_biased(
+        st.tokens,
+        n_experts,
+        gate_sharpness,
+        gate_bias,
+    ));
+    // Service times and placement come from the control plane *now*:
+    // an epoch re-solve between blocks redirects this dispatch.
+    let t_per_token = cell.plane.t_per_token();
+    let placement = cell.plane.placement();
+    // Per-expert latency estimate (best online replica) and liveness,
+    // in the cell's reused scratch.
+    cell.est.per_token.clear();
+    cell.est.per_token.resize(n_experts, f64::INFINITY);
+    cell.expert_online.clear();
+    cell.expert_online.resize(n_experts, false);
+    for e in 0..n_experts {
+        for &k in placement.replicas(e) {
+            if cell.dev.online[k] {
+                cell.expert_online[e] = true;
+                if t_per_token[k] < cell.est.per_token[e] {
+                    cell.est.per_token[e] = t_per_token[k];
                 }
             }
         }
-        let ctx = SelectionContext {
-            latencies: &cell.est,
-            top_k,
-            online: &cell.expert_online,
-        };
-        let sel = cell.policy.select(&gate, &ctx);
-        sel.tokens_per_device_into(&mut cell.counts);
+    }
+    let ctx = SelectionContext {
+        latencies: &cell.est,
+        top_k,
+        online: &cell.expert_online,
+    };
+    let sel = cell.policy.select(&gate, &ctx);
+    sel.tokens_per_device_into(&mut cell.counts);
 
-        let mut block_end = now;
-        let mut shed = 0.0f64;
-        // Heaviest shed group, kept so a block can never shed everything
-        // (every token needs at least one expert — constraint (16) — and
-        // a zero-work block would fake perfect latency under overload).
-        let mut best_shed: Option<(usize, f64)> = None;
-        // Pass 1: place every group against the cell's scratch copy of
-        // the queue state (reused across blocks — no allocation). A
-        // DropRequest rejection must leave *no* partial work behind,
-        // whichever expert index trips the bound.
-        cell.scratch_busy.copy_from_slice(&cell.busy_until);
-        cell.placed.clear();
-        for e in 0..n_experts {
-            let q = cell.counts[e];
-            if q <= 0.0 {
+    let mut block_end = now;
+    let mut shed = 0.0f64;
+    // Heaviest shed group, kept so a block can never shed everything
+    // (every token needs at least one expert — constraint (16) — and
+    // a zero-work block would fake perfect latency under overload).
+    let mut best_shed: Option<(usize, f64)> = None;
+    // Pass 1: place every group against the cell's scratch copy of
+    // the queue state (reused across blocks — no allocation). A
+    // DropRequest rejection must leave *no* partial work behind,
+    // whichever expert index trips the bound.
+    cell.dev.scratch_busy.copy_from_slice(&cell.dev.busy_until);
+    cell.placed.clear();
+    for e in 0..n_experts {
+        let q = cell.counts[e];
+        if q <= 0.0 {
+            continue;
+        }
+        // Admission control: the drop policy applies only when every
+        // replica of the expert sits beyond the queue bound — an
+        // under-bound replica is preferred even if it finishes later.
+        let k = if queue_limit_s > 0.0 {
+            // Cheap serviceability check (no predicted-completion
+            // scan): distinguishes "no replica at all" (selection
+            // drop) from "all replicas over the bound" (drop policy).
+            if !placement
+                .replicas(e)
+                .iter()
+                .any(|&r| cell.dev.online[r] && t_per_token[r].is_finite())
+            {
+                // No local replica can serve at all: a neighbor may
+                // still host one (`BorrowExpert`); otherwise the
+                // tokens are dropped by selection, as before.
+                if let Some(barrier) = handover.try_borrow_probed(
+                    probe,
+                    req,
+                    st.cell,
+                    e,
+                    q,
+                    now,
+                    queue_limit_s,
+                    &mut *left,
+                    &mut *right,
+                ) {
+                    if barrier > block_end {
+                        block_end = barrier;
+                    }
+                }
                 continue;
             }
-            // Admission control: the drop policy applies only when every
-            // replica of the expert sits beyond the queue bound — an
-            // under-bound replica is preferred even if it finishes later.
-            let k = if queue_limit_s > 0.0 {
-                // Cheap serviceability check (no predicted-completion
-                // scan): distinguishes "no replica at all" (selection
-                // drop) from "all replicas over the bound" (drop policy).
-                if !placement
-                    .replicas(e)
-                    .iter()
-                    .any(|&r| cell.online[r] && t_per_token[r].is_finite())
-                {
-                    // No local replica can serve at all: a neighbor may
-                    // still host one (`BorrowExpert`); otherwise the
-                    // tokens are dropped by selection, as before.
-                    if let Some(barrier) = self.handover.try_borrow_probed(
+            cell.cand.clear();
+            for &r in placement.replicas(e) {
+                // The bound measures *pre-existing* backlog
+                // (committed queue state at block start), not the
+                // block's own tentative placements — a single large
+                // block on an idle cluster is barrier work, not
+                // overload.
+                let backlog_s = secs_from_nanos(cell.dev.busy_until[r].saturating_sub(now));
+                if backlog_s <= queue_limit_s {
+                    cell.cand.push(r);
+                }
+            }
+            match dispatcher.choose_probed(
+                probe,
+                st.cell,
+                e,
+                &cell.cand,
+                q,
+                now,
+                &cell.dev.scratch_busy,
+                t_per_token,
+                &cell.dev.online,
+            ) {
+                Some(k) => k,
+                None => {
+                    // Every local replica is over the queue bound:
+                    // borrowing a neighbor's replica beats invoking
+                    // the drop policy.
+                    if let Some(barrier) = handover.try_borrow_probed(
+                        probe,
+                        req,
+                        st.cell,
+                        e,
+                        q,
+                        now,
+                        queue_limit_s,
+                        &mut *left,
+                        &mut *right,
+                    ) {
+                        if barrier > block_end {
+                            block_end = barrier;
+                        }
+                        continue;
+                    }
+                    match drop_policy {
+                        DropPolicy::DropRequest => {
+                            // A rejection must leave no partial work
+                            // behind — in *any* cell: un-stage the
+                            // block's cross-cell borrows too.
+                            handover.rollback_probed(
+                                probe,
+                                req,
+                                st.cell,
+                                now,
+                                &mut *left,
+                                &mut *right,
+                            );
+                            return BlockResult {
+                                end: None,
+                                shed_tokens: 0.0,
+                                borrowed_groups: 0,
+                                borrowed_tokens: 0.0,
+                            };
+                        }
+                        DropPolicy::ShedTokens => {
+                            shed += q;
+                            // Shed demand is still demand: without
+                            // this the autoscaler is blind to
+                            // exactly the experts being shed.
+                            // (ShedTokens never aborts the block, so
+                            // this needs no rollback.)
+                            cell.expert_tokens[e] += q;
+                            probe.on_event(&TelemetryEvent::GroupShed {
+                                req,
+                                cell: st.cell,
+                                expert: e,
+                                tokens: q,
+                                t: now,
+                            });
+                            let heavier = match best_shed {
+                                None => true,
+                                Some((_, bq)) => q > bq,
+                            };
+                            if heavier {
+                                best_shed = Some((e, q));
+                            }
+                            continue;
+                        }
+                    }
+                }
+            }
+        } else {
+            match dispatcher.choose_probed(
+                probe,
+                st.cell,
+                e,
+                placement.replicas(e),
+                q,
+                now,
+                &cell.dev.scratch_busy,
+                t_per_token,
+                &cell.dev.online,
+            ) {
+                Some(k) => k,
+                None => {
+                    // No serviceable local replica: try a neighbor's
+                    // (`BorrowExpert`); otherwise the tokens are
+                    // dropped by selection, as before.
+                    if let Some(barrier) = handover.try_borrow_probed(
                         probe,
                         req,
                         st.cell,
@@ -964,249 +1216,126 @@ impl ClusterSim {
                     }
                     continue;
                 }
-                cell.cand.clear();
-                for &r in placement.replicas(e) {
-                    // The bound measures *pre-existing* backlog
-                    // (committed queue state at block start), not the
-                    // block's own tentative placements — a single large
-                    // block on an idle cluster is barrier work, not
-                    // overload.
-                    let backlog_s =
-                        secs_from_nanos(cell.busy_until[r].saturating_sub(now));
-                    if backlog_s <= queue_limit_s {
-                        cell.cand.push(r);
-                    }
-                }
-                match self.dispatcher.choose_probed(
-                    probe,
-                    st.cell,
-                    e,
-                    &cell.cand,
-                    q,
-                    now,
-                    &cell.scratch_busy,
-                    t_per_token,
-                    &cell.online,
-                ) {
-                    Some(k) => k,
-                    None => {
-                        // Every local replica is over the queue bound:
-                        // borrowing a neighbor's replica beats invoking
-                        // the drop policy.
-                        if let Some(barrier) = self.handover.try_borrow_probed(
-                            probe,
-                            req,
-                            st.cell,
-                            e,
-                            q,
-                            now,
-                            queue_limit_s,
-                            &mut *left,
-                            &mut *right,
-                        ) {
-                            if barrier > block_end {
-                                block_end = barrier;
-                            }
-                            continue;
-                        }
-                        match drop_policy {
-                            DropPolicy::DropRequest => {
-                                // A rejection must leave no partial work
-                                // behind — in *any* cell: un-stage the
-                                // block's cross-cell borrows too.
-                                self.handover.rollback_probed(
-                                    probe,
-                                    req,
-                                    st.cell,
-                                    now,
-                                    &mut *left,
-                                    &mut *right,
-                                );
-                                return BlockResult {
-                                    end: None,
-                                    shed_tokens: 0.0,
-                                    borrowed_groups: 0,
-                                    borrowed_tokens: 0.0,
-                                };
-                            }
-                            DropPolicy::ShedTokens => {
-                                shed += q;
-                                // Shed demand is still demand: without
-                                // this the autoscaler is blind to
-                                // exactly the experts being shed.
-                                // (ShedTokens never aborts the block, so
-                                // this needs no rollback.)
-                                cell.expert_tokens[e] += q;
-                                probe.on_event(&TelemetryEvent::GroupShed {
-                                    req,
-                                    cell: st.cell,
-                                    expert: e,
-                                    tokens: q,
-                                    t: now,
-                                });
-                                let heavier = match best_shed {
-                                    None => true,
-                                    Some((_, bq)) => q > bq,
-                                };
-                                if heavier {
-                                    best_shed = Some((e, q));
-                                }
-                                continue;
-                            }
-                        }
-                    }
-                }
-            } else {
-                match self.dispatcher.choose_probed(
-                    probe,
-                    st.cell,
-                    e,
-                    placement.replicas(e),
-                    q,
-                    now,
-                    &cell.scratch_busy,
-                    t_per_token,
-                    &cell.online,
-                ) {
-                    Some(k) => k,
-                    None => {
-                        // No serviceable local replica: try a neighbor's
-                        // (`BorrowExpert`); otherwise the tokens are
-                        // dropped by selection, as before.
-                        if let Some(barrier) = self.handover.try_borrow_probed(
-                            probe,
-                            req,
-                            st.cell,
-                            e,
-                            q,
-                            now,
-                            queue_limit_s,
-                            &mut *left,
-                            &mut *right,
-                        ) {
-                            if barrier > block_end {
-                                block_end = barrier;
-                            }
-                        }
-                        continue;
-                    }
-                }
-            };
-            let service_s = q * t_per_token[k];
-            let start = cell.scratch_busy[k].max(now);
-            let done = start.saturating_add(nanos_from_secs(service_s));
-            cell.scratch_busy[k] = done;
-            cell.placed.push(PlacedGroup {
-                expert: e,
-                device: k,
-                tokens: q,
-                service_s,
-                start,
-                done,
-            });
-            if done > block_end {
-                block_end = done;
             }
+        };
+        let service_s = q * t_per_token[k];
+        let start = cell.dev.scratch_busy[k].max(now);
+        let done = start.saturating_add(nanos_from_secs(service_s));
+        cell.dev.scratch_busy[k] = done;
+        cell.placed.push(PlacedGroup {
+            expert: e,
+            device: k,
+            tokens: q,
+            service_s,
+            start,
+            done,
+        });
+        if done > block_end {
+            block_end = done;
         }
-        // A block must do *some* work: if shedding removed every group
-        // (and nothing was borrowed either), serve the heaviest one
-        // anyway — the barrier then reflects the overloaded device
-        // instead of a zero-time hop.
-        if cell.placed.is_empty() && !self.handover.has_staged() {
-            if let Some((e, q)) = best_shed {
-                if let Some(k) = self.dispatcher.choose_probed(
-                    probe,
-                    st.cell,
-                    e,
-                    placement.replicas(e),
-                    q,
-                    now,
-                    &cell.scratch_busy,
-                    t_per_token,
-                    &cell.online,
-                ) {
-                    shed -= q;
-                    // Un-count the shed-side demand: the commit pass
-                    // below records this group like any other placement.
-                    // (The earlier `GroupShed` event stands: a rescued
-                    // group appears as shed *then* placed in a trace.)
-                    cell.expert_tokens[e] -= q;
-                    let service_s = q * t_per_token[k];
-                    let start = cell.scratch_busy[k].max(now);
-                    let done = start.saturating_add(nanos_from_secs(service_s));
-                    cell.scratch_busy[k] = done;
-                    cell.placed.push(PlacedGroup {
-                        expert: e,
-                        device: k,
-                        tokens: q,
-                        service_s,
-                        start,
-                        done,
-                    });
-                    if done > block_end {
-                        block_end = done;
-                    }
+    }
+    // A block must do *some* work: if shedding removed every group
+    // (and nothing was borrowed either), serve the heaviest one
+    // anyway — the barrier then reflects the overloaded device
+    // instead of a zero-time hop.
+    if cell.placed.is_empty() && !handover.has_staged() {
+        if let Some((e, q)) = best_shed {
+            if let Some(k) = dispatcher.choose_probed(
+                probe,
+                st.cell,
+                e,
+                placement.replicas(e),
+                q,
+                now,
+                &cell.dev.scratch_busy,
+                t_per_token,
+                &cell.dev.online,
+            ) {
+                shed -= q;
+                // Un-count the shed-side demand: the commit pass
+                // below records this group like any other placement.
+                // (The earlier `GroupShed` event stands: a rescued
+                // group appears as shed *then* placed in a trace.)
+                cell.expert_tokens[e] -= q;
+                let service_s = q * t_per_token[k];
+                let start = cell.dev.scratch_busy[k].max(now);
+                let done = start.saturating_add(nanos_from_secs(service_s));
+                cell.dev.scratch_busy[k] = done;
+                cell.placed.push(PlacedGroup {
+                    expert: e,
+                    device: k,
+                    tokens: q,
+                    service_s,
+                    start,
+                    done,
+                });
+                if done > block_end {
+                    block_end = done;
                 }
             }
         }
-        // Pass 2: the block was admitted — commit the placements.
-        // `GroupPlaced` fires only here, so a trace never contains a
-        // group from a rolled-back (dropped) block.
-        cell.busy_until.copy_from_slice(&cell.scratch_busy);
-        for g in &cell.placed {
-            cell.busy[g.device].add_busy(g.service_s);
-            cell.policy.observe(g.expert, t_per_token[g.device]);
-            cell.served_tokens[g.device] += g.tokens;
-            cell.expert_tokens[g.expert] += g.tokens;
-            probe.on_event(&TelemetryEvent::GroupPlaced {
-                req,
-                cell: st.cell,
-                device: g.device,
-                expert: g.expert,
-                tokens: g.tokens,
-                enqueue: now,
-                start: g.start,
-                done: g.done,
-            });
-        }
-        // Commit the staged cross-cell groups. Accounting lands on the
-        // *serving* cell (its control plane must see borrowed demand);
-        // the home cell's selection policy observes the effective
-        // per-token cost including both backhaul hops, and its
-        // autoscaler still counts the expert as hot locally — so an
-        // adaptive home cell replicates a chronically-borrowed expert
-        // rather than borrowing forever.
-        let mut borrowed_groups = 0usize;
-        let mut borrowed_tokens = 0.0f64;
-        let backhaul = self.handover.backhaul_s_per_token();
-        for s in self.handover.staged() {
-            let serving = super::handover::cell_mut(st.cell, s.cell, &mut *left, &mut *right);
-            serving.commit_remote(s.device, s.expert, s.tokens, s.service_s);
-            cell.policy.observe(s.expert, s.service_s / s.tokens + 2.0 * backhaul);
-            cell.expert_tokens[s.expert] += s.tokens;
-            borrowed_groups += 1;
-            borrowed_tokens += s.tokens;
-            probe.on_event(&TelemetryEvent::BorrowCommitted {
-                req,
-                home: st.cell,
-                cell: s.cell,
-                device: s.device,
-                expert: s.expert,
-                tokens: s.tokens,
-                sent: s.sent,
-                landed: s.sent.saturating_add(nanos_from_secs(s.tokens * backhaul)),
-                start: s.start,
-                done: s.start.saturating_add(nanos_from_secs(s.service_s)),
-                barrier: s.barrier,
-            });
-        }
-        self.handover.clear_staged();
-        BlockResult {
-            end: Some(block_end),
-            shed_tokens: shed,
-            borrowed_groups,
-            borrowed_tokens,
-        }
+    }
+    // Pass 2: the block was admitted — commit the placements.
+    // `GroupPlaced` fires only here, so a trace never contains a
+    // group from a rolled-back (dropped) block.
+    cell.dev.busy_until.copy_from_slice(&cell.dev.scratch_busy);
+    for g in &cell.placed {
+        cell.dev.busy[g.device].add_busy(g.service_s);
+        cell.policy.observe(g.expert, t_per_token[g.device]);
+        cell.dev.served_tokens[g.device] += g.tokens;
+        cell.expert_tokens[g.expert] += g.tokens;
+        probe.on_event(&TelemetryEvent::GroupPlaced {
+            req,
+            cell: st.cell,
+            device: g.device,
+            expert: g.expert,
+            tokens: g.tokens,
+            enqueue: now,
+            start: g.start,
+            done: g.done,
+        });
+    }
+    // Commit the staged cross-cell groups. Accounting lands on the
+    // *serving* cell (its control plane must see borrowed demand);
+    // the home cell's selection policy observes the effective
+    // per-token cost including both backhaul hops, and its
+    // autoscaler still counts the expert as hot locally — so an
+    // adaptive home cell replicates a chronically-borrowed expert
+    // rather than borrowing forever.
+    let mut borrowed_groups = 0usize;
+    let mut borrowed_tokens = 0.0f64;
+    for s in handover.staged() {
+        // Directed per-pair hop costs (uniform configs reduce both to
+        // the scalar, keeping the old arithmetic bit for bit).
+        let out_s = handover.backhaul_pair(st.cell, s.cell);
+        let back_s = handover.backhaul_pair(s.cell, st.cell);
+        let serving = super::handover::cell_mut(st.cell, s.cell, &mut *left, &mut *right);
+        serving.commit_remote(s.device, s.expert, s.tokens, s.service_s);
+        cell.policy
+            .observe(s.expert, s.service_s / s.tokens + (out_s + back_s));
+        cell.expert_tokens[s.expert] += s.tokens;
+        borrowed_groups += 1;
+        borrowed_tokens += s.tokens;
+        probe.on_event(&TelemetryEvent::BorrowCommitted {
+            req,
+            home: st.cell,
+            cell: s.cell,
+            device: s.device,
+            expert: s.expert,
+            tokens: s.tokens,
+            sent: s.sent,
+            landed: s.sent.saturating_add(nanos_from_secs(s.tokens * out_s)),
+            start: s.start,
+            done: s.start.saturating_add(nanos_from_secs(s.service_s)),
+            barrier: s.barrier,
+        });
+    }
+    handover.clear_staged();
+    BlockResult {
+        end: Some(block_end),
+        shed_tokens: shed,
+        borrowed_groups,
+        borrowed_tokens,
     }
 }
 

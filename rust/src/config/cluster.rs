@@ -239,6 +239,13 @@ pub struct ClusterConfig {
     /// groups pay it twice: once to reach the neighbor, once for the
     /// result to return through the Eq. (11) barrier.
     pub backhaul_s_per_token: f64,
+    /// Optional per-cell-pair backhaul latency (seconds per token),
+    /// `matrix[from][to]` for the directed `from → to` hop. `None`
+    /// means every pair pays the uniform [`Self::backhaul_s_per_token`]
+    /// (read through [`Self::backhaul_pair`]). The matrix may be
+    /// asymmetric; the diagonal is never read. Its off-diagonal minimum
+    /// is the conservative lookahead bound of the sharded DES.
+    pub backhaul_matrix: Option<Vec<Vec<f64>>>,
     /// Fraction of completed requests discarded as warm-up before
     /// steady-state latency percentiles are computed.
     pub warmup_frac: f64,
@@ -255,6 +262,36 @@ pub struct ClusterConfig {
 impl ClusterConfig {
     pub fn n_cells(&self) -> usize {
         self.cells.len()
+    }
+
+    /// Backhaul latency (seconds per token) for the directed hop
+    /// `from → to`, falling back to the uniform scalar when no matrix
+    /// is configured.
+    pub fn backhaul_pair(&self, from: usize, to: usize) -> f64 {
+        match &self.backhaul_matrix {
+            Some(m) => m[from][to],
+            None => self.backhaul_s_per_token,
+        }
+    }
+
+    /// Minimum off-diagonal backhaul latency (seconds per token) — the
+    /// conservative lookahead bound of the sharded DES. Equals the
+    /// uniform scalar when no matrix is set, and `None` for a single
+    /// cell (no inter-cell hops exist).
+    pub fn min_backhaul_s_per_token(&self) -> Option<f64> {
+        let n = self.cells.len();
+        if n < 2 {
+            return None;
+        }
+        let mut min = f64::INFINITY;
+        for from in 0..n {
+            for to in 0..n {
+                if from != to {
+                    min = min.min(self.backhaul_pair(from, to));
+                }
+            }
+        }
+        Some(min)
     }
 
     /// Two-cell edge deployment: each cell reuses the §V fleet shape
@@ -291,6 +328,7 @@ impl ClusterConfig {
             drop_policy: DropPolicy::DropRequest,
             handover: HandoverPolicy::None,
             backhaul_s_per_token: 2e-4,
+            backhaul_matrix: None,
             warmup_frac: 0.2,
             gate_sharpness: 1.5,
             gate_bias: 0.4,
@@ -311,6 +349,11 @@ impl ClusterConfig {
     pub fn with_n_cells(mut self, n: usize) -> Self {
         assert!(n >= 1, "need at least one cell");
         assert!(!self.cells.is_empty(), "no template cell to clone");
+        // A per-pair matrix is keyed by cell index, so changing the cell
+        // count invalidates it; fall back to the uniform scalar.
+        if self.cells.len() != n {
+            self.backhaul_matrix = None;
+        }
         let template = self.cells[0].clone();
         while self.cells.len() < n {
             let i = self.cells.len();
@@ -334,7 +377,7 @@ impl ClusterConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("model", self.model.to_json()),
             (
                 "cells",
@@ -354,12 +397,27 @@ impl ClusterConfig {
             ("drop_policy", Json::str(self.drop_policy.as_str())),
             ("handover", Json::str(self.handover.as_str())),
             ("backhaul_s_per_token", Json::Num(self.backhaul_s_per_token)),
+        ];
+        // Emitted only when set: configs with the uniform scalar keep
+        // the exact byte output of the previous format.
+        if let Some(m) = &self.backhaul_matrix {
+            fields.push((
+                "backhaul_matrix",
+                Json::Arr(
+                    m.iter()
+                        .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v)).collect()))
+                        .collect(),
+                ),
+            ));
+        }
+        fields.extend([
             ("warmup_frac", Json::Num(self.warmup_frac)),
             ("gate_sharpness", Json::Num(self.gate_sharpness)),
             ("gate_bias", Json::Num(self.gate_bias)),
             ("activation_eta", Json::Num(self.activation_eta)),
             ("seed", Json::Num(self.seed as f64)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -397,6 +455,20 @@ impl ClusterConfig {
                 None => HandoverPolicy::None,
             },
             backhaul_s_per_token: opt_f64("backhaul_s_per_token", 2e-4)?,
+            backhaul_matrix: match j.opt("backhaul_matrix") {
+                Some(v) => Some(
+                    v.as_arr()?
+                        .iter()
+                        .map(|row| {
+                            row.as_arr()?
+                                .iter()
+                                .map(|x| x.as_f64())
+                                .collect::<Result<Vec<f64>>>()
+                        })
+                        .collect::<Result<Vec<Vec<f64>>>>()?,
+                ),
+                None => None,
+            },
             warmup_frac: j.get("warmup_frac")?.as_f64()?,
             gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
             gate_bias: j.get("gate_bias")?.as_f64()?,
@@ -438,6 +510,28 @@ impl ClusterConfig {
             self.backhaul_s_per_token.is_finite() && self.backhaul_s_per_token >= 0.0,
             "backhaul_s_per_token must be non-negative and finite"
         );
+        if let Some(m) = &self.backhaul_matrix {
+            anyhow::ensure!(
+                m.len() == self.cells.len(),
+                "backhaul_matrix has {} rows for {} cells",
+                m.len(),
+                self.cells.len()
+            );
+            for (i, row) in m.iter().enumerate() {
+                anyhow::ensure!(
+                    row.len() == self.cells.len(),
+                    "backhaul_matrix row {i} has {} entries for {} cells",
+                    row.len(),
+                    self.cells.len()
+                );
+                for (j, &v) in row.iter().enumerate() {
+                    anyhow::ensure!(
+                        v.is_finite() && v >= 0.0,
+                        "backhaul_matrix[{i}][{j}] must be non-negative and finite"
+                    );
+                }
+            }
+        }
         for cell in &self.cells {
             anyhow::ensure!(
                 !cell.devices.is_empty(),
@@ -624,6 +718,71 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.backhaul_s_per_token = f64::INFINITY;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_backhaul_matrix() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.backhaul_matrix = Some(vec![vec![0.0, 3e-4], vec![5e-4, 0.0]]);
+        cfg.validate().unwrap();
+        let back = ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn backhaul_matrix_absent_stays_uniform() {
+        let cfg = ClusterConfig::edge_default();
+        assert_eq!(cfg.backhaul_matrix, None);
+        // to_json omits the key entirely when unset, so the serialized
+        // form matches the pre-matrix format byte for byte.
+        assert!(!cfg.to_json().to_string().contains("backhaul_matrix"));
+        assert_eq!(cfg.backhaul_pair(0, 1), cfg.backhaul_s_per_token);
+        assert_eq!(
+            cfg.min_backhaul_s_per_token(),
+            Some(cfg.backhaul_s_per_token)
+        );
+    }
+
+    #[test]
+    fn backhaul_pair_reads_directed_entries() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.backhaul_matrix = Some(vec![vec![0.0, 3e-4], vec![5e-4, 0.0]]);
+        assert_eq!(cfg.backhaul_pair(0, 1), 3e-4);
+        assert_eq!(cfg.backhaul_pair(1, 0), 5e-4);
+        // lookahead bound = off-diagonal minimum; diagonal ignored
+        assert_eq!(cfg.min_backhaul_s_per_token(), Some(3e-4));
+        assert_eq!(
+            ClusterConfig::single_cell().min_backhaul_s_per_token(),
+            None
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_backhaul_matrix() {
+        let mut cfg = ClusterConfig::edge_default();
+        // wrong row count
+        cfg.backhaul_matrix = Some(vec![vec![0.0, 1e-4]]);
+        assert!(cfg.validate().is_err());
+        // ragged row
+        cfg.backhaul_matrix = Some(vec![vec![0.0, 1e-4], vec![1e-4]]);
+        assert!(cfg.validate().is_err());
+        // negative entry
+        cfg.backhaul_matrix = Some(vec![vec![0.0, -1e-4], vec![1e-4, 0.0]]);
+        assert!(cfg.validate().is_err());
+        // non-finite entry
+        cfg.backhaul_matrix = Some(vec![vec![0.0, f64::NAN], vec![1e-4, 0.0]]);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn with_n_cells_drops_stale_backhaul_matrix() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.backhaul_matrix = Some(vec![vec![0.0, 1e-4], vec![1e-4, 0.0]]);
+        // same cell count: the matrix is still index-valid and kept
+        assert!(cfg.clone().with_n_cells(2).backhaul_matrix.is_some());
+        // count change invalidates the indexing
+        assert_eq!(cfg.with_n_cells(3).backhaul_matrix, None);
     }
 
     #[test]

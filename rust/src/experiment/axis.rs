@@ -263,7 +263,13 @@ impl Axis {
             }
             Axis::ControlPlane => sc.cluster.control = ControlKind::parse(v.as_word()?)?,
             Axis::Handover => sc.cluster.handover = HandoverPolicy::parse(v.as_word()?)?,
-            Axis::Backhaul => sc.cluster.backhaul_s_per_token = v.as_num()?,
+            Axis::Backhaul => {
+                // The scalar axis must always take effect: a base config
+                // carrying a per-pair matrix would otherwise shadow every
+                // swept value (pairs read the matrix before the scalar).
+                sc.cluster.backhaul_s_per_token = v.as_num()?;
+                sc.cluster.backhaul_matrix = None;
+            }
             Axis::QueueLimit => sc.cluster.queue_limit_s = v.as_num()?,
             Axis::Drop => sc.cluster.drop_policy = DropPolicy::parse(v.as_word()?)?,
             Axis::CacheCapacity => {
@@ -519,6 +525,19 @@ mod tests {
                 axis.as_str()
             );
         }
+    }
+
+    #[test]
+    fn backhaul_axis_overrides_a_per_pair_matrix() {
+        let mut sc = scenario();
+        let n = sc.cluster.cells.len();
+        sc.cluster.backhaul_matrix = Some(vec![vec![2e-3; n]; n]);
+        Axis::Backhaul.apply(&mut sc, &AxisValue::num(5e-4)).unwrap();
+        assert_eq!(sc.cluster.backhaul_s_per_token, 5e-4);
+        assert!(
+            sc.cluster.backhaul_matrix.is_none(),
+            "a stale matrix would shadow every swept scalar"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!           [--control static_uniform|static_optimal|adaptive|compare]
 //!           [--epoch S] [--backlog-delta S] [--queue-limit S]
 //!           [--drop request|shed] [--handover none|rehome|borrow]
-//!           [--backhaul S] [--threads N]
+//!           [--backhaul S] [--backhaul-matrix M] [--threads N]
 //!                 multi-cell discrete-event serving sweep: throughput,
 //!                 goodput, drop rate, p50/p95/p99 latency, per-device
 //!                 utilization, control-plane activity and handover
@@ -37,7 +37,7 @@
 //!                 CSV (+ JSON with --json) into --out
 //!   trace [--rate R] [--requests N] [--benchmark NAME]
 //!         [--trace FILE.json] [--timeline FILE.csv]
-//!         [--sample-every N] [--timeline-dt S]
+//!         [--sample-every N] [--timeline-dt S] [--threads N]
 //!         [+ the cluster base-config flags above]
 //!                 one telemetry-instrumented DES run: a Chrome
 //!                 trace-event JSON (load in Perfetto / chrome://tracing;
@@ -93,7 +93,7 @@ COMMANDS:
           [--control static_uniform|static_optimal|adaptive|compare]
           [--epoch S] [--backlog-delta S] [--queue-limit S]
           [--drop request|shed] [--handover none|rehome|borrow]
-          [--backhaul S] [--threads N]
+          [--backhaul S] [--backhaul-matrix \"a,b;c,d\"] [--threads N]
           [--trace FILE.json] [--timeline FILE.csv]
                           (--threads 0 = one worker per core; output is
                            byte-identical at any thread count; --trace /
@@ -101,10 +101,12 @@ COMMANDS:
                            the first rate — not with --control compare)
   trace [--rate R] [--requests N] [--benchmark NAME]
         [--trace FILE.json] [--timeline FILE.csv]
-        [--sample-every N] [--timeline-dt S]
+        [--sample-every N] [--timeline-dt S] [--threads N]
         [+ the cluster base-config flags]
                           one instrumented DES run: Chrome trace-event
-                          JSON (Perfetto) + sim-time timeline CSV
+                          JSON (Perfetto) + sim-time timeline CSV;
+                          --threads >1 (0 = auto) runs the sharded DES —
+                          artifacts are byte-identical at any count
   sweep --axis NAME=SPEC [--axis NAME=SPEC ...]
         [--requests N] [--benchmark NAME] [--threads N] [--json]
         [+ the cluster base-config flags]
@@ -243,6 +245,20 @@ fn cluster_base_config(args: &Args) -> anyhow::Result<ClusterConfig> {
     }
     if let Some(b) = rest_opt(rest, "--backhaul") {
         cfg.backhaul_s_per_token = b.parse()?;
+    }
+    if let Some(m) = rest_opt(rest, "--backhaul-matrix") {
+        // Rows separated by ';', entries by ',': "0,2e-3;1e-3,0" is a
+        // directed 2x2 `matrix[from][to]` (the diagonal is never read).
+        // Shape and entries are checked by `ClusterConfig::validate`.
+        let matrix = m
+            .split(';')
+            .map(|row| {
+                row.split(',')
+                    .map(|s| s.trim().parse::<f64>().map_err(anyhow::Error::from))
+                    .collect::<anyhow::Result<Vec<f64>>>()
+            })
+            .collect::<anyhow::Result<Vec<Vec<f64>>>>()?;
+        cfg.backhaul_matrix = Some(matrix);
     }
     Ok(cfg)
 }
@@ -417,6 +433,7 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
             bench,
             1,
             0.05,
+            threads,
             trace_path.as_deref(),
             timeline_path.as_deref(),
         )?;
@@ -458,6 +475,13 @@ fn trace_cmd(args: &Args) -> anyhow::Result<()> {
         timeline_dt.is_finite() && timeline_dt > 0.0,
         "--timeline-dt must be finite and positive, got {timeline_dt}"
     );
+    // The sharded engine replays telemetry in canonical order, so any
+    // thread count writes byte-identical artifacts; 1 (the default) is
+    // the serial loop, 0 = one worker per core.
+    let threads: usize = rest_opt(&args.rest, "--threads")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
     let trace_path = rest_opt(&args.rest, "--trace")
         .map(PathBuf::from)
         .unwrap_or_else(|| args.out.join("trace.json"));
@@ -480,6 +504,7 @@ fn trace_cmd(args: &Args) -> anyhow::Result<()> {
         bench,
         sample_every,
         timeline_dt,
+        threads,
         Some(&trace_path),
         Some(&timeline_path),
     )?;
@@ -498,6 +523,7 @@ fn run_traced(
     bench: Benchmark,
     sample_every: usize,
     timeline_dt: f64,
+    threads: usize,
     trace_path: Option<&Path>,
     timeline_path: Option<&Path>,
 ) -> anyhow::Result<ClusterOutcome> {
@@ -508,7 +534,9 @@ fn run_traced(
         ChromeTracer::with_sample_every(sample_every),
         TimelineSampler::new((timeline_dt * 1e9) as u64),
     );
-    let out = sim.run_probed(&arrivals, &mut probe);
+    // Sharded when threads and the handover policy allow it, serial
+    // otherwise — byte-identical artifacts either way.
+    let out = sim.run_sharded_probed(&arrivals, threads, &mut probe);
     let (tracer, sampler) = probe;
     if let Some(p) = trace_path {
         if let Some(dir) = p.parent().filter(|d| !d.as_os_str().is_empty()) {

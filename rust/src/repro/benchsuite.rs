@@ -4,7 +4,9 @@
 //! (through the zero-allocation [`SolverWorkspace`] entry point the
 //! control plane uses), the adaptive plane's full epoch tick, a
 //! load-aware dispatch decision, and whole-DES throughput in simulated
-//! events per wall second. The `cargo bench` binaries
+//! events per wall second (the 2-cell run with and without a no-op
+//! probe, plus the 8-cell serial/sharded twin pair whose events/sec
+//! ratio is the sharding speedup). The `cargo bench` binaries
 //! (`rust/benches/control.rs`, `rust/benches/cluster.rs`) call these
 //! same functions, so the interactive numbers and the
 //! `BENCH_cluster.json` CI artifact can never drift apart. `repro bench
@@ -174,6 +176,46 @@ pub fn des_nullprobe_harness(budget: Duration, requests: usize) -> BenchResult {
     r
 }
 
+/// The serial / sharded twin pair on an 8-cell cluster: the same config,
+/// the same arrival stream, one harness through the serial event loop
+/// and one through `run_sharded` on the worker pool (0 = one worker per
+/// core, capped at the cell count). Their events/sec ratio is the
+/// sharding speedup the bench gate watches; the outcomes themselves are
+/// byte-identical by the sharded engine's determinism contract.
+pub fn des_8cell_harnesses(budget: Duration, requests: usize) -> Vec<BenchResult> {
+    let mut dcfg = ClusterConfig::edge_default().with_n_cells(8);
+    dcfg.model.n_blocks = 8;
+    // 4x the 2-cell harness volume so each of the 8 shards carries the
+    // per-cell load the 2-cell harness gives its cells.
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 16.0 }.generate(requests * 4, Benchmark::Piqa, 0);
+    let mut des = ClusterSim::new(&dcfg).expect("preset config is valid");
+    let events_per_run = des.run(&arrivals).events;
+    let mut serial = bench_quiet("cluster/des_run_8cell", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run(&arrivals).completed
+    });
+    serial.throughput = Some((
+        "sim_events_per_sec".to_string(),
+        events_per_run as f64 * 1e9 / serial.mean_ns,
+    ));
+    serial.report();
+    let mut sharded = bench_quiet("cluster/des_run_8cell_sharded", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run_sharded(&arrivals, 0).completed
+    });
+    sharded.throughput = Some((
+        "sim_events_per_sec".to_string(),
+        events_per_run as f64 * 1e9 / sharded.mean_ns,
+    ));
+    sharded.report();
+    println!(
+        "  sharding speedup: {:.2}x events/sec over the serial twin",
+        serial.mean_ns / sharded.mean_ns
+    );
+    vec![serial, sharded]
+}
+
 /// Run the full suite (tiny budgets when `smoke`), printing each result.
 pub fn run_suite(smoke: bool) -> BenchSuite {
     let budget = if smoke { smoke_budget() } else { default_budget() };
@@ -183,6 +225,7 @@ pub fn run_suite(smoke: bool) -> BenchSuite {
     results.push(dispatch_harness(budget));
     results.push(des_harness(budget, requests));
     results.push(des_nullprobe_harness(budget, requests));
+    results.extend(des_8cell_harnesses(budget, requests));
     BenchSuite {
         smoke,
         budget_ms: budget.as_millis() as u64,
@@ -205,6 +248,8 @@ mod tests {
             "cluster/dispatch_choose_16rep",
             "cluster/des_run_2cell",
             "cluster/des_run_2cell_nullprobe",
+            "cluster/des_run_8cell",
+            "cluster/des_run_8cell_sharded",
         ] {
             assert!(names.contains(&expect), "missing harness {expect}");
         }
@@ -222,7 +267,17 @@ mod tests {
             back.get("schema").unwrap().as_str().unwrap(),
             "wdmoe-bench-v1"
         );
-        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 6);
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 8);
+        // The sharded twin reports the same throughput unit so the
+        // bench gate can ratio the pair.
+        let sharded = suite
+            .results
+            .iter()
+            .find(|r| r.name == "cluster/des_run_8cell_sharded")
+            .unwrap();
+        let (sunit, sv) = sharded.throughput.as_ref().expect("sharded throughput");
+        assert_eq!(sunit, "sim_events_per_sec");
+        assert!(*sv > 0.0);
         assert!(back.get("smoke").unwrap().as_bool().unwrap());
         // A measured run must never mark itself provisional: the CI
         // regression gate arms against it.

@@ -216,6 +216,16 @@ pub trait Probe {
     /// at or before `t`).
     #[inline]
     fn on_sample(&mut self, _t: Nanos, _cells: &[CellSample]) {}
+
+    /// `true` only for probes that provably observe nothing
+    /// ([`NullProbe`] and compositions of it). The sharded DES branches
+    /// on this to skip event recording entirely — a static fact about
+    /// the type, so both branches monomorphize without the recorder on
+    /// the null path.
+    #[inline]
+    fn is_null(&self) -> bool {
+        false
+    }
 }
 
 /// The default observer: observes nothing, costs nothing. With this
@@ -224,7 +234,12 @@ pub trait Probe {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NullProbe;
 
-impl Probe for NullProbe {}
+impl Probe for NullProbe {
+    #[inline]
+    fn is_null(&self) -> bool {
+        true
+    }
+}
 
 /// Probes compose as tuples: `(ChromeTracer, TimelineSampler)` drives
 /// both from one run. Cadence is the finer of the two (sampling fires
@@ -250,6 +265,11 @@ impl<A: Probe, B: Probe> Probe for (A, B) {
     fn on_sample(&mut self, t: Nanos, cells: &[CellSample]) {
         self.0.on_sample(t, cells);
         self.1.on_sample(t, cells);
+    }
+
+    #[inline]
+    fn is_null(&self) -> bool {
+        self.0.is_null() && self.1.is_null()
     }
 }
 

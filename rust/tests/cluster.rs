@@ -3,8 +3,11 @@
 //! expert replication + load-aware dispatch cuts tail latency under
 //! sustained load.
 
-use wdmoe::cluster::{arrival_rate_sweep, ClusterSim, Placement};
-use wdmoe::config::{ClusterConfig, DispatchKind, PolicyKind};
+use wdmoe::cluster::{arrival_rate_sweep, ClusterOutcome, ClusterSim, Placement};
+use wdmoe::config::{
+    ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy, PolicyKind,
+};
+use wdmoe::telemetry::{ChromeTracer, TimelineSampler};
 use wdmoe::optim::solver::exact_objective;
 use wdmoe::optim::PerBlockLoad;
 use wdmoe::util::Rng;
@@ -253,4 +256,129 @@ fn sweep_writes_acceptance_csvs() {
     assert!(util_text.lines().next().unwrap().contains("cell0-dev0"));
     assert_eq!(util_text.lines().count(), 3);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------ sharded engine parity
+
+/// Four-cell cluster under the adaptive control plane with a queue
+/// bound, so drops/sheds and control ticks all fire — the busiest
+/// configuration the sharded engine must reproduce exactly.
+fn sharded_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::edge_default().with_n_cells(4);
+    cfg.model.n_blocks = 4;
+    cfg.control = ControlKind::Adaptive;
+    cfg.queue_limit_s = 0.2;
+    cfg
+}
+
+/// Every outcome field, bitwise — including the f64 accumulators and
+/// the full steady-state latency stream. The sharded engine's contract
+/// is identity, not approximation.
+fn assert_outcomes_bit_identical(a: &ClusterOutcome, b: &ClusterOutcome, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.dropped, b.dropped, "{tag}: dropped");
+    assert_eq!(a.in_flight, b.in_flight, "{tag}: in_flight");
+    assert_eq!(a.arrived_tokens, b.arrived_tokens, "{tag}: arrived_tokens");
+    assert_eq!(a.completed_tokens, b.completed_tokens, "{tag}: completed_tokens");
+    assert_eq!(a.dropped_tokens, b.dropped_tokens, "{tag}: dropped_tokens");
+    assert_eq!(a.shed_tokens, b.shed_tokens, "{tag}: shed_tokens");
+    assert_eq!(a.handovers, b.handovers, "{tag}: handovers");
+    assert_eq!(a.borrowed_groups, b.borrowed_groups, "{tag}: borrowed_groups");
+    assert_eq!(a.borrowed_tokens, b.borrowed_tokens, "{tag}: borrowed_tokens");
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.makespan_s, b.makespan_s, "{tag}: makespan_s");
+    assert_eq!(
+        a.latency_ms.steady_values(),
+        b.latency_ms.steady_values(),
+        "{tag}: latency stream"
+    );
+    assert_eq!(a.utilization, b.utilization, "{tag}: utilization");
+    assert_eq!(a.control, b.control, "{tag}: control stats");
+    assert_eq!(a.solver, b.solver, "{tag}: solver introspection");
+}
+
+/// The headline determinism contract: for every handover x drop-policy
+/// combination and thread count, the sharded engine's outcome is
+/// bit-identical to the serial loop's. Interacting handover policies
+/// exercise the serial-fallback path; `None` exercises real sharding.
+#[test]
+fn sharded_run_matches_serial_across_policies_and_threads() {
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 12.0 }.generate(48, Benchmark::Piqa, 9);
+    for handover in [
+        HandoverPolicy::None,
+        HandoverPolicy::RehomeOnArrival,
+        HandoverPolicy::BorrowExpert,
+    ] {
+        for drop_policy in [DropPolicy::DropRequest, DropPolicy::ShedTokens] {
+            let mut cfg = sharded_cfg();
+            cfg.handover = handover;
+            cfg.drop_policy = drop_policy;
+            let mut serial = ClusterSim::new(&cfg).unwrap();
+            let base = serial.run(&arrivals);
+            for threads in [2usize, 4] {
+                let mut sim = ClusterSim::new(&cfg).unwrap();
+                let out = sim.run_sharded(&arrivals, threads);
+                let tag = format!(
+                    "handover={} drop={} threads={threads}",
+                    handover.as_str(),
+                    drop_policy.as_str()
+                );
+                assert_outcomes_bit_identical(&base, &out, &tag);
+            }
+        }
+    }
+}
+
+/// Probe artifacts are part of the contract: the Chrome trace JSON and
+/// the timeline CSV must come out byte-identical, with and without a
+/// finite conservative sync window.
+#[test]
+fn sharded_trace_and_timeline_artifacts_are_byte_identical() {
+    let cfg = sharded_cfg();
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 10.0 }.generate(40, Benchmark::Piqa, 3);
+    let cadence_ns = 5_000_000u64; // 5 ms timeline rows
+
+    let mut probe = (ChromeTracer::new(), TimelineSampler::new(cadence_ns));
+    let mut serial = ClusterSim::new(&cfg).unwrap();
+    let base = serial.run_probed(&arrivals, &mut probe);
+    let base_trace = probe.0.to_json().to_string();
+    let base_timeline = probe.1.to_csv();
+    assert!(!probe.0.is_empty(), "trace should capture events");
+
+    for threads in [2usize, 4] {
+        for window_s in [None, Some(0.05)] {
+            let mut probe = (ChromeTracer::new(), TimelineSampler::new(cadence_ns));
+            let mut sim = ClusterSim::new(&cfg).unwrap();
+            sim.set_sync_window_s(window_s);
+            let out = sim.run_sharded_probed(&arrivals, threads, &mut probe);
+            let tag = format!("threads={threads} window={window_s:?}");
+            assert_outcomes_bit_identical(&base, &out, &tag);
+            assert_eq!(
+                probe.0.to_json().to_string(),
+                base_trace,
+                "{tag}: trace bytes"
+            );
+            assert_eq!(probe.1.to_csv(), base_timeline, "{tag}: timeline bytes");
+        }
+    }
+}
+
+/// Thread count is a performance knob, never a semantics knob:
+/// `threads == 1` (the structural serial fallback), 2, 4, and 0 (auto)
+/// all yield the same bits.
+#[test]
+fn sharded_thread_count_is_invariant() {
+    let cfg = sharded_cfg();
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 14.0 }.generate(44, Benchmark::Piqa, 21);
+    let mut first = ClusterSim::new(&cfg).unwrap();
+    let base = first.run_sharded(&arrivals, 1);
+    for threads in [2usize, 4, 0] {
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let out = sim.run_sharded(&arrivals, threads);
+        assert_outcomes_bit_identical(&base, &out, &format!("threads={threads}"));
+    }
 }

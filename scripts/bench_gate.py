@@ -6,12 +6,21 @@ Usage: bench_gate.py [--report-only] BASELINE.json FRESH.json
                      [--tolerance 0.40]
        bench_gate.py --ratchet BASELINE.json FRESH.json
 
-Gates on the DES throughput harness (`cluster/des_run_2cell`,
-`sim_events_per_sec`): exit 1 when the fresh number is more than
-`tolerance` *below* the baseline — a generous gate, because smoke-budget
-numbers are noisy and CI runners vary. Speedups never fail; a speedup
-beyond the tolerance prints a reminder to refresh the baseline. Every
-other harness's mean_ns is reported alongside for context (not gated).
+Gates on the DES throughput harnesses (`sim_events_per_sec`): exit 1
+when a fresh number is more than `tolerance` *below* the baseline — a
+generous gate, because smoke-budget numbers are noisy and CI runners
+vary. Speedups never fail; a speedup beyond the tolerance prints a
+reminder to refresh the baseline. Every other harness's mean_ns is
+reported alongside for context (not gated).
+
+Two DES harnesses are gated when present: the serial
+`cluster/des_run_2cell` (always) and the sharded
+`cluster/des_run_8cell_sharded` (skipped against baselines that predate
+it, so the window self-heals across the schema change). On runners with
+>= 4 cores the sharded/serial events-per-sec ratio of the *fresh* doc is
+additionally held to a speedup floor: x1.5 on full-budget runs, relaxed
+to x1.1 for smoke budgets (a few hundred simulated events barely
+amortize worker spawn, but parallelism must still win).
 
 The gate disarms (prints the comparison, always exits 0) when either:
 
@@ -36,10 +45,16 @@ a majority of the window.
 """
 
 import json
+import os
 import sys
 
 DES_HARNESS = "cluster/des_run_2cell"
+SERIAL_8CELL_HARNESS = "cluster/des_run_8cell"
+SHARDED_HARNESS = "cluster/des_run_8cell_sharded"
 THROUGHPUT_UNIT = "sim_events_per_sec"
+SPEEDUP_FLOOR = 1.5
+SPEEDUP_FLOOR_SMOKE = 1.1
+SPEEDUP_MIN_CORES = 4
 
 
 def des_events_per_sec(doc, path):
@@ -51,6 +66,18 @@ def des_events_per_sec(doc, path):
                          f"expected {THROUGHPUT_UNIT!r}")
             return float(t["value"])
     sys.exit(f"{path}: no {DES_HARNESS} result")
+
+
+def opt_events_per_sec(doc, name):
+    """Events/sec of a named harness, or None when the doc predates it.
+    Older baselines in the rolling cache lack the sharded twins; they
+    must report-and-skip, never fail."""
+    for r in doc.get("results", []):
+        if r.get("name") == name:
+            t = r.get("throughput") or {}
+            if t.get("unit") == THROUGHPUT_UNIT:
+                return float(t["value"])
+    return None
 
 
 def report_harness_deltas(baseline, fresh):
@@ -156,6 +183,31 @@ def main(argv):
     print(f"DES events/sec: baseline {base:,.0f} -> fresh {now:,.0f} "
           f"(x{ratio:.2f}, gate: >= x{1.0 - tolerance:.2f})")
 
+    sharded_base = opt_events_per_sec(baseline, SHARDED_HARNESS)
+    sharded_now = opt_events_per_sec(fresh, SHARDED_HARNESS)
+    serial8_now = opt_events_per_sec(fresh, SERIAL_8CELL_HARNESS)
+    sharded_ratio = None
+    if sharded_now is not None and sharded_base is not None:
+        sharded_ratio = (sharded_now / sharded_base if sharded_base > 0
+                         else float("inf"))
+        print(f"sharded DES events/sec: baseline {sharded_base:,.0f} -> "
+              f"fresh {sharded_now:,.0f} (x{sharded_ratio:.2f}, "
+              f"gate: >= x{1.0 - tolerance:.2f})")
+    elif sharded_now is not None:
+        print(f"sharded DES events/sec: fresh {sharded_now:,.0f} "
+              "(baseline predates the sharded harness; regression gate "
+              "skipped this run)")
+    speedup = None
+    speedup_floor = (SPEEDUP_FLOOR_SMOKE if fresh.get("smoke")
+                     else SPEEDUP_FLOOR)
+    cores = os.cpu_count() or 1
+    if sharded_now is not None and serial8_now:
+        speedup = sharded_now / serial8_now
+        armed = "armed" if cores >= SPEEDUP_MIN_CORES else (
+            f"disarmed: {cores} cores < {SPEEDUP_MIN_CORES}")
+        print(f"sharding speedup: x{speedup:.2f} events/sec over the "
+              f"serial 8-cell twin (floor x{speedup_floor:.1f}, {armed})")
+
     if report_only:
         print("report-only mode (bootstrap baseline from another machine): "
               "not gating. The main-branch baseline cache arms the gate.")
@@ -165,9 +217,21 @@ def main(argv):
               "reporting only, not gating. The first measured main run arms "
               "the gate via the CI baseline cache.")
         return 0
+    failed = False
     if ratio < 1.0 - tolerance:
         print(f"FAIL: DES throughput regressed more than {tolerance:.0%} "
               f"vs the measured baseline")
+        failed = True
+    if sharded_ratio is not None and sharded_ratio < 1.0 - tolerance:
+        print(f"FAIL: sharded DES throughput regressed more than "
+              f"{tolerance:.0%} vs the measured baseline")
+        failed = True
+    if (speedup is not None and cores >= SPEEDUP_MIN_CORES
+            and speedup < speedup_floor):
+        print(f"FAIL: sharding speedup x{speedup:.2f} is below the "
+              f"x{speedup_floor:.1f} floor on a {cores}-core runner")
+        failed = True
+    if failed:
         return 1
     if ratio > 1.0 + tolerance:
         print(f"note: DES throughput improved more than {tolerance:.0%} — "
