@@ -87,6 +87,54 @@ impl Dispatcher {
         }
     }
 
+    /// [`Self::choose`] restricted to replicas other than `exclude` —
+    /// the hedged-dispatch second pick. Predictions use the base
+    /// `t_per_token` like every other dispatch: the dispatcher does not
+    /// see live fault multipliers, which is exactly what makes a hidden
+    /// straggler worth hedging against.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn choose_excluding(
+        &self,
+        replicas: &[usize],
+        tokens: f64,
+        now: Nanos,
+        busy_until: &[Nanos],
+        t_per_token: &[f64],
+        online: &[bool],
+        exclude: usize,
+    ) -> Option<usize> {
+        match self.kind {
+            DispatchKind::Static => replicas
+                .iter()
+                .copied()
+                .find(|&k| k != exclude && online[k] && t_per_token[k].is_finite()),
+            DispatchKind::LoadAware => {
+                let mut best: Option<(Nanos, usize)> = None;
+                for k in replicas
+                    .iter()
+                    .copied()
+                    .filter(|&k| k != exclude && online[k])
+                {
+                    if !t_per_token[k].is_finite() {
+                        continue;
+                    }
+                    let start = busy_until[k].max(now);
+                    let finish =
+                        start.saturating_add(nanos_from_secs(tokens * t_per_token[k]));
+                    let better = match best {
+                        None => true,
+                        Some((bf, bk)) => finish < bf || (finish == bf && k < bk),
+                    };
+                    if better {
+                        best = Some((finish, k));
+                    }
+                }
+                best.map(|(_, k)| k)
+            }
+        }
+    }
+
     /// [`Self::choose`] plus a [`TelemetryEvent::DispatchDecision`]
     /// emitted into `probe`. With [`crate::telemetry::NullProbe`] this
     /// monomorphizes to exactly `choose` — the event construction is
@@ -170,6 +218,28 @@ mod tests {
         let d = Dispatcher::new(DispatchKind::LoadAware);
         let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4);
         assert_eq!(k, Some(1));
+    }
+
+    #[test]
+    fn choose_excluding_skips_the_primary() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        let t = [1e-5, 1e-4, 1e-3, 1.0];
+        // Device 0 is best; excluding it yields the runner-up.
+        assert_eq!(d.choose(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4), Some(0));
+        assert_eq!(
+            d.choose_excluding(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0),
+            Some(1)
+        );
+        // A single-replica expert has no hedge target.
+        assert_eq!(
+            d.choose_excluding(&[0], 10.0, 0, &[0; 4], &t, &ONLINE4, 0),
+            None
+        );
+        let s = Dispatcher::new(DispatchKind::Static);
+        assert_eq!(
+            s.choose_excluding(&[0, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0),
+            Some(2)
+        );
     }
 
     #[test]

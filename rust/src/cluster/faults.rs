@@ -1,0 +1,688 @@
+//! Fault-plan compilation and graceful degradation for the cluster DES.
+//!
+//! [`compile`] turns a [`crate::config::FaultConfig`] into per-cell-lane
+//! [`FaultEvent`] streams ahead of the run: every stochastic process
+//! (crash/recover cycles, straggler episodes, link dips, backhaul outages)
+//! is sampled from its own seeded RNG stream keyed by `(process, cell,
+//! device)`, so the plan is a pure function of the config — independent of
+//! thread count, engine (serial vs sharded) and arrival stream. Each
+//! engine walks its lane with a cursor, scheduling the next `FaultEvent`
+//! on the owning cell's `EventQueue` lane, which is exactly the mechanism
+//! that already keeps serial and sharded pop order byte-identical.
+//!
+//! The *degradation* half lives here too: [`apply_action`] mutates one
+//! cell's state for a fault (taking a device offline clamps its queue and
+//! sweeps the in-flight groups it loses), and [`resolve_lost_group`]
+//! implements the recovery ladder for each lost group — hedged twin still
+//! covers it → re-dispatch to a surviving replica (bounded by the
+//! per-request retry budget) → fall back to the configured drop/shed
+//! policy. Both engines run the same functions on the same state in the
+//! same order, so fault runs stay byte-identical at any thread count.
+//!
+//! An empty plan compiles to empty lanes; the serial event loop
+//! monomorphizes the fault machinery away (`const FAULTS: bool`) and the
+//! per-dispatch touches are bit-exact no-ops (a `* 1.0` service
+//! multiplier, branches that never take), so zero-fault runs reproduce
+//! the pre-fault engine bit for bit — the same discipline `NullProbe`
+//! established for telemetry.
+
+use super::dispatch::Dispatcher;
+use super::event::{nanos_from_secs, Nanos};
+use super::handover::HandoverCoordinator;
+use super::sim::{Cell, ReqState, SimParams};
+use crate::config::{ClusterConfig, DropPolicy, FaultKind};
+use crate::telemetry::{Probe, TelemetryEvent};
+use crate::util::Rng;
+
+/// One concrete state change the fault plan applies to a cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Device goes offline; queued and in-service work on it is lost.
+    Crash { device: usize },
+    /// Device comes back online (empty queue, fresh service multiplier
+    /// history — multipliers persist across crashes by design: a slow
+    /// device that crashes is still slow when it recovers).
+    Recover { device: usize },
+    StraggleStart { device: usize, mult: f64 },
+    StraggleEnd { device: usize },
+    LinkDipStart { device: usize, mult: f64 },
+    LinkDipEnd { device: usize },
+    /// Cluster-wide backhaul multiplier (`0.0` = outage: no borrows).
+    BackhaulDegrade { mult: f64 },
+    BackhaulRestore,
+}
+
+/// A compiled fault occurrence on one cell's lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: Nanos,
+    pub action: FaultAction,
+}
+
+// Stream tags mixed into the fault seed so each (process, cell, device)
+// triple draws from an independent RNG stream.
+const TAG_CRASH: u64 = 0xC7A5;
+const TAG_STRAGGLE: u64 = 0x57A6;
+const TAG_LINK: u64 = 0x11D1;
+const TAG_BACKHAUL: u64 = 0xBAC4;
+
+fn stream_rng(seed: u64, tag: u64, cell: usize, device: usize) -> Rng {
+    Rng::seed_from_u64(seed ^ (tag << 32) ^ ((cell as u64) << 16) ^ device as u64)
+}
+
+/// Exponential variate with the given mean (inverse CDF; the u == 0
+/// clamp keeps `ln` finite).
+fn exp_s(rng: &mut Rng, mean_s: f64) -> f64 {
+    -mean_s * rng.f64().max(f64::MIN_POSITIVE).ln()
+}
+
+/// Compile the config's fault plan into per-cell event lanes, sorted by
+/// `(time, generation order)`. Pure: same config → same lanes, on every
+/// engine and thread count.
+pub fn compile(cfg: &ClusterConfig) -> Vec<Vec<FaultEvent>> {
+    let f = &cfg.faults;
+    let n_cells = cfg.cells.len();
+    let mut lanes: Vec<Vec<(Nanos, usize, FaultAction)>> = vec![Vec::new(); n_cells];
+    if f.is_empty() {
+        return lanes
+            .into_iter()
+            .map(|_| Vec::new())
+            .collect();
+    }
+    let horizon = f.horizon_s;
+    let mut seq = 0usize;
+    let mut push = |lanes: &mut Vec<Vec<(Nanos, usize, FaultAction)>>,
+                    ci: usize,
+                    at_s: f64,
+                    action: FaultAction| {
+        lanes[ci].push((nanos_from_secs(at_s), seq, action));
+        seq += 1;
+    };
+
+    for ci in 0..n_cells {
+        let n_dev = cfg.cells[ci].devices.len();
+        // Crash/recover renewal process per device.
+        if f.mttf_s > 0.0 {
+            for k in 0..n_dev {
+                let mut rng = stream_rng(f.seed, TAG_CRASH, ci, k);
+                let mut t = 0.0;
+                loop {
+                    t += exp_s(&mut rng, f.mttf_s);
+                    if t >= horizon {
+                        break;
+                    }
+                    push(&mut lanes, ci, t, FaultAction::Crash { device: k });
+                    t += exp_s(&mut rng, f.mttr_s);
+                    if t >= horizon {
+                        break; // stays down past the horizon
+                    }
+                    push(&mut lanes, ci, t, FaultAction::Recover { device: k });
+                }
+            }
+        }
+        // Straggler episodes per device.
+        if f.straggler_mtbf_s > 0.0 {
+            for k in 0..n_dev {
+                let mut rng = stream_rng(f.seed, TAG_STRAGGLE, ci, k);
+                let mut t = 0.0;
+                loop {
+                    t += exp_s(&mut rng, f.straggler_mtbf_s);
+                    if t >= horizon {
+                        break;
+                    }
+                    push(
+                        &mut lanes,
+                        ci,
+                        t,
+                        FaultAction::StraggleStart {
+                            device: k,
+                            mult: f.straggler_mult,
+                        },
+                    );
+                    let end = t + f.straggler_duration_s;
+                    if end < horizon {
+                        push(&mut lanes, ci, end, FaultAction::StraggleEnd { device: k });
+                    }
+                    t = end;
+                }
+            }
+        }
+        // Link-quality dips per device.
+        if f.link_dip_mtbf_s > 0.0 {
+            for k in 0..n_dev {
+                let mut rng = stream_rng(f.seed, TAG_LINK, ci, k);
+                let mut t = 0.0;
+                loop {
+                    t += exp_s(&mut rng, f.link_dip_mtbf_s);
+                    if t >= horizon {
+                        break;
+                    }
+                    push(
+                        &mut lanes,
+                        ci,
+                        t,
+                        FaultAction::LinkDipStart {
+                            device: k,
+                            mult: f.link_dip_mult,
+                        },
+                    );
+                    let end = t + f.link_dip_duration_s;
+                    if end < horizon {
+                        push(&mut lanes, ci, end, FaultAction::LinkDipEnd { device: k });
+                    }
+                    t = end;
+                }
+            }
+        }
+        // Backhaul outages (one stream per cell, device index 0).
+        if f.backhaul_outage_mtbf_s > 0.0 {
+            let mut rng = stream_rng(f.seed, TAG_BACKHAUL, ci, 0);
+            let mut t = 0.0;
+            loop {
+                t += exp_s(&mut rng, f.backhaul_outage_mtbf_s);
+                if t >= horizon {
+                    break;
+                }
+                push(&mut lanes, ci, t, FaultAction::BackhaulDegrade { mult: 0.0 });
+                let end = t + f.backhaul_outage_duration_s;
+                if end < horizon {
+                    push(&mut lanes, ci, end, FaultAction::BackhaulRestore);
+                }
+                t = end;
+            }
+        }
+    }
+    // Scheduled faults, in config order. `device: None` is the
+    // correlated whole-cell case, expanded in device order.
+    for s in &f.scheduled {
+        let n_dev = cfg.cells[s.cell].devices.len();
+        let devices: Vec<usize> = match (s.kind, s.device) {
+            (FaultKind::Backhaul, _) => vec![0],
+            (_, Some(d)) => vec![d],
+            (_, None) => (0..n_dev).collect(),
+        };
+        for k in devices {
+            match s.kind {
+                FaultKind::Crash => {
+                    push(&mut lanes, s.cell, s.at_s, FaultAction::Crash { device: k });
+                    if s.duration_s > 0.0 {
+                        push(
+                            &mut lanes,
+                            s.cell,
+                            s.at_s + s.duration_s,
+                            FaultAction::Recover { device: k },
+                        );
+                    }
+                }
+                FaultKind::Straggle => {
+                    push(
+                        &mut lanes,
+                        s.cell,
+                        s.at_s,
+                        FaultAction::StraggleStart {
+                            device: k,
+                            mult: s.mult,
+                        },
+                    );
+                    if s.duration_s > 0.0 {
+                        push(
+                            &mut lanes,
+                            s.cell,
+                            s.at_s + s.duration_s,
+                            FaultAction::StraggleEnd { device: k },
+                        );
+                    }
+                }
+                FaultKind::LinkDip => {
+                    push(
+                        &mut lanes,
+                        s.cell,
+                        s.at_s,
+                        FaultAction::LinkDipStart {
+                            device: k,
+                            mult: s.mult,
+                        },
+                    );
+                    if s.duration_s > 0.0 {
+                        push(
+                            &mut lanes,
+                            s.cell,
+                            s.at_s + s.duration_s,
+                            FaultAction::LinkDipEnd { device: k },
+                        );
+                    }
+                }
+                FaultKind::Backhaul => {
+                    push(
+                        &mut lanes,
+                        s.cell,
+                        s.at_s,
+                        FaultAction::BackhaulDegrade { mult: s.mult },
+                    );
+                    if s.duration_s > 0.0 {
+                        push(&mut lanes, s.cell, s.at_s + s.duration_s, FaultAction::BackhaulRestore);
+                    }
+                }
+            }
+        }
+    }
+    lanes
+        .into_iter()
+        .map(|mut lane| {
+            lane.sort_by_key(|&(at, seq, _)| (at, seq));
+            lane.into_iter()
+                .map(|(at, _, action)| FaultEvent { at, action })
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-cell fault runtime: the lane cursor plus the live episode state.
+/// Rebuilt at every run start so a reset simulator replays the identical
+/// plan.
+#[derive(Debug, Clone)]
+pub(super) struct CellFaults {
+    /// Next un-scheduled event in the cell's compiled lane.
+    pub(super) cursor: usize,
+    /// Live straggler multiplier per device (1.0 = none).
+    pub(super) straggle: Vec<f64>,
+    /// Live link-dip multiplier per device (1.0 = none).
+    pub(super) link: Vec<f64>,
+    /// When each currently-offline device crashed (availability
+    /// accounting; meaningful only while `online[k]` is false).
+    pub(super) offline_since: Vec<Nanos>,
+    /// Accumulated device-offline nanoseconds (integer sum — order-free,
+    /// so serial and sharded accumulation agree bit for bit).
+    pub(super) offline_ns: u64,
+}
+
+impl CellFaults {
+    pub(super) fn new(n_dev: usize) -> Self {
+        Self {
+            cursor: 0,
+            straggle: vec![1.0; n_dev],
+            link: vec![1.0; n_dev],
+            offline_since: vec![0; n_dev],
+            offline_ns: 0,
+        }
+    }
+}
+
+/// A committed token group the fault layer may need to recover: enough
+/// to re-dispatch it (or bill its loss) if its device crashes before
+/// `done`. Tracked only when the run has a non-empty fault plan.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct InflightGroup {
+    pub(super) req: usize,
+    pub(super) expert: usize,
+    pub(super) device: usize,
+    pub(super) tokens: f64,
+    pub(super) start: Nanos,
+    pub(super) done: Nanos,
+    /// The hedged twin's finish instant, when this group has one: a
+    /// crash of either twin is covered by the survivor.
+    pub(super) cover: Option<Nanos>,
+}
+
+/// Apply one fault action to its cell at `now`. Crash actions append the
+/// lost in-flight groups (queued or in service on the dead device) to
+/// `lost`, in placement order, for the caller's recovery pass.
+pub(super) fn apply_action<P: Probe>(
+    action: FaultAction,
+    ci: usize,
+    now: Nanos,
+    cell: &mut Cell,
+    rt: &mut CellFaults,
+    handover: &mut HandoverCoordinator,
+    lost: &mut Vec<InflightGroup>,
+    probe: &mut P,
+) {
+    match action {
+        FaultAction::Crash { device: k } => {
+            if !cell.dev.online[k] {
+                return; // idempotent: scheduled crash over a stochastic one
+            }
+            cell.dev.online[k] = false;
+            cell.plane.on_topology_change(&cell.dev.online);
+            rt.offline_since[k] = now;
+            probe.on_event(&TelemetryEvent::DeviceCrashed {
+                cell: ci,
+                device: k,
+                t: now,
+            });
+            // The committed queue beyond `now` is lost with the device.
+            // (Utilization keeps the already-billed busy seconds: the
+            // work was committed and the capacity spent.)
+            if cell.dev.busy_until[k] > now {
+                cell.dev.busy_until[k] = now;
+            }
+            // Sweep the in-flight ledger: finished entries are pruned,
+            // this device's unfinished groups are lost. Order-preserving
+            // so recovery processes groups in placement order.
+            let mut i = 0;
+            while i < cell.inflight.len() {
+                if cell.inflight[i].done <= now {
+                    cell.inflight.remove(i);
+                } else if cell.inflight[i].device == k {
+                    lost.push(cell.inflight.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        FaultAction::Recover { device: k } => {
+            if cell.dev.online[k] {
+                return;
+            }
+            cell.dev.online[k] = true;
+            cell.plane.on_topology_change(&cell.dev.online);
+            rt.offline_ns += now - rt.offline_since[k];
+            probe.on_event(&TelemetryEvent::DeviceRecovered {
+                cell: ci,
+                device: k,
+                t: now,
+            });
+        }
+        FaultAction::StraggleStart { device: k, mult } => {
+            rt.straggle[k] = mult;
+            set_service_mult(cell, rt, ci, k, now, probe);
+        }
+        FaultAction::StraggleEnd { device: k } => {
+            rt.straggle[k] = 1.0;
+            set_service_mult(cell, rt, ci, k, now, probe);
+        }
+        FaultAction::LinkDipStart { device: k, mult } => {
+            rt.link[k] = mult;
+            set_service_mult(cell, rt, ci, k, now, probe);
+        }
+        FaultAction::LinkDipEnd { device: k } => {
+            rt.link[k] = 1.0;
+            set_service_mult(cell, rt, ci, k, now, probe);
+        }
+        FaultAction::BackhaulDegrade { mult } => {
+            handover.set_fault_mult(mult);
+            probe.on_event(&TelemetryEvent::BackhaulFault {
+                cell: ci,
+                mult,
+                t: now,
+            });
+        }
+        FaultAction::BackhaulRestore => {
+            handover.set_fault_mult(1.0);
+            probe.on_event(&TelemetryEvent::BackhaulFault {
+                cell: ci,
+                mult: 1.0,
+                t: now,
+            });
+        }
+    }
+}
+
+fn set_service_mult<P: Probe>(
+    cell: &mut Cell,
+    rt: &CellFaults,
+    ci: usize,
+    k: usize,
+    now: Nanos,
+    probe: &mut P,
+) {
+    let mult = rt.straggle[k] * rt.link[k];
+    cell.dev.service_mult[k] = mult;
+    probe.on_event(&TelemetryEvent::DeviceSlowdown {
+        cell: ci,
+        device: k,
+        mult,
+        t: now,
+    });
+}
+
+/// What became of one crash-lost group after the recovery ladder.
+pub(super) enum LossResolution {
+    /// A hedged twin on another device still finishes the work.
+    Covered,
+    /// Re-placed on a surviving replica; `waste` is the in-service work
+    /// the crash discarded (0 for still-queued groups).
+    Redispatched { waste: f64 },
+    /// Retry budget or replicas exhausted under [`DropPolicy::DropRequest`]:
+    /// the request is dead.
+    Dropped { waste: f64 },
+    /// Retry budget or replicas exhausted under [`DropPolicy::ShedTokens`]:
+    /// the group's tokens are shed, the request continues degraded.
+    Shed { tokens: f64, waste: f64 },
+}
+
+/// Run the recovery ladder for one lost group. Updates the request's
+/// barrier (re-dispatch and hedge-cover push the pending `BlockDone`
+/// later) or marks it dropped; the caller translates the resolution into
+/// its engine's counters.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn resolve_lost_group<P: Probe>(
+    g: &InflightGroup,
+    st: &mut ReqState,
+    ci: usize,
+    now: Nanos,
+    cell: &mut Cell,
+    dispatcher: &Dispatcher,
+    params: &SimParams,
+    probe: &mut P,
+) -> LossResolution {
+    if let Some(c) = g.cover {
+        // The speculative twin survives; its finish bounds the barrier.
+        // The loser's tokens were already billed as waste at hedge time.
+        if c > st.barrier {
+            st.barrier = c;
+        }
+        return LossResolution::Covered;
+    }
+    // In-service work is discarded on a crash; queued groups lose nothing.
+    let waste = if g.start < now { g.tokens } else { 0.0 };
+    if st.retries < params.max_retries {
+        let choice = {
+            let placement = cell.plane.placement();
+            dispatcher.choose(
+                placement.replicas(g.expert),
+                g.tokens,
+                now,
+                &cell.dev.busy_until,
+                cell.plane.t_per_token(),
+                &cell.dev.online,
+            )
+        };
+        if let Some(k) = choice {
+            let t_k = cell.plane.t_per_token()[k];
+            let service_s = g.tokens * t_k * cell.dev.service_mult[k];
+            let start = cell.dev.busy_until[k].max(now);
+            let done = start.saturating_add(nanos_from_secs(service_s));
+            cell.dev.busy_until[k] = done;
+            cell.dev.busy[k].add_busy(service_s);
+            // Demand accounting: served_tokens feeds the dispatcher-load
+            // signal, but expert_tokens already counted this group at its
+            // original commit — re-adding would double the autoscaler's
+            // demand estimate.
+            cell.dev.served_tokens[k] += g.tokens;
+            st.retries += 1;
+            if done > st.barrier {
+                st.barrier = done;
+            }
+            cell.inflight.push(InflightGroup {
+                req: g.req,
+                expert: g.expert,
+                device: k,
+                tokens: g.tokens,
+                start,
+                done,
+                cover: None,
+            });
+            probe.on_event(&TelemetryEvent::Redispatched {
+                req: g.req,
+                cell: ci,
+                expert: g.expert,
+                device: k,
+                tokens: g.tokens,
+                t: now,
+                done,
+            });
+            return LossResolution::Redispatched { waste };
+        }
+    }
+    // Budget or replicas exhausted: fall back to the drop policy.
+    match params.drop_policy {
+        DropPolicy::DropRequest => {
+            st.dropped = true;
+            probe.on_event(&TelemetryEvent::Dropped {
+                req: g.req,
+                cell: ci,
+                t: now,
+            });
+            LossResolution::Dropped { waste }
+        }
+        DropPolicy::ShedTokens => {
+            probe.on_event(&TelemetryEvent::GroupShed {
+                req: g.req,
+                cell: ci,
+                expert: g.expert,
+                tokens: g.tokens,
+                t: now,
+            });
+            LossResolution::Shed {
+                tokens: g.tokens,
+                waste,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, FaultKind, ScheduledFault};
+
+    fn faulted_cfg() -> ClusterConfig {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.faults.mttf_s = 5.0;
+        cfg.faults.mttr_s = 1.0;
+        cfg.faults.straggler_mtbf_s = 4.0;
+        cfg.faults.horizon_s = 20.0;
+        cfg
+    }
+
+    #[test]
+    fn empty_plan_compiles_to_empty_lanes() {
+        let cfg = ClusterConfig::edge_default();
+        let lanes = compile(&cfg);
+        assert_eq!(lanes.len(), cfg.cells.len());
+        assert!(lanes.iter().all(|l| l.is_empty()));
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_sorted() {
+        let cfg = faulted_cfg();
+        let a = compile(&cfg);
+        let b = compile(&cfg);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|l| !l.is_empty()), "plan generated nothing");
+        for lane in &a {
+            for w in lane.windows(2) {
+                assert!(w[0].at <= w[1].at, "lane not time-sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn fault_seed_changes_the_plan() {
+        let cfg = faulted_cfg();
+        let mut cfg2 = cfg.clone();
+        cfg2.faults.seed ^= 0xDEAD;
+        assert_ne!(compile(&cfg), compile(&cfg2));
+    }
+
+    #[test]
+    fn sim_seed_does_not_change_the_plan() {
+        let cfg = faulted_cfg();
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 1234;
+        assert_eq!(compile(&cfg), compile(&cfg2));
+    }
+
+    #[test]
+    fn crash_recover_alternate_per_device() {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.faults.mttf_s = 3.0;
+        cfg.faults.mttr_s = 0.5;
+        cfg.faults.horizon_s = 50.0;
+        let lanes = compile(&cfg);
+        let n_dev = cfg.cells[0].devices.len();
+        for k in 0..n_dev {
+            let mut expect_crash = true;
+            for ev in &lanes[0] {
+                match ev.action {
+                    FaultAction::Crash { device } if device == k => {
+                        assert!(expect_crash, "two crashes without a recover (dev {k})");
+                        expect_crash = false;
+                    }
+                    FaultAction::Recover { device } if device == k => {
+                        assert!(!expect_crash, "recover before crash (dev {k})");
+                        expect_crash = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn whole_cell_scheduled_crash_expands_per_device() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.faults.scheduled.push(ScheduledFault {
+            at_s: 1.0,
+            cell: 1,
+            device: None,
+            kind: FaultKind::Crash,
+            duration_s: 2.0,
+            mult: 1.0,
+        });
+        let lanes = compile(&cfg);
+        let n_dev = cfg.cells[1].devices.len();
+        let crashes = lanes[1]
+            .iter()
+            .filter(|e| matches!(e.action, FaultAction::Crash { .. }))
+            .count();
+        let recovers = lanes[1]
+            .iter()
+            .filter(|e| matches!(e.action, FaultAction::Recover { .. }))
+            .count();
+        assert_eq!(crashes, n_dev);
+        assert_eq!(recovers, n_dev);
+        assert!(lanes[0].is_empty());
+    }
+
+    #[test]
+    fn scheduled_backhaul_outage_emits_degrade_and_restore() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.faults.scheduled.push(ScheduledFault {
+            at_s: 0.5,
+            cell: 0,
+            device: None,
+            kind: FaultKind::Backhaul,
+            duration_s: 1.0,
+            mult: 0.0,
+        });
+        let lanes = compile(&cfg);
+        assert_eq!(lanes[0].len(), 2);
+        assert_eq!(lanes[0][0].action, FaultAction::BackhaulDegrade { mult: 0.0 });
+        assert_eq!(lanes[0][1].action, FaultAction::BackhaulRestore);
+        assert!(lanes[0][0].at < lanes[0][1].at);
+    }
+
+    #[test]
+    fn horizon_bounds_stochastic_generation() {
+        let mut cfg = ClusterConfig::single_cell();
+        cfg.faults.straggler_mtbf_s = 0.1;
+        cfg.faults.straggler_duration_s = 0.05;
+        cfg.faults.horizon_s = 2.0;
+        let lanes = compile(&cfg);
+        let bound = nanos_from_secs(2.0);
+        assert!(lanes[0].iter().all(|e| e.at < bound));
+        assert!(lanes[0].len() > 4, "expected a dense episode stream");
+    }
+}

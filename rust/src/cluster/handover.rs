@@ -116,6 +116,11 @@ pub struct HandoverCoordinator {
     order: Vec<(f64, usize)>,
     /// Cross-cell groups staged by the current block.
     staged: Vec<StagedBorrow>,
+    /// Live fault multiplier on backhaul latency, driven by the fault
+    /// plan's backhaul events: `1.0` nominal, `> 1.0` jitter/degradation,
+    /// `0.0` full outage (borrowing disabled). Cluster-wide by design —
+    /// the backhaul is one transport network.
+    fault_mult: f64,
 }
 
 impl HandoverCoordinator {
@@ -126,6 +131,7 @@ impl HandoverCoordinator {
             backhaul_matrix: None,
             order: Vec::new(),
             staged: Vec::new(),
+            fault_mult: 1.0,
         }
     }
 
@@ -145,12 +151,21 @@ impl HandoverCoordinator {
     }
 
     /// One-way transfer seconds per token for the directed hop
-    /// `from → to`: the matrix entry when configured, else the scalar.
+    /// `from → to`: the matrix entry when configured, else the scalar —
+    /// times the live fault multiplier (`* 1.0` bit-exact when no
+    /// backhaul fault is in progress).
     pub fn backhaul_pair(&self, from: usize, to: usize) -> f64 {
-        match &self.backhaul_matrix {
+        let base = match &self.backhaul_matrix {
             Some(m) => m[from][to],
             None => self.backhaul_s_per_token,
-        }
+        };
+        base * self.fault_mult
+    }
+
+    /// Set the backhaul fault multiplier (`0.0` = outage: `try_borrow`
+    /// refuses rather than promising free transfers).
+    pub fn set_fault_mult(&mut self, mult: f64) {
+        self.fault_mult = mult;
     }
 
     /// Drop any scratch state (simulator reset). Stats are accumulated
@@ -159,6 +174,7 @@ impl HandoverCoordinator {
     pub fn reset(&mut self) {
         self.order.clear();
         self.staged.clear();
+        self.fault_mult = 1.0;
     }
 
     /// Groups staged by the current block (empty unless `BorrowExpert`
@@ -227,6 +243,9 @@ impl HandoverCoordinator {
     ) -> Option<Nanos> {
         if self.policy != HandoverPolicy::BorrowExpert {
             return None;
+        }
+        if self.fault_mult == 0.0 {
+            return None; // backhaul outage: no inter-cell transfers
         }
         if left.is_empty() && right.is_empty() {
             return None;

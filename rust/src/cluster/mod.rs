@@ -133,11 +133,35 @@
 //! threshold since the last solve — the queue-state-driven cadence the
 //! allocation-free tick made affordable.
 //!
+//! ## Fault injection & graceful degradation
+//!
+//! The [`faults`] module compiles a seeded
+//! [`crate::config::FaultConfig`] — scheduled and stochastic device
+//! crash/recover (MTTF/MTTR renewal processes), straggler episodes that
+//! multiply service time, link-quality dips, backhaul outages, and
+//! correlated whole-cell events — into one sorted [`faults::FaultEvent`]
+//! lane per cell, walked by `Fault` events on the same queues as the
+//! rest of the DES. The plan is a pure function of the fault seed, so
+//! serial and sharded runs stay byte-identical at any thread count; an
+//! empty plan monomorphizes to the exact zero-fault hot path (the same
+//! `NullProbe` discipline telemetry uses). On top of injection the
+//! simulator degrades gracefully: a crash re-dispatches the device's
+//! queued and in-service token groups to surviving replicas (bounded by
+//! `max_retries`, then the configured drop policy), an optional
+//! per-request `deadline_s` turns on SLO accounting, and `hedge` places
+//! a speculative duplicate of any deadline-busting group on the
+//! runner-up replica — first finish wins, the loser's tokens are
+//! counted as waste. Outcomes report `slo_miss_rate`, `retries`,
+//! `hedge_rate`, `wasted_tokens` and `availability` next to the
+//! existing metrics.
+//!
 //! Follow-ons tracked in ROADMAP.md: handover hysteresis, an energy
-//! model.
+//! model (which can reuse the fault plan's per-device episode machinery
+//! for battery churn).
 
 pub mod dispatch;
 pub mod event;
+pub mod faults;
 pub mod handover;
 pub mod placement;
 pub mod shard;
@@ -145,6 +169,7 @@ pub mod sim;
 
 pub use dispatch::Dispatcher;
 pub use event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+pub use faults::{compile as compile_fault_plan, FaultAction, FaultEvent};
 pub use handover::{HandoverCell, HandoverCoordinator, StagedBorrow};
 pub use placement::Placement;
 pub use sim::{ClusterOutcome, ClusterSim};

@@ -60,6 +60,9 @@
 
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+use super::faults::{
+    apply_action, resolve_lost_group, CellFaults, FaultEvent, InflightGroup, LossResolution,
+};
 use super::handover::HandoverCoordinator;
 use super::sim::{
     cell_backlog_s, control_tick_at, sample_cell, start_block_at, Cell, ClusterOutcome,
@@ -158,6 +161,18 @@ struct CellShard {
     /// f64 accumulation replays in serial order (addition order matters
     /// for bit-identity).
     sheds: Vec<(Nanos, f64)>,
+    /// `(event time, wasted tokens)` per hedge / crash loss, replayed in
+    /// serial order for the same bit-identity reason as `sheds`.
+    wastes: Vec<(Nanos, f64)>,
+    /// This cell's compiled fault lane (empty without a plan).
+    lane: Vec<FaultEvent>,
+    /// Fault runtime: lane cursor, live multipliers, offline accounting.
+    rt: CellFaults,
+    /// Scratch for the groups one crash strands (reused per fault pop).
+    lost: Vec<InflightGroup>,
+    slo_missed: usize,
+    retries: usize,
+    hedges: usize,
     arrived: usize,
     completed: usize,
     dropped: usize,
@@ -178,12 +193,23 @@ impl CellShard {
     fn new(
         ci: usize,
         n_cells: usize,
-        cell: Cell,
+        mut cell: Cell,
         params: SimParams,
         dispatcher: Dispatcher,
         handover: HandoverCoordinator,
         cadence: Option<Nanos>,
+        lane: Vec<FaultEvent>,
     ) -> Self {
+        let rt = CellFaults::new(cell.dev.len());
+        // Mirror of the serial fault arming: fresh multipliers and an
+        // empty in-flight ledger at run start (only fault runs touch
+        // them, matching the `FAULTS` gate of the serial loop).
+        if !lane.is_empty() {
+            for m in &mut cell.dev.service_mult {
+                *m = 1.0;
+            }
+            cell.inflight.clear();
+        }
         Self {
             ci,
             n_cells,
@@ -199,6 +225,13 @@ impl CellShard {
             samples: Vec::new(),
             completions: Vec::new(),
             sheds: Vec::new(),
+            wastes: Vec::new(),
+            lane,
+            rt,
+            lost: Vec::new(),
+            slo_missed: 0,
+            retries: 0,
+            hedges: 0,
             arrived: 0,
             completed: 0,
             dropped: 0,
@@ -224,6 +257,9 @@ impl CellShard {
             arrived: nanos_from_secs(a.time_s),
             next_block: 0,
             handed_over: false,
+            barrier: 0,
+            dropped: false,
+            retries: 0,
         };
         self.queue.schedule_at(st.arrived, Event::Arrive(i));
         self.states.push(st);
@@ -236,6 +272,15 @@ impl CellShard {
         if let Some(e) = self.cell.plane.epoch_s() {
             self.queue
                 .schedule_at(nanos_from_secs(e), Event::ControlTick(self.ci));
+        }
+    }
+
+    /// Mirror of the serial loop's fault-lane arming: the first compiled
+    /// event, scheduled *after* arrivals and the control tick so
+    /// equal-time pops resolve in the serial seq order.
+    fn schedule_fault(&mut self) {
+        if let Some(ev) = self.lane.first() {
+            self.queue.schedule_at(ev.at, Event::Fault(self.ci));
         }
     }
 
@@ -290,6 +335,73 @@ impl CellShard {
                 }
                 return;
             }
+            Event::Fault(ci) => {
+                debug_assert_eq!(ci, self.ci);
+                // Shard-local mirror of the serial Fault arm: apply,
+                // re-arm the lane, resolve stranded groups. Fault pops
+                // never advance `last_work_ns`.
+                let fev = self.lane[self.rt.cursor];
+                self.rt.cursor += 1;
+                if let Some(next) = self.lane.get(self.rt.cursor) {
+                    self.queue.schedule_at(next.at, Event::Fault(self.ci));
+                }
+                let mut lost = std::mem::take(&mut self.lost);
+                lost.clear();
+                apply_action(
+                    fev.action,
+                    self.ci,
+                    now,
+                    &mut self.cell,
+                    &mut self.rt,
+                    &mut self.handover,
+                    &mut lost,
+                    rec,
+                );
+                for g in &lost {
+                    debug_assert_eq!(g.req % self.n_cells, self.ci);
+                    let st = &mut self.states[g.req / self.n_cells];
+                    if st.dropped {
+                        continue;
+                    }
+                    match resolve_lost_group(
+                        g,
+                        st,
+                        self.ci,
+                        now,
+                        &mut self.cell,
+                        &self.dispatcher,
+                        &self.params,
+                        rec,
+                    ) {
+                        LossResolution::Covered => {}
+                        LossResolution::Redispatched { waste } => {
+                            self.retries += 1;
+                            if waste > 0.0 {
+                                self.wastes.push((now, waste));
+                            }
+                        }
+                        LossResolution::Dropped { waste } => {
+                            if waste > 0.0 {
+                                self.wastes.push((now, waste));
+                            }
+                            self.dropped += 1;
+                            self.dropped_tokens += st.tokens as u64;
+                            self.outstanding -= 1;
+                            if self.params.deadline_s > 0.0 {
+                                self.slo_missed += 1;
+                            }
+                        }
+                        LossResolution::Shed { tokens, waste } => {
+                            self.sheds.push((now, tokens));
+                            if waste > 0.0 {
+                                self.wastes.push((now, waste));
+                            }
+                        }
+                    }
+                }
+                self.lost = lost;
+                return;
+            }
             Event::Arrive(i) => {
                 let st = &self.states[i / self.n_cells];
                 self.arrived += 1;
@@ -305,8 +417,20 @@ impl CellShard {
                 i
             }
             Event::BlockDone(i) => {
-                self.last_work_ns = now;
                 let st = &mut self.states[i / self.n_cells];
+                if self.params.faults {
+                    // Tombstone / barrier chase — the serial gates,
+                    // runtime-checked here (the shard loop is not
+                    // monomorphized over the fault flag).
+                    if st.dropped {
+                        return;
+                    }
+                    if st.barrier > now {
+                        self.queue.schedule_at(st.barrier, Event::BlockDone(i));
+                        return;
+                    }
+                }
+                self.last_work_ns = now;
                 st.next_block += 1;
                 if st.next_block >= self.params.n_blocks {
                     self.completed += 1;
@@ -314,6 +438,9 @@ impl CellShard {
                     self.outstanding -= 1;
                     let lat_ms = secs_from_nanos(now - st.arrived) * 1e3;
                     self.completions.push((now, lat_ms));
+                    if self.params.deadline_s > 0.0 && lat_ms > self.params.deadline_s * 1e3 {
+                        self.slo_missed += 1;
+                    }
                     rec.on_event(&TelemetryEvent::Completed {
                         req: i,
                         cell: self.ci,
@@ -351,6 +478,10 @@ impl CellShard {
             // Adding 0.0 is exact, so zero-shed blocks need no log entry.
             self.sheds.push((now, r.shed_tokens));
         }
+        if r.wasted_tokens > 0.0 {
+            self.wastes.push((now, r.wasted_tokens));
+        }
+        self.hedges += r.hedges;
         self.borrowed_groups += r.borrowed_groups;
         self.borrowed_tokens += r.borrowed_tokens;
         if r.borrowed_groups > 0 && !self.states[li].handed_over {
@@ -367,11 +498,17 @@ impl CellShard {
                     end: block_end,
                 });
                 self.queue.schedule_at(block_end, Event::BlockDone(i));
+                if self.params.faults {
+                    self.states[li].barrier = block_end;
+                }
             }
             None => {
                 self.dropped += 1;
                 self.dropped_tokens += self.states[li].tokens as u64;
                 self.outstanding -= 1;
+                if self.params.deadline_s > 0.0 {
+                    self.slo_missed += 1;
+                }
                 rec.on_event(&TelemetryEvent::Dropped {
                     req: i,
                     cell: self.ci,
@@ -455,6 +592,18 @@ impl ClusterSim {
         let n_cells = self.cells.len();
         let workers = exec::resolve_threads(threads).min(n_cells.max(1));
         if n_cells <= 1 || workers <= 1 || self.handover.policy() != HandoverPolicy::None {
+            // Silent for the structural cases (one cell / one worker —
+            // sharding simply cannot help), but a user who asked for
+            // threads *and* an interacting handover policy should learn
+            // why the run is serial.
+            if n_cells > 1 && workers > 1 {
+                eprintln!(
+                    "repro: handover policy '{}' reads neighbor state with zero lookahead; \
+                     running the serial engine instead of {} threads (output is identical)",
+                    self.handover.policy().as_str(),
+                    workers
+                );
+            }
             return self.run_probed(arrivals, probe);
         }
         if probe.is_null() {
@@ -497,6 +646,7 @@ impl ClusterSim {
                     self.dispatcher,
                     self.handover.clone(),
                     cadence,
+                    self.fault_lanes[ci].clone(),
                 )
             })
             .collect();
@@ -505,6 +655,10 @@ impl ClusterSim {
         }
         for sh in &mut shards {
             sh.schedule_control_tick();
+        }
+        // Fault lanes arm last, matching the serial setup seq order.
+        for sh in &mut shards {
+            sh.schedule_fault();
         }
 
         // Window barrier loop: every shard advances to the window edge
@@ -602,6 +756,8 @@ impl ClusterSim {
         merge_in_order(&shards, |sh| &sh.completions, |lat| latency_ms.record(lat));
         let mut shed_tokens = 0.0f64;
         merge_in_order(&shards, |sh| &sh.sheds, |s| shed_tokens += s);
+        let mut wasted_tokens = 0.0f64;
+        merge_in_order(&shards, |sh| &sh.wastes, |w| wasted_tokens += w);
 
         let mut arrived = 0usize;
         let mut completed = 0usize;
@@ -612,6 +768,9 @@ impl ClusterSim {
         let mut handovers = 0usize;
         let mut borrowed_groups = 0usize;
         let mut borrowed_tokens = 0.0f64;
+        let mut slo_missed = 0usize;
+        let mut retries = 0usize;
+        let mut hedges = 0usize;
         let mut events = 0usize;
         let mut last_work_ns: Nanos = 0;
         for (sh, _) in &shards {
@@ -624,8 +783,27 @@ impl ClusterSim {
             handovers += sh.handovers;
             borrowed_groups += sh.borrowed_groups;
             borrowed_tokens += sh.borrowed_tokens;
+            slo_missed += sh.slo_missed;
+            retries += sh.retries;
+            hedges += sh.hedges;
             events += sh.events;
             last_work_ns = last_work_ns.max(sh.last_work_ns);
+        }
+        // Offline device-seconds: closed intervals from each shard's
+        // runtime, plus still-open outages clamped to the *global* last
+        // work instant (the same clamp the serial loop applies). Integer
+        // sums are order-free, so per-shard accumulation is exact.
+        let mut offline_ns: u64 = 0;
+        for (sh, _) in &shards {
+            if sh.lane.is_empty() {
+                continue;
+            }
+            offline_ns += sh.rt.offline_ns;
+            for (k, &on) in sh.cell.dev.online.iter().enumerate() {
+                if !on {
+                    offline_ns += last_work_ns.saturating_sub(sh.rt.offline_since[k]);
+                }
+            }
         }
 
         self.cells = shards.into_iter().map(|(sh, _)| sh.cell).collect();
@@ -659,6 +837,11 @@ impl ClusterSim {
             utilization,
             control,
             solver,
+            slo_missed,
+            retries,
+            hedges,
+            wasted_tokens,
+            offline_device_s: secs_from_nanos(offline_ns),
         }
     }
 }
@@ -697,6 +880,11 @@ mod tests {
         assert_eq!(a.utilization, b.utilization);
         assert_eq!(a.control, b.control);
         assert_eq!(a.solver, b.solver);
+        assert_eq!(a.slo_missed, b.slo_missed);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.hedges, b.hedges);
+        assert_eq!(a.wasted_tokens, b.wasted_tokens);
+        assert_eq!(a.offline_device_s, b.offline_device_s);
     }
 
     #[test]
@@ -706,6 +894,35 @@ mod tests {
         let base = serial.run(&arr);
         for threads in [2, 4] {
             let mut sim = ClusterSim::new(&cfg(4)).unwrap();
+            let out = sim.run_sharded(&arr, threads);
+            assert_outcomes_identical(&base, &out);
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_with_fault_plan() {
+        use crate::config::{FaultKind, ScheduledFault};
+        let mut c = cfg(4);
+        c.faults.mttf_s = 6.0;
+        c.faults.mttr_s = 1.5;
+        c.faults.straggler_mtbf_s = 4.0;
+        c.faults.straggler_duration_s = 2.0;
+        c.faults.horizon_s = 20.0;
+        c.faults.scheduled.push(ScheduledFault {
+            at_s: 0.5,
+            cell: 1,
+            device: None,
+            kind: FaultKind::Crash,
+            duration_s: 1.0,
+            mult: 1.0,
+        });
+        c.deadline_s = 2.0;
+        c.hedge = true;
+        let arr = arrivals(48, 14.0, 9);
+        let mut serial = ClusterSim::new(&c).unwrap();
+        let base = serial.run(&arr);
+        for threads in [2, 4] {
+            let mut sim = ClusterSim::new(&c).unwrap();
             let out = sim.run_sharded(&arr, threads);
             assert_outcomes_identical(&base, &out);
         }

@@ -70,6 +70,9 @@
 
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
+use super::faults::{
+    self, apply_action, resolve_lost_group, CellFaults, FaultEvent, InflightGroup, LossResolution,
+};
 use super::handover::{HandoverCell, HandoverCoordinator};
 use super::placement::Placement;
 use crate::config::{ClusterConfig, ControlKind, DropPolicy, PolicyConfig};
@@ -99,6 +102,11 @@ pub(super) struct DeviceState {
     pub(super) served_tokens: Vec<f64>,
     /// Tentative queue instants while a block is placed (pass 1).
     pub(super) scratch_busy: Vec<Nanos>,
+    /// Live service-time multiplier per device from the fault plan
+    /// (straggler episodes × link dips). Always 1.0 without a plan, and
+    /// `q · t_k · 1.0` is bit-exact `q · t_k` — the zero-fault dispatch
+    /// arithmetic is unchanged.
+    pub(super) service_mult: Vec<f64>,
 }
 
 impl DeviceState {
@@ -109,6 +117,7 @@ impl DeviceState {
             online: vec![true; n_dev],
             served_tokens: vec![0.0; n_dev],
             scratch_busy: vec![0; n_dev],
+            service_mult: vec![1.0; n_dev],
         }
     }
 
@@ -153,6 +162,10 @@ pub(super) struct Cell {
     /// Total queued seconds at the last control solve — the reference
     /// the backlog-delta trigger measures drift against.
     pub(super) last_solve_backlog_s: f64,
+    /// Committed-but-unfinished token groups, tracked only when the run
+    /// has a non-empty fault plan: a device crash sweeps this ledger for
+    /// the groups it loses (re-dispatch / drop / shed).
+    pub(super) inflight: Vec<InflightGroup>,
 }
 
 /// One admitted local placement of a block, staged in pass 1 and
@@ -169,6 +182,14 @@ struct PlacedGroup {
     start: Nanos,
     /// Service finish (device-local, before any barrier).
     done: Nanos,
+    /// Speculative duplicate placed by hedged dispatch: contributes busy
+    /// time and a `GroupPlaced` event but not demand signals (its twin
+    /// already counted).
+    hedge: bool,
+    /// The twin's finish instant when this group is half of a hedged
+    /// pair — carried into the in-flight ledger so a crash of either
+    /// twin is covered by the survivor.
+    cover: Option<Nanos>,
 }
 
 /// Total queued seconds across a cell's devices at `now` — the signal
@@ -202,6 +223,12 @@ pub(super) fn sample_cell(cell: &Cell, now: Nanos) -> CellSample {
         devices: cell.dev.len(),
         online_devices: cell.dev.online_count(),
         live_replicas,
+        degraded_devices: cell
+            .dev
+            .service_mult
+            .iter()
+            .filter(|&&m| m != 1.0)
+            .count(),
     }
 }
 
@@ -236,6 +263,8 @@ pub(super) enum Event {
     BlockDone(usize),
     /// Epoch boundary for one cell's adaptive control plane.
     ControlTick(usize),
+    /// Next compiled fault-plan event on this cell's lane.
+    Fault(usize),
 }
 
 pub(super) struct ReqState {
@@ -246,6 +275,15 @@ pub(super) struct ReqState {
     /// The request experienced a handover action (re-home or borrow) —
     /// each request counts at most once toward the handover rate.
     pub(super) handed_over: bool,
+    /// Latest completion instant of the current block after fault
+    /// recovery moved work (re-dispatch, hedge cover). A `BlockDone`
+    /// popping before the barrier reschedules itself to it.
+    pub(super) barrier: Nanos,
+    /// The request was dropped by crash recovery; its pending
+    /// `BlockDone` is a tombstone to skip.
+    pub(super) dropped: bool,
+    /// Re-dispatches consumed from the per-request retry budget.
+    pub(super) retries: u32,
 }
 
 /// Outcome of dispatching one block.
@@ -259,6 +297,11 @@ pub(super) struct BlockResult {
     pub(super) borrowed_groups: usize,
     /// Tokens those borrowed groups carried.
     pub(super) borrowed_tokens: f64,
+    /// Tokens of hedged duplicates placed in this block (the loser of
+    /// each pair is waste by construction, billed at dispatch).
+    pub(super) wasted_tokens: f64,
+    /// Hedged duplicates placed in this block.
+    pub(super) hedges: usize,
 }
 
 /// Result of one simulation run (all arrivals drained).
@@ -302,6 +345,21 @@ pub struct ClusterOutcome {
     /// (pre-solves, epoch/failover re-solves): the
     /// [`crate::optim::SolveStats`] the re-solve path used to drop.
     pub solver: SolverIntrospection,
+    /// Requests that missed the configured deadline (completed late, or
+    /// dropped/rejected while a deadline was set). 0 when `deadline_s`
+    /// is 0 (SLO accounting off).
+    pub slo_missed: usize,
+    /// Token groups re-dispatched to a surviving replica after a crash.
+    pub retries: usize,
+    /// Hedged duplicates placed (speculative second dispatches).
+    pub hedges: usize,
+    /// Tokens of discarded work: service lost to crashes after it had
+    /// started, plus every hedged duplicate (the losing twin of each
+    /// pair is waste by construction).
+    pub wasted_tokens: f64,
+    /// Device-seconds spent offline, summed over devices — the numerator
+    /// of `1 - availability`.
+    pub offline_device_s: f64,
 }
 
 impl ClusterOutcome {
@@ -399,6 +457,38 @@ impl ClusterOutcome {
     pub fn flat_utilization(&self) -> Vec<f64> {
         self.utilization.iter().flatten().copied().collect()
     }
+
+    /// Fraction of arrivals that missed the deadline (0 when SLO
+    /// accounting is off or nothing arrived).
+    pub fn slo_miss_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.slo_missed as f64 / self.arrived as f64
+        }
+    }
+
+    /// Hedged duplicates per arrival — the overhead knob of hedged
+    /// dispatch (each hedge burns one duplicate group of tokens).
+    pub fn hedge_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.hedges as f64 / self.arrived as f64
+        }
+    }
+
+    /// Mean fraction of device-time the fleet was online over the run:
+    /// `1 - offline_device_s / (n_devices · makespan)`. 1.0 for an empty
+    /// fault plan or a zero-length run.
+    pub fn availability(&self) -> f64 {
+        let n_dev: usize = self.utilization.iter().map(|c| c.len()).sum();
+        if self.makespan_s <= 0.0 || n_dev == 0 {
+            1.0
+        } else {
+            (1.0 - self.offline_device_s / (n_dev as f64 * self.makespan_s)).clamp(0.0, 1.0)
+        }
+    }
 }
 
 /// The scalar knobs the event loop reads per event, copied out of the
@@ -419,6 +509,16 @@ pub(super) struct SimParams {
     pub(super) gate_sharpness: f64,
     pub(super) gate_bias: f64,
     pub(super) seed: u64,
+    /// Per-request completion deadline in seconds (0 = SLO accounting
+    /// and hedged dispatch off).
+    pub(super) deadline_s: f64,
+    /// Hedge a block whose predicted finish would bust the deadline.
+    pub(super) hedge: bool,
+    /// Crash re-dispatch budget per request before the drop policy.
+    pub(super) max_retries: u32,
+    /// The compiled fault plan is non-empty — gates the in-flight ledger
+    /// bookkeeping that only crash recovery reads.
+    pub(super) faults: bool,
 }
 
 /// The simulator. Construction borrows the config; [`ClusterSim::run`]
@@ -442,11 +542,18 @@ pub struct ClusterSim {
     /// (seconds). `None` lets [`crate::cluster::shard`] pick the natural
     /// bound for the configured handover policy.
     pub(super) sync_window_s: Option<f64>,
+    /// Compiled fault plan, one sorted event lane per cell (empty lanes
+    /// for an empty plan — the run dispatches to the zero-fault path).
+    pub(super) fault_lanes: Vec<Vec<FaultEvent>>,
+    /// Per-cell fault runtime (lane cursor, live multipliers, offline
+    /// accounting), rebuilt with the cells.
+    pub(super) cell_faults: Vec<CellFaults>,
 }
 
 impl ClusterSim {
     pub fn new(cfg: &ClusterConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
+        let fault_lanes = faults::compile(cfg);
         let l_comp = cfg.model.l_comp_flops(cfg.activation_eta);
         let mut states = Vec::with_capacity(cfg.cells.len());
         for (ci, cell_cfg) in cfg.cells.iter().enumerate() {
@@ -478,6 +585,10 @@ impl ClusterSim {
                 gate_sharpness: cfg.gate_sharpness,
                 gate_bias: cfg.gate_bias,
                 seed: cfg.seed,
+                deadline_s: cfg.deadline_s,
+                hedge: cfg.hedge,
+                max_retries: cfg.max_retries,
+                faults: fault_lanes.iter().any(|l| !l.is_empty()),
             },
             policy_cfg: cfg.policy.clone(),
             control: cfg.control,
@@ -493,6 +604,8 @@ impl ClusterSim {
             states,
             cells: Vec::new(),
             sync_window_s: None,
+            fault_lanes,
+            cell_faults: Vec::new(),
         };
         sim.build_cells()?;
         Ok(sim)
@@ -536,8 +649,14 @@ impl ClusterSim {
                 cand: Vec::with_capacity(n_dev),
                 demand: Vec::with_capacity(n_dev),
                 last_solve_backlog_s: 0.0,
+                inflight: Vec::new(),
             });
         }
+        self.cell_faults = self
+            .cells
+            .iter()
+            .map(|c| CellFaults::new(c.dev.len()))
+            .collect();
         Ok(())
     }
 
@@ -659,6 +778,21 @@ impl ClusterSim {
         arrivals: &[crate::workload::Arrival],
         probe: &mut P,
     ) -> ClusterOutcome {
+        // An empty fault plan monomorphizes to the exact pre-fault hot
+        // path: `FAULTS = false` compiles the ledger/barrier bookkeeping
+        // away, the same discipline as `NullProbe` for telemetry.
+        if self.fault_lanes.iter().all(|l| l.is_empty()) {
+            self.run_inner::<P, false>(arrivals, probe)
+        } else {
+            self.run_inner::<P, true>(arrivals, probe)
+        }
+    }
+
+    fn run_inner<P: Probe, const FAULTS: bool>(
+        &mut self,
+        arrivals: &[crate::workload::Arrival],
+        probe: &mut P,
+    ) -> ClusterOutcome {
         let n_blocks = self.params.n_blocks;
         let n_cells = self.cells.len();
         let mut queue: EventQueue<Event> = EventQueue::new(VirtualClock::new());
@@ -671,6 +805,9 @@ impl ClusterSim {
                 arrived: nanos_from_secs(a.time_s),
                 next_block: 0,
                 handed_over: false,
+                barrier: 0,
+                dropped: false,
+                retries: 0,
             })
             .collect();
         // Events are scheduled on the owning cell's lane: simultaneous
@@ -695,6 +832,22 @@ impl ClusterSim {
                 queue.schedule_at_in_lane(nanos_from_secs(e), ci as u32, Event::ControlTick(ci));
             }
         }
+        // Fault lanes arm last at setup, so an equal-time fault resolves
+        // after arrivals/ticks — the order the sharded engine reproduces.
+        if FAULTS {
+            for ci in 0..n_cells {
+                let n_dev = self.cells[ci].dev.len();
+                self.cell_faults[ci] = CellFaults::new(n_dev);
+                for m in &mut self.cells[ci].dev.service_mult {
+                    *m = 1.0;
+                }
+                self.cells[ci].inflight.clear();
+                if let Some(ev) = self.fault_lanes[ci].first() {
+                    queue.schedule_at_in_lane(ev.at, ci as u32, Event::Fault(ci));
+                }
+            }
+        }
+        let mut lost: Vec<InflightGroup> = Vec::new();
 
         let mut arrived = 0usize;
         let mut completed = 0usize;
@@ -706,6 +859,10 @@ impl ClusterSim {
         let mut handovers = 0usize;
         let mut borrowed_groups = 0usize;
         let mut borrowed_tokens = 0.0f64;
+        let mut slo_missed = 0usize;
+        let mut retries = 0usize;
+        let mut hedges = 0usize;
+        let mut wasted_tokens = 0.0f64;
         let mut events = 0usize;
         let mut latency_ms = SteadyState::new(self.params.warmup_frac);
         // Makespan is the last *work* event: a control tick pending when
@@ -746,6 +903,64 @@ impl ClusterSim {
                     }
                     continue;
                 }
+                Event::Fault(ci) => {
+                    // Apply the lane's next compiled event, arm the one
+                    // after it, then resolve any in-service groups the
+                    // action stranded (crash recovery). Fault pops count
+                    // in `events` but never advance `last_work_ns`.
+                    let fev = self.fault_lanes[ci][self.cell_faults[ci].cursor];
+                    self.cell_faults[ci].cursor += 1;
+                    if let Some(next) = self.fault_lanes[ci].get(self.cell_faults[ci].cursor) {
+                        queue.schedule_at_in_lane(next.at, ci as u32, Event::Fault(ci));
+                    }
+                    lost.clear();
+                    apply_action(
+                        fev.action,
+                        ci,
+                        now,
+                        &mut self.cells[ci],
+                        &mut self.cell_faults[ci],
+                        &mut self.handover,
+                        &mut lost,
+                        probe,
+                    );
+                    for g in &lost {
+                        let st = &mut states[g.req];
+                        if st.dropped {
+                            continue;
+                        }
+                        match resolve_lost_group(
+                            g,
+                            st,
+                            ci,
+                            now,
+                            &mut self.cells[ci],
+                            &self.dispatcher,
+                            &self.params,
+                            probe,
+                        ) {
+                            LossResolution::Covered => {}
+                            LossResolution::Redispatched { waste } => {
+                                retries += 1;
+                                wasted_tokens += waste;
+                            }
+                            LossResolution::Dropped { waste } => {
+                                wasted_tokens += waste;
+                                dropped += 1;
+                                dropped_tokens += st.tokens as u64;
+                                outstanding[st.cell] -= 1;
+                                if self.params.deadline_s > 0.0 {
+                                    slo_missed += 1;
+                                }
+                            }
+                            LossResolution::Shed { tokens, waste } => {
+                                shed_tokens += tokens;
+                                wasted_tokens += waste;
+                            }
+                        }
+                    }
+                    continue;
+                }
                 Event::Arrive(i) => {
                     arrived += 1;
                     arrived_tokens += states[i].tokens as u64;
@@ -774,6 +989,24 @@ impl ClusterSim {
                     i
                 }
                 Event::BlockDone(i) => {
+                    if FAULTS {
+                        // Tombstone: the request was dropped by crash
+                        // recovery after this completion was scheduled.
+                        if states[i].dropped {
+                            continue;
+                        }
+                        // Recovery moved part of this block later —
+                        // chase the barrier (reschedule-on-pop; the
+                        // queue has no removal).
+                        if states[i].barrier > now {
+                            queue.schedule_at_in_lane(
+                                states[i].barrier,
+                                states[i].cell as u32,
+                                Event::BlockDone(i),
+                            );
+                            continue;
+                        }
+                    }
                     last_work_ns = now;
                     states[i].next_block += 1;
                     if states[i].next_block >= n_blocks {
@@ -782,6 +1015,9 @@ impl ClusterSim {
                         outstanding[states[i].cell] -= 1;
                         let lat_ms = secs_from_nanos(now - states[i].arrived) * 1e3;
                         latency_ms.record(lat_ms);
+                        if self.params.deadline_s > 0.0 && lat_ms > self.params.deadline_s * 1e3 {
+                            slo_missed += 1;
+                        }
                         probe.on_event(&TelemetryEvent::Completed {
                             req: i,
                             cell: states[i].cell,
@@ -812,6 +1048,8 @@ impl ClusterSim {
             shed_tokens += r.shed_tokens;
             borrowed_groups += r.borrowed_groups;
             borrowed_tokens += r.borrowed_tokens;
+            wasted_tokens += r.wasted_tokens;
+            hedges += r.hedges;
             if r.borrowed_groups > 0 && !states[i].handed_over {
                 states[i].handed_over = true;
                 handovers += 1;
@@ -830,16 +1068,38 @@ impl ClusterSim {
                         states[i].cell as u32,
                         Event::BlockDone(i),
                     );
+                    if FAULTS {
+                        states[i].barrier = block_end;
+                    }
                 }
                 None => {
                     dropped += 1;
                     dropped_tokens += states[i].tokens as u64;
                     outstanding[states[i].cell] -= 1;
+                    if self.params.deadline_s > 0.0 {
+                        slo_missed += 1;
+                    }
                     probe.on_event(&TelemetryEvent::Dropped {
                         req: i,
                         cell: states[i].cell,
                         t: now,
                     });
+                }
+            }
+        }
+
+        // Offline device-seconds: closed outage intervals accumulated at
+        // recovery, plus still-open outages clamped to the makespan.
+        // Integer-nanosecond sums are order-free, so the serial and
+        // sharded engines agree bit-for-bit.
+        let mut offline_ns: u64 = 0;
+        if FAULTS {
+            for (ci, rt) in self.cell_faults.iter().enumerate() {
+                offline_ns += rt.offline_ns;
+                for (k, &on) in self.cells[ci].dev.online.iter().enumerate() {
+                    if !on {
+                        offline_ns += last_work_ns.saturating_sub(rt.offline_since[k]);
+                    }
                 }
             }
         }
@@ -873,6 +1133,11 @@ impl ClusterSim {
             utilization,
             control,
             solver,
+            slo_missed,
+            retries,
+            hedges,
+            wasted_tokens,
+            offline_device_s: secs_from_nanos(offline_ns),
         }
     }
 
@@ -1044,6 +1309,8 @@ pub(super) fn start_block_at<P: Probe>(
 
     let mut block_end = now;
     let mut shed = 0.0f64;
+    let mut wasted = 0.0f64;
+    let mut hedges = 0usize;
     // Heaviest shed group, kept so a block can never shed everything
     // (every token needs at least one expert — constraint (16) — and
     // a zero-work block would fake perfect latency under overload).
@@ -1153,6 +1420,8 @@ pub(super) fn start_block_at<P: Probe>(
                                 shed_tokens: 0.0,
                                 borrowed_groups: 0,
                                 borrowed_tokens: 0.0,
+                                wasted_tokens: 0.0,
+                                hedges: 0,
                             };
                         }
                         DropPolicy::ShedTokens => {
@@ -1218,7 +1487,9 @@ pub(super) fn start_block_at<P: Probe>(
                 }
             }
         };
-        let service_s = q * t_per_token[k];
+        // `service_mult[k]` is 1.0 without a fault plan: `q · t_k · 1.0`
+        // is bit-exact `q · t_k`, so the zero-fault path is unchanged.
+        let service_s = q * t_per_token[k] * cell.dev.service_mult[k];
         let start = cell.dev.scratch_busy[k].max(now);
         let done = start.saturating_add(nanos_from_secs(service_s));
         cell.dev.scratch_busy[k] = done;
@@ -1229,9 +1500,60 @@ pub(super) fn start_block_at<P: Probe>(
             service_s,
             start,
             done,
+            hedge: false,
+            cover: None,
         });
-        if done > block_end {
-            block_end = done;
+        let mut eff_done = done;
+        // Hedged dispatch: if this group alone would bust the request's
+        // deadline, place a speculative duplicate on the runner-up
+        // replica — first finish wins the barrier, the loser's tokens
+        // are waste by construction (both copies run to completion in
+        // the FIFO-reservation model).
+        if params.hedge && params.deadline_s > 0.0 {
+            let deadline = st.arrived.saturating_add(nanos_from_secs(params.deadline_s));
+            if done > deadline {
+                if let Some(k2) = dispatcher.choose_excluding(
+                    placement.replicas(e),
+                    q,
+                    now,
+                    &cell.dev.scratch_busy,
+                    t_per_token,
+                    &cell.dev.online,
+                    k,
+                ) {
+                    let service2 = q * t_per_token[k2] * cell.dev.service_mult[k2];
+                    let start2 = cell.dev.scratch_busy[k2].max(now);
+                    let done2 = start2.saturating_add(nanos_from_secs(service2));
+                    cell.dev.scratch_busy[k2] = done2;
+                    let pi = cell.placed.len() - 1;
+                    cell.placed[pi].cover = Some(done2);
+                    cell.placed.push(PlacedGroup {
+                        expert: e,
+                        device: k2,
+                        tokens: q,
+                        service_s: service2,
+                        start: start2,
+                        done: done2,
+                        hedge: true,
+                        cover: Some(done),
+                    });
+                    eff_done = done.min(done2);
+                    wasted += q;
+                    hedges += 1;
+                    probe.on_event(&TelemetryEvent::Hedged {
+                        req,
+                        cell: st.cell,
+                        expert: e,
+                        primary: k,
+                        device: k2,
+                        tokens: q,
+                        t: now,
+                    });
+                }
+            }
+        }
+        if eff_done > block_end {
+            block_end = eff_done;
         }
     }
     // A block must do *some* work: if shedding removed every group
@@ -1257,7 +1579,7 @@ pub(super) fn start_block_at<P: Probe>(
                 // (The earlier `GroupShed` event stands: a rescued
                 // group appears as shed *then* placed in a trace.)
                 cell.expert_tokens[e] -= q;
-                let service_s = q * t_per_token[k];
+                let service_s = q * t_per_token[k] * cell.dev.service_mult[k];
                 let start = cell.dev.scratch_busy[k].max(now);
                 let done = start.saturating_add(nanos_from_secs(service_s));
                 cell.dev.scratch_busy[k] = done;
@@ -1268,6 +1590,8 @@ pub(super) fn start_block_at<P: Probe>(
                     service_s,
                     start,
                     done,
+                    hedge: false,
+                    cover: None,
                 });
                 if done > block_end {
                     block_end = done;
@@ -1281,9 +1605,16 @@ pub(super) fn start_block_at<P: Probe>(
     cell.dev.busy_until.copy_from_slice(&cell.dev.scratch_busy);
     for g in &cell.placed {
         cell.dev.busy[g.device].add_busy(g.service_s);
-        cell.policy.observe(g.expert, t_per_token[g.device]);
+        // A hedged duplicate burns real device time (`busy`,
+        // `served_tokens`) but is invisible to the demand signals — its
+        // twin already fed the policy and the autoscaler.
+        if !g.hedge {
+            cell.policy.observe(g.expert, t_per_token[g.device]);
+        }
         cell.dev.served_tokens[g.device] += g.tokens;
-        cell.expert_tokens[g.expert] += g.tokens;
+        if !g.hedge {
+            cell.expert_tokens[g.expert] += g.tokens;
+        }
         probe.on_event(&TelemetryEvent::GroupPlaced {
             req,
             cell: st.cell,
@@ -1294,6 +1625,28 @@ pub(super) fn start_block_at<P: Probe>(
             start: g.start,
             done: g.done,
         });
+    }
+    // Fault runs track committed groups in the in-flight ledger so a
+    // device crash can find and re-dispatch them. (Borrowed cross-cell
+    // groups are not tracked: `BorrowExpert` runs serial-only and a
+    // remote crash sweeping another cell's ledger would break shard
+    // locality — documented simplification.)
+    if params.faults {
+        // Drop finished entries first so the ledger tracks the live
+        // working set, not the whole run's history. Per-cell and
+        // time-driven, so serial and sharded runs prune identically.
+        cell.inflight.retain(|g| g.done > now);
+        for g in &cell.placed {
+            cell.inflight.push(InflightGroup {
+                req,
+                expert: g.expert,
+                device: g.device,
+                tokens: g.tokens,
+                start: g.start,
+                done: g.done,
+                cover: g.cover,
+            });
+        }
     }
     // Commit the staged cross-cell groups. Accounting lands on the
     // *serving* cell (its control plane must see borrowed demand);
@@ -1336,6 +1689,8 @@ pub(super) fn start_block_at<P: Probe>(
         shed_tokens: shed,
         borrowed_groups,
         borrowed_tokens,
+        wasted_tokens: wasted,
+        hedges,
     }
 }
 

@@ -8,6 +8,7 @@
 //! and caching resources" constraint, Eq. (7)); and the dispatch policy
 //! that picks among expert replicas at serving time.
 
+use super::faults::FaultConfig;
 use super::{AllocatorKind, ChannelConfig, DeviceConfig, ModelDims, PolicyConfig};
 use crate::util::Json;
 use anyhow::Result;
@@ -246,6 +247,21 @@ pub struct ClusterConfig {
     /// asymmetric; the diagonal is never read. Its off-diagonal minimum
     /// is the conservative lookahead bound of the sharded DES.
     pub backhaul_matrix: Option<Vec<Vec<f64>>>,
+    /// Deterministic fault-injection plan (crashes, stragglers, link dips,
+    /// backhaul outages). The default plan is empty and compiles away.
+    pub faults: FaultConfig,
+    /// Per-request latency SLO in seconds (0 = no deadline). When set,
+    /// completions slower than the deadline and dropped requests count as
+    /// SLO misses, and `hedge` may arm speculative duplicates.
+    pub deadline_s: f64,
+    /// Hedged dispatch: when a group's predicted finish would bust the
+    /// deadline, also place a speculative duplicate on the second-best
+    /// replica — first finish wins, the loser's tokens count as waste.
+    /// Only meaningful with `deadline_s > 0`.
+    pub hedge: bool,
+    /// Re-dispatch budget per request when a crash loses its queued or
+    /// in-service groups (0 = fall straight through to the drop policy).
+    pub max_retries: u32,
     /// Fraction of completed requests discarded as warm-up before
     /// steady-state latency percentiles are computed.
     pub warmup_frac: f64,
@@ -329,6 +345,10 @@ impl ClusterConfig {
             handover: HandoverPolicy::None,
             backhaul_s_per_token: 2e-4,
             backhaul_matrix: None,
+            faults: FaultConfig::default(),
+            deadline_s: 0.0,
+            hedge: false,
+            max_retries: 2,
             warmup_frac: 0.2,
             gate_sharpness: 1.5,
             gate_bias: 0.4,
@@ -410,6 +430,20 @@ impl ClusterConfig {
                 ),
             ));
         }
+        // Same discipline for the robustness knobs: emitted only when they
+        // differ from the defaults, so pre-fault configs keep their bytes.
+        if self.faults != FaultConfig::default() {
+            fields.push(("faults", self.faults.to_json()));
+        }
+        if self.deadline_s != 0.0 {
+            fields.push(("deadline_s", Json::Num(self.deadline_s)));
+        }
+        if self.hedge {
+            fields.push(("hedge", Json::Bool(true)));
+        }
+        if self.max_retries != 2 {
+            fields.push(("max_retries", Json::Num(self.max_retries as f64)));
+        }
         fields.extend([
             ("warmup_frac", Json::Num(self.warmup_frac)),
             ("gate_sharpness", Json::Num(self.gate_sharpness)),
@@ -469,6 +503,19 @@ impl ClusterConfig {
                 ),
                 None => None,
             },
+            faults: match j.opt("faults") {
+                Some(v) => FaultConfig::from_json(v)?,
+                None => FaultConfig::default(),
+            },
+            deadline_s: opt_f64("deadline_s", 0.0)?,
+            hedge: match j.opt("hedge") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
+            max_retries: match j.opt("max_retries") {
+                Some(v) => v.as_u64()? as u32,
+                None => 2,
+            },
             warmup_frac: j.get("warmup_frac")?.as_f64()?,
             gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
             gate_bias: j.get("gate_bias")?.as_f64()?,
@@ -510,6 +557,12 @@ impl ClusterConfig {
             self.backhaul_s_per_token.is_finite() && self.backhaul_s_per_token >= 0.0,
             "backhaul_s_per_token must be non-negative and finite"
         );
+        anyhow::ensure!(
+            self.deadline_s.is_finite() && self.deadline_s >= 0.0,
+            "deadline_s must be non-negative and finite (0 = no deadline)"
+        );
+        let device_counts: Vec<usize> = self.cells.iter().map(|c| c.devices.len()).collect();
+        self.faults.validate(&device_counts)?;
         if let Some(m) = &self.backhaul_matrix {
             anyhow::ensure!(
                 m.len() == self.cells.len(),
@@ -772,6 +825,69 @@ mod tests {
         assert!(cfg.validate().is_err());
         // non-finite entry
         cfg.backhaul_matrix = Some(vec![vec![0.0, f64::NAN], vec![1e-4, 0.0]]);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fault_fields_absent_keep_default_bytes() {
+        let cfg = ClusterConfig::edge_default();
+        let text = cfg.to_json().to_string();
+        // Default robustness knobs are omitted entirely, so pre-fault
+        // configs serialize byte-identically to the previous format.
+        assert!(!text.contains("\"faults\""));
+        assert!(!text.contains("deadline_s"));
+        assert!(!text.contains("hedge"));
+        assert!(!text.contains("max_retries"));
+        let back = ClusterConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn fault_fields_round_trip_through_json() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.faults.mttf_s = 30.0;
+        cfg.faults.mttr_s = 2.0;
+        cfg.faults.scheduled.push(super::super::faults::ScheduledFault {
+            at_s: 1.5,
+            cell: 1,
+            device: None,
+            kind: super::super::faults::FaultKind::Straggle,
+            duration_s: 3.0,
+            mult: 5.0,
+        });
+        cfg.deadline_s = 2.5;
+        cfg.hedge = true;
+        cfg.max_retries = 4;
+        cfg.validate().unwrap();
+        let back =
+            ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn validation_rejects_bad_fault_and_deadline_fields() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.deadline_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.deadline_s = -1.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.faults.mttf_s = 10.0;
+        cfg.faults.mttr_s = 0.0;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("mttr_s"), "{err}");
+
+        // Scheduled faults are bounds-checked against the actual topology.
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.faults.scheduled.push(super::super::faults::ScheduledFault {
+            at_s: 0.5,
+            cell: 7,
+            device: None,
+            kind: super::super::faults::FaultKind::Crash,
+            duration_s: 0.0,
+            mult: 1.0,
+        });
         assert!(cfg.validate().is_err());
     }
 

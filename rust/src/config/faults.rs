@@ -1,0 +1,489 @@
+//! Fault-plan configuration: deterministic, seeded failure processes for
+//! the cluster DES.
+//!
+//! A [`FaultConfig`] describes *what can go wrong* during a run — stochastic
+//! device crash/recover cycles (MTTF/MTTR), per-device straggler episodes
+//! that multiply service time, link-quality dips that inflate `t_per_token`,
+//! backhaul outages, and explicitly scheduled one-off events (including
+//! correlated whole-cell events). The config layer only holds parameters and
+//! validates them; `cluster::faults` compiles a config into concrete
+//! per-cell-lane `FaultEvent`s.
+//!
+//! An all-default config is *empty* ([`FaultConfig::is_empty`]) and the DES
+//! monomorphizes it away entirely, so the zero-fault hot path is bit-equal
+//! to the pre-fault engine. Dependent parameters (durations, multipliers,
+//! MTTR) default to inert non-zero values so sweeping a single knob — e.g.
+//! just `mttf_s` via the `mttf` axis — produces a valid config.
+
+use crate::util::Json;
+use anyhow::Result;
+
+/// Kind of a scheduled fault entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Device goes offline at `at_s`; recovers after `duration_s`
+    /// (a zero duration means the crash is permanent).
+    Crash,
+    /// Device service time is multiplied by `mult` for `duration_s`.
+    Straggle,
+    /// Device link degrades: `t_per_token` effectively multiplied by `mult`
+    /// for `duration_s` (modelled as a service-time multiplier on that
+    /// device, composing with straggler episodes).
+    LinkDip,
+    /// Backhaul for the cell is multiplied by `mult` for `duration_s`
+    /// (`mult == 0.0` means a full outage: no cross-cell borrowing).
+    Backhaul,
+}
+
+impl FaultKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Straggle => "straggle",
+            FaultKind::LinkDip => "link_dip",
+            FaultKind::Backhaul => "backhaul",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "crash" => Ok(FaultKind::Crash),
+            "straggle" => Ok(FaultKind::Straggle),
+            "link_dip" => Ok(FaultKind::LinkDip),
+            "backhaul" => Ok(FaultKind::Backhaul),
+            other => anyhow::bail!(
+                "unknown fault kind '{other}' (expected crash|straggle|link_dip|backhaul)"
+            ),
+        }
+    }
+}
+
+/// One explicitly scheduled fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledFault {
+    /// Sim time the fault fires, seconds.
+    pub at_s: f64,
+    /// Cell the fault hits.
+    pub cell: usize,
+    /// Device within the cell; `None` means the whole cell (correlated
+    /// event — expanded over every device in device order). Ignored for
+    /// `Backhaul`, which is per-cell by nature.
+    pub device: Option<usize>,
+    pub kind: FaultKind,
+    /// How long the fault lasts, seconds. For `Crash`, zero means permanent.
+    pub duration_s: f64,
+    /// Multiplier for `Straggle`/`LinkDip` (>= 1.0) and `Backhaul` (>= 0.0,
+    /// 0.0 = outage). Ignored for `Crash`.
+    pub mult: f64,
+}
+
+impl ScheduledFault {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("at_s", Json::Num(self.at_s)),
+            ("cell", Json::Num(self.cell as f64)),
+        ];
+        if let Some(d) = self.device {
+            fields.push(("device", Json::Num(d as f64)));
+        }
+        fields.extend([
+            ("kind", Json::str(self.kind.as_str())),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("mult", Json::Num(self.mult)),
+        ]);
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let kind = FaultKind::parse(j.get("kind")?.as_str()?)?;
+        let device = match j.opt("device") {
+            Some(v) => Some(v.as_usize()?),
+            None => None,
+        };
+        Ok(ScheduledFault {
+            at_s: j.get("at_s")?.as_f64()?,
+            cell: j.get("cell")?.as_usize()?,
+            device,
+            kind,
+            duration_s: match j.opt("duration_s") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+            mult: match j.opt("mult") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
+        })
+    }
+}
+
+/// Deterministic fault plan parameters.
+///
+/// Every stochastic process is gated on its MTBF/MTTF being positive; the
+/// dependent knobs (duration, multiplier, MTTR) carry inert defaults so a
+/// config that sets only one rate field still validates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time to failure per device, seconds. 0 disables crashes.
+    pub mttf_s: f64,
+    /// Mean time to recovery per device, seconds. Must be > 0 when
+    /// `mttf_s > 0` — a zero MTTR would re-arm a crashed device instantly.
+    pub mttr_s: f64,
+    /// Mean time between straggler episodes per device, seconds. 0 disables.
+    pub straggler_mtbf_s: f64,
+    /// Straggler episode length, seconds.
+    pub straggler_duration_s: f64,
+    /// Service-time multiplier during a straggler episode (>= 1.0).
+    pub straggler_mult: f64,
+    /// Mean time between link-quality dips per device, seconds. 0 disables.
+    pub link_dip_mtbf_s: f64,
+    /// Link-dip episode length, seconds.
+    pub link_dip_duration_s: f64,
+    /// Effective `t_per_token` multiplier during a dip (>= 1.0).
+    pub link_dip_mult: f64,
+    /// Mean time between backhaul outages per cell, seconds. 0 disables.
+    pub backhaul_outage_mtbf_s: f64,
+    /// Backhaul outage length, seconds.
+    pub backhaul_outage_duration_s: f64,
+    /// Explicitly scheduled faults (applied after the stochastic streams,
+    /// in config order).
+    pub scheduled: Vec<ScheduledFault>,
+    /// Horizon for stochastic fault generation, seconds of sim time.
+    pub horizon_s: f64,
+    /// Seed for the fault-plan RNG streams (independent of the sim seed).
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            mttf_s: 0.0,
+            mttr_s: 1.0,
+            straggler_mtbf_s: 0.0,
+            straggler_duration_s: 1.0,
+            straggler_mult: 4.0,
+            link_dip_mtbf_s: 0.0,
+            link_dip_duration_s: 1.0,
+            link_dip_mult: 2.0,
+            backhaul_outage_mtbf_s: 0.0,
+            backhaul_outage_duration_s: 1.0,
+            scheduled: Vec::new(),
+            horizon_s: 60.0,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when the plan injects nothing: the DES uses this to
+    /// monomorphize the fault machinery away entirely.
+    pub fn is_empty(&self) -> bool {
+        self.mttf_s == 0.0
+            && self.straggler_mtbf_s == 0.0
+            && self.link_dip_mtbf_s == 0.0
+            && self.backhaul_outage_mtbf_s == 0.0
+            && self.scheduled.is_empty()
+    }
+
+    /// Validate against the cluster shape (`device_counts[cell]` = number of
+    /// devices in that cell).
+    pub fn validate(&self, device_counts: &[usize]) -> Result<()> {
+        for (name, v) in [
+            ("mttf_s", self.mttf_s),
+            ("mttr_s", self.mttr_s),
+            ("straggler_mtbf_s", self.straggler_mtbf_s),
+            ("straggler_duration_s", self.straggler_duration_s),
+            ("link_dip_mtbf_s", self.link_dip_mtbf_s),
+            ("link_dip_duration_s", self.link_dip_duration_s),
+            ("backhaul_outage_mtbf_s", self.backhaul_outage_mtbf_s),
+            ("backhaul_outage_duration_s", self.backhaul_outage_duration_s),
+            ("horizon_s", self.horizon_s),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "faults.{name} must be finite and >= 0, got {v}"
+            );
+        }
+        anyhow::ensure!(
+            self.straggler_mult.is_finite() && self.link_dip_mult.is_finite(),
+            "faults straggler_mult/link_dip_mult must be finite"
+        );
+        if self.mttf_s > 0.0 {
+            anyhow::ensure!(
+                self.mttr_s > 0.0,
+                "faults.mttr_s must be > 0 when mttf_s > 0 (a zero MTTR recovers \
+                 devices instantly); got mttr_s = {}",
+                self.mttr_s
+            );
+        }
+        if self.straggler_mtbf_s > 0.0 {
+            anyhow::ensure!(
+                self.straggler_duration_s > 0.0,
+                "faults.straggler_duration_s must be > 0 when straggler_mtbf_s > 0"
+            );
+            anyhow::ensure!(
+                self.straggler_mult >= 1.0,
+                "faults.straggler_mult must be >= 1.0 (it multiplies service time), got {}",
+                self.straggler_mult
+            );
+        }
+        if self.link_dip_mtbf_s > 0.0 {
+            anyhow::ensure!(
+                self.link_dip_duration_s > 0.0,
+                "faults.link_dip_duration_s must be > 0 when link_dip_mtbf_s > 0"
+            );
+            anyhow::ensure!(
+                self.link_dip_mult >= 1.0,
+                "faults.link_dip_mult must be >= 1.0 (it inflates t_per_token), got {}",
+                self.link_dip_mult
+            );
+        }
+        if self.backhaul_outage_mtbf_s > 0.0 {
+            anyhow::ensure!(
+                self.backhaul_outage_duration_s > 0.0,
+                "faults.backhaul_outage_duration_s must be > 0 when backhaul_outage_mtbf_s > 0"
+            );
+        }
+        let any_stochastic = self.mttf_s > 0.0
+            || self.straggler_mtbf_s > 0.0
+            || self.link_dip_mtbf_s > 0.0
+            || self.backhaul_outage_mtbf_s > 0.0;
+        if any_stochastic {
+            anyhow::ensure!(
+                self.horizon_s > 0.0,
+                "faults.horizon_s must be > 0 when any stochastic fault process is enabled"
+            );
+        }
+        for (i, s) in self.scheduled.iter().enumerate() {
+            anyhow::ensure!(
+                s.at_s.is_finite() && s.at_s >= 0.0,
+                "faults.scheduled[{i}].at_s must be finite and >= 0, got {}",
+                s.at_s
+            );
+            anyhow::ensure!(
+                s.cell < device_counts.len(),
+                "faults.scheduled[{i}].cell = {} out of range ({} cells)",
+                s.cell,
+                device_counts.len()
+            );
+            if let Some(d) = s.device {
+                anyhow::ensure!(
+                    d < device_counts[s.cell],
+                    "faults.scheduled[{i}].device = {} out of range (cell {} has {} devices)",
+                    d,
+                    s.cell,
+                    device_counts[s.cell]
+                );
+            }
+            anyhow::ensure!(
+                s.duration_s.is_finite() && s.duration_s >= 0.0,
+                "faults.scheduled[{i}].duration_s must be finite and >= 0, got {}",
+                s.duration_s
+            );
+            match s.kind {
+                FaultKind::Straggle | FaultKind::LinkDip => anyhow::ensure!(
+                    s.mult.is_finite() && s.mult >= 1.0,
+                    "faults.scheduled[{i}].mult must be >= 1.0 for {}, got {}",
+                    s.kind.as_str(),
+                    s.mult
+                ),
+                FaultKind::Backhaul => anyhow::ensure!(
+                    s.mult.is_finite() && s.mult >= 0.0,
+                    "faults.scheduled[{i}].mult must be >= 0.0 for backhaul, got {}",
+                    s.mult
+                ),
+                FaultKind::Crash => {}
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mttf_s", Json::Num(self.mttf_s)),
+            ("mttr_s", Json::Num(self.mttr_s)),
+            ("straggler_mtbf_s", Json::Num(self.straggler_mtbf_s)),
+            ("straggler_duration_s", Json::Num(self.straggler_duration_s)),
+            ("straggler_mult", Json::Num(self.straggler_mult)),
+            ("link_dip_mtbf_s", Json::Num(self.link_dip_mtbf_s)),
+            ("link_dip_duration_s", Json::Num(self.link_dip_duration_s)),
+            ("link_dip_mult", Json::Num(self.link_dip_mult)),
+            ("backhaul_outage_mtbf_s", Json::Num(self.backhaul_outage_mtbf_s)),
+            (
+                "backhaul_outage_duration_s",
+                Json::Num(self.backhaul_outage_duration_s),
+            ),
+            (
+                "scheduled",
+                Json::Arr(self.scheduled.iter().map(|s| s.to_json()).collect()),
+            ),
+            ("horizon_s", Json::Num(self.horizon_s)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = FaultConfig::default();
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            match j.opt(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(default),
+            }
+        };
+        let scheduled = match j.opt("scheduled") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(ScheduledFault::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(FaultConfig {
+            mttf_s: opt_f64("mttf_s", d.mttf_s)?,
+            mttr_s: opt_f64("mttr_s", d.mttr_s)?,
+            straggler_mtbf_s: opt_f64("straggler_mtbf_s", d.straggler_mtbf_s)?,
+            straggler_duration_s: opt_f64("straggler_duration_s", d.straggler_duration_s)?,
+            straggler_mult: opt_f64("straggler_mult", d.straggler_mult)?,
+            link_dip_mtbf_s: opt_f64("link_dip_mtbf_s", d.link_dip_mtbf_s)?,
+            link_dip_duration_s: opt_f64("link_dip_duration_s", d.link_dip_duration_s)?,
+            link_dip_mult: opt_f64("link_dip_mult", d.link_dip_mult)?,
+            backhaul_outage_mtbf_s: opt_f64("backhaul_outage_mtbf_s", d.backhaul_outage_mtbf_s)?,
+            backhaul_outage_duration_s: opt_f64(
+                "backhaul_outage_duration_s",
+                d.backhaul_outage_duration_s,
+            )?,
+            scheduled,
+            horizon_s: opt_f64("horizon_s", d.horizon_s)?,
+            seed: match j.opt("seed") {
+                Some(v) => v.as_u64()?,
+                None => d.seed,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_empty_and_valid() {
+        let f = FaultConfig::default();
+        assert!(f.is_empty());
+        f.validate(&[4, 4]).unwrap();
+    }
+
+    #[test]
+    fn single_knob_configs_validate() {
+        // Each rate knob alone must validate thanks to inert defaults.
+        let mut f = FaultConfig::default();
+        f.mttf_s = 50.0;
+        f.validate(&[4]).unwrap();
+        assert!(!f.is_empty());
+
+        let mut f = FaultConfig::default();
+        f.straggler_mtbf_s = 20.0;
+        f.validate(&[4]).unwrap();
+        assert!(!f.is_empty());
+
+        let mut f = FaultConfig::default();
+        f.link_dip_mtbf_s = 20.0;
+        f.validate(&[4]).unwrap();
+
+        let mut f = FaultConfig::default();
+        f.backhaul_outage_mtbf_s = 30.0;
+        f.validate(&[4]).unwrap();
+    }
+
+    #[test]
+    fn zero_mttr_rejected_when_crashes_enabled() {
+        let mut f = FaultConfig::default();
+        f.mttf_s = 10.0;
+        f.mttr_s = 0.0;
+        let err = f.validate(&[4]).unwrap_err();
+        assert!(err.to_string().contains("mttr_s"), "{err}");
+    }
+
+    #[test]
+    fn nan_and_negative_rejected() {
+        let mut f = FaultConfig::default();
+        f.mttf_s = f64::NAN;
+        assert!(f.validate(&[4]).is_err());
+
+        let mut f = FaultConfig::default();
+        f.straggler_mtbf_s = -1.0;
+        assert!(f.validate(&[4]).is_err());
+
+        let mut f = FaultConfig::default();
+        f.straggler_mtbf_s = 10.0;
+        f.straggler_mult = 0.5;
+        let err = f.validate(&[4]).unwrap_err();
+        assert!(err.to_string().contains("straggler_mult"), "{err}");
+    }
+
+    #[test]
+    fn scheduled_bounds_checked() {
+        let mut f = FaultConfig::default();
+        f.scheduled.push(ScheduledFault {
+            at_s: 1.0,
+            cell: 2,
+            device: None,
+            kind: FaultKind::Crash,
+            duration_s: 0.0,
+            mult: 1.0,
+        });
+        let err = f.validate(&[4, 4]).unwrap_err();
+        assert!(err.to_string().contains("cell"), "{err}");
+
+        f.scheduled[0].cell = 0;
+        f.scheduled[0].device = Some(9);
+        let err = f.validate(&[4, 4]).unwrap_err();
+        assert!(err.to_string().contains("device"), "{err}");
+
+        f.scheduled[0].device = Some(3);
+        f.validate(&[4, 4]).unwrap();
+        assert!(!f.is_empty());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let mut f = FaultConfig::default();
+        f.mttf_s = 40.0;
+        f.mttr_s = 3.0;
+        f.straggler_mtbf_s = 12.0;
+        f.straggler_mult = 6.0;
+        f.seed = 99;
+        f.scheduled.push(ScheduledFault {
+            at_s: 2.5,
+            cell: 1,
+            device: Some(0),
+            kind: FaultKind::Straggle,
+            duration_s: 4.0,
+            mult: 8.0,
+        });
+        f.scheduled.push(ScheduledFault {
+            at_s: 5.0,
+            cell: 0,
+            device: None,
+            kind: FaultKind::Crash,
+            duration_s: 0.0,
+            mult: 1.0,
+        });
+        let text = f.to_json().to_string();
+        let back = FaultConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn fault_kind_parse_round_trips() {
+        for k in [
+            FaultKind::Crash,
+            FaultKind::Straggle,
+            FaultKind::LinkDip,
+            FaultKind::Backhaul,
+        ] {
+            assert_eq!(FaultKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(FaultKind::parse("meltdown").is_err());
+    }
+}

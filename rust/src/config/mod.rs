@@ -12,11 +12,13 @@
 //! over WiFi).
 
 pub mod cluster;
+pub mod faults;
 mod presets; // preset constructors are inherent impls on SystemConfig
 
 pub use cluster::{
     CellConfig, ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy,
 };
+pub use faults::{FaultConfig, FaultKind, ScheduledFault};
 
 use crate::util::Json;
 use anyhow::Result;

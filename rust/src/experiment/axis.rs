@@ -51,6 +51,19 @@ pub enum Axis {
     ControlHysteresis,
     /// Backlog-delta trigger in queued seconds (0 = epoch cadence only).
     BacklogDelta,
+    /// Mean time to failure per device in seconds (0 = no stochastic
+    /// crashes); see [`crate::config::FaultConfig::mttf_s`].
+    Mttf,
+    /// Mean time to repair a crashed device in seconds.
+    Mttr,
+    /// Mean time between straggler episodes per device in seconds
+    /// (0 = no stochastic stragglers).
+    Straggler,
+    /// Per-request completion deadline in seconds (0 = SLO accounting
+    /// off).
+    Deadline,
+    /// Hedged dispatch on deadline pressure (`on` / `off`).
+    Hedge,
 }
 
 /// One setting of an axis.
@@ -125,7 +138,7 @@ fn as_seed(v: &AxisValue) -> Result<u64> {
 
 impl Axis {
     /// Every axis, in the order the CLI help lists them.
-    pub fn all() -> [Axis; 14] {
+    pub fn all() -> [Axis; 19] {
         [
             Axis::ArrivalRate,
             Axis::ControlPlane,
@@ -141,6 +154,11 @@ impl Axis {
             Axis::ControlEpoch,
             Axis::ControlHysteresis,
             Axis::BacklogDelta,
+            Axis::Mttf,
+            Axis::Mttr,
+            Axis::Straggler,
+            Axis::Deadline,
+            Axis::Hedge,
         ]
     }
 
@@ -161,6 +179,11 @@ impl Axis {
             Axis::ControlEpoch => "epoch",
             Axis::ControlHysteresis => "hysteresis",
             Axis::BacklogDelta => "backlog_delta",
+            Axis::Mttf => "mttf",
+            Axis::Mttr => "mttr",
+            Axis::Straggler => "straggler",
+            Axis::Deadline => "deadline",
+            Axis::Hedge => "hedge",
         }
     }
 
@@ -182,6 +205,11 @@ impl Axis {
             Axis::ControlEpoch => "control_epoch_s",
             Axis::ControlHysteresis => "control_hysteresis",
             Axis::BacklogDelta => "control_backlog_delta_s",
+            Axis::Mttf => "mttf_s",
+            Axis::Mttr => "mttr_s",
+            Axis::Straggler => "straggler_mtbf_s",
+            Axis::Deadline => "deadline_s",
+            Axis::Hedge => "hedge",
         }
     }
 
@@ -189,7 +217,7 @@ impl Axis {
     pub fn is_numeric(&self) -> bool {
         !matches!(
             self,
-            Axis::ControlPlane | Axis::Handover | Axis::Drop | Axis::Dispatch
+            Axis::ControlPlane | Axis::Handover | Axis::Drop | Axis::Dispatch | Axis::Hedge
         )
     }
 
@@ -220,6 +248,11 @@ impl Axis {
             "epoch" | "control_epoch" | "control_epoch_s" => Axis::ControlEpoch,
             "hysteresis" | "control_hysteresis" => Axis::ControlHysteresis,
             "backlog_delta" | "control_backlog_delta_s" => Axis::BacklogDelta,
+            "mttf" | "mttf_s" => Axis::Mttf,
+            "mttr" | "mttr_s" => Axis::Mttr,
+            "straggler" | "straggler_mtbf_s" => Axis::Straggler,
+            "deadline" | "deadline_s" => Axis::Deadline,
+            "hedge" => Axis::Hedge,
             other => anyhow::bail!(
                 "unknown axis '{other}' (valid: {})",
                 Axis::all().map(|a| a.as_str()).join(", ")
@@ -243,6 +276,11 @@ impl Axis {
             Axis::Handover => AxisValue::word(HandoverPolicy::parse(s)?.as_str()),
             Axis::Drop => AxisValue::word(DropPolicy::parse(s)?.as_str()),
             Axis::Dispatch => AxisValue::word(DispatchKind::parse(s)?.as_str()),
+            Axis::Hedge => match s.to_lowercase().as_str() {
+                "on" | "true" | "1" => AxisValue::word("on"),
+                "off" | "false" | "0" => AxisValue::word("off"),
+                other => anyhow::bail!("axis hedge: expected on/off, got '{other}'"),
+            },
             _ => unreachable!("numeric axes handled above"),
         })
     }
@@ -300,6 +338,11 @@ impl Axis {
             Axis::ControlEpoch => sc.cluster.control_epoch_s = v.as_num()?,
             Axis::ControlHysteresis => sc.cluster.control_hysteresis = v.as_num()?,
             Axis::BacklogDelta => sc.cluster.control_backlog_delta_s = v.as_num()?,
+            Axis::Mttf => sc.cluster.faults.mttf_s = v.as_num()?,
+            Axis::Mttr => sc.cluster.faults.mttr_s = v.as_num()?,
+            Axis::Straggler => sc.cluster.faults.straggler_mtbf_s = v.as_num()?,
+            Axis::Deadline => sc.cluster.deadline_s = v.as_num()?,
+            Axis::Hedge => sc.cluster.hedge = v.as_word()? == "on",
         }
         Ok(())
     }
@@ -500,6 +543,11 @@ mod tests {
                 Axis::ControlEpoch => AxisValue::num(0.5),
                 Axis::ControlHysteresis => AxisValue::num(0.1),
                 Axis::BacklogDelta => AxisValue::num(0.25),
+                Axis::Mttf => AxisValue::num(50.0),
+                Axis::Mttr => AxisValue::num(2.0),
+                Axis::Straggler => AxisValue::num(20.0),
+                Axis::Deadline => AxisValue::num(2.5),
+                Axis::Hedge => AxisValue::word("on"),
             };
             let mut sc = scenario();
             // Devices truncates below 8 experts/cell feasibility at

@@ -18,7 +18,7 @@ use anyhow::Result;
 
 /// The full metric schema, in canonical column order. Every sweep CSV's
 /// metric columns are a subsequence of this list.
-pub const METRIC_KEYS: [&str; 17] = [
+pub const METRIC_KEYS: [&str; 22] = [
     "throughput_rps",
     "goodput_tps",
     "drop_rate",
@@ -36,6 +36,11 @@ pub const METRIC_KEYS: [&str; 17] = [
     "borrowed_tokens",
     "solver_iters_mean",
     "solver_iters_max",
+    "slo_miss_rate",
+    "retries",
+    "hedge_rate",
+    "wasted_tokens",
+    "availability",
 ];
 
 /// One sweep row: grid coordinates plus the full metric vector.
@@ -76,6 +81,11 @@ impl Record {
             out.borrowed_tokens,
             out.solver_iters_mean(),
             out.solver_iters_max(),
+            out.slo_miss_rate(),
+            out.retries as f64,
+            out.hedge_rate(),
+            out.wasted_tokens,
+            out.availability(),
         ];
         Self {
             label,
@@ -201,6 +211,11 @@ mod tests {
         assert_eq!(r.metric("borrowed_tokens").unwrap(), out.borrowed_tokens);
         assert_eq!(r.metric("solver_iters_mean").unwrap(), out.solver_iters_mean());
         assert_eq!(r.metric("solver_iters_max").unwrap(), out.solver_iters_max());
+        assert_eq!(r.metric("slo_miss_rate").unwrap(), out.slo_miss_rate());
+        assert_eq!(r.metric("retries").unwrap(), out.retries as f64);
+        assert_eq!(r.metric("hedge_rate").unwrap(), out.hedge_rate());
+        assert_eq!(r.metric("wasted_tokens").unwrap(), out.wasted_tokens);
+        assert_eq!(r.metric("availability").unwrap(), out.availability());
         assert_eq!(r.coord_num(Axis::ArrivalRate), Some(2.0));
         assert_eq!(r.coord_num(Axis::QueueLimit), None);
         assert!(r.metric("bogus").is_err());

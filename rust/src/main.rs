@@ -14,6 +14,9 @@
 //!           [--epoch S] [--backlog-delta S] [--queue-limit S]
 //!           [--drop request|shed] [--handover none|rehome|borrow]
 //!           [--backhaul S] [--backhaul-matrix M] [--threads N]
+//!           [--faults FILE.json] [--mttf S] [--mttr S]
+//!           [--straggler MTBF[:DUR:MULT]] [--deadline S] [--hedge]
+//!           [--retries N]
 //!                 multi-cell discrete-event serving sweep: throughput,
 //!                 goodput, drop rate, p50/p95/p99 latency, per-device
 //!                 utilization, control-plane activity and handover
@@ -21,7 +24,13 @@
 //!                 compare` runs all three control planes on identical
 //!                 arrival streams; `--handover` enables load-aware
 //!                 arrival re-homing or cross-cell expert borrowing
-//!                 (per-token backhaul latency via --backhaul); sweep
+//!                 (per-token backhaul latency via --backhaul); the
+//!                 fault flags arm a deterministic fault plan (device
+//!                 crash/recover, straggler episodes, a full FaultConfig
+//!                 JSON via --faults) with graceful degradation:
+//!                 crashed work re-dispatches to surviving replicas
+//!                 (bounded by --retries), --deadline turns on SLO
+//!                 accounting and --hedge speculative duplicates; sweep
 //!                 points run on the parallel engine (--threads 0 =
 //!                 one worker per core, 1 = serial; output is
 //!                 byte-identical either way)
@@ -32,7 +41,8 @@
 //!                 --axis (comma list `0.5,1,2` or inclusive range
 //!                 `start:step:end`; axes: rate, control, handover,
 //!                 backhaul, queue_limit, drop, cache, dispatch, cells,
-//!                 devices, seed, epoch, hysteresis, backlog_delta)
+//!                 devices, seed, epoch, hysteresis, backlog_delta,
+//!                 mttf, mttr, straggler, deadline, hedge)
 //!                 through the parallel engine, one unified-schema
 //!                 CSV (+ JSON with --json) into --out
 //!   trace [--rate R] [--requests N] [--benchmark NAME]
@@ -64,9 +74,11 @@
 use std::path::{Path, PathBuf};
 use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep, ClusterOutcome, ClusterSim};
 use wdmoe::config::{
-    ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy, SystemConfig,
+    ClusterConfig, ControlKind, DispatchKind, DropPolicy, FaultConfig, HandoverPolicy,
+    SystemConfig,
 };
 use wdmoe::experiment::{AxisSpec, Grid, Scenario};
+use wdmoe::util::Json;
 use wdmoe::repro::{self, ReproContext};
 use wdmoe::telemetry::{ChromeTracer, TimelineSampler};
 use wdmoe::workload::{ArrivalProcess, Benchmark};
@@ -94,11 +106,18 @@ COMMANDS:
           [--epoch S] [--backlog-delta S] [--queue-limit S]
           [--drop request|shed] [--handover none|rehome|borrow]
           [--backhaul S] [--backhaul-matrix \"a,b;c,d\"] [--threads N]
-          [--trace FILE.json] [--timeline FILE.csv]
+          [--faults FILE.json] [--mttf S] [--mttr S]
+          [--straggler MTBF[:DUR:MULT]] [--deadline S] [--hedge]
+          [--retries N] [--trace FILE.json] [--timeline FILE.csv]
                           (--threads 0 = one worker per core; output is
-                           byte-identical at any thread count; --trace /
-                           --timeline additionally export telemetry for
-                           the first rate — not with --control compare)
+                           byte-identical at any thread count; fault
+                           flags inject deterministic crashes/stragglers
+                           with re-dispatch, deadlines and hedging —
+                           outcomes gain slo_miss_rate, retries,
+                           hedge_rate, wasted_tokens, availability;
+                           --trace / --timeline additionally export
+                           telemetry for the first rate — not with
+                           --control compare)
   trace [--rate R] [--requests N] [--benchmark NAME]
         [--trace FILE.json] [--timeline FILE.csv]
         [--sample-every N] [--timeline-dt S] [--threads N]
@@ -114,7 +133,8 @@ COMMANDS:
                           or an inclusive range start:step:end; axes:
                           rate control handover backhaul queue_limit
                           drop cache dispatch cells devices seed epoch
-                          hysteresis backlog_delta
+                          hysteresis backlog_delta mttf mttr straggler
+                          deadline hedge
   bench [--json] [--smoke]
   config [simulation|testbed|serving|cluster]
   fig5 | fig6 | fig7 | fig8 | fig10
@@ -259,6 +279,45 @@ fn cluster_base_config(args: &Args) -> anyhow::Result<ClusterConfig> {
             })
             .collect::<anyhow::Result<Vec<Vec<f64>>>>()?;
         cfg.backhaul_matrix = Some(matrix);
+    }
+    if let Some(p) = rest_opt(rest, "--faults") {
+        // A full FaultConfig JSON (scheduled faults, seeds, episode
+        // parameters) — the format `FaultConfig::to_json` prints. The
+        // scalar flags below override on top of it.
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| anyhow::anyhow!("--faults {p}: {e}"))?;
+        cfg.faults = FaultConfig::from_json(&Json::parse(&text)?)?;
+    }
+    if let Some(m) = rest_opt(rest, "--mttf") {
+        cfg.faults.mttf_s = m.parse()?;
+    }
+    if let Some(m) = rest_opt(rest, "--mttr") {
+        cfg.faults.mttr_s = m.parse()?;
+    }
+    if let Some(s) = rest_opt(rest, "--straggler") {
+        // MTBF[:DURATION[:MULT]] — e.g. `--straggler 20:2:6` gives each
+        // device a straggler episode every ~20 s lasting ~2 s at 6x.
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            (1..=3).contains(&parts.len()),
+            "--straggler takes MTBF[:DURATION[:MULT]], got {s}"
+        );
+        cfg.faults.straggler_mtbf_s = parts[0].parse()?;
+        if let Some(d) = parts.get(1) {
+            cfg.faults.straggler_duration_s = d.parse()?;
+        }
+        if let Some(m) = parts.get(2) {
+            cfg.faults.straggler_mult = m.parse()?;
+        }
+    }
+    if let Some(d) = rest_opt(rest, "--deadline") {
+        cfg.deadline_s = d.parse()?;
+    }
+    if rest.iter().any(|a| a == "--hedge") {
+        cfg.hedge = true;
+    }
+    if let Some(r) = rest_opt(rest, "--retries") {
+        cfg.max_retries = r.parse()?;
     }
     Ok(cfg)
 }

@@ -5,8 +5,9 @@
 //! control plane uses), the adaptive plane's full epoch tick, a
 //! load-aware dispatch decision, and whole-DES throughput in simulated
 //! events per wall second (the 2-cell run with and without a no-op
-//! probe, plus the 8-cell serial/sharded twin pair whose events/sec
-//! ratio is the sharding speedup). The `cargo bench` binaries
+//! probe, the same run with an empty fault plan — both contracts say
+//! "free when unused" — plus the 8-cell serial/sharded twin pair whose
+//! events/sec ratio is the sharding speedup). The `cargo bench` binaries
 //! (`rust/benches/control.rs`, `rust/benches/cluster.rs`) call these
 //! same functions, so the interactive numbers and the
 //! `BENCH_cluster.json` CI artifact can never drift apart. `repro bench
@@ -176,6 +177,30 @@ pub fn des_nullprobe_harness(budget: Duration, requests: usize) -> BenchResult {
     r
 }
 
+/// The same 2-cell DES with fault support compiled in but an *empty*
+/// fault plan. The fault contract mirrors telemetry's: no configured
+/// faults monomorphize to the exact zero-fault hot path, so this
+/// harness should match `cluster/des_run_2cell` to within noise — a
+/// widening gap means the fault machinery leaked cost onto runs that
+/// never asked for it.
+pub fn des_faultplan_empty_harness(budget: Duration, requests: usize) -> BenchResult {
+    let mut dcfg = ClusterConfig::edge_default();
+    dcfg.model.n_blocks = 8;
+    debug_assert!(dcfg.faults.is_empty(), "edge_default must carry no faults");
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(requests, Benchmark::Piqa, 0);
+    let mut des = ClusterSim::new(&dcfg).expect("preset config is valid");
+    let events_per_run = des.run(&arrivals).events;
+    let mut r = bench_quiet("cluster/des_run_2cell_faultplan_empty", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run(&arrivals).completed
+    });
+    let events_per_sec = events_per_run as f64 * 1e9 / r.mean_ns;
+    r.throughput = Some(("sim_events_per_sec".to_string(), events_per_sec));
+    r.report();
+    r
+}
+
 /// The serial / sharded twin pair on an 8-cell cluster: the same config,
 /// the same arrival stream, one harness through the serial event loop
 /// and one through `run_sharded` on the worker pool (0 = one worker per
@@ -225,6 +250,7 @@ pub fn run_suite(smoke: bool) -> BenchSuite {
     results.push(dispatch_harness(budget));
     results.push(des_harness(budget, requests));
     results.push(des_nullprobe_harness(budget, requests));
+    results.push(des_faultplan_empty_harness(budget, requests));
     results.extend(des_8cell_harnesses(budget, requests));
     BenchSuite {
         smoke,
@@ -248,6 +274,7 @@ mod tests {
             "cluster/dispatch_choose_16rep",
             "cluster/des_run_2cell",
             "cluster/des_run_2cell_nullprobe",
+            "cluster/des_run_2cell_faultplan_empty",
             "cluster/des_run_8cell",
             "cluster/des_run_8cell_sharded",
         ] {
@@ -267,7 +294,7 @@ mod tests {
             back.get("schema").unwrap().as_str().unwrap(),
             "wdmoe-bench-v1"
         );
-        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 8);
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 9);
         // The sharded twin reports the same throughput unit so the
         // bench gate can ratio the pair.
         let sharded = suite

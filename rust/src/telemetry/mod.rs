@@ -173,6 +173,45 @@ pub enum TelemetryEvent {
         warm: bool,
         converged: bool,
     },
+    /// A fault-plan crash took `device` offline at `t`.
+    DeviceCrashed { cell: usize, device: usize, t: Nanos },
+    /// A fault-plan recovery brought `device` back online at `t`.
+    DeviceRecovered { cell: usize, device: usize, t: Nanos },
+    /// `device`'s effective service-time multiplier changed (straggler
+    /// episode and/or link dip); `mult` is the combined factor after the
+    /// change, `1.0` meaning the episode ended.
+    DeviceSlowdown {
+        cell: usize,
+        device: usize,
+        mult: f64,
+        t: Nanos,
+    },
+    /// The cell's backhaul multiplier changed (`0.0` = full outage, no
+    /// cross-cell borrowing; `1.0` = restored).
+    BackhaulFault { cell: usize, mult: f64, t: Nanos },
+    /// A crash-lost token group was re-dispatched to a surviving replica
+    /// `device`, finishing at `done`.
+    Redispatched {
+        req: usize,
+        cell: usize,
+        expert: usize,
+        device: usize,
+        tokens: f64,
+        t: Nanos,
+        done: Nanos,
+    },
+    /// Deadline pressure armed a hedged duplicate of a token group:
+    /// `primary` holds the original placement, `device` the speculative
+    /// twin. First finish wins; the loser's tokens count as waste.
+    Hedged {
+        req: usize,
+        cell: usize,
+        expert: usize,
+        primary: usize,
+        device: usize,
+        tokens: f64,
+        t: Nanos,
+    },
 }
 
 /// Per-cell state snapshot handed to [`Probe::on_sample`] on the
@@ -190,6 +229,9 @@ pub struct CellSample {
     pub online_devices: usize,
     /// Expert replicas currently hosted on online devices.
     pub live_replicas: usize,
+    /// Devices whose service-time multiplier is currently != 1.0
+    /// (straggler episode or link dip in progress).
+    pub degraded_devices: usize,
 }
 
 /// An observer of the serving stack. Every method has a no-op default

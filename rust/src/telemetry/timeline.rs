@@ -32,6 +32,9 @@ pub struct TimelineRow {
     pub live_replicas: usize,
     /// Devices currently online.
     pub online_devices: usize,
+    /// Devices running with a fault-plan service-time multiplier other
+    /// than 1.0 (straggler episode and/or link dip in progress).
+    pub degraded_devices: usize,
 }
 
 /// A [`Probe`] recording per-cell load curves on a fixed sim-time
@@ -73,18 +76,20 @@ impl TimelineSampler {
 
     /// Long-format CSV of the timeline.
     pub fn to_csv(&self) -> String {
-        let mut out =
-            String::from("t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices\n");
+        let mut out = String::from(
+            "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices,degraded_devices\n",
+        );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:.6},{},{:.6},{:.6},{:.6},{},{}\n",
+                "{:.6},{},{:.6},{:.6},{:.6},{},{},{}\n",
                 r.t as f64 / 1e9,
                 r.cell,
                 r.backlog_s,
                 r.utilization,
                 r.drop_rate,
                 r.live_replicas,
-                r.online_devices
+                r.online_devices,
+                r.degraded_devices
             ));
         }
         out
@@ -133,6 +138,7 @@ impl Probe for TimelineSampler {
                 drop_rate,
                 live_replicas: c.live_replicas,
                 online_devices: c.online_devices,
+                degraded_devices: c.degraded_devices,
             });
         }
     }
@@ -149,6 +155,7 @@ mod tests {
             devices: 2,
             online_devices: 2,
             live_replicas: 8,
+            degraded_devices: 0,
         }
     }
 

@@ -569,6 +569,89 @@ impl Probe for ChromeTracer {
                     ],
                 );
             }
+            TelemetryEvent::DeviceCrashed { cell, device, t } => {
+                let lane = self.control_lane(cell);
+                self.instant(lane, t, format!("device_crash dev{device}"), "fault", Vec::new());
+            }
+            TelemetryEvent::DeviceRecovered { cell, device, t } => {
+                let lane = self.control_lane(cell);
+                self.instant(
+                    lane,
+                    t,
+                    format!("device_recover dev{device}"),
+                    "fault",
+                    Vec::new(),
+                );
+            }
+            TelemetryEvent::DeviceSlowdown {
+                cell,
+                device,
+                mult,
+                t,
+            } => {
+                let lane = self.device_lane(cell, device);
+                self.instant(
+                    lane,
+                    t,
+                    format!("slowdown x{mult}"),
+                    "fault",
+                    vec![("mult", Json::Num(mult))],
+                );
+            }
+            TelemetryEvent::BackhaulFault { cell, mult, t } => {
+                let lane = self.control_lane(cell);
+                self.instant(
+                    lane,
+                    t,
+                    format!("backhaul x{mult}"),
+                    "fault",
+                    vec![("mult", Json::Num(mult))],
+                );
+            }
+            TelemetryEvent::Redispatched {
+                req,
+                cell,
+                expert,
+                device,
+                tokens,
+                t,
+                done,
+            } => {
+                let lane = self.device_lane(cell, device);
+                self.instant(
+                    lane,
+                    t,
+                    format!("redispatch e{expert}"),
+                    "fault",
+                    vec![
+                        ("req", Json::Num(req as f64)),
+                        ("tokens", Json::Num(tokens)),
+                        ("done_us", Json::Num(done as f64 / 1e3)),
+                    ],
+                );
+            }
+            TelemetryEvent::Hedged {
+                req,
+                cell,
+                expert,
+                primary,
+                device,
+                tokens,
+                t,
+            } => {
+                let lane = self.device_lane(cell, device);
+                self.instant(
+                    lane,
+                    t,
+                    format!("hedge e{expert}"),
+                    "hedge",
+                    vec![
+                        ("req", Json::Num(req as f64)),
+                        ("primary", Json::Num(primary as f64)),
+                        ("tokens", Json::Num(tokens)),
+                    ],
+                );
+            }
             // High-volume per-decision events are aggregated elsewhere;
             // the tracer keeps lanes readable.
             TelemetryEvent::DispatchDecision { .. } => {}

@@ -287,6 +287,14 @@ fn assert_outcomes_bit_identical(a: &ClusterOutcome, b: &ClusterOutcome, tag: &s
     assert_eq!(a.borrowed_groups, b.borrowed_groups, "{tag}: borrowed_groups");
     assert_eq!(a.borrowed_tokens, b.borrowed_tokens, "{tag}: borrowed_tokens");
     assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.slo_missed, b.slo_missed, "{tag}: slo_missed");
+    assert_eq!(a.retries, b.retries, "{tag}: retries");
+    assert_eq!(a.hedges, b.hedges, "{tag}: hedges");
+    assert_eq!(a.wasted_tokens, b.wasted_tokens, "{tag}: wasted_tokens");
+    assert_eq!(
+        a.offline_device_s, b.offline_device_s,
+        "{tag}: offline_device_s"
+    );
     assert_eq!(a.makespan_s, b.makespan_s, "{tag}: makespan_s");
     assert_eq!(
         a.latency_ms.steady_values(),

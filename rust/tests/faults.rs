@@ -1,0 +1,350 @@
+//! Fault-injection integration and property tests: token conservation
+//! under chaos schedules, serial/sharded bit-identity with a non-empty
+//! fault plan, the inert-plan monomorphization contract, availability
+//! accounting, and the acceptance claim — re-dispatch plus hedging
+//! strictly lowers the SLO miss rate (without raising the drop rate)
+//! versus the naive drop path on an injected-straggler scenario.
+
+use wdmoe::cluster::{ClusterOutcome, ClusterSim};
+use wdmoe::config::{
+    ClusterConfig, ControlKind, DispatchKind, DropPolicy, FaultConfig, FaultKind,
+    ScheduledFault,
+};
+use wdmoe::telemetry::{ChromeTracer, TimelineSampler};
+use wdmoe::workload::{Arrival, ArrivalProcess, Benchmark};
+
+fn arrivals(rate: f64, n: usize, seed: u64) -> Vec<Arrival> {
+    ArrivalProcess::Poisson { rate_rps: rate }.generate(n, Benchmark::Piqa, seed)
+}
+
+/// Conservation at drain: every arrival completed or dropped, token
+/// counts partition exactly, nothing left in flight.
+fn assert_conserves(out: &ClusterOutcome, tag: &str) {
+    assert_eq!(
+        out.completed + out.dropped,
+        out.arrived,
+        "{tag}: requests not conserved"
+    );
+    assert_eq!(out.in_flight, 0, "{tag}: work left in flight");
+    assert_eq!(
+        out.completed_tokens + out.dropped_tokens,
+        out.arrived_tokens,
+        "{tag}: tokens not conserved"
+    );
+}
+
+fn assert_bit_identical(a: &ClusterOutcome, b: &ClusterOutcome, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.dropped, b.dropped, "{tag}: dropped");
+    assert_eq!(a.completed_tokens, b.completed_tokens, "{tag}: completed_tokens");
+    assert_eq!(a.dropped_tokens, b.dropped_tokens, "{tag}: dropped_tokens");
+    assert_eq!(a.shed_tokens, b.shed_tokens, "{tag}: shed_tokens");
+    assert_eq!(a.slo_missed, b.slo_missed, "{tag}: slo_missed");
+    assert_eq!(a.retries, b.retries, "{tag}: retries");
+    assert_eq!(a.hedges, b.hedges, "{tag}: hedges");
+    assert_eq!(a.wasted_tokens, b.wasted_tokens, "{tag}: wasted_tokens");
+    assert_eq!(
+        a.offline_device_s, b.offline_device_s,
+        "{tag}: offline_device_s"
+    );
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.makespan_s, b.makespan_s, "{tag}: makespan_s");
+    assert_eq!(
+        a.latency_ms.steady_values(),
+        b.latency_ms.steady_values(),
+        "{tag}: latency stream"
+    );
+    assert_eq!(a.utilization, b.utilization, "{tag}: utilization");
+    assert_eq!(a.control, b.control, "{tag}: control stats");
+}
+
+/// A dense stochastic plan: every fault process armed, short enough
+/// episodes that crashes, recoveries, stragglers, link dips and
+/// backhaul outages all land inside the active window.
+fn chaos_faults(seed: u64) -> FaultConfig {
+    FaultConfig {
+        mttf_s: 6.0,
+        mttr_s: 1.5,
+        straggler_mtbf_s: 4.0,
+        straggler_duration_s: 1.5,
+        straggler_mult: 8.0,
+        link_dip_mtbf_s: 5.0,
+        link_dip_duration_s: 1.0,
+        link_dip_mult: 3.0,
+        backhaul_outage_mtbf_s: 10.0,
+        backhaul_outage_duration_s: 2.0,
+        horizon_s: 25.0,
+        seed,
+        ..FaultConfig::default()
+    }
+}
+
+// ------------------------------------------------ chaos conservation
+
+/// Property: under randomized fault schedules x drop policies, the DES
+/// still conserves requests and tokens at drain, and the sharded engine
+/// reproduces the faulty run bit-for-bit at any thread count.
+#[test]
+fn prop_chaos_conserves_tokens_and_shards_bit_identically() {
+    for fault_seed in [1u64, 2, 3] {
+        for drop_policy in [DropPolicy::DropRequest, DropPolicy::ShedTokens] {
+            let mut cfg = ClusterConfig::edge_default().with_n_cells(4);
+            cfg.model.n_blocks = 4;
+            cfg.control = ControlKind::Adaptive;
+            cfg.queue_limit_s = 0.25;
+            cfg.drop_policy = drop_policy;
+            cfg.faults = chaos_faults(fault_seed);
+            cfg.deadline_s = 1.0;
+            cfg.hedge = fault_seed % 2 == 0;
+            let arr = arrivals(10.0, 40, fault_seed);
+            let tag = format!("faults={fault_seed} drop={}", drop_policy.as_str());
+
+            let mut serial = ClusterSim::new(&cfg).unwrap();
+            let base = serial.run(&arr);
+            assert_conserves(&base, &tag);
+            // The plan is dense enough that some device was down while
+            // the run was active — the availability ledger saw it.
+            assert!(
+                base.offline_device_s > 0.0,
+                "{tag}: no crash landed in the active window"
+            );
+            assert!(base.availability() < 1.0, "{tag}: availability");
+
+            for threads in [2usize, 4] {
+                let mut sim = ClusterSim::new(&cfg).unwrap();
+                let out = sim.run_sharded(&arr, threads);
+                assert_bit_identical(&base, &out, &format!("{tag} threads={threads}"));
+            }
+        }
+    }
+}
+
+/// Probe artifacts carry the fault stream too: with a non-empty plan,
+/// the Chrome trace and timeline CSV come out byte-identical from the
+/// serial and sharded engines, and the trace actually contains fault
+/// lane events.
+#[test]
+fn chaos_trace_and_timeline_bytes_match_serial_vs_sharded() {
+    let mut cfg = ClusterConfig::edge_default().with_n_cells(4);
+    cfg.model.n_blocks = 4;
+    cfg.faults = chaos_faults(5);
+    cfg.deadline_s = 1.0;
+    cfg.hedge = true;
+    let arr = arrivals(10.0, 40, 5);
+
+    let mut probe = (ChromeTracer::new(), TimelineSampler::new(5_000_000));
+    let mut serial = ClusterSim::new(&cfg).unwrap();
+    let base = serial.run_probed(&arr, &mut probe);
+    let base_trace = probe.0.to_json().to_string();
+    let base_timeline = probe.1.to_csv();
+    assert!(
+        base_trace.contains("device_crash"),
+        "trace should record fault instants"
+    );
+    assert!(
+        base_timeline.lines().next().unwrap().ends_with(",degraded_devices"),
+        "timeline should carry the degraded-devices column"
+    );
+
+    for threads in [2usize, 4] {
+        let mut probe = (ChromeTracer::new(), TimelineSampler::new(5_000_000));
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let out = sim.run_sharded_probed(&arr, threads, &mut probe);
+        assert_bit_identical(&base, &out, &format!("threads={threads}"));
+        assert_eq!(
+            probe.0.to_json().to_string(),
+            base_trace,
+            "threads={threads}: trace bytes"
+        );
+        assert_eq!(
+            probe.1.to_csv(),
+            base_timeline,
+            "threads={threads}: timeline bytes"
+        );
+    }
+}
+
+// ------------------------------------------------ inert-plan identity
+
+/// The monomorphization contract: a fault config whose every process is
+/// disabled — even with non-default inert scalars — takes the exact
+/// zero-fault hot path, so outcomes AND probe artifacts are bit-equal
+/// to the default config's.
+#[test]
+fn inert_fault_config_is_bit_identical_to_default() {
+    let mut base_cfg = ClusterConfig::edge_default().with_n_cells(4);
+    base_cfg.model.n_blocks = 4;
+    base_cfg.control = ControlKind::Adaptive;
+    base_cfg.queue_limit_s = 0.2;
+
+    let mut inert_cfg = base_cfg.clone();
+    inert_cfg.faults = FaultConfig {
+        mttr_s: 9.0,
+        straggler_mult: 2.0,
+        horizon_s: 5.0,
+        seed: 99,
+        ..FaultConfig::default()
+    };
+    assert!(inert_cfg.faults.is_empty());
+    inert_cfg.max_retries = 5; // inert without faults
+
+    let arr = arrivals(12.0, 48, 9);
+    let render = |cfg: &ClusterConfig| {
+        let mut probe = (ChromeTracer::new(), TimelineSampler::new(5_000_000));
+        let mut sim = ClusterSim::new(cfg).unwrap();
+        let out = sim.run_probed(&arr, &mut probe);
+        (out, probe.0.to_json().to_string(), probe.1.to_csv())
+    };
+    let (a, trace_a, tl_a) = render(&base_cfg);
+    let (b, trace_b, tl_b) = render(&inert_cfg);
+    assert_bit_identical(&a, &b, "inert plan");
+    assert_eq!(a.solver, b.solver, "inert plan: solver introspection");
+    assert_eq!(trace_a, trace_b, "inert plan: trace bytes");
+    assert_eq!(tl_a, tl_b, "inert plan: timeline bytes");
+    // No faults ⇒ the new counters stay at their zero fixpoints.
+    assert_eq!(a.slo_missed, 0);
+    assert_eq!(a.retries, 0);
+    assert_eq!(a.hedges, 0);
+    assert_eq!(a.wasted_tokens, 0.0);
+    assert_eq!(a.offline_device_s, 0.0);
+    assert_eq!(a.availability(), 1.0);
+
+    // And the sharded engine agrees with the serial one on the inert plan.
+    let mut sharded = ClusterSim::new(&inert_cfg).unwrap();
+    let out = sharded.run_sharded(&arr, 4);
+    assert_bit_identical(&b, &out, "inert plan sharded");
+}
+
+// ------------------------------------------------ availability + SLO
+
+/// Availability accounting: a permanent mid-run crash shows up as
+/// offline device-seconds and availability strictly inside (0, 1);
+/// with the deadline off, no SLO misses are ever recorded, faults or not.
+#[test]
+fn availability_reflects_offline_device_seconds() {
+    let mut cfg = ClusterConfig::single_cell();
+    cfg.model.n_blocks = 4;
+    cfg.faults.scheduled.push(ScheduledFault {
+        at_s: 0.5,
+        cell: 0,
+        device: Some(0),
+        kind: FaultKind::Crash,
+        duration_s: 0.0, // permanent
+        mult: 1.0,
+    });
+    assert_eq!(cfg.deadline_s, 0.0);
+    let arr = arrivals(4.0, 40, 2);
+    let out = ClusterSim::new(&cfg).unwrap().run(&arr);
+    assert_conserves(&out, "permanent crash");
+    assert!(out.offline_device_s > 0.0, "crash never counted offline");
+    assert!(
+        out.availability() > 0.0 && out.availability() < 1.0,
+        "availability should be strictly degraded: {}",
+        out.availability()
+    );
+    // SLO accounting is opt-in: deadline 0 records no misses.
+    assert_eq!(out.slo_missed, 0);
+    assert_eq!(out.slo_miss_rate(), 0.0);
+}
+
+// ------------------------------------------------ graceful degradation
+
+/// The single cell with its two fastest devices straggled (hidden from
+/// the dispatcher's predictions) and two mid-tier devices crashed
+/// mid-run — the scenario where naive dropping hurts most.
+fn degradation_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::single_cell();
+    cfg.model.n_blocks = 8;
+    cfg.cache_capacity = 2;
+    cfg.dispatch = DispatchKind::LoadAware;
+    cfg
+}
+
+fn injected_faults() -> FaultConfig {
+    let mut f = FaultConfig::default();
+    // Devices 0 and 2 are the fastest in the preset (20 / 15 TFLOPs):
+    // the load-aware dispatcher keeps steering groups onto them, but its
+    // predictions read the nominal service time, so the 1e5x slowdown is
+    // exactly the hidden straggler hedging exists for.
+    for d in [0usize, 2] {
+        f.scheduled.push(ScheduledFault {
+            at_s: 0.0,
+            cell: 0,
+            device: Some(d),
+            kind: FaultKind::Straggle,
+            duration_s: 1e4,
+            mult: 1e5,
+        });
+    }
+    // Two healthy, attractive devices crash permanently mid-run while
+    // they hold queued work: without re-dispatch that work is lost.
+    for (d, at_s) in [(1usize, 4.0), (4, 6.0)] {
+        f.scheduled.push(ScheduledFault {
+            at_s,
+            cell: 0,
+            device: Some(d),
+            kind: FaultKind::Crash,
+            duration_s: 0.0,
+            mult: 1.0,
+        });
+    }
+    f
+}
+
+/// The acceptance claim: on the injected-straggler scenario, bounded
+/// re-dispatch plus deadline hedging strictly lowers the SLO miss rate
+/// and does not raise the drop rate versus the naive drop path.
+#[test]
+fn redispatch_and_hedging_cut_slo_misses_without_more_drops() {
+    let arr = arrivals(4.0, 120, 11);
+
+    // Calibrate the deadline off the healthy run: generous for ordinary
+    // queueing (4x healthy p99), hopeless for a 1e5x-straggled group.
+    let healthy_cfg = degradation_cfg();
+    let healthy = ClusterSim::new(&healthy_cfg).unwrap().run(&arr);
+    assert_eq!(healthy.completed, 120);
+    let deadline_s = (4.0 * healthy.p99_ms() / 1e3).clamp(0.05, 5.0);
+
+    // Arm A: graceful degradation — re-dispatch lost work, hedge
+    // deadline-busting groups.
+    let mut cfg_a = degradation_cfg();
+    cfg_a.faults = injected_faults();
+    cfg_a.deadline_s = deadline_s;
+    cfg_a.hedge = true;
+    cfg_a.max_retries = 2;
+    let a = ClusterSim::new(&cfg_a).unwrap().run(&arr);
+    assert_conserves(&a, "graceful arm");
+
+    // Arm B: the naive path — same faults, no retries, no hedging.
+    let mut cfg_b = degradation_cfg();
+    cfg_b.faults = injected_faults();
+    cfg_b.deadline_s = deadline_s;
+    cfg_b.hedge = false;
+    cfg_b.max_retries = 0;
+    let b = ClusterSim::new(&cfg_b).unwrap().run(&arr);
+    assert_conserves(&b, "naive arm");
+
+    // The machinery actually engaged.
+    assert!(a.hedges > 0, "no hedge fired against the hidden stragglers");
+    assert!(a.wasted_tokens > 0.0, "hedged twins should count as waste");
+    assert_eq!(b.hedges, 0);
+    assert_eq!(b.retries, 0);
+    assert!(b.slo_missed > 0, "naive arm should miss its deadline");
+
+    // The headline inequalities.
+    assert!(
+        a.slo_miss_rate() < b.slo_miss_rate(),
+        "graceful degradation should strictly cut SLO misses: \
+         {:.4} (hedge+retry) vs {:.4} (naive)",
+        a.slo_miss_rate(),
+        b.slo_miss_rate()
+    );
+    assert!(
+        a.drop_rate() <= b.drop_rate(),
+        "graceful degradation must not add drops: {:.4} vs {:.4}",
+        a.drop_rate(),
+        b.drop_rate()
+    );
+    assert!(a.dropped <= b.dropped);
+}

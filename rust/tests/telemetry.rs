@@ -48,6 +48,11 @@ fn assert_outcomes_bit_equal(a: &ClusterOutcome, b: &ClusterOutcome) {
     assert_eq!(a.borrowed_groups, b.borrowed_groups);
     assert_eq!(a.borrowed_tokens, b.borrowed_tokens);
     assert_eq!(a.events, b.events);
+    assert_eq!(a.slo_missed, b.slo_missed);
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.hedges, b.hedges);
+    assert_eq!(a.wasted_tokens, b.wasted_tokens);
+    assert_eq!(a.offline_device_s, b.offline_device_s);
     assert_eq!(a.makespan_s, b.makespan_s);
     assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
     assert_eq!(a.utilization, b.utilization);
@@ -215,7 +220,7 @@ fn timeline_rows_are_strictly_increasing_per_cell() {
     let mut lines = csv.lines();
     assert_eq!(
         lines.next().unwrap(),
-        "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices"
+        "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices,degraded_devices"
     );
     assert_eq!(csv.lines().count(), rows.len() + 1);
     for r in rows {

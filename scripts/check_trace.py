@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Validate `repro trace` artifacts.
 
-Usage: check_trace.py TRACE.json [TIMELINE.csv]
+Usage: check_trace.py [--expect-faults] TRACE.json [TIMELINE.csv]
 
 Checks the Chrome trace-event JSON the telemetry layer exports:
 
@@ -19,6 +19,12 @@ And, when given, the timeline CSV:
 * sample times strictly increasing per cell;
 * finite, non-negative backlog/utilization and drop_rate in [0, 1].
 
+With `--expect-faults`, additionally require the trace to carry the
+fault-injection lanes: at least one event in the "fault" category
+(device_crash / device_recover / slowdown / backhaul / redispatch) and,
+if hedging fired, matching "hedge" events — CI's chaos smoke uses this
+to prove the fault plan actually reached the artifact.
+
 Exits non-zero with a message on the first violation — CI runs this
 against a fresh `repro trace` smoke artifact.
 """
@@ -34,7 +40,7 @@ def fail(msg):
     sys.exit(1)
 
 
-def check_trace(path):
+def check_trace(path, expect_faults=False):
     with open(path) as f:
         doc = json.load(f)
     events = doc.get("traceEvents")
@@ -46,9 +52,13 @@ def check_trace(path):
     open_async = {}     # id -> open b count
     named_lanes = set()
     counts = {}
+    cat_counts = {}     # category -> event count (fault/hedge lanes)
     for i, e in enumerate(events):
         ph = e.get("ph")
         counts[ph] = counts.get(ph, 0) + 1
+        cat = e.get("cat")
+        if cat:
+            cat_counts[cat] = cat_counts.get(cat, 0) + 1
         if ph == "M":
             if e.get("name") == "thread_name":
                 named_lanes.add((e.get("pid"), e.get("tid")))
@@ -90,6 +100,19 @@ def check_trace(path):
             fail(f"{path}: async span {aid} never closed")
     if counts.get("B", 0) == 0:
         fail(f"{path}: no duration spans at all")
+    if expect_faults:
+        n_fault = cat_counts.get("fault", 0)
+        if n_fault == 0:
+            fail(f"{path}: --expect-faults, but no 'fault'-category events")
+        fault_names = {
+            e.get("name", "").split()[0]
+            for e in events
+            if e.get("cat") == "fault" and e.get("name")
+        }
+        if not fault_names & {"device_crash", "device_recover", "slowdown", "backhaul", "redispatch"}:
+            fail(f"{path}: fault events carry unrecognized names: {sorted(fault_names)}")
+        n_hedge = cat_counts.get("hedge", 0)
+        print(f"check_trace: {path} fault lanes OK — {n_fault} fault, {n_hedge} hedge")
     print(
         f"check_trace: {path} OK — "
         + ", ".join(f"{counts.get(p, 0)} {p}" for p in ["M", "B", "E", "b", "e", "i"])
@@ -104,6 +127,7 @@ TIMELINE_HEADER = [
     "drop_rate",
     "live_replicas",
     "online_devices",
+    "degraded_devices",
 ]
 
 
@@ -130,12 +154,15 @@ def check_timeline(path):
 
 
 def main():
-    if len(sys.argv) < 2 or len(sys.argv) > 3:
+    args = sys.argv[1:]
+    expect_faults = "--expect-faults" in args
+    args = [a for a in args if a != "--expect-faults"]
+    if len(args) < 1 or len(args) > 2:
         print(__doc__)
         sys.exit(2)
-    check_trace(sys.argv[1])
-    if len(sys.argv) == 3:
-        check_timeline(sys.argv[2])
+    check_trace(args[0], expect_faults=expect_faults)
+    if len(args) == 2:
+        check_timeline(args[1])
 
 
 if __name__ == "__main__":
