@@ -1,0 +1,893 @@
+//! detlint — the determinism & hot-path static-analysis pass.
+//!
+//! The simulator's headline guarantee is *byte identity*: serial,
+//! sharded, probed and fault-injected runs of the same config produce
+//! bit-identical outcomes. That contract is easy to break silently —
+//! one `HashMap` iteration, one wall-clock read, one reordered f64
+//! reduction — and no unit test reliably catches the breakage, because
+//! hash seeds and thread schedules only vary *between* runs. So the
+//! contract is enforced statically, by this pass, over `rust/src/**`.
+//!
+//! Four rule families, each scoped by the config (`detlint.toml`):
+//!
+//! - **nondet** — wall-clock (`Instant::now`, `SystemTime`), process
+//!   environment (`std::env`), ambient RNG (`thread_rng`) and
+//!   hash-ordered containers (`HashMap`/`HashSet`) are forbidden in the
+//!   deterministic tier; the allowlist names the modules that *are* the
+//!   boundary to the outside world (the bench timer, the real clock).
+//! - **hotpath-alloc** — the manifest names functions documented as
+//!   allocation-free at steady state; allocation tokens in their bodies
+//!   are flagged.
+//! - **float-order** — unordered f64 reductions in the sharded engine
+//!   outside the canonical-order drain functions: float addition does
+//!   not associate, so any sum whose order depends on thread timing
+//!   breaks byte identity.
+//! - **panic** / **visibility** — `unwrap`/`expect` in the tier (each
+//!   use must argue its infallibility in an escape reason), and `pub`
+//!   lane-0 schedule wrappers that would let callers bypass the
+//!   lane-aware `EventQueue` ordering API.
+//!
+//! Any finding can be suppressed with
+//! `// detlint: allow(<rule>) <reason>` on the same line or alone on
+//! the line above — but the reason is mandatory; a reason-less escape
+//! is itself a violation (rule `escape`). `#[cfg(test)] mod` blocks are
+//! skipped entirely.
+//!
+//! The scanner is a hand-rolled tokenizer — comment and string-literal
+//! stripping plus brace matching — not a full parser. That keeps the
+//! crate dependency-free (it must build in the same offline environment
+//! as the simulator) at the cost of token-level matching: rules match
+//! code text, so they are scoped narrowly by the config rather than
+//! applied syntactically.
+
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------
+
+/// Parsed `detlint.toml`. Only the TOML subset the config needs:
+/// `[section]` headers, `key = "string"` and `key = [ "a", "b" ]`
+/// (arrays may span lines), `#` comments.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// Deterministic-tier directories (relative to the source root).
+    pub nondet_dirs: Vec<String>,
+    /// Path prefixes exempt from the nondet/panic tier rules.
+    pub nondet_allowed: Vec<String>,
+    /// Forbidden nondeterminism tokens.
+    pub nondet_tokens: Vec<String>,
+    /// Forbidden panic tokens (tier-scoped like nondet).
+    pub panic_tokens: Vec<String>,
+    /// Allocation tokens forbidden in manifest functions.
+    pub hotpath_tokens: Vec<String>,
+    /// Allocation-free manifest: file path → function names.
+    pub hotpath_fns: BTreeMap<String, Vec<String>>,
+    /// Files the float-order rule applies to.
+    pub float_files: Vec<String>,
+    /// Functions whose bodies replay in canonical order (exempt).
+    pub float_canonical: Vec<String>,
+    /// Accumulator identifiers whose `+=` is flagged.
+    pub float_accumulators: Vec<String>,
+    /// Files the visibility rule applies to.
+    pub vis_files: Vec<String>,
+    /// Forbidden public-API tokens in those files.
+    pub vis_tokens: Vec<String>,
+}
+
+/// One `key = value` in the TOML subset.
+#[derive(Debug, Clone, PartialEq)]
+enum TomlValue {
+    Str(String),
+    List(Vec<String>),
+}
+
+/// Parse the TOML subset into section → key → value.
+fn parse_toml_lite(src: &str) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>, String> {
+    let mut out: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    let mut lines = src.lines().enumerate();
+    while let Some((ln, raw)) = lines.next() {
+        let line = strip_toml_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((key, rest)) = line.split_once('=') else {
+            return Err(format!("line {}: expected `key = value`, got {line:?}", ln + 1));
+        };
+        let key = key.trim().to_string();
+        let mut rest = rest.trim().to_string();
+        if rest.starts_with('[') {
+            // Array, possibly spanning lines: accumulate until the
+            // closing bracket (string contents never contain brackets
+            // in this config dialect).
+            while !rest.contains(']') {
+                let Some((_, more)) = lines.next() else {
+                    return Err(format!("line {}: unterminated array for {key}", ln + 1));
+                };
+                rest.push(' ');
+                rest.push_str(strip_toml_comment(more).trim());
+            }
+            let inner = rest
+                .trim_start_matches('[')
+                .rsplit_once(']')
+                .map(|(i, _)| i)
+                .unwrap_or("");
+            let mut items = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                items.push(unquote(part).map_err(|e| format!("key {key}: {e}"))?);
+            }
+            out.entry(section.clone())
+                .or_default()
+                .insert(key, TomlValue::List(items));
+        } else {
+            let s = unquote(&rest).map_err(|e| format!("key {key}: {e}"))?;
+            out.entry(section.clone())
+                .or_default()
+                .insert(key, TomlValue::Str(s));
+        }
+    }
+    Ok(out)
+}
+
+/// Drop a trailing `#` comment (quote-aware).
+fn strip_toml_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> Result<String, String> {
+    let s = s.trim();
+    if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        Ok(s[1..s.len() - 1].to_string())
+    } else {
+        Err(format!("expected a quoted string, got {s:?}"))
+    }
+}
+
+impl Config {
+    /// Parse the shipped `detlint.toml` dialect.
+    pub fn parse(src: &str) -> Result<Self, String> {
+        let doc = parse_toml_lite(src)?;
+        let list = |sec: &str, key: &str| -> Vec<String> {
+            match doc.get(sec).and_then(|s| s.get(key)) {
+                Some(TomlValue::List(v)) => v.clone(),
+                Some(TomlValue::Str(s)) => vec![s.clone()],
+                None => Vec::new(),
+            }
+        };
+        let mut cfg = Config {
+            nondet_dirs: list("nondet", "dirs"),
+            nondet_allowed: list("nondet", "allowed"),
+            nondet_tokens: list("nondet", "tokens"),
+            panic_tokens: list("panic", "tokens"),
+            hotpath_tokens: list("hotpath", "tokens"),
+            hotpath_fns: BTreeMap::new(),
+            float_files: list("float-order", "files"),
+            float_canonical: list("float-order", "canonical"),
+            float_accumulators: list("float-order", "accumulators"),
+            vis_files: list("visibility", "files"),
+            vis_tokens: list("visibility", "tokens"),
+        };
+        for entry in list("hotpath", "fns") {
+            let Some((path, name)) = entry.rsplit_once(':') else {
+                return Err(format!("hotpath fn {entry:?}: expected \"path:fn_name\""));
+            };
+            cfg.hotpath_fns
+                .entry(path.to_string())
+                .or_default()
+                .push(name.to_string());
+        }
+        Ok(cfg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scanner: comment/string stripping + escape collection
+// ---------------------------------------------------------------------
+
+/// One `// detlint: allow(rule) reason` escape comment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Escape {
+    pub rule: String,
+    pub reason: String,
+    /// Whether code preceded the comment on its line (same-line escape)
+    /// — otherwise the escape applies to the *next* line.
+    pub on_code_line: bool,
+}
+
+/// A source file with comments and string/char contents blanked out,
+/// plus the escape comments found along the way (keyed by 1-based line).
+#[derive(Debug)]
+pub struct Stripped {
+    pub lines: Vec<String>,
+    pub escapes: BTreeMap<usize, Escape>,
+}
+
+/// Parse an escape out of a line comment's text (after the `//`).
+fn parse_escape(comment: &str, on_code_line: bool) -> Option<Escape> {
+    let t = comment.trim();
+    let t = t.strip_prefix("detlint:")?.trim_start();
+    let t = t.strip_prefix("allow(")?;
+    let (rule, rest) = t.split_once(')')?;
+    Some(Escape {
+        rule: rule.trim().to_string(),
+        reason: rest.trim().to_string(),
+        on_code_line,
+    })
+}
+
+/// Strip comments and string/char literal *contents* from `src`,
+/// preserving line structure so findings report real line numbers.
+pub fn strip_code(src: &str) -> Stripped {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut escapes = BTreeMap::new();
+    let mut cur = String::new();
+    let mut cur_had_code = false;
+    let mut comment = String::new();
+    let mut state = St::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if state == St::LineComment {
+                if let Some(e) = parse_escape(&comment, cur_had_code) {
+                    escapes.insert(line, e);
+                }
+                comment.clear();
+                state = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            cur_had_code = false;
+            line += 1;
+            i += 1;
+            continue;
+        }
+        match state {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = St::LineComment;
+                    comment.clear();
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = St::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    cur.push('"');
+                    cur_had_code = true;
+                    state = St::Str;
+                    i += 1;
+                } else if c == 'r' && matches!(chars.get(i + 1), Some('"') | Some('#')) {
+                    // Possible raw string r"..." / r#"..."#.
+                    let mut k = i + 1;
+                    let mut hashes = 0usize;
+                    while chars.get(k) == Some(&'#') {
+                        hashes += 1;
+                        k += 1;
+                    }
+                    if chars.get(k) == Some(&'"') {
+                        raw_hashes = hashes;
+                        cur.push('r');
+                        for _ in 0..hashes {
+                            cur.push('#');
+                        }
+                        cur.push('"');
+                        cur_had_code = true;
+                        state = St::RawStr;
+                        i = k + 1;
+                    } else {
+                        cur.push(c);
+                        cur_had_code = true;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: 'x' / '\..' are
+                    // literals; anything else is a lifetime tick.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        cur.push_str("' '");
+                        cur_had_code = true;
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        cur.push_str("' '");
+                        cur_had_code = true;
+                        i += 3;
+                    } else {
+                        cur.push(c);
+                        cur_had_code = true;
+                        i += 1;
+                    }
+                } else {
+                    if !c.is_whitespace() {
+                        cur_had_code = true;
+                    }
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::BlockComment => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    block_depth -= 1;
+                    i += 2;
+                    if block_depth == 0 {
+                        state = St::Code;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    block_depth += 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        cur.push('"');
+                        state = St::Code;
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr => {
+                if c == '"' && chars[i + 1..].iter().take(raw_hashes).filter(|&&h| h == '#').count() == raw_hashes {
+                    cur.push('"');
+                    for _ in 0..raw_hashes {
+                        cur.push('#');
+                    }
+                    state = St::Code;
+                    i += 1 + raw_hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if state == St::LineComment {
+        if let Some(e) = parse_escape(&comment, cur_had_code) {
+            escapes.insert(line, e);
+        }
+    }
+    if !cur.is_empty() || state == St::LineComment {
+        lines.push(cur);
+    }
+    Stripped { lines, escapes }
+}
+
+// ---------------------------------------------------------------------
+// Structure: test modules and function bodies (brace matching)
+// ---------------------------------------------------------------------
+
+/// Per-line mask of `#[cfg(test)] mod … { }` blocks (index 0 = line 1).
+pub fn test_mod_mask(lines: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if !lines[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut j = i;
+        while j < lines.len() {
+            for ch in lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            mask[j] = true;
+            if started && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Per-line mask of every body of `fn name` in the file — all impls;
+/// trait declarations (`;` before any `{`) are skipped.
+pub fn fn_body_mask(lines: &[String], name: &str) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let needle = format!("fn {name}");
+    for start in 0..lines.len() {
+        let l = &lines[start];
+        let Some(pos) = l.find(&needle) else { continue };
+        // Word boundary after the name (e.g. `fn step` must not match
+        // `fn step_all`).
+        let after = l[pos + needle.len()..].chars().next();
+        if matches!(after, Some(c) if c == '_' || c.is_alphanumeric()) {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut decl_only = false;
+        let mut j = start;
+        let mut body = Vec::new();
+        'scan: while j < lines.len() {
+            for ch in lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    ';' if !started && depth == 0 => {
+                        decl_only = true;
+                        break 'scan;
+                    }
+                    _ => {}
+                }
+            }
+            body.push(j);
+            if started && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        if !decl_only {
+            for j in body {
+                mask[j] = true;
+            }
+        }
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+/// One finding: `file:line` plus the rule and what matched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    /// Path relative to the linted source root, `/`-separated.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub rule: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.detail)
+    }
+}
+
+/// Result of linting one file or tree: findings plus how many valid
+/// escapes suppressed something (per rule), for the `--summary` output.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub escapes_used: BTreeMap<String, usize>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+fn path_in(rel: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| {
+        if p.ends_with('/') {
+            rel.starts_with(p.as_str())
+        } else {
+            rel == p || rel.starts_with(&format!("{p}/"))
+        }
+    })
+}
+
+/// Lint one file's source text. `rel` is the path relative to the
+/// source root with `/` separators (used for rule scoping).
+pub fn lint_file(rel: &str, src: &str, cfg: &Config) -> Report {
+    let stripped = strip_code(src);
+    let lines = &stripped.lines;
+    let escapes = &stripped.escapes;
+    let tests = test_mod_mask(lines);
+    let mut report = Report::default();
+
+    let in_tests = |line: usize| tests.get(line - 1).copied().unwrap_or(false);
+
+    // Escape resolution: a same-line escape (comment after code)
+    // suppresses its own line; an escape alone on a line suppresses the
+    // next line. Valid (reasoned) escapes count toward the summary;
+    // reason-less ones suppress nothing and are reported separately.
+    let check = |line: usize, rule: &str, detail: String, report: &mut Report| {
+        if in_tests(line) {
+            return;
+        }
+        let escape = escapes
+            .get(&line)
+            .filter(|e| e.on_code_line && e.rule == rule)
+            .or_else(|| {
+                line.checked_sub(1)
+                    .and_then(|p| escapes.get(&p))
+                    .filter(|e| !e.on_code_line && e.rule == rule)
+            });
+        if let Some(e) = escape {
+            if !e.reason.is_empty() {
+                *report.escapes_used.entry(rule.to_string()).or_insert(0) += 1;
+                return;
+            }
+            // Reason-less escapes fall through: the original finding
+            // stands, and the escape itself is flagged below.
+        }
+        report.violations.push(Violation {
+            file: rel.to_string(),
+            line,
+            rule: rule.to_string(),
+            detail,
+        });
+    };
+
+    // --- nondet & panic: deterministic-tier scoping.
+    let tier_dirs: Vec<String> = cfg.nondet_dirs.iter().map(|d| format!("{d}/")).collect();
+    let in_tier = tier_dirs.iter().any(|d| rel.starts_with(d.as_str()))
+        || cfg.nondet_dirs.iter().any(|d| rel == format!("{d}.rs"));
+    let allowed = path_in(rel, &cfg.nondet_allowed);
+    if in_tier && !allowed {
+        for (idx, l) in lines.iter().enumerate() {
+            let line = idx + 1;
+            for tok in &cfg.nondet_tokens {
+                if l.contains(tok.as_str()) {
+                    check(line, "nondet", format!("forbidden token `{tok}`"), &mut report);
+                }
+            }
+            for tok in &cfg.panic_tokens {
+                if l.contains(tok.as_str()) {
+                    check(line, "panic", format!("forbidden token `{tok}`"), &mut report);
+                }
+            }
+        }
+    }
+
+    // --- hotpath-alloc: manifest functions must not allocate.
+    if let Some(fns) = cfg.hotpath_fns.get(rel) {
+        for fname in fns {
+            let body = fn_body_mask(lines, fname);
+            for (idx, l) in lines.iter().enumerate() {
+                if !body[idx] || tests.get(idx).copied().unwrap_or(false) {
+                    continue;
+                }
+                let line = idx + 1;
+                for tok in &cfg.hotpath_tokens {
+                    if l.contains(tok.as_str()) {
+                        check(
+                            line,
+                            "hotpath-alloc",
+                            format!("`{tok}` in allocation-free fn `{fname}`"),
+                            &mut report,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // --- float-order: unordered f64 reductions outside canonical fns.
+    if cfg.float_files.iter().any(|f| f == rel) {
+        let mut canonical = vec![false; lines.len()];
+        for fname in &cfg.float_canonical {
+            for (i, b) in fn_body_mask(lines, fname).into_iter().enumerate() {
+                if b {
+                    canonical[i] = true;
+                }
+            }
+        }
+        for (idx, l) in lines.iter().enumerate() {
+            if canonical[idx] {
+                continue;
+            }
+            let line = idx + 1;
+            if l.contains(".sum::<f64>()") {
+                check(
+                    line,
+                    "float-order",
+                    "unordered f64 reduction `.sum::<f64>()`".to_string(),
+                    &mut report,
+                );
+            }
+            for ident in &cfg.float_accumulators {
+                // `ident +=` possibly with spaces: normalize by
+                // removing spaces around the operator.
+                let squeezed: String = l.split_whitespace().collect::<Vec<_>>().join(" ");
+                if squeezed.contains(&format!("{ident} +=")) || l.contains(&format!("{ident}+=")) {
+                    check(
+                        line,
+                        "float-order",
+                        format!("f64 accumulator `{ident} +=` outside canonical-order drain"),
+                        &mut report,
+                    );
+                }
+            }
+        }
+    }
+
+    // --- visibility: pub wrappers bypassing the lane-aware queue API.
+    if cfg.vis_files.iter().any(|f| f == rel) {
+        for (idx, l) in lines.iter().enumerate() {
+            let line = idx + 1;
+            for tok in &cfg.vis_tokens {
+                if l.contains(tok.as_str()) {
+                    check(
+                        line,
+                        "visibility",
+                        format!("`{}` bypasses the lane-aware EventQueue API", tok.trim_end_matches('(')),
+                        &mut report,
+                    );
+                }
+            }
+        }
+    }
+
+    // --- escape hygiene: a reason-less escape is itself a violation,
+    // wherever it appears.
+    for (&line, e) in escapes {
+        if e.reason.is_empty() {
+            report.violations.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: "escape".to_string(),
+                detail: format!("escape `allow({})` without a reason", e.rule),
+            });
+        }
+    }
+
+    report.violations.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.rule.cmp(&b.rule)));
+    report
+}
+
+/// Lint every `.rs` file under `root` (sorted walk, so output order is
+/// stable across filesystems).
+pub fn lint_tree(root: &std::path::Path, cfg: &Config) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&path)?;
+        let file_report = lint_file(&rel, &src, cfg);
+        report.violations.extend(file_report.violations);
+        for (rule, n) in file_report.escapes_used {
+            *report.escapes_used.entry(rule).or_insert(0) += n;
+        }
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::parse(
+            r#"
+[nondet]
+dirs = ["cluster", "moe"]
+allowed = ["cluster/allowed.rs"]
+tokens = ["HashMap", "Instant::now"]
+
+[panic]
+tokens = [".unwrap()", ".expect("]
+
+[hotpath]
+tokens = ["Vec::new", ".collect()"]
+fns = ["cluster/hot.rs:fast_path"]
+
+[float-order]
+files = ["cluster/shard.rs"]
+canonical = ["merge_in_order"]
+accumulators = ["shed_tokens"]
+
+[visibility]
+files = ["cluster/event.rs"]
+tokens = ["pub fn schedule_at("]
+"#,
+        )
+        .expect("test config parses")
+    }
+
+    #[test]
+    fn toml_lite_parses_sections_and_lists() {
+        let c = cfg();
+        assert_eq!(c.nondet_dirs, vec!["cluster", "moe"]);
+        assert_eq!(c.panic_tokens, vec![".unwrap()", ".expect("]);
+        assert_eq!(c.hotpath_fns["cluster/hot.rs"], vec!["fast_path"]);
+    }
+
+    #[test]
+    fn toml_lite_multiline_arrays_and_comments() {
+        let doc = parse_toml_lite(
+            "# top comment\n[s]\nxs = [\n  \"a\", # trailing\n  \"b\",\n]\ny = \"z\"\n",
+        )
+        .expect("parses");
+        assert_eq!(
+            doc["s"]["xs"],
+            TomlValue::List(vec!["a".into(), "b".into()])
+        );
+        assert_eq!(doc["s"]["y"], TomlValue::Str("z".into()));
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let s = strip_code("let x = \"HashMap\"; // HashMap in comment\n/* HashMap */ let y = 1;\n");
+        assert!(!s.lines[0].contains("HashMap"));
+        assert!(!s.lines[1].contains("HashMap"));
+        assert!(s.lines[1].contains("let y = 1;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_survive() {
+        let s = strip_code("fn f<'a>(x: &'a str) -> char { '\"' }\n");
+        // The lifetime tick must not open a string and eat the rest.
+        assert!(s.lines[0].contains("fn f<'a>"));
+        assert!(!s.lines[0].contains('"'));
+    }
+
+    #[test]
+    fn nondet_flagged_in_tier_only() {
+        let c = cfg();
+        let bad = lint_file("cluster/a.rs", "use std::collections::HashMap;\n", &c);
+        assert_eq!(bad.violations.len(), 1);
+        assert_eq!(bad.violations[0].rule, "nondet");
+        assert_eq!(bad.violations[0].line, 1);
+        let ok = lint_file("util/a.rs", "use std::collections::HashMap;\n", &c);
+        assert!(ok.is_clean());
+        let allowed = lint_file("cluster/allowed.rs", "use std::collections::HashMap;\n", &c);
+        assert!(allowed.is_clean());
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let c = cfg();
+        let src = "fn main() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(lint_file("cluster/a.rs", src, &c).is_clean());
+    }
+
+    #[test]
+    fn escapes_suppress_with_reason_only() {
+        let c = cfg();
+        let same = "let m = HashMap::new(); // detlint: allow(nondet) local, drained in key order\n";
+        assert!(lint_file("cluster/a.rs", same, &c).is_clean());
+        let above = "// detlint: allow(nondet) local, drained in key order\nlet m = HashMap::new();\n";
+        assert!(lint_file("cluster/a.rs", above, &c).is_clean());
+        // Wrong rule name: no suppression.
+        let wrong = "let m = HashMap::new(); // detlint: allow(panic) some reason\n";
+        assert_eq!(lint_file("cluster/a.rs", wrong, &c).violations.len(), 1);
+        // Reason-less: original violation stands AND the escape is flagged.
+        let bare = "let m = HashMap::new(); // detlint: allow(nondet)\n";
+        let r = lint_file("cluster/a.rs", bare, &c);
+        assert_eq!(r.violations.len(), 2);
+        assert!(r.violations.iter().any(|v| v.rule == "escape"));
+        assert!(r.violations.iter().any(|v| v.rule == "nondet"));
+    }
+
+    #[test]
+    fn escape_use_is_counted() {
+        let c = cfg();
+        let src = "x.unwrap(); // detlint: allow(panic) infallible here\n";
+        let r = lint_file("cluster/a.rs", src, &c);
+        assert!(r.is_clean());
+        assert_eq!(r.escapes_used.get("panic"), Some(&1));
+    }
+
+    #[test]
+    fn hotpath_alloc_scoped_to_manifest_fn() {
+        let c = cfg();
+        let src = "fn fast_path() {\n    let v = Vec::new();\n}\nfn slow_path() {\n    let v = Vec::new();\n}\n";
+        let r = lint_file("cluster/hot.rs", src, &c);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].line, 2);
+        assert_eq!(r.violations[0].rule, "hotpath-alloc");
+    }
+
+    #[test]
+    fn fn_body_mask_skips_trait_declarations() {
+        let lines: Vec<String> = "trait T {\n    fn fast_path(&self);\n}\nfn fast_path() {\n    body();\n}\n"
+            .lines()
+            .map(String::from)
+            .collect();
+        let mask = fn_body_mask(&lines, "fast_path");
+        assert!(!mask[1], "declaration line must not start a body");
+        assert!(mask[4], "real body line 5 covered");
+    }
+
+    #[test]
+    fn fn_body_mask_respects_word_boundary() {
+        let lines: Vec<String> = "fn fast_path_extra() {\n    let v = Vec::new();\n}\n"
+            .lines()
+            .map(String::from)
+            .collect();
+        assert!(fn_body_mask(&lines, "fast_path").iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn float_order_outside_canonical_fns() {
+        let c = cfg();
+        let src = "fn merge_in_order() {\n    total += xs.iter().sum::<f64>();\n}\nfn elsewhere() {\n    let t = xs.iter().sum::<f64>();\n    shed_tokens += s;\n}\n";
+        let r = lint_file("cluster/shard.rs", src, &c);
+        let rules: Vec<&str> = r.violations.iter().map(|v| v.rule.as_str()).collect();
+        assert_eq!(rules, vec!["float-order", "float-order"]);
+        assert_eq!(r.violations[0].line, 5);
+        assert_eq!(r.violations[1].line, 6);
+    }
+
+    #[test]
+    fn visibility_rule_hits_pub_wrappers() {
+        let c = cfg();
+        let src = "pub fn schedule_at(&mut self) {}\n";
+        let r = lint_file("cluster/event.rs", src, &c);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "visibility");
+        // Same token in a non-listed file: clean.
+        assert!(lint_file("cluster/other.rs", src, &c).is_clean());
+    }
+}

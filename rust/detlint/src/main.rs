@@ -1,0 +1,96 @@
+//! detlint CLI.
+//!
+//! ```text
+//! detlint <src-root> --config detlint.toml [--summary]
+//! ```
+//!
+//! Prints one `file:line: [rule] detail` per finding and exits non-zero
+//! when any violation survives. `--summary` appends per-rule violation
+//! and escape counts (CI prints these so the escape inventory is
+//! reviewed, not just tolerated).
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<String> = None;
+    let mut config_path: Option<String> = None;
+    let mut summary = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                if i >= args.len() {
+                    eprintln!("detlint: --config needs a path");
+                    return ExitCode::from(2);
+                }
+                config_path = Some(args[i].clone());
+            }
+            "--summary" => summary = true,
+            "--help" | "-h" => {
+                println!("usage: detlint <src-root> --config detlint.toml [--summary]");
+                return ExitCode::SUCCESS;
+            }
+            other if root.is_none() && !other.starts_with('-') => root = Some(other.to_string()),
+            other => {
+                eprintln!("detlint: unexpected argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+    let Some(root) = root else {
+        eprintln!("usage: detlint <src-root> --config detlint.toml [--summary]");
+        return ExitCode::from(2);
+    };
+    let Some(config_path) = config_path else {
+        eprintln!("detlint: a --config file is required");
+        return ExitCode::from(2);
+    };
+
+    let config_src = match std::fs::read_to_string(&config_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("detlint: reading {config_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match detlint::Config::parse(&config_src) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("detlint: parsing {config_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match detlint::lint_tree(std::path::Path::new(&root), &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: walking {root}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if summary {
+        use std::collections::BTreeMap;
+        let mut per_rule: BTreeMap<&str, usize> = BTreeMap::new();
+        for v in &report.violations {
+            *per_rule.entry(v.rule.as_str()).or_insert(0) += 1;
+        }
+        println!("detlint summary:");
+        for rule in ["nondet", "hotpath-alloc", "float-order", "panic", "visibility", "escape"] {
+            let viol = per_rule.get(rule).copied().unwrap_or(0);
+            let esc = report.escapes_used.get(rule).copied().unwrap_or(0);
+            println!("  {rule:<14} {viol} violation(s), {esc} escape(s) in use");
+        }
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {} violation(s)", report.violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,129 @@
+//! Integration tests: the fixture tree seeds exactly one family of
+//! violations per rule, and the linter must report each at its exact
+//! `file:line` — no more, no less. Then the shipped config must parse,
+//! and the real source tree must lint clean under it (the pass is a CI
+//! gate; a red self-check here fails before CI does).
+
+use std::path::Path;
+
+fn fixture_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn fixture_config() -> detlint::Config {
+    let src = std::fs::read_to_string(fixture_root().join("detlint.toml"))
+        .expect("fixture config readable");
+    detlint::Config::parse(&src).expect("fixture config parses")
+}
+
+#[test]
+fn fixture_tree_reports_exact_findings() {
+    let cfg = fixture_config();
+    let report = detlint::lint_tree(&fixture_root().join("src"), &cfg).expect("tree walks");
+    let got: Vec<(String, usize, String)> = report
+        .violations
+        .iter()
+        .map(|v| (v.file.clone(), v.line, v.rule.clone()))
+        .collect();
+    let want: Vec<(String, usize, String)> = [
+        ("cluster/bad_nondet.rs", 5, "nondet"),
+        ("cluster/bad_nondet.rs", 7, "nondet"),
+        ("cluster/bad_nondet.rs", 8, "panic"),
+        ("cluster/bare_escape.rs", 5, "escape"),
+        ("cluster/bare_escape.rs", 5, "panic"),
+        ("cluster/event.rs", 4, "visibility"),
+        ("cluster/hot.rs", 5, "hotpath-alloc"),
+        ("cluster/shard.rs", 9, "float-order"),
+        ("cluster/shard.rs", 10, "float-order"),
+    ]
+    .iter()
+    .map(|(f, l, r)| (f.to_string(), *l, r.to_string()))
+    .collect();
+    let mut got_sorted = got.clone();
+    got_sorted.sort();
+    assert_eq!(got_sorted, want, "full findings: {:#?}", report.violations);
+}
+
+#[test]
+fn escaped_fixture_is_clean_and_counted() {
+    let cfg = fixture_config();
+    let src = std::fs::read_to_string(fixture_root().join("src/cluster/escaped.rs"))
+        .expect("fixture readable");
+    let report = detlint::lint_file("cluster/escaped.rs", &src, &cfg);
+    assert!(report.is_clean(), "escaped.rs: {:?}", report.violations);
+    assert_eq!(report.escapes_used.get("nondet"), Some(&2));
+    assert_eq!(report.escapes_used.get("panic"), Some(&1));
+}
+
+#[test]
+fn allowlisted_fixture_is_clean() {
+    let cfg = fixture_config();
+    let src = std::fs::read_to_string(fixture_root().join("src/cluster/allowed.rs"))
+        .expect("fixture readable");
+    let report = detlint::lint_file("cluster/allowed.rs", &src, &cfg);
+    assert!(report.is_clean(), "allowed.rs: {:?}", report.violations);
+}
+
+#[test]
+fn reason_less_escape_is_double_flagged() {
+    let cfg = fixture_config();
+    let src = std::fs::read_to_string(fixture_root().join("src/cluster/bare_escape.rs"))
+        .expect("fixture readable");
+    let report = detlint::lint_file("cluster/bare_escape.rs", &src, &cfg);
+    let rules: Vec<&str> = report.violations.iter().map(|v| v.rule.as_str()).collect();
+    assert!(rules.contains(&"panic"), "original finding must survive");
+    assert!(rules.contains(&"escape"), "the bare escape itself is flagged");
+    assert_eq!(report.escapes_used.get("panic"), None);
+}
+
+#[test]
+fn diagnostics_format_is_file_line_rule() {
+    let cfg = fixture_config();
+    let src = std::fs::read_to_string(fixture_root().join("src/cluster/hot.rs"))
+        .expect("fixture readable");
+    let report = detlint::lint_file("cluster/hot.rs", &src, &cfg);
+    assert_eq!(report.violations.len(), 1);
+    let line = report.violations[0].to_string();
+    assert!(
+        line.starts_with("cluster/hot.rs:5: [hotpath-alloc]"),
+        "diagnostic {line:?}"
+    );
+}
+
+#[test]
+fn shipped_config_parses_and_covers_every_rule_family() {
+    let shipped = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../detlint.toml");
+    let src = std::fs::read_to_string(&shipped).expect("shipped detlint.toml readable");
+    let cfg = detlint::Config::parse(&src).expect("shipped detlint.toml parses");
+    assert!(!cfg.nondet_dirs.is_empty());
+    assert!(!cfg.nondet_tokens.is_empty());
+    assert!(!cfg.panic_tokens.is_empty());
+    assert!(!cfg.hotpath_tokens.is_empty());
+    assert!(!cfg.hotpath_fns.is_empty());
+    assert!(!cfg.float_files.is_empty());
+    assert!(!cfg.float_canonical.is_empty());
+    assert!(!cfg.vis_files.is_empty());
+    assert!(!cfg.vis_tokens.is_empty());
+}
+
+#[test]
+fn real_source_tree_is_clean_under_shipped_config() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let shipped = manifest.join("../../detlint.toml");
+    let src = std::fs::read_to_string(&shipped).expect("shipped detlint.toml readable");
+    let cfg = detlint::Config::parse(&src).expect("shipped detlint.toml parses");
+    let report = detlint::lint_tree(&manifest.join("../src"), &cfg).expect("rust/src walks");
+    assert!(
+        report.is_clean(),
+        "rust/src must lint clean; findings:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // The escape inventory is non-empty by design: every unwaivable
+    // unwrap/alloc carries a reviewed reason.
+    assert!(report.escapes_used.values().sum::<usize>() > 0);
+}

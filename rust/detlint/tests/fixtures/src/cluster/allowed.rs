@@ -1,0 +1,8 @@
+//! Fixture: this path is on the nondet allowlist, so the tier rules do
+//! not apply here at all.
+
+use std::collections::HashMap;
+
+pub fn f(m: &HashMap<u32, u32>) -> Option<u32> {
+    m.get(&0).copied()
+}

@@ -1,0 +1,12 @@
+//! Fixture: nondet violations on lines 5 and 7 and a panic violation
+//! on line 8. The HashMap in the string (line 11) and in the comment
+//! (line 12) must NOT be flagged.
+
+use std::collections::HashMap;
+
+pub fn f(m: &HashMap<u32, u32>) -> u32 {
+    *m.get(&0).unwrap()
+}
+
+pub const S: &str = "HashMap in a string is fine";
+// HashMap in a comment is fine too.

@@ -1,0 +1,6 @@
+//! Fixture: a reason-less escape (line 5) suppresses nothing — the
+//! panic violation stands AND the escape itself is flagged.
+
+pub fn f(x: Option<u32>) -> u32 {
+    x.unwrap() // detlint: allow(panic)
+}

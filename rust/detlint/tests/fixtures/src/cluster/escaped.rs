@@ -1,0 +1,12 @@
+//! Fixture: every escape here carries a reason, so the file is clean —
+//! same-line and line-above placements are both exercised.
+
+use std::collections::HashMap; // detlint: allow(nondet) fixture: iterated in sorted key order only
+
+// detlint: allow(nondet) fixture: the alias keeps remaining uses token-free
+type Map = HashMap<u32, u32>;
+
+pub fn f(m: &Map) -> u32 {
+    // detlint: allow(panic) fixture: key 0 inserted by every caller
+    *m.get(&0).unwrap()
+}

@@ -1,0 +1,6 @@
+//! Fixture: one visibility violation (line 4); the lane-aware method
+//! below is the sanctioned API and stays legal.
+
+pub fn schedule_at(_at: u64) {}
+
+pub fn schedule_at_in_lane(_at: u64, _lane: u32) {}

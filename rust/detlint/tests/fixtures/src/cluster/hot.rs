@@ -1,0 +1,12 @@
+//! Fixture: one hotpath-alloc violation (line 5, inside the manifest
+//! fn) while the identical allocation in `slow_path` stays legal.
+
+pub fn fast_path() -> Vec<u32> {
+    let v = Vec::new();
+    v
+}
+
+pub fn slow_path() -> Vec<u32> {
+    let v = Vec::new();
+    v
+}

@@ -1,0 +1,12 @@
+//! Fixture: float-order violations outside the canonical drain (lines
+//! 9 and 10); the same reduction inside `merge_in_order` is legal.
+
+pub fn merge_in_order(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+
+pub fn elsewhere(xs: &[f64], mut shed_tokens: f64) -> f64 {
+    let t = xs.iter().sum::<f64>();
+    shed_tokens += t;
+    shed_tokens
+}

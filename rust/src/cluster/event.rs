@@ -86,6 +86,7 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute virtual time `at`, on lane 0.
+    // detlint: allow(visibility) lane-0 convenience wrapper delegating to the lane-aware API
     pub fn schedule_at(&mut self, at: Nanos, event: E) {
         self.schedule_at_in_lane(at, 0, event);
     }
@@ -115,6 +116,7 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` `delay` after the current virtual time, lane 0.
+    // detlint: allow(visibility) lane-0 convenience wrapper delegating to the lane-aware API
     pub fn schedule_in(&mut self, delay: Nanos, event: E) {
         self.schedule_in_lane(delay, 0, event);
     }

@@ -370,6 +370,7 @@ impl HandoverCoordinator {
         let got = self.try_borrow(home, expert, tokens, now, queue_limit_s, left, right);
         if got.is_some() {
             // try_borrow pushed exactly one stage on success.
+            // detlint: allow(panic) Some(got) implies try_borrow staged a group; unreachable
             let s = self.staged.last().expect("successful borrow stages a group");
             probe.on_event(&TelemetryEvent::BorrowStaged {
                 req,

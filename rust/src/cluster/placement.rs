@@ -83,19 +83,23 @@ impl Placement {
         let free_slots = n_devices * cache_capacity - n_experts;
         for _ in 0..free_slots {
             project_into(&p, &mut proj);
-            let worst = proj
+            // total_cmp matches partial_cmp on the finite projections
+            // and cannot panic; `proj` is non-empty (n_devices >= 1).
+            let Some(worst) = proj
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(k, _)| k)
-                .unwrap();
+            else {
+                break;
+            };
             // Heaviest per-replica expert on the worst device.
             let Some(expert) = (0..n_experts)
                 .filter(|&e| p.replicas[e].contains(&worst))
                 .max_by(|&a, &b| {
                     let la = expected_load[a] / p.replicas[a].len() as f64;
                     let lb = expected_load[b] / p.replicas[b].len() as f64;
-                    la.partial_cmp(&lb).unwrap()
+                    la.total_cmp(&lb)
                 })
             else {
                 break; // worst device hosts nothing (all load elsewhere)
@@ -108,7 +112,7 @@ impl Placement {
                 .min_by(|&a, &b| {
                     let ca = proj[a] + expected_load[expert] / new_reps * t_per_token[a];
                     let cb = proj[b] + expected_load[expert] / new_reps * t_per_token[b];
-                    ca.partial_cmp(&cb).unwrap()
+                    ca.total_cmp(&cb)
                 });
             let Some(target) = target else { break };
             // Only accept strict improvement of the bottleneck.

@@ -320,6 +320,7 @@ impl ControlPlane for StaticPlane {
                 );
                 self.solver.record(&solve, warm_started, self.opts.solver.max_iters);
                 self.stats.resolves += 1;
+                // detlint: allow(hotpath-alloc) capacity-0 construction on first solve only; the warm buffer is reused after
                 let warm = self.warm.get_or_insert_with(Vec::new);
                 warm.clear();
                 warm.extend_from_slice(out);
@@ -542,10 +543,9 @@ impl ControlPlane for AdaptivePlane {
                     .map(|(&q, &on)| if on { q.max(floor) } else { 0.0 }),
             );
             self.resolve_staged();
-            if self.last_share.is_none() {
-                self.last_share = Some(Vec::with_capacity(u));
-            }
-            let last = self.last_share.as_mut().expect("just ensured");
+            // get_or_insert_with replaces the is_none/expect pair: same
+            // first-epoch allocation, no panic path at all.
+            let last = self.last_share.get_or_insert_with(|| Vec::with_capacity(u));
             last.clear();
             last.extend_from_slice(&self.share);
             true

@@ -129,8 +129,12 @@ pub fn spawn_router<E: BatchEngine>(
                 }
             }
             // Drain more until the batcher is ready or max_wait elapses.
+            // Sanctioned wall-clock read: the serving router batches
+            // against real arrival time; nothing simulated depends on it.
+            #[allow(clippy::disallowed_methods)]
             let deadline = Instant::now() + max_wait;
             while !batcher.ready() {
+                #[allow(clippy::disallowed_methods)]
                 let left = deadline.saturating_duration_since(Instant::now());
                 if left.is_zero() {
                     break;

@@ -56,6 +56,7 @@ where
                     break;
                 }
                 let r = f(i);
+                // detlint: allow(panic) lock poisoning means another worker already panicked; propagate
                 *slots[i].lock().expect("result slot poisoned") = Some(r);
             });
         }
@@ -64,7 +65,9 @@ where
         .into_iter()
         .map(|s| {
             s.into_inner()
+                // detlint: allow(panic) lock poisoning means a worker already panicked; propagate
                 .expect("result slot poisoned")
+                // detlint: allow(panic) the atomic counter hands every index to exactly one worker
                 .expect("every index claimed exactly once")
         })
         .collect()

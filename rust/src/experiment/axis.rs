@@ -425,6 +425,7 @@ impl AxisSpec {
         let mut values = Vec::new();
         for i in 0..=100_000u32 {
             let raw = start + step * f64::from(i);
+            // detlint: allow(panic) parsing back our own {:.12e} formatting is infallible
             let v: f64 = format!("{raw:.12e}").parse().expect("formatted float");
             let past_end = if step > 0.0 { v > end + eps } else { v < end - eps };
             if past_end {

@@ -124,6 +124,14 @@ impl SteadyState {
         }
     }
 
+    /// [`Self::new`] with the sample buffer pre-sized, so a run that
+    /// knows its completion count up front records without reallocating.
+    pub fn with_capacity(warmup_frac: f64, cap: usize) -> Self {
+        let mut s = Self::new(warmup_frac);
+        s.values.reserve(cap);
+        s
+    }
+
     pub fn record(&mut self, v: f64) {
         self.values.push(v);
     }

@@ -171,6 +171,9 @@ impl ServingModel {
         policy: &mut dyn SelectionPolicy,
         allocator: &dyn BandwidthAllocator,
     ) -> anyhow::Result<ForwardOutcome> {
+        // Sanctioned wall-clock read: measures real PJRT compute time
+        // for the latency report; never feeds back into simulated state.
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         let j = self.seq_len();
         let md = self.cfg.model.clone();

@@ -64,7 +64,7 @@ impl GateWeights {
             };
         }
         let mut idx: Vec<usize> = (0..row.len()).collect();
-        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
         idx.truncate(k);
         idx
     }
@@ -94,6 +94,56 @@ impl Selection {
             }
         }
         Self { mask, weights }
+    }
+
+    /// An empty selection shell for use as reusable scratch with
+    /// [`Self::top_k_into`].
+    pub fn empty() -> Self {
+        Self {
+            mask: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    /// [`Self::top_k`] into a reused selection, recycling row buffers
+    /// through the caller's spare pools — allocation-free at steady
+    /// state, and bit-identical to the allocating constructor: top-k by
+    /// repeated strict argmax picks the same experts, in the same order,
+    /// as the stable descending sort (ties fall to the lowest index in
+    /// both).
+    pub fn top_k_into(
+        gate: &GateWeights,
+        k: usize,
+        out: &mut Self,
+        spare_mask: &mut Vec<Vec<bool>>,
+        spare_weights: &mut Vec<Vec<f64>>,
+    ) {
+        let n = gate.n_experts();
+        let j_tokens = gate.n_tokens();
+        crate::util::reshape_rows(&mut out.mask, spare_mask, j_tokens, n, false);
+        crate::util::reshape_rows(&mut out.weights, spare_weights, j_tokens, n, 0.0);
+        for j in 0..j_tokens {
+            let row = &gate.weights[j];
+            for _ in 0..k.min(n) {
+                let mut best: Option<usize> = None;
+                for (e, &w) in row.iter().enumerate() {
+                    if out.mask[j][e] {
+                        continue; // already picked in an earlier pass
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => w > row[b],
+                    };
+                    if better {
+                        best = Some(e);
+                    }
+                }
+                if let Some(b) = best {
+                    out.mask[j][b] = true;
+                    out.weights[j][b] = row[b];
+                }
+            }
+        }
     }
 
     pub fn n_tokens(&self) -> usize {
@@ -127,10 +177,24 @@ impl Selection {
     }
 
     /// The lowest-weight currently-selected expert of token `j`.
+    /// A single strict-`<` scan: no allocation (this runs per drop in
+    /// the Algorithm 1 escalation loop), and the first minimum wins —
+    /// the same tie-break as `Iterator::min_by` over ascending indices.
     pub fn weakest_expert(&self, j: usize) -> Option<usize> {
-        self.selected(j)
-            .into_iter()
-            .min_by(|&a, &b| self.weights[j][a].partial_cmp(&self.weights[j][b]).unwrap())
+        let mut weak: Option<usize> = None;
+        for k in 0..self.n_experts() {
+            if !self.mask[j][k] {
+                continue;
+            }
+            let weaker = match weak {
+                None => true,
+                Some(w) => self.weights[j][k] < self.weights[j][w],
+            };
+            if weaker {
+                weak = Some(k);
+            }
+        }
+        weak
     }
 
     /// Token counts per device — Eq. (9).
@@ -228,6 +292,28 @@ mod tests {
     fn drop_unselected_is_noop() {
         let mut s = Selection::top_k(&gate(), 2);
         assert!(!s.drop_expert(0, 3));
+    }
+
+    #[test]
+    fn top_k_into_matches_allocating_top_k() {
+        // Includes ties (uniform row) so the argmax/stable-sort
+        // tie-break equivalence is actually exercised, and k > 2 so the
+        // sort path is covered too.
+        let g = gate();
+        let mut out = Selection::empty();
+        let mut spare_mask = Vec::new();
+        let mut spare_weights = Vec::new();
+        for k in 1..=4 {
+            Selection::top_k_into(&g, k, &mut out, &mut spare_mask, &mut spare_weights);
+            let fresh = Selection::top_k(&g, k);
+            assert_eq!(out.mask, fresh.mask, "k={k}");
+            assert_eq!(out.weights, fresh.weights, "k={k}");
+        }
+        // Shrinking to a smaller gate reuses the scratch correctly.
+        let small = GateWeights::new(vec![vec![0.2, 0.8]]);
+        Selection::top_k_into(&small, 1, &mut out, &mut spare_mask, &mut spare_weights);
+        assert_eq!(out.mask, Selection::top_k(&small, 1).mask);
+        assert_eq!(out.n_tokens(), 1);
     }
 
     #[test]

@@ -30,9 +30,34 @@ pub struct SelectionContext<'a> {
     pub online: &'a [bool],
 }
 
+/// Reusable buffers for [`SelectionPolicy::select_into`]: spare row
+/// pools for the selection matrices (recycled across blocks of varying
+/// token counts) plus the per-token cosine cache Algorithm 1 needs.
+/// One instance per cell lives in the DES; at steady state a
+/// `select_into` call allocates nothing.
+#[derive(Default)]
+pub struct SelectScratch {
+    pub spare_mask: Vec<Vec<bool>>,
+    pub spare_weights: Vec<Vec<f64>>,
+    pub cos: Vec<f64>,
+}
+
 /// An expert-selection policy.
 pub trait SelectionPolicy: Send {
     fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection;
+    /// [`Self::select`] into a reused selection. The default falls back
+    /// to the allocating path (correct for every policy); the hot-path
+    /// policies ([`VanillaTopK`], [`WdmoePolicy`]) override it with an
+    /// allocation-free implementation producing bit-identical output.
+    fn select_into(
+        &mut self,
+        gate: &GateWeights,
+        ctx: &SelectionContext<'_>,
+        out: &mut Selection,
+        _scratch: &mut SelectScratch,
+    ) {
+        *out = self.select(gate, ctx);
+    }
     fn name(&self) -> &'static str;
     /// Feed back a measured per-token latency for device `k` (Algorithm 2
     /// history; no-op for the other policies).
@@ -54,7 +79,7 @@ fn enforce_online(sel: &mut Selection, gate: &GateWeights, online: &[bool]) {
             // fall back to the best online expert (constraint 16)
             if let Some(best) = (0..n)
                 .filter(|&k| online[k])
-                .max_by(|&a, &b| gate.weights[j][a].partial_cmp(&gate.weights[j][b]).unwrap())
+                .max_by(|&a, &b| gate.weights[j][a].total_cmp(&gate.weights[j][b]))
             {
                 sel.mask[j][best] = true;
                 sel.weights[j][best] = gate.weights[j][best];
@@ -70,9 +95,25 @@ pub struct VanillaTopK;
 
 impl SelectionPolicy for VanillaTopK {
     fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection {
-        let mut sel = Selection::top_k(gate, ctx.top_k);
-        enforce_online(&mut sel, gate, ctx.online);
+        let mut sel = Selection::empty();
+        self.select_into(gate, ctx, &mut sel, &mut SelectScratch::default());
         sel
+    }
+    fn select_into(
+        &mut self,
+        gate: &GateWeights,
+        ctx: &SelectionContext<'_>,
+        out: &mut Selection,
+        scratch: &mut SelectScratch,
+    ) {
+        Selection::top_k_into(
+            gate,
+            ctx.top_k,
+            out,
+            &mut scratch.spare_mask,
+            &mut scratch.spare_weights,
+        );
+        enforce_online(out, gate, ctx.online);
     }
     fn name(&self) -> &'static str {
         "vanilla-topk"
@@ -107,39 +148,58 @@ impl WdmoePolicy {
 
 impl SelectionPolicy for WdmoePolicy {
     fn select(&mut self, gate: &GateWeights, ctx: &SelectionContext<'_>) -> Selection {
+        let mut sel = Selection::empty();
+        self.select_into(gate, ctx, &mut sel, &mut SelectScratch::default());
+        sel
+    }
+    fn select_into(
+        &mut self,
+        gate: &GateWeights,
+        ctx: &SelectionContext<'_>,
+        out: &mut Selection,
+        scratch: &mut SelectScratch,
+    ) {
         // Line 2: start from top-2 (the trained router's own choice).
-        let mut sel = Selection::top_k(gate, ctx.top_k.max(2));
-        enforce_online(&mut sel, gate, ctx.online);
+        Selection::top_k_into(
+            gate,
+            ctx.top_k.max(2),
+            out,
+            &mut scratch.spare_mask,
+            &mut scratch.spare_weights,
+        );
+        enforce_online(out, gate, ctx.online);
 
         // Line 3: initial WLR under the starting selection.
-        let wlr_hat = total_wlr(&sel, ctx.latencies);
+        let wlr_hat = total_wlr(out, ctx.latencies);
         if wlr_hat <= 0.0 {
-            return sel; // degenerate (all latencies infinite / no tokens)
+            return; // degenerate (all latencies infinite / no tokens)
         }
 
         // Token latency vectors are identical across tokens (t_{i,j,k} =
         // t_{i,k}, §III-B), and neither the gate weights nor the latency
         // estimate changes between θ rounds — precompute each token's
-        // cosine once (the dominant cost at MMLU-scale batches).
+        // cosine once (the dominant cost at MMLU-scale batches) into the
+        // reused scratch buffer.
         let lat = &ctx.latencies.per_token;
-        let cos: Vec<f64> = (0..sel.n_tokens())
-            .map(|j| Self::cosine(&gate.weights[j], lat))
-            .collect();
+        scratch.cos.clear();
+        scratch
+            .cos
+            .extend((0..out.n_tokens()).map(|j| Self::cosine(&gate.weights[j], lat)));
 
         // Lines 4–10: escalate θ until total WLR clears the guard.
         let mut theta = self.cfg.theta_init;
         loop {
-            for j in 0..sel.n_tokens() {
-                if sel.fanout(j) <= 1 {
+            for j in 0..out.n_tokens() {
+                if out.fanout(j) <= 1 {
                     continue; // constraint (16)
                 }
-                if cos[j] <= theta {
-                    if let Some(weak) = sel.weakest_expert(j) {
-                        sel.drop_expert(j, weak);
+                if scratch.cos[j] <= theta {
+                    if let Some(weak) = out.weakest_expert(j) {
+                        out.drop_expert(j, weak);
                     }
                 }
             }
-            let wlr = total_wlr(&sel, ctx.latencies);
+            let wlr = total_wlr(out, ctx.latencies);
             if wlr > self.cfg.wlr_guard * wlr_hat {
                 break; // WLR objective met
             }
@@ -148,8 +208,7 @@ impl SelectionPolicy for WdmoePolicy {
                 break; // cosine of non-negative vectors never exceeds 1
             }
         }
-        debug_assert!(sel.validate().is_ok());
-        sel
+        debug_assert!(out.validate().is_ok());
     }
     fn name(&self) -> &'static str {
         "wdmoe-alg1"
@@ -193,7 +252,7 @@ impl TestbedPolicy {
     pub fn third_quartile(values: &[f64]) -> f64 {
         assert!(!values.is_empty());
         let mut v: Vec<f64> = values.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let pos = 0.75 * (v.len() as f64 - 1.0);
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -221,7 +280,7 @@ impl SelectionPolicy for TestbedPolicy {
         let khat = pred
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(k, _)| k)
             .unwrap_or(0);
 
@@ -264,7 +323,7 @@ impl SelectionPolicy for TestbedPolicy {
 
         // Lines 16–21: drop the J_drop smallest-weight candidates (all of
         // them if fewer qualify).
-        candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        candidates.sort_by(|a, b| a.1.total_cmp(&b.1));
         for &(j, _) in candidates.iter().take(j_drop) {
             sel.drop_expert(j, khat);
         }
@@ -562,6 +621,37 @@ mod tests {
         for j in 0..64 {
             assert_eq!(s.fanout(j), 2);
             assert!(!s.mask[j][2]);
+        }
+    }
+
+    #[test]
+    fn select_into_matches_select_for_every_policy() {
+        use crate::config::PolicyKind;
+        let lat = TokenLatencies {
+            per_token: vec![1e-4, 2e-4, 1e-3, 5e-3, 1e-2, 2e-2, 5e-2, 1e-1],
+        };
+        let online = vec![true, true, false, true, true, true, true, true];
+        for kind in [
+            PolicyKind::VanillaTopK,
+            PolicyKind::Wdmoe,
+            PolicyKind::Testbed,
+            PolicyKind::Random,
+        ] {
+            let cfg = PolicyConfig::default();
+            // Two policy instances with identical state (same seed), so
+            // stateful policies (Random's RNG stream) stay comparable.
+            let mut a = make_policy(kind, &cfg, 8, 3);
+            let mut b = make_policy(kind, &cfg, 8, 3);
+            let mut out = Selection::empty();
+            let mut scratch = SelectScratch::default();
+            // Varying token counts exercise the scratch reshaping.
+            for tokens in [48usize, 16, 64] {
+                let g = uniform_gate(tokens, 8);
+                let fresh = a.select(&g, &ctx(&lat, &online));
+                b.select_into(&g, &ctx(&lat, &online), &mut out, &mut scratch);
+                assert_eq!(out.mask, fresh.mask, "{kind:?} tokens={tokens}");
+                assert_eq!(out.weights, fresh.weights, "{kind:?} tokens={tokens}");
+            }
         }
     }
 

@@ -7,14 +7,14 @@
 //! transmissions (§V-D).
 
 use super::gate::Selection;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Fraction of tokens sharing the most frequent expert-selection set.
 pub fn max_same_selection_ratio(sel: &Selection) -> f64 {
     if sel.n_tokens() == 0 {
         return 0.0;
     }
-    let mut counts: HashMap<Vec<usize>, usize> = HashMap::new();
+    let mut counts: BTreeMap<Vec<usize>, usize> = BTreeMap::new();
     for j in 0..sel.n_tokens() {
         *counts.entry(sel.selected(j)).or_insert(0) += 1;
     }
@@ -23,14 +23,17 @@ pub fn max_same_selection_ratio(sel: &Selection) -> f64 {
 }
 
 /// Full histogram of expert-selection sets (set → token count), sorted
-/// descending — used by the Fig. 8 harness for its per-layer breakdown.
+/// by count descending then key ascending — used by the Fig. 8 harness
+/// for its per-layer breakdown. The sort key is total, so the output
+/// order is a pure function of the selection: equal-count sets used to
+/// land in `HashMap` iteration order, which varies run to run.
 pub fn selection_histogram(sel: &Selection) -> Vec<(Vec<usize>, usize)> {
-    let mut counts: HashMap<Vec<usize>, usize> = HashMap::new();
+    let mut counts: BTreeMap<Vec<usize>, usize> = BTreeMap::new();
     for j in 0..sel.n_tokens() {
         *counts.entry(sel.selected(j)).or_insert(0) += 1;
     }
     let mut v: Vec<(Vec<usize>, usize)> = counts.into_iter().collect();
-    v.sort_by(|a, b| b.1.cmp(&a.1));
+    v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
     v
 }
 
@@ -38,7 +41,7 @@ pub fn selection_histogram(sel: &Selection) -> Vec<(Vec<usize>, usize)> {
 /// pair appears; the §V-D placement hint ("deploy the two most frequently
 /// selected expert networks for the same token" together).
 pub fn pair_frequencies(sel: &Selection) -> Vec<((usize, usize), usize)> {
-    let mut counts: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut counts: BTreeMap<(usize, usize), usize> = BTreeMap::new();
     for j in 0..sel.n_tokens() {
         let sset = sel.selected(j);
         for a in 0..sset.len() {
@@ -49,7 +52,9 @@ pub fn pair_frequencies(sel: &Selection) -> Vec<((usize, usize), usize)> {
         }
     }
     let mut v: Vec<((usize, usize), usize)> = counts.into_iter().collect();
-    v.sort_by(|a, b| b.1.cmp(&a.1));
+    // Total order (count desc, pair asc): ties between equally frequent
+    // pairs break deterministically instead of by hash-iteration order.
+    v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
     v
 }
 
@@ -119,6 +124,46 @@ mod tests {
         let pf = pair_frequencies(&s);
         assert_eq!(pf[0], ((0, 1), 2));
         assert_eq!(pf[1], ((1, 2), 1));
+    }
+
+    #[test]
+    fn tie_order_is_deterministic_under_shuffle() {
+        // Five distinct selection sets over eight tokens, three of them
+        // with count 2 and two with count 1: the count key ties in both
+        // groups, so only the secondary (key-ascending) ordering keeps
+        // the output stable. Feeding the same tokens in a different
+        // order must produce the identical histogram and pair list.
+        let masks: Vec<Vec<bool>> = (0..8usize)
+            .map(|i| {
+                (0..5)
+                    .map(|e| e == i % 5 || e == (i + 2) % 5)
+                    .collect::<Vec<bool>>()
+            })
+            .collect();
+        let mut shuffled = masks.clone();
+        shuffled.reverse();
+        shuffled.swap(1, 5);
+        shuffled.swap(2, 7);
+        let a = sel_from_masks(masks);
+        let b = sel_from_masks(shuffled);
+        assert_eq!(selection_histogram(&a), selection_histogram(&b));
+        assert_eq!(pair_frequencies(&a), pair_frequencies(&b));
+        // And the tie-break itself: counts descending, keys ascending
+        // within equal counts.
+        let h = selection_histogram(&a);
+        for w in h.windows(2) {
+            assert!(
+                w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0),
+                "histogram not in (count desc, key asc) order: {w:?}"
+            );
+        }
+        let pf = pair_frequencies(&a);
+        for w in pf.windows(2) {
+            assert!(
+                w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0),
+                "pairs not in (count desc, key asc) order: {w:?}"
+            );
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub fn project_simplex_in_place(v: &mut [f64], total: f64, scratch: &mut Vec<f64
     assert!(!v.is_empty(), "cannot project an empty vector");
     scratch.clear();
     scratch.extend_from_slice(v);
-    scratch.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    scratch.sort_by(|a, b| b.total_cmp(a));
     let mut css = 0.0;
     let mut theta = 0.0;
     let mut rho = 0;

@@ -7,7 +7,7 @@
 //! execute-path literals.
 
 use crate::util::Json;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Model config block of the manifest (mirrors python ModelConfig).
@@ -56,7 +56,7 @@ pub struct WeightsBlock {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub config: ManifestConfig,
-    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
     pub weights: WeightsBlock,
 }
 
@@ -83,7 +83,7 @@ impl Manifest {
             seed: c.get("seed")?.as_u64()?,
             total_params: c.get("total_params")?.as_u64()?,
         };
-        let mut artifacts = HashMap::new();
+        let mut artifacts = BTreeMap::new();
         for (name, entry) in j.get("artifacts")?.as_obj()? {
             let args = entry
                 .get("args")?
@@ -133,7 +133,7 @@ impl Manifest {
 
 /// All model weights, loaded from `weights.bin` and indexed by name.
 pub struct WeightStore {
-    tensors: HashMap<String, (Vec<usize>, Vec<f32>)>,
+    tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
 }
 
 impl WeightStore {
@@ -146,7 +146,7 @@ impl WeightStore {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        let mut tensors = HashMap::new();
+        let mut tensors = BTreeMap::new();
         for t in &manifest.weights.tensors {
             let size: usize = t.shape.iter().product();
             anyhow::ensure!(

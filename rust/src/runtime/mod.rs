@@ -12,7 +12,7 @@ pub mod manifest;
 pub use manifest::{Manifest, WeightStore};
 
 #[cfg(feature = "pjrt")]
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 #[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
@@ -20,7 +20,7 @@ use std::path::{Path, PathBuf};
 #[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     pub manifest: Manifest,
     pub weights: WeightStore,
     dir: PathBuf,
@@ -36,7 +36,7 @@ impl Runtime {
         let weights = WeightStore::load(artifacts_dir, &manifest)?;
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        let mut executables = HashMap::new();
+        let mut executables = BTreeMap::new();
         for (name, entry) in &manifest.artifacts {
             let path = artifacts_dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(&path)

@@ -78,6 +78,9 @@ pub fn bench<T>(name: &str, budget: Duration, f: impl FnMut() -> T) -> BenchResu
 
 /// [`bench`] without the report — for harnesses that attach a derived
 /// metric (e.g. events/sec) to the result before printing it once.
+// The bench timer is a sanctioned wall-clock boundary: it measures the
+// host, never feeds simulated state.
+#[allow(clippy::disallowed_methods)]
 pub fn bench_quiet<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
     black_box(f()); // warm-up (fills caches, triggers lazy init)
     let mut samples_ns: Vec<f64> = Vec::new();
@@ -104,6 +107,8 @@ pub fn bench_quiet<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) ->
 }
 
 /// Default per-benchmark budget, overridable via WDMOE_BENCH_MS.
+// Sanctioned env read: a bench-budget knob, outside any simulated state.
+#[allow(clippy::disallowed_methods)]
 pub fn default_budget() -> Duration {
     let ms = std::env::var("WDMOE_BENCH_MS")
         .ok()

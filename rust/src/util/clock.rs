@@ -22,6 +22,9 @@ pub struct SystemClock {
 }
 
 impl SystemClock {
+    // The one sanctioned wall-clock read: everything else goes through
+    // the Clock trait so simulations can substitute VirtualClock.
+    #[allow(clippy::disallowed_methods)]
     pub fn new() -> Self {
         Self {
             origin: Instant::now(),

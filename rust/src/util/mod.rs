@@ -27,9 +27,56 @@ pub fn temp_dir(prefix: &str) -> PathBuf {
     dir
 }
 
+/// Reshape a row-major matrix to `rows` rows of `cols` elements each set
+/// to `fill`, recycling spare row buffers through `spare` instead of
+/// freeing them: shrinking moves excess rows into the pool, growing
+/// pulls them back out. Once the pool has seen the high-water row count
+/// (and each recycled row the high-water column count), reshaping is
+/// allocation-free — the building block of the per-block gate/selection
+/// scratch in the cluster DES hot path.
+pub fn reshape_rows<T: Clone>(
+    matrix: &mut Vec<Vec<T>>,
+    spare: &mut Vec<Vec<T>>,
+    rows: usize,
+    cols: usize,
+    fill: T,
+) {
+    while matrix.len() > rows {
+        if let Some(row) = matrix.pop() {
+            spare.push(row);
+        }
+    }
+    while matrix.len() < rows {
+        matrix.push(spare.pop().unwrap_or_default());
+    }
+    for row in matrix.iter_mut() {
+        row.clear();
+        row.resize(cols, fill.clone());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reshape_rows_recycles_buffers() {
+        let mut m: Vec<Vec<f64>> = Vec::new();
+        let mut spare: Vec<Vec<f64>> = Vec::new();
+        reshape_rows(&mut m, &mut spare, 3, 4, 0.0);
+        assert_eq!(m, vec![vec![0.0; 4]; 3]);
+        m[0][0] = 7.0;
+        // Shrink: the excess row moves to the pool, not the allocator.
+        reshape_rows(&mut m, &mut spare, 1, 4, 0.0);
+        assert_eq!(m, vec![vec![0.0; 4]; 1]);
+        assert_eq!(spare.len(), 2);
+        let spare_caps: Vec<usize> = spare.iter().map(|r| r.capacity()).collect();
+        assert!(spare_caps.iter().all(|&c| c >= 4));
+        // Grow again: rows come back from the pool with their capacity.
+        reshape_rows(&mut m, &mut spare, 3, 2, 1.5);
+        assert_eq!(m, vec![vec![1.5; 2]; 3]);
+        assert!(spare.is_empty());
+    }
 
     #[test]
     fn temp_dirs_unique_and_exist() {

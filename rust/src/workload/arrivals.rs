@@ -86,7 +86,9 @@ impl ArrivalProcess {
                 }
                 let mut out: Vec<Arrival> =
                     arrivals.iter().take(n_requests).cloned().collect();
-                out.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
+                // Times are validated finite above, so the total order
+                // agrees with the partial one — and cannot panic.
+                out.sort_by(|a, b| a.time_s.total_cmp(&b.time_s));
                 out
             }
         }

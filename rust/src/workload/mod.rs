@@ -201,19 +201,56 @@ impl WorkloadGen {
         sharpness: f64,
         bias: f64,
     ) -> Vec<Vec<f64>> {
-        let offsets: Vec<f64> = (0..n_experts).map(|_| bias * self.rng.normal()).collect();
-        (0..n_tokens)
-            .map(|_| {
-                let logits: Vec<f64> = offsets
-                    .iter()
-                    .map(|o| o + sharpness * self.rng.normal())
-                    .collect();
-                let max = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-                let exps: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
-                let sum: f64 = exps.iter().sum();
-                exps.iter().map(|e| e / sum).collect()
-            })
-            .collect()
+        let mut out = Vec::new();
+        let mut spare = Vec::new();
+        let mut offsets = Vec::new();
+        self.synthetic_gate_weights_biased_into(
+            n_tokens,
+            n_experts,
+            sharpness,
+            bias,
+            &mut out,
+            &mut spare,
+            &mut offsets,
+        );
+        out
+    }
+
+    /// [`Self::synthetic_gate_weights_biased`] into reused buffers — the
+    /// DES dispatches one gate matrix per block, so the hot path calls
+    /// this with per-cell scratch and allocates nothing at steady state.
+    /// Single source of truth: the allocating variant delegates here, so
+    /// RNG draw order (offsets first, then one normal per token × expert,
+    /// row-major) and the softmax arithmetic are bit-identical by
+    /// construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic_gate_weights_biased_into(
+        &mut self,
+        n_tokens: usize,
+        n_experts: usize,
+        sharpness: f64,
+        bias: f64,
+        out: &mut Vec<Vec<f64>>,
+        spare: &mut Vec<Vec<f64>>,
+        offsets: &mut Vec<f64>,
+    ) {
+        offsets.clear();
+        offsets.extend((0..n_experts).map(|_| bias * self.rng.normal()));
+        crate::util::reshape_rows(out, spare, n_tokens, n_experts, 0.0);
+        for row in out.iter_mut() {
+            for (x, o) in row.iter_mut().zip(offsets.iter()) {
+                *x = o + sharpness * self.rng.normal();
+            }
+            let max = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - max).exp();
+                sum += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        }
     }
 }
 
@@ -265,6 +302,30 @@ mod tests {
         let bb = b.batch(Benchmark::Boolq);
         assert_eq!(ba.prompt_lens, bb.prompt_lens);
         assert_eq!(ba.token_ids, bb.token_ids);
+    }
+
+    #[test]
+    fn gate_weights_into_matches_allocating_variant() {
+        // Same seed, same draw order, bit-identical rows — including
+        // across blocks of varying token counts reusing one scratch set.
+        let mut a = WorkloadGen::new(9, 2048);
+        let mut b = WorkloadGen::new(9, 2048);
+        let mut out = Vec::new();
+        let mut spare = Vec::new();
+        let mut offsets = Vec::new();
+        for tokens in [100usize, 20, 150] {
+            let fresh = a.synthetic_gate_weights_biased(tokens, 8, 1.5, 0.4);
+            b.synthetic_gate_weights_biased_into(
+                tokens,
+                8,
+                1.5,
+                0.4,
+                &mut out,
+                &mut spare,
+                &mut offsets,
+            );
+            assert_eq!(fresh, out, "tokens={tokens}");
+        }
     }
 
     #[test]

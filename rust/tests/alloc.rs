@@ -1,0 +1,118 @@
+//! Allocation-freedom regression for the DES hot path.
+//!
+//! The byte-identity contract leans on the hot path being replay-only:
+//! once per-cell scratch buffers hit their high-water marks, the event
+//! loop must not touch the allocator again. `detlint`'s `hotpath-alloc`
+//! rule enforces this statically from the manifest in `detlint.toml`;
+//! this test enforces it dynamically — a counting `#[global_allocator]`
+//! drives a 2-cell cluster to steady state and asserts the allocation
+//! counter is flat across the entire second half of the event stream.
+//!
+//! One `#[test]` only: the counter is process-global, and a sibling test
+//! allocating concurrently would show up as phantom hot-path allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use wdmoe::cluster::ClusterSim;
+use wdmoe::config::ClusterConfig;
+use wdmoe::telemetry::{Probe, TelemetryEvent};
+use wdmoe::workload::Arrival;
+
+/// Counts allocator acquisitions (`alloc`, `alloc_zeroed`, `realloc`).
+/// Frees are not counted: releasing memory in teardown is fine; the
+/// contract is that steady state never *acquires*.
+struct CountingAlloc;
+
+static ALLOC_OPS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_OPS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_OPS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_OPS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Samples the allocation counter at every DES event. The sample vector
+/// is reserved up front so the probe itself never allocates mid-run.
+struct AllocProbe {
+    counts: Vec<usize>,
+}
+
+impl Probe for AllocProbe {
+    fn on_event(&mut self, _event: &TelemetryEvent) {
+        self.counts.push(ALLOC_OPS.load(Ordering::Relaxed));
+    }
+}
+
+#[test]
+fn steady_state_event_loop_does_not_allocate() {
+    let mut cfg = ClusterConfig::edge_default();
+    // Enough MoE blocks per request to exercise the full pipeline while
+    // keeping the run short.
+    cfg.model.n_blocks = 4;
+
+    // Constant-size prompts at a comfortably sub-critical constant gap:
+    // every scratch high-water mark (gate rows, selection slots, queue
+    // depth) is reached within the first few requests, and the open-loop
+    // backlog never grows — so no buffer, including the per-lane event
+    // heaps, has a reason to grow late in the run.
+    let arrivals: Vec<Arrival> = (0..160)
+        .map(|i| Arrival {
+            time_s: i as f64 * 0.5,
+            tokens: 64,
+        })
+        .collect();
+
+    let mut sim = ClusterSim::new(&cfg).unwrap();
+    let mut probe = AllocProbe {
+        counts: Vec::with_capacity(1 << 16),
+    };
+    let cap = probe.counts.capacity();
+
+    let out = sim.run_probed(&arrivals, &mut probe);
+
+    assert_eq!(out.arrived, 160);
+    assert_eq!(out.completed, 160, "sub-critical load must complete fully");
+    assert!(
+        probe.counts.len() >= 160,
+        "expected at least one event per request, got {}",
+        probe.counts.len()
+    );
+    assert!(
+        probe.counts.len() <= cap,
+        "probe vector outgrew its reservation ({} > {cap}); its own \
+         realloc would contaminate the counter",
+        probe.counts.len()
+    );
+
+    // The warm-up half may allocate (scratch growth to high-water marks);
+    // the tail half must be perfectly flat.
+    let tail = &probe.counts[probe.counts.len() / 2..];
+    let first = tail[0];
+    let last = *tail.last().unwrap();
+    assert_eq!(
+        first, last,
+        "allocator acquired {} time(s) across the steady-state tail \
+         ({} events)",
+        last - first,
+        tail.len()
+    );
+}

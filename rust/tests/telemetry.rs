@@ -4,7 +4,7 @@
 //! output, byte-level determinism of both artifacts, and the solver
 //! introspection columns of the unified record schema.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use wdmoe::cluster::{ClusterOutcome, ClusterSim};
 use wdmoe::config::{ClusterConfig, ControlKind, DropPolicy, HandoverPolicy};
 use wdmoe::experiment::{Axis, AxisValue, Record};
@@ -113,9 +113,9 @@ fn trace_json_is_well_formed() {
     let evs = trace_events(&busy_cfg(), 6.0, 60, 7);
     assert!(!evs.is_empty());
 
-    let mut depth: HashMap<(u64, u64), i64> = HashMap::new();
-    let mut last_ts: HashMap<(u64, u64), f64> = HashMap::new();
-    let mut open_async: HashMap<String, usize> = HashMap::new();
+    let mut depth: BTreeMap<(u64, u64), i64> = BTreeMap::new();
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut open_async: BTreeMap<String, usize> = BTreeMap::new();
     let mut saw_compute_span = false;
     for e in &evs {
         let ph = field_str(e, "ph");
