@@ -1,7 +1,7 @@
 //! Cluster serving sweeps through the typed experiment API — sustained
 //! multi-cell traffic, no artifacts needed.
 //!
-//! Three grids over the discrete-event serving simulator:
+//! Four grids over the discrete-event serving simulator:
 //!
 //! 1. **Control planes × arrival rate** — the frozen uniform split, the
 //!    one-shot P3 pre-solve and the adaptive closed loop on identical
@@ -15,6 +15,11 @@
 //!    healthy one: three heterogeneous axes in a single `Grid` call.
 //!    Watch drop_rate fall and goodput/handover_rate rise as borrowing
 //!    switches on.
+//! 4. **Energy weight × rate** — a mixed jetson/phone fleet on finite
+//!    batteries: the lifetime-vs-latency frontier. Weight 0 is
+//!    energy-blind dispatch (phones deplete first and crash through
+//!    the fault lanes); raising the weight steers tokens toward the
+//!    big batteries, trading p99 for `fleet_lifetime_s`.
 //!
 //! Every grid runs on the parallel engine (`threads = 0`: one worker
 //! per core); results merge in canonical order, so the tables match a
@@ -25,7 +30,7 @@
 //! cargo run --release --example cluster_sweep
 //! ```
 
-use wdmoe::config::ClusterConfig;
+use wdmoe::config::{ClusterConfig, EnergyConfig};
 use wdmoe::experiment::{Axis, AxisValue, Grid, Scenario};
 use wdmoe::workload::Benchmark;
 
@@ -97,6 +102,28 @@ fn main() -> anyhow::Result<()> {
         "{}",
         result
             .table("Handover × queue limit × rate (cell 0 crippled)")?
+            .render()
+    );
+
+    // 4. The lifetime-vs-latency frontier: a mixed jetson/phone fleet
+    // on finite batteries. The `energy_weight` axis re-runs identical
+    // traffic with the dispatcher increasingly willing to trade
+    // predicted finish time for joules-per-token on a fuller battery;
+    // read `fleet_lifetime_s` against `p99_ms` across the rows.
+    let mut cfg = ClusterConfig::edge_default();
+    cfg.energy.compute_j_per_token = 1.0;
+    cfg.energy.tx_j_per_token = 0.05;
+    cfg.energy.battery_j = 60.0;
+    cfg.energy.recharge_s = 0.5;
+    cfg.energy.classes = EnergyConfig::class_preset("mixed")?;
+    let result = Grid::new(Scenario::new(cfg, 150, bench))
+        .axis(Axis::EnergyWeight, AxisValue::nums(&[0.0, 0.25, 0.5, 1.0]))
+        .axis(Axis::ArrivalRate, AxisValue::nums(&[2.0, 4.0]))
+        .run(threads)?;
+    println!(
+        "{}",
+        result
+            .table("Energy weight × rate (mixed fleet, 60 J batteries)")?
             .render()
     );
     Ok(())

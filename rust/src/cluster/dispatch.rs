@@ -16,9 +16,39 @@
 //! replica wins. Replicas whose service time is non-finite (offline, or
 //! starved of spectrum by a re-solve) are never chosen.
 
-use super::event::{nanos_from_secs, Nanos};
+use super::event::{nanos_from_secs, secs_from_nanos, Nanos};
 use crate::config::DispatchKind;
 use crate::telemetry::{Probe, TelemetryEvent};
+
+/// Energy view of a cell's devices at dispatch time, borrowed from
+/// [`crate::cluster::energy::CellEnergy`]. With `weight == 0.0` (the
+/// [`Self::OFF`] constant) every chooser takes the exact pre-energy
+/// integer-scored path — bit-equal to the engine before the energy
+/// subsystem existed. With `weight > 0.0` the load-aware chooser ranks
+/// replicas by `predicted finish seconds + weight · tokens · cost_j[k] ·
+/// (2 - frac[k])`: the energy term is the marginal joules of placing the
+/// group on device `k`, inflated up to 2x as its battery drains so the
+/// dispatcher spreads load away from nearly-dead devices.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyScore<'a> {
+    /// Weight of the energy term (0 = pure latency).
+    pub weight: f64,
+    /// Marginal joules per token on device `k` (compute + radio at the
+    /// current bandwidth split).
+    pub cost_j: &'a [f64],
+    /// Remaining battery fraction of device `k` in `[0, 1]`
+    /// (1.0 for mains-powered devices).
+    pub frac: &'a [f64],
+}
+
+impl EnergyScore<'_> {
+    /// The disabled score: selects the pre-energy dispatch path.
+    pub const OFF: EnergyScore<'static> = EnergyScore {
+        weight: 0.0,
+        cost_j: &[],
+        frac: &[],
+    };
+}
 
 /// Replica chooser. Stateless: queue state is passed per call so the
 /// simulator remains the single owner of device state.
@@ -43,9 +73,15 @@ impl Dispatcher {
     /// finite service time (a control-plane re-solve can starve an
     /// online device of spectrum entirely).
     ///
+    /// `energy` selects the scoring: [`EnergyScore::OFF`] is the exact
+    /// integer-scored pre-energy path; a positive weight switches the
+    /// load-aware arm to the weighted latency+energy objective (static
+    /// dispatch ignores it — the home-replica baseline stays a baseline).
+    ///
     /// Runs once per selected expert per block on the DES hot path:
     /// allocation-free by construction (pure reduction over borrowed
     /// slices), and inlined into the dispatch loop.
+    #[allow(clippy::too_many_arguments)]
     #[inline]
     pub fn choose(
         &self,
@@ -55,6 +91,7 @@ impl Dispatcher {
         busy_until: &[Nanos],
         t_per_token: &[f64],
         online: &[bool],
+        energy: EnergyScore,
     ) -> Option<usize> {
         match self.kind {
             // First serviceable replica in replica order — the home
@@ -64,6 +101,18 @@ impl Dispatcher {
                 .copied()
                 .find(|&k| online[k] && t_per_token[k].is_finite()),
             DispatchKind::LoadAware => {
+                if energy.weight > 0.0 {
+                    return self.choose_energy(
+                        replicas,
+                        tokens,
+                        now,
+                        busy_until,
+                        t_per_token,
+                        online,
+                        energy,
+                        usize::MAX,
+                    );
+                }
                 let mut best: Option<(Nanos, usize)> = None;
                 for k in replicas.iter().copied().filter(|&k| online[k]) {
                     if !t_per_token[k].is_finite() {
@@ -87,6 +136,49 @@ impl Dispatcher {
         }
     }
 
+    /// The weighted latency+energy objective: minimise
+    /// `finish_seconds + weight · tokens · cost_j[k] · (2 - frac[k])`
+    /// over serviceable replicas, excluding `exclude` (`usize::MAX` =
+    /// no exclusion). Pure f64 reduction over borrowed slices in replica
+    /// order with strict-< and tie-to-lower-index — deterministic and
+    /// allocation-free like the integer path it replaces.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn choose_energy(
+        &self,
+        replicas: &[usize],
+        tokens: f64,
+        now: Nanos,
+        busy_until: &[Nanos],
+        t_per_token: &[f64],
+        online: &[bool],
+        energy: EnergyScore,
+        exclude: usize,
+    ) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for k in replicas
+            .iter()
+            .copied()
+            .filter(|&k| k != exclude && online[k])
+        {
+            if !t_per_token[k].is_finite() {
+                continue;
+            }
+            let start = busy_until[k].max(now);
+            let finish = start.saturating_add(nanos_from_secs(tokens * t_per_token[k]));
+            let score = secs_from_nanos(finish)
+                + energy.weight * tokens * energy.cost_j[k] * (2.0 - energy.frac[k]);
+            let better = match best {
+                None => true,
+                Some((bs, bk)) => score < bs || (score == bs && k < bk),
+            };
+            if better {
+                best = Some((score, k));
+            }
+        }
+        best.map(|(_, k)| k)
+    }
+
     /// [`Self::choose`] restricted to replicas other than `exclude` —
     /// the hedged-dispatch second pick. Predictions use the base
     /// `t_per_token` like every other dispatch: the dispatcher does not
@@ -103,6 +195,7 @@ impl Dispatcher {
         t_per_token: &[f64],
         online: &[bool],
         exclude: usize,
+        energy: EnergyScore,
     ) -> Option<usize> {
         match self.kind {
             DispatchKind::Static => replicas
@@ -110,6 +203,18 @@ impl Dispatcher {
                 .copied()
                 .find(|&k| k != exclude && online[k] && t_per_token[k].is_finite()),
             DispatchKind::LoadAware => {
+                if energy.weight > 0.0 {
+                    return self.choose_energy(
+                        replicas,
+                        tokens,
+                        now,
+                        busy_until,
+                        t_per_token,
+                        online,
+                        energy,
+                        exclude,
+                    );
+                }
                 let mut best: Option<(Nanos, usize)> = None;
                 for k in replicas
                     .iter()
@@ -152,8 +257,9 @@ impl Dispatcher {
         busy_until: &[Nanos],
         t_per_token: &[f64],
         online: &[bool],
+        energy: EnergyScore,
     ) -> Option<usize> {
-        let device = self.choose(replicas, tokens, now, busy_until, t_per_token, online);
+        let device = self.choose(replicas, tokens, now, busy_until, t_per_token, online, energy);
         probe.on_event(&TelemetryEvent::DispatchDecision {
             cell,
             expert,
@@ -175,10 +281,18 @@ mod tests {
     #[test]
     fn static_dispatch_picks_home() {
         let d = Dispatcher::new(DispatchKind::Static);
-        let k = d.choose(&[2, 0, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4);
+        let k = d.choose(&[2, 0, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4, EnergyScore::OFF);
         assert_eq!(k, Some(2), "static picks the home (first) online replica");
         let offline_home = [false, true, true, false];
-        let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &offline_home);
+        let k = d.choose(
+            &[3, 1],
+            10.0,
+            0,
+            &[0; 4],
+            &[1e-3; 4],
+            &offline_home,
+            EnergyScore::OFF,
+        );
         assert_eq!(k, Some(1), "falls back to the next replica in order");
     }
 
@@ -186,7 +300,7 @@ mod tests {
     fn load_aware_prefers_faster_idle_device() {
         let d = Dispatcher::new(DispatchKind::LoadAware);
         let t = [1e-3, 1e-5, 1e-4, 1e-2];
-        let k = d.choose(&[0, 1, 3], 10.0, 0, &[0; 4], &t, &ONLINE4);
+        let k = d.choose(&[0, 1, 3], 10.0, 0, &[0; 4], &t, &ONLINE4, EnergyScore::OFF);
         assert_eq!(k, Some(1));
     }
 
@@ -197,7 +311,7 @@ mod tests {
         // Device 0 is 10x faster but its queue drains a full second from
         // now; device 1 finishes sooner.
         let busy = [1_000_000_000, 0, 0, 0];
-        let k = d.choose(&[0, 1], 100.0, 0, &busy, &t, &ONLINE4);
+        let k = d.choose(&[0, 1], 100.0, 0, &busy, &t, &ONLINE4, EnergyScore::OFF);
         assert_eq!(k, Some(1));
     }
 
@@ -205,18 +319,21 @@ mod tests {
     fn offline_replicas_are_skipped() {
         let d = Dispatcher::new(DispatchKind::LoadAware);
         let online = [false, true, true, true];
-        let k = d.choose(&[0, 2], 5.0, 0, &[0; 4], &[1e-3; 4], &online);
+        let k = d.choose(&[0, 2], 5.0, 0, &[0; 4], &[1e-3; 4], &online, EnergyScore::OFF);
         assert_eq!(k, Some(2));
-        let none = d.choose(&[0], 5.0, 0, &[0; 4], &[1e-3; 4], &online);
+        let none = d.choose(&[0], 5.0, 0, &[0; 4], &[1e-3; 4], &online, EnergyScore::OFF);
         assert_eq!(none, None);
         let s = Dispatcher::new(DispatchKind::Static);
-        assert_eq!(s.choose(&[0], 5.0, 0, &[0; 4], &[1e-3; 4], &online), None);
+        assert_eq!(
+            s.choose(&[0], 5.0, 0, &[0; 4], &[1e-3; 4], &online, EnergyScore::OFF),
+            None
+        );
     }
 
     #[test]
     fn ties_break_to_lower_device_index() {
         let d = Dispatcher::new(DispatchKind::LoadAware);
-        let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4);
+        let k = d.choose(&[3, 1], 10.0, 0, &[0; 4], &[1e-3; 4], &ONLINE4, EnergyScore::OFF);
         assert_eq!(k, Some(1));
     }
 
@@ -225,19 +342,22 @@ mod tests {
         let d = Dispatcher::new(DispatchKind::LoadAware);
         let t = [1e-5, 1e-4, 1e-3, 1.0];
         // Device 0 is best; excluding it yields the runner-up.
-        assert_eq!(d.choose(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4), Some(0));
         assert_eq!(
-            d.choose_excluding(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0),
+            d.choose(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, EnergyScore::OFF),
+            Some(0)
+        );
+        assert_eq!(
+            d.choose_excluding(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0, EnergyScore::OFF),
             Some(1)
         );
         // A single-replica expert has no hedge target.
         assert_eq!(
-            d.choose_excluding(&[0], 10.0, 0, &[0; 4], &t, &ONLINE4, 0),
+            d.choose_excluding(&[0], 10.0, 0, &[0; 4], &t, &ONLINE4, 0, EnergyScore::OFF),
             None
         );
         let s = Dispatcher::new(DispatchKind::Static);
         assert_eq!(
-            s.choose_excluding(&[0, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0),
+            s.choose_excluding(&[0, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0, EnergyScore::OFF),
             Some(2)
         );
     }
@@ -249,7 +369,77 @@ mod tests {
         // replica rather than schedule unbounded work.
         let s = Dispatcher::new(DispatchKind::Static);
         let t = [f64::INFINITY, 1e-3, 1e-3, 1e-3];
-        assert_eq!(s.choose(&[0, 2], 5.0, 0, &[0; 4], &t, &ONLINE4), Some(2));
-        assert_eq!(s.choose(&[0], 5.0, 0, &[0; 4], &t, &ONLINE4), None);
+        assert_eq!(
+            s.choose(&[0, 2], 5.0, 0, &[0; 4], &t, &ONLINE4, EnergyScore::OFF),
+            Some(2)
+        );
+        assert_eq!(
+            s.choose(&[0], 5.0, 0, &[0; 4], &t, &ONLINE4, EnergyScore::OFF),
+            None
+        );
+    }
+
+    #[test]
+    fn energy_score_steers_away_from_costly_device() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        // Identical latency everywhere; device 0 burns 10x the joules.
+        let t = [1e-6; 4];
+        let cost = [1.0, 0.1, 0.1, 0.1];
+        let frac = [1.0; 4];
+        let energy = EnergyScore { weight: 1.0, cost_j: &cost, frac: &frac };
+        assert_eq!(
+            d.choose(&[0, 1], 10.0, 0, &[0; 4], &t, &ONLINE4, energy),
+            Some(1)
+        );
+        // Weight 0 falls back to the latency tie-break (lower index).
+        assert_eq!(
+            d.choose(&[0, 1], 10.0, 0, &[0; 4], &t, &ONLINE4, EnergyScore::OFF),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn energy_score_spares_drained_battery() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        // Same cost per token, but device 0's battery is nearly dead:
+        // the (2 - frac) inflation makes device 1 win despite the tie.
+        let t = [1e-6; 4];
+        let cost = [0.5; 4];
+        let frac = [0.05, 0.9, 0.9, 0.9];
+        let energy = EnergyScore { weight: 0.5, cost_j: &cost, frac: &frac };
+        assert_eq!(
+            d.choose(&[0, 1], 10.0, 0, &[0; 4], &t, &ONLINE4, energy),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn energy_score_still_respects_latency() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        // Device 1 is cheaper but its queue drains a full second from
+        // now; a small energy weight cannot overturn a 1 s latency gap.
+        let t = [1e-5, 1e-5, 1.0, 1.0];
+        let busy = [0, 1_000_000_000, 0, 0];
+        let cost = [1.0, 0.01, 0.0, 0.0];
+        let frac = [1.0; 4];
+        let energy = EnergyScore { weight: 1e-3, cost_j: &cost, frac: &frac };
+        assert_eq!(
+            d.choose(&[0, 1], 10.0, 0, &busy, &t, &ONLINE4, energy),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn energy_score_applies_to_hedge_pick() {
+        let d = Dispatcher::new(DispatchKind::LoadAware);
+        let t = [1e-6; 4];
+        let cost = [0.1, 1.0, 0.1, 0.1];
+        let frac = [1.0; 4];
+        let energy = EnergyScore { weight: 1.0, cost_j: &cost, frac: &frac };
+        // Excluding the winner, the cheap device 2 beats costly device 1.
+        assert_eq!(
+            d.choose_excluding(&[0, 1, 2], 10.0, 0, &[0; 4], &t, &ONLINE4, 0, energy),
+            Some(2)
+        );
     }
 }

@@ -1,0 +1,465 @@
+//! Per-cell energy accounting: battery state, joule debits and
+//! depletion-driven churn for the cluster DES.
+//!
+//! A [`CellEnergy`] is compiled from the validated
+//! [`crate::config::EnergyConfig`] at cell construction: per-device
+//! compute and radio joules/token (class multipliers applied round-robin),
+//! battery capacity, idle draw and recharge length. The DES debits it at
+//! every committed token group — compute cost plus radio cost scaled by
+//! the device's *current* bandwidth share relative to the cell's uniform
+//! split (a thin slice means longer airtime) — and drains depletions into
+//! the existing fault machinery as deterministic
+//! [`crate::cluster::faults::FaultAction::Crash`] events.
+//!
+//! Determinism contract: all state is cell-local, debits happen at
+//! identical structural points in the serial and sharded engines with
+//! identical arguments, and depletions drain in FIFO order — so energy-on
+//! runs are byte-identical at any thread count. When the config is empty
+//! the engine monomorphizes this module away entirely (`ENERGY = false`)
+//! and stays bit-equal to the pre-energy engine.
+//!
+//! Accounting conventions (documented simplifications):
+//! * `spent_j` bills the full cost of served work even past depletion —
+//!   the group was already committed when the battery hit zero — which is
+//!   what makes the conservation property exact:
+//!   `sum(spent) == sum(per-token cost × served tokens)` when `idle_w = 0`.
+//! * Idle draw accrues over sim time regardless of online state and is
+//!   settled lazily: at each debit of the device, and once at teardown up
+//!   to the last-work instant.
+
+use super::dispatch::EnergyScore;
+use super::event::{secs_from_nanos, Nanos};
+use crate::config::EnergyConfig;
+
+/// Sentinel for "no depletion yet" in the first/last instants.
+const NO_DEPLETION: Nanos = 0;
+
+/// Energy state of one cell's device fleet.
+#[derive(Debug, Clone)]
+pub struct CellEnergy {
+    /// False when the config is empty: every hot call is branch-gated on
+    /// this, and the monomorphized `ENERGY = false` engine never looks.
+    pub enabled: bool,
+    /// Dispatch energy weight (0 = pure latency even when enabled).
+    pub weight: f64,
+    /// Reference bandwidth (the cell's uniform split at construction):
+    /// radio cost scales by `ref_bw / bw[k]`.
+    ref_bw: f64,
+    /// Compute joules per token, per device (class-scaled).
+    compute_j: Vec<f64>,
+    /// Radio (TX + RX) joules per token at the uniform share, per device.
+    radio_j: Vec<f64>,
+    /// Battery capacity per device, joules (0 = mains).
+    capacity_j: Vec<f64>,
+    /// Remaining battery per device, joules.
+    battery_j: Vec<f64>,
+    /// Total joules billed per device (keeps accruing past depletion).
+    spent_j: Vec<f64>,
+    /// Instant idle draw was last settled to, per device.
+    idle_from: Vec<Nanos>,
+    /// Battery currently at zero (cleared by a recharge episode).
+    depleted: Vec<bool>,
+    /// Battery hit zero at least once this run.
+    ever_depleted: Vec<bool>,
+    /// Idle draw, watts.
+    idle_w: f64,
+    /// Recharge episode length (0 = depletion is permanent).
+    recharge_ns: Nanos,
+    /// First/last depletion instants ([`NO_DEPLETION`] = none yet).
+    first_depletion: Nanos,
+    last_depletion: Nanos,
+    /// FIFO of freshly depleted devices awaiting their Crash (drained by
+    /// the engines at fixed structural points); `pending_head` is the
+    /// read cursor so popping never shifts the buffer.
+    pending: Vec<usize>,
+    pending_head: usize,
+    /// Dispatch-score caches refreshed per block from the live bandwidth
+    /// split (see [`Self::refresh_scores`]).
+    cost_j: Vec<f64>,
+    frac: Vec<f64>,
+}
+
+impl CellEnergy {
+    /// Compile the config for a cell of `n_dev` devices whose initial
+    /// bandwidth split is `bw` (the uniform reference is its mean).
+    pub fn new(cfg: &EnergyConfig, weight: f64, n_dev: usize, bw: &[f64]) -> Self {
+        let ref_bw = if n_dev > 0 {
+            bw.iter().sum::<f64>() / n_dev as f64
+        } else {
+            0.0
+        };
+        let class = |k: usize| -> (f64, f64, f64) {
+            if cfg.classes.is_empty() {
+                (1.0, 1.0, 1.0)
+            } else {
+                let c = &cfg.classes[k % cfg.classes.len()];
+                (c.compute_mult, c.radio_mult, c.battery_mult)
+            }
+        };
+        let mut compute_j = Vec::with_capacity(n_dev);
+        let mut radio_j = Vec::with_capacity(n_dev);
+        let mut capacity_j = Vec::with_capacity(n_dev);
+        for k in 0..n_dev {
+            let (cm, rm, bm) = class(k);
+            compute_j.push(cfg.compute_j_per_token * cm);
+            radio_j.push((cfg.tx_j_per_token + cfg.rx_j_per_token) * rm);
+            capacity_j.push(cfg.battery_j * bm);
+        }
+        CellEnergy {
+            enabled: !cfg.is_empty(),
+            weight,
+            ref_bw,
+            compute_j,
+            radio_j,
+            battery_j: capacity_j.clone(),
+            capacity_j,
+            spent_j: vec![0.0; n_dev],
+            idle_from: vec![0; n_dev],
+            depleted: vec![false; n_dev],
+            ever_depleted: vec![false; n_dev],
+            idle_w: cfg.idle_w,
+            recharge_ns: super::event::nanos_from_secs(cfg.recharge_s),
+            first_depletion: NO_DEPLETION,
+            last_depletion: NO_DEPLETION,
+            pending: Vec::with_capacity(n_dev),
+            pending_head: 0,
+            cost_j: vec![0.0; n_dev],
+            frac: vec![1.0; n_dev],
+        }
+    }
+
+    /// A disabled instance (no devices): the `ENERGY = false` engines
+    /// still carry the field, they just never touch it.
+    pub fn disabled() -> Self {
+        Self::new(&EnergyConfig::default(), 0.0, 0, &[])
+    }
+
+    /// Restore the just-built state (`ClusterSim::reset` contract).
+    pub fn reset(&mut self) {
+        self.battery_j.copy_from_slice(&self.capacity_j);
+        for v in &mut self.spent_j {
+            *v = 0.0;
+        }
+        for v in &mut self.idle_from {
+            *v = 0;
+        }
+        for v in &mut self.depleted {
+            *v = false;
+        }
+        for v in &mut self.ever_depleted {
+            *v = false;
+        }
+        self.first_depletion = NO_DEPLETION;
+        self.last_depletion = NO_DEPLETION;
+        self.pending.clear();
+        self.pending_head = 0;
+        for v in &mut self.cost_j {
+            *v = 0.0;
+        }
+        for v in &mut self.frac {
+            *v = 1.0;
+        }
+    }
+
+    /// Bill `e` joules to device `k` at instant `now`: always lands in
+    /// `spent_j`; drains the battery until it pins at zero, at which
+    /// point the device joins the pending-crash FIFO exactly once.
+    #[inline]
+    fn spend(&mut self, k: usize, e: f64, now: Nanos) {
+        self.spent_j[k] += e;
+        if self.capacity_j[k] > 0.0 && !self.depleted[k] {
+            self.battery_j[k] -= e;
+            if self.battery_j[k] <= 0.0 {
+                self.battery_j[k] = 0.0;
+                self.depleted[k] = true;
+                self.ever_depleted[k] = true;
+                if self.first_depletion == NO_DEPLETION {
+                    self.first_depletion = now;
+                }
+                self.last_depletion = self.last_depletion.max(now);
+                self.pending.push(k);
+            }
+        }
+    }
+
+    /// Settle device `k`'s idle draw up to `now`.
+    #[inline]
+    fn settle_idle_device(&mut self, k: usize, now: Nanos) {
+        if self.idle_w > 0.0 && now > self.idle_from[k] {
+            let e = self.idle_w * secs_from_nanos(now - self.idle_from[k]);
+            self.idle_from[k] = now;
+            self.spend(k, e, now);
+        }
+    }
+
+    /// Debit one committed token group: `tokens` tokens served by device
+    /// `k` under the live bandwidth split `bw`. Radio cost scales with
+    /// `ref_bw / bw[k]` — a device starved of spectrum pays more airtime
+    /// energy per token; non-positive or non-finite shares fall back to
+    /// the uniform reference. Hot path: allocation-free.
+    #[inline]
+    pub fn debit(&mut self, k: usize, tokens: f64, bw: &[f64], now: Nanos) {
+        self.settle_idle_device(k, now);
+        let b = bw[k];
+        let r = if b > 0.0 && b.is_finite() { self.ref_bw / b } else { 1.0 };
+        let e = tokens * (self.compute_j[k] + self.radio_j[k] * r);
+        self.spend(k, e, now);
+    }
+
+    /// Refresh the dispatch-score caches from the live bandwidth split:
+    /// `cost_j[k]` = marginal joules/token on `k`, `frac[k]` = remaining
+    /// battery fraction (1.0 for mains). Called once per dispatched block
+    /// when energy-aware dispatch is armed. Hot path: allocation-free.
+    #[inline]
+    pub fn refresh_scores(&mut self, bw: &[f64]) {
+        for k in 0..self.cost_j.len() {
+            let b = bw[k];
+            let r = if b > 0.0 && b.is_finite() { self.ref_bw / b } else { 1.0 };
+            self.cost_j[k] = self.compute_j[k] + self.radio_j[k] * r;
+            self.frac[k] = if self.capacity_j[k] > 0.0 {
+                self.battery_j[k] / self.capacity_j[k]
+            } else {
+                1.0
+            };
+        }
+    }
+
+    /// The dispatcher's borrowed view of the caches (see
+    /// [`EnergyScore`]); `EnergyScore::OFF`-equivalent when `weight` is 0.
+    #[inline]
+    pub fn score(&self) -> EnergyScore<'_> {
+        EnergyScore {
+            weight: self.weight,
+            cost_j: &self.cost_j,
+            frac: &self.frac,
+        }
+    }
+
+    /// Pop the next freshly depleted device (FIFO — the order batteries
+    /// actually died in, which both engines replay identically).
+    #[inline]
+    pub fn pop_depleted(&mut self) -> Option<usize> {
+        if self.pending_head < self.pending.len() {
+            let k = self.pending[self.pending_head];
+            self.pending_head += 1;
+            Some(k)
+        } else {
+            self.pending.clear();
+            self.pending_head = 0;
+            None
+        }
+    }
+
+    /// Recharge episode length in sim nanoseconds (0 = permanent death).
+    pub fn recharge_ns(&self) -> Nanos {
+        self.recharge_ns
+    }
+
+    /// Complete a recharge episode for device `k`: battery back to full,
+    /// idle clock restarted. Returns false when the device was not
+    /// depleted (stale event — e.g. reset in between).
+    pub fn recharge(&mut self, k: usize, now: Nanos) -> bool {
+        if self.depleted[k] {
+            self.depleted[k] = false;
+            self.battery_j[k] = self.capacity_j[k];
+            self.idle_from[k] = now;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// True when device `k` is battery-dead: the fault layer's `Recover`
+    /// must not resurrect it (only a recharge episode clears the flag).
+    #[inline]
+    pub fn blocks_recover(&self, k: usize) -> bool {
+        self.enabled && self.depleted[k]
+    }
+
+    /// Settle every device's idle draw up to `end` (teardown; both
+    /// engines call it with the same last-work instant, in cell order).
+    pub fn settle_idle(&mut self, end: Nanos) {
+        for k in 0..self.idle_from.len() {
+            self.settle_idle_device(k, end);
+        }
+    }
+
+    /// Total joules billed to the cell (sum over devices in index order).
+    pub fn spent_total(&self) -> f64 {
+        self.spent_j.iter().sum()
+    }
+
+    /// Devices whose battery hit zero at least once this run.
+    pub fn depleted_count(&self) -> usize {
+        self.ever_depleted.iter().filter(|&&d| d).count()
+    }
+
+    /// First/last battery-depletion instants (0 = none).
+    pub fn first_depletion(&self) -> Nanos {
+        self.first_depletion
+    }
+
+    pub fn last_depletion(&self) -> Nanos {
+        self.last_depletion
+    }
+
+    /// Minimum remaining battery fraction across the cell's devices
+    /// (1.0 when disabled or mains-powered) — the timeline's
+    /// `battery_min` column.
+    pub fn battery_min_frac(&self) -> f64 {
+        if !self.enabled {
+            return 1.0;
+        }
+        let mut min = 1.0f64;
+        for k in 0..self.capacity_j.len() {
+            if self.capacity_j[k] > 0.0 {
+                min = min.min(self.battery_j[k] / self.capacity_j[k]);
+            }
+        }
+        min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_base() -> EnergyConfig {
+        let mut e = EnergyConfig::default();
+        e.compute_j_per_token = 0.1;
+        e.tx_j_per_token = 0.02;
+        e.rx_j_per_token = 0.01;
+        e
+    }
+
+    #[test]
+    fn debit_is_cost_times_tokens_at_uniform_split() {
+        let bw = [10e6, 10e6];
+        let mut ce = CellEnergy::new(&cfg_base(), 0.0, 2, &bw);
+        assert!(ce.enabled);
+        ce.debit(0, 100.0, &bw, 1_000);
+        // compute 0.1 + radio (0.02 + 0.01) * (ref/bw = 1) = 0.13 J/token
+        assert!((ce.spent_total() - 13.0).abs() < 1e-9, "{}", ce.spent_total());
+        assert_eq!(ce.depleted_count(), 0);
+    }
+
+    #[test]
+    fn radio_cost_scales_with_bandwidth_share() {
+        // Device 0 holds a quarter of the uniform share: radio pays 4x.
+        let bw = [5e6, 35e6];
+        let mut ce = CellEnergy::new(&cfg_base(), 0.0, 2, &bw);
+        ce.debit(0, 10.0, &bw, 0);
+        let ref_bw = 20e6;
+        let want = 10.0 * (0.1 + 0.03 * (ref_bw / 5e6));
+        assert!((ce.spent_total() - want).abs() < 1e-9);
+        // Zero / non-finite shares fall back to the reference (mult 1).
+        let dead_bw = [0.0, 40e6];
+        ce.debit(0, 10.0, &dead_bw, 0);
+        assert!((ce.spent_total() - want - 10.0 * 0.13).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depletion_fires_once_and_is_fifo() {
+        let mut cfg = cfg_base();
+        cfg.battery_j = 1.0;
+        let bw = [1.0, 1.0, 1.0];
+        let mut ce = CellEnergy::new(&cfg, 0.0, 3, &bw);
+        ce.debit(2, 100.0, &bw, 5); // 13 J ≫ 1 J battery → depleted at t=5
+        ce.debit(0, 100.0, &bw, 7);
+        ce.debit(2, 100.0, &bw, 9); // already dead: billed, no re-push
+        assert_eq!(ce.pop_depleted(), Some(2));
+        assert_eq!(ce.pop_depleted(), Some(0));
+        assert_eq!(ce.pop_depleted(), None);
+        assert_eq!(ce.depleted_count(), 2);
+        assert_eq!(ce.first_depletion(), 5);
+        assert_eq!(ce.last_depletion(), 7);
+        // Conservation: the full cost is billed even past depletion.
+        assert!((ce.spent_total() - 3.0 * 13.0).abs() < 1e-9);
+        assert!(ce.blocks_recover(2));
+        assert!(!ce.blocks_recover(1));
+    }
+
+    #[test]
+    fn recharge_restores_battery() {
+        let mut cfg = cfg_base();
+        cfg.battery_j = 1.0;
+        cfg.recharge_s = 2.0;
+        let bw = [1.0];
+        let mut ce = CellEnergy::new(&cfg, 0.0, 1, &bw);
+        assert_eq!(ce.recharge_ns(), 2_000_000_000);
+        ce.debit(0, 100.0, &bw, 3);
+        assert_eq!(ce.pop_depleted(), Some(0));
+        assert!(ce.blocks_recover(0));
+        assert!(ce.recharge(0, 10));
+        assert!(!ce.blocks_recover(0));
+        assert!(!ce.recharge(0, 11), "recharge on a live device is stale");
+        assert_eq!(ce.battery_min_frac(), 1.0);
+    }
+
+    #[test]
+    fn idle_draw_settles_lazily() {
+        let mut cfg = cfg_base();
+        cfg.idle_w = 2.0;
+        let bw = [1.0];
+        let mut ce = CellEnergy::new(&cfg, 0.0, 1, &bw);
+        ce.settle_idle(1_500_000_000); // 1.5 s × 2 W = 3 J
+        assert!((ce.spent_total() - 3.0).abs() < 1e-9);
+        // Settling again to the same instant adds nothing.
+        ce.settle_idle(1_500_000_000);
+        assert!((ce.spent_total() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classes_scale_costs_and_capacity() {
+        let mut cfg = cfg_base();
+        cfg.battery_j = 10.0;
+        cfg.classes = EnergyConfig::class_preset("mixed").unwrap();
+        let bw = [1.0; 4];
+        let mut ce = CellEnergy::new(&cfg, 0.0, 4, &bw);
+        // devices 0,2 = jetson (1.0x compute, 2x battery); 1,3 = phone
+        // (2.5x compute, 1.5x radio, 1x battery).
+        ce.debit(0, 10.0, &bw, 0);
+        let jetson = 10.0 * (0.1 + 0.03);
+        assert!((ce.spent_total() - jetson).abs() < 1e-9);
+        ce.debit(1, 10.0, &bw, 0);
+        let phone = 10.0 * (0.1 * 2.5 + 0.03 * 1.5);
+        assert!((ce.spent_total() - jetson - phone).abs() < 1e-9);
+        ce.refresh_scores(&bw);
+        let s = ce.score();
+        assert!(s.cost_j[1] > s.cost_j[0]);
+        // phone battery (10 J) drains faster than jetson's (20 J)
+        assert!(s.frac[1] < s.frac[0]);
+    }
+
+    #[test]
+    fn battery_min_frac_tracks_worst_device() {
+        let mut cfg = cfg_base();
+        cfg.battery_j = 13.0;
+        let bw = [1.0, 1.0];
+        let mut ce = CellEnergy::new(&cfg, 0.0, 2, &bw);
+        assert_eq!(ce.battery_min_frac(), 1.0);
+        ce.debit(1, 50.0, &bw, 0); // 6.5 of 13 J
+        assert!((ce.battery_min_frac() - 0.5).abs() < 1e-9);
+        let off = CellEnergy::new(&EnergyConfig::default(), 0.0, 2, &bw);
+        assert_eq!(off.battery_min_frac(), 1.0);
+        assert!(!off.enabled);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut cfg = cfg_base();
+        cfg.battery_j = 1.0;
+        let bw = [1.0, 1.0];
+        let mut ce = CellEnergy::new(&cfg, 0.5, 2, &bw);
+        ce.debit(0, 100.0, &bw, 5);
+        ce.refresh_scores(&bw);
+        assert_eq!(ce.depleted_count(), 1);
+        ce.reset();
+        assert_eq!(ce.depleted_count(), 0);
+        assert_eq!(ce.spent_total(), 0.0);
+        assert_eq!(ce.first_depletion(), 0);
+        assert_eq!(ce.pop_depleted(), None);
+        assert_eq!(ce.battery_min_frac(), 1.0);
+        assert_eq!(ce.weight, 0.5);
+    }
+}

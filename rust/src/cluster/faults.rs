@@ -374,6 +374,12 @@ pub(super) fn apply_action<P: Probe>(
             if cell.dev.online[k] {
                 return;
             }
+            // A battery-dead device cannot be resurrected by a fault-plan
+            // MTTR recovery: only a recharge episode clears depletion (the
+            // offline clock keeps running — it is genuinely unavailable).
+            if cell.energy.blocks_recover(k) {
+                return;
+            }
             cell.dev.online[k] = true;
             cell.plane.on_topology_change(&cell.dev.online);
             rt.offline_ns += now - rt.offline_since[k];
@@ -486,6 +492,7 @@ pub(super) fn resolve_lost_group<P: Probe>(
                 &cell.dev.busy_until,
                 cell.plane.t_per_token(),
                 &cell.dev.online,
+                cell.energy.score(),
             )
         };
         if let Some(k) = choice {
@@ -495,6 +502,10 @@ pub(super) fn resolve_lost_group<P: Probe>(
             let done = start.saturating_add(nanos_from_secs(service_s));
             cell.dev.busy_until[k] = done;
             cell.dev.busy[k].add_busy(service_s);
+            if cell.energy.enabled {
+                let bw = cell.plane.bandwidth();
+                cell.energy.debit(k, g.tokens, bw, now);
+            }
             // Demand accounting: served_tokens feeds the dispatcher-load
             // signal, but expert_tokens already counted this group at its
             // original commit — re-adding would double the autoscaler's

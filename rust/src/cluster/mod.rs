@@ -155,11 +155,31 @@
 //! `hedge_rate`, `wasted_tokens` and `availability` next to the
 //! existing metrics.
 //!
-//! Follow-ons tracked in ROADMAP.md: handover hysteresis, an energy
-//! model (which can reuse the fault plan's per-device episode machinery
-//! for battery churn).
+//! ## Energy model & battery churn
+//!
+//! The [`energy`] module compiles a validated
+//! [`crate::config::EnergyConfig`] into per-cell [`energy::CellEnergy`]
+//! state: every committed token group debits the serving device's
+//! battery — compute joules/token plus radio TX/RX joules/token scaled
+//! by the device's live bandwidth share (a thin slice means longer
+//! airtime) — with heterogeneous fleets via round-robin device classes
+//! and an optional idle draw. With `energy_weight > 0` the load-aware
+//! dispatcher ranks replicas by a weighted latency+energy objective
+//! ([`dispatch::EnergyScore`]) and the adaptive plane's demand vector is
+//! biased away from drained batteries, trading p99 against joules/token
+//! and fleet lifetime. A depleted battery drains a deterministic
+//! [`faults::FaultAction::Crash`] into the existing per-cell fault lanes
+//! (recharge optional via MTTR-style episodes), so device death
+//! exercises the crash re-dispatch / hedging / SLO path as a *systemic*
+//! phenomenon. Outcomes report total joules, joules/token and the
+//! first/last-depletion fleet lifetime; an empty config monomorphizes
+//! the accounting away (`ENERGY = false`), bit-equal to the pre-energy
+//! engine, and energy-on runs stay byte-identical serial vs sharded.
+//!
+//! Follow-ons tracked in ROADMAP.md: handover hysteresis.
 
 pub mod dispatch;
+pub mod energy;
 pub mod event;
 pub mod faults;
 pub mod handover;
@@ -167,7 +187,8 @@ pub mod placement;
 pub mod shard;
 pub mod sim;
 
-pub use dispatch::Dispatcher;
+pub use dispatch::{Dispatcher, EnergyScore};
+pub use energy::CellEnergy;
 pub use event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 pub use faults::{compile as compile_fault_plan, FaultAction, FaultEvent};
 pub use handover::{HandoverCell, HandoverCoordinator, StagedBorrow};

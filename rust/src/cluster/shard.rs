@@ -61,7 +61,8 @@
 use super::dispatch::Dispatcher;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 use super::faults::{
-    apply_action, resolve_lost_group, CellFaults, FaultEvent, InflightGroup, LossResolution,
+    apply_action, resolve_lost_group, CellFaults, FaultAction, FaultEvent, InflightGroup,
+    LossResolution,
 };
 use super::handover::HandoverCoordinator;
 use super::sim::{
@@ -202,9 +203,9 @@ impl CellShard {
     ) -> Self {
         let rt = CellFaults::new(cell.dev.len());
         // Mirror of the serial fault arming: fresh multipliers and an
-        // empty in-flight ledger at run start (only fault runs touch
-        // them, matching the `FAULTS` gate of the serial loop).
-        if !lane.is_empty() {
+        // empty in-flight ledger at run start — armed by a compiled
+        // lane *or* battery churn, matching the serial `FAULTS` gate.
+        if params.faults {
             for m in &mut cell.dev.service_mult {
                 *m = 1.0;
             }
@@ -320,6 +321,81 @@ impl CellShard {
         }
     }
 
+    /// Shard-local mirror of the serial engine's depletion drain: each
+    /// freshly dead battery becomes a deterministic `Crash` through the
+    /// exact fault path (ledger sweep, re-dispatch / drop / shed), plus
+    /// an optional recharge episode. Runs at the same structural points
+    /// as the serial loop; this shard never borrows, so only its own
+    /// cell can hold pending depletions.
+    fn drain_depletions<R: Recorder>(&mut self, now: Nanos, rec: &mut R) {
+        while let Some(k) = self.cell.energy.pop_depleted() {
+            rec.on_event(&TelemetryEvent::BatteryDepleted {
+                cell: self.ci,
+                device: k,
+                t: now,
+            });
+            let mut lost = std::mem::take(&mut self.lost);
+            lost.clear();
+            apply_action(
+                FaultAction::Crash { device: k },
+                self.ci,
+                now,
+                &mut self.cell,
+                &mut self.rt,
+                &mut self.handover,
+                &mut lost,
+                rec,
+            );
+            if self.cell.energy.recharge_ns() > 0 {
+                let done = now.saturating_add(self.cell.energy.recharge_ns());
+                self.queue.schedule_at(done, Event::Recharge(self.ci, k));
+            }
+            for g in &lost {
+                debug_assert_eq!(g.req % self.n_cells, self.ci);
+                let st = &mut self.states[g.req / self.n_cells];
+                if st.dropped {
+                    continue;
+                }
+                match resolve_lost_group(
+                    g,
+                    st,
+                    self.ci,
+                    now,
+                    &mut self.cell,
+                    &self.dispatcher,
+                    &self.params,
+                    rec,
+                ) {
+                    LossResolution::Covered => {}
+                    LossResolution::Redispatched { waste } => {
+                        self.retries += 1;
+                        if waste > 0.0 {
+                            self.wastes.push((now, waste));
+                        }
+                    }
+                    LossResolution::Dropped { waste } => {
+                        if waste > 0.0 {
+                            self.wastes.push((now, waste));
+                        }
+                        self.dropped += 1;
+                        self.dropped_tokens += st.tokens as u64;
+                        self.outstanding -= 1;
+                        if self.params.deadline_s > 0.0 {
+                            self.slo_missed += 1;
+                        }
+                    }
+                    LossResolution::Shed { tokens, waste } => {
+                        self.sheds.push((now, tokens));
+                        if waste > 0.0 {
+                            self.wastes.push((now, waste));
+                        }
+                    }
+                }
+            }
+            self.lost = lost;
+        }
+    }
+
     /// One DES event — the shard-local mirror of the serial match arms.
     /// Under [`HandoverPolicy::None`] an arrival's re-home is the
     /// identity and block dispatch never reads neighbor cells, so empty
@@ -402,6 +478,34 @@ impl CellShard {
                     }
                 }
                 self.lost = lost;
+                if self.params.energy {
+                    // A crash re-dispatch above debits the surviving
+                    // replica: drain any battery it finished off.
+                    self.drain_depletions(now, rec);
+                }
+                return;
+            }
+            Event::Recharge(ci, k) => {
+                debug_assert_eq!(ci, self.ci);
+                // Shard-local mirror of the serial Recharge arm: the
+                // energy layer clears the depletion, then the ordinary
+                // fault `Recover` path brings the device back online.
+                // Recharge pops never advance `last_work_ns`.
+                if self.params.energy && self.cell.energy.recharge(k, now) {
+                    let mut lost = std::mem::take(&mut self.lost);
+                    lost.clear();
+                    apply_action(
+                        FaultAction::Recover { device: k },
+                        self.ci,
+                        now,
+                        &mut self.cell,
+                        &mut self.rt,
+                        &mut self.handover,
+                        &mut lost,
+                        rec,
+                    );
+                    self.lost = lost;
+                }
                 return;
             }
             Event::Arrive(i) => {
@@ -518,6 +622,12 @@ impl CellShard {
                     t: now,
                 });
             }
+        }
+        if self.params.faults && self.params.energy {
+            // Same structural point as the serial engine's post-block
+            // drain: batteries this block's debits finished off crash
+            // now, before any later event.
+            self.drain_depletions(now, rec);
         }
     }
 }
@@ -805,19 +915,43 @@ impl ClusterSim {
         // work instant (the same clamp the serial loop applies). Integer
         // sums are order-free, so per-shard accumulation is exact.
         let mut offline_ns: u64 = 0;
-        for (sh, _) in &shards {
-            if sh.lane.is_empty() {
-                continue;
-            }
-            offline_ns += sh.rt.offline_ns;
-            for (k, &on) in sh.cell.dev.online.iter().enumerate() {
-                if !on {
-                    offline_ns += last_work_ns.saturating_sub(sh.rt.offline_since[k]);
+        if self.params.faults {
+            // Armed by a compiled lane or battery churn — a depleted
+            // device is offline the same way a crashed one is.
+            for (sh, _) in &shards {
+                offline_ns += sh.rt.offline_ns;
+                for (k, &on) in sh.cell.dev.online.iter().enumerate() {
+                    if !on {
+                        offline_ns += last_work_ns.saturating_sub(sh.rt.offline_since[k]);
+                    }
                 }
             }
         }
 
         self.cells = shards.into_iter().map(|(sh, _)| sh.cell).collect();
+
+        // Energy teardown: identical to the serial engine — settle idle
+        // draw to the same global last-work instant, then total joules
+        // in cell index order so the f64 sum is byte-stable.
+        let mut energy_j = 0.0f64;
+        let mut energy_cells: Vec<f64> = Vec::new();
+        let mut depleted_cells: Vec<usize> = Vec::new();
+        let mut first_depletion: Nanos = 0;
+        let mut last_depletion: Nanos = 0;
+        if self.params.energy {
+            for cell in &mut self.cells {
+                cell.energy.settle_idle(last_work_ns);
+                let spent = cell.energy.spent_total();
+                energy_j += spent;
+                energy_cells.push(spent);
+                depleted_cells.push(cell.energy.depleted_count());
+                let f = cell.energy.first_depletion();
+                if f != 0 && (first_depletion == 0 || f < first_depletion) {
+                    first_depletion = f;
+                }
+                last_depletion = last_depletion.max(cell.energy.last_depletion());
+            }
+        }
 
         let makespan_s = secs_from_nanos(last_work_ns);
         let utilization = self
@@ -853,6 +987,11 @@ impl ClusterSim {
             hedges,
             wasted_tokens,
             offline_device_s: secs_from_nanos(offline_ns),
+            energy_j,
+            energy_cells,
+            depleted_cells,
+            first_depletion,
+            last_depletion,
         }
     }
 }
@@ -896,6 +1035,11 @@ mod tests {
         assert_eq!(a.hedges, b.hedges);
         assert_eq!(a.wasted_tokens, b.wasted_tokens);
         assert_eq!(a.offline_device_s, b.offline_device_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.energy_cells, b.energy_cells);
+        assert_eq!(a.depleted_cells, b.depleted_cells);
+        assert_eq!(a.first_depletion, b.first_depletion);
+        assert_eq!(a.last_depletion, b.last_depletion);
     }
 
     #[test]
@@ -937,6 +1081,46 @@ mod tests {
             let out = sim.run_sharded(&arr, threads);
             assert_outcomes_identical(&base, &out);
         }
+    }
+
+    #[test]
+    fn sharded_matches_serial_with_energy_and_battery_churn() {
+        let mut c = cfg(4);
+        c.cache_capacity = 2;
+        c.dispatch = crate::config::DispatchKind::LoadAware;
+        c.energy.compute_j_per_token = 0.5;
+        c.energy.tx_j_per_token = 0.05;
+        c.energy.rx_j_per_token = 0.02;
+        c.energy.idle_w = 0.5;
+        c.energy.battery_j = 100.0;
+        c.energy.recharge_s = 0.5;
+        c.energy.classes = crate::config::EnergyConfig::class_preset("mixed").unwrap();
+        c.energy_weight = 0.5;
+        let arr = arrivals(48, 14.0, 21);
+        let mut serial = ClusterSim::new(&c).unwrap();
+        let base = serial.run(&arr);
+        assert!(base.energy_j > 0.0, "energy model never billed");
+        for threads in [2, 4] {
+            let mut sim = ClusterSim::new(&c).unwrap();
+            let out = sim.run_sharded(&arr, threads);
+            assert_outcomes_identical(&base, &out);
+        }
+    }
+
+    #[test]
+    fn sharded_energy_off_matches_serial_pre_energy_shape() {
+        // Accounting-only energy (no battery) must not arm the fault
+        // machinery: events and outcomes stay identical across engines.
+        let mut c = cfg(3);
+        c.energy.compute_j_per_token = 1e-3;
+        let arr = arrivals(30, 9.0, 5);
+        let mut serial = ClusterSim::new(&c).unwrap();
+        let base = serial.run(&arr);
+        assert!(base.energy_j > 0.0);
+        assert_eq!(base.depleted_devices(), 0);
+        let mut sim = ClusterSim::new(&c).unwrap();
+        let out = sim.run_sharded(&arr, 3);
+        assert_outcomes_identical(&base, &out);
     }
 
     #[test]

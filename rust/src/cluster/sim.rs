@@ -69,13 +69,15 @@
 //! returns feeds back into the simulation.
 
 use super::dispatch::Dispatcher;
+use super::energy::CellEnergy;
 use super::event::{nanos_from_secs, secs_from_nanos, EventQueue, Nanos};
 use super::faults::{
-    self, apply_action, resolve_lost_group, CellFaults, FaultEvent, InflightGroup, LossResolution,
+    self, apply_action, resolve_lost_group, CellFaults, FaultAction, FaultEvent, InflightGroup,
+    LossResolution,
 };
 use super::handover::{HandoverCell, HandoverCoordinator};
 use super::placement::Placement;
-use crate::config::{ClusterConfig, ControlKind, DropPolicy, PolicyConfig};
+use crate::config::{ClusterConfig, ControlKind, DropPolicy, EnergyConfig, PolicyConfig};
 use crate::control::{
     make_plane, CellLoad, ControlOptions, ControlPlane, LinkState, SolverIntrospection,
 };
@@ -177,6 +179,10 @@ pub(super) struct Cell {
     /// has a non-empty fault plan: a device crash sweeps this ledger for
     /// the groups it loses (re-dispatch / drop / shed).
     pub(super) inflight: Vec<InflightGroup>,
+    /// Per-device energy state (battery, joule debits, depletion FIFO);
+    /// `enabled` is false — and every energy call branch-gated away —
+    /// when the config is empty.
+    pub(super) energy: CellEnergy,
 }
 
 /// One admitted local placement of a block, staged in pass 1 and
@@ -240,6 +246,7 @@ pub(super) fn sample_cell(cell: &Cell, now: Nanos) -> CellSample {
             .iter()
             .filter(|&&m| m != 1.0)
             .count(),
+        battery_min: cell.energy.battery_min_frac(),
     }
 }
 
@@ -276,6 +283,10 @@ pub(super) enum Event {
     ControlTick(usize),
     /// Next compiled fault-plan event on this cell's lane.
     Fault(usize),
+    /// A battery recharge episode of `(cell, device)` completes: the
+    /// battery refills and the device recovers (scheduled at depletion
+    /// when `recharge_s > 0`).
+    Recharge(usize, usize),
 }
 
 pub(super) struct ReqState {
@@ -371,6 +382,19 @@ pub struct ClusterOutcome {
     /// Device-seconds spent offline, summed over devices — the numerator
     /// of `1 - availability`.
     pub offline_device_s: f64,
+    /// Total joules billed across the fleet (compute + radio + idle
+    /// draw). 0 when the energy model is off.
+    pub energy_j: f64,
+    /// Per-cell joule totals, cell index order (empty when the energy
+    /// model is off).
+    pub energy_cells: Vec<f64>,
+    /// Per-cell count of devices whose battery hit zero at least once
+    /// (empty when the energy model is off).
+    pub depleted_cells: Vec<usize>,
+    /// Instant of the first battery depletion (0 = none).
+    pub first_depletion: Nanos,
+    /// Instant of the last battery depletion (0 = none).
+    pub last_depletion: Nanos,
 }
 
 impl ClusterOutcome {
@@ -489,6 +513,42 @@ impl ClusterOutcome {
         }
     }
 
+    /// Joules billed per completed token (0 when the energy model is
+    /// off or nothing completed).
+    pub fn joules_per_token(&self) -> f64 {
+        if self.completed_tokens == 0 {
+            0.0
+        } else {
+            self.energy_j / self.completed_tokens as f64
+        }
+    }
+
+    /// Devices whose battery hit zero at least once, fleet-wide.
+    pub fn depleted_devices(&self) -> usize {
+        self.depleted_cells.iter().sum()
+    }
+
+    /// Fleet lifetime: seconds until the first battery depletion, or
+    /// the full makespan when no battery died — the survival horizon
+    /// energy-aware dispatch tries to extend.
+    pub fn fleet_lifetime_s(&self) -> f64 {
+        if self.first_depletion == 0 {
+            self.makespan_s
+        } else {
+            secs_from_nanos(self.first_depletion)
+        }
+    }
+
+    /// Instant of the first battery depletion in seconds (0 = none).
+    pub fn first_depletion_s(&self) -> f64 {
+        secs_from_nanos(self.first_depletion)
+    }
+
+    /// Instant of the last battery depletion in seconds (0 = none).
+    pub fn last_depletion_s(&self) -> f64 {
+        secs_from_nanos(self.last_depletion)
+    }
+
     /// Mean fraction of device-time the fleet was online over the run:
     /// `1 - offline_device_s / (n_devices · makespan)`. 1.0 for an empty
     /// fault plan or a zero-length run.
@@ -527,9 +587,13 @@ pub(super) struct SimParams {
     pub(super) hedge: bool,
     /// Crash re-dispatch budget per request before the drop policy.
     pub(super) max_retries: u32,
-    /// The compiled fault plan is non-empty — gates the in-flight ledger
-    /// bookkeeping that only crash recovery reads.
+    /// Crash machinery is armed: the compiled fault plan is non-empty
+    /// *or* battery depletion can emit crashes — gates the in-flight
+    /// ledger bookkeeping that only crash recovery reads.
     pub(super) faults: bool,
+    /// The energy config is non-empty — selects the `ENERGY = true`
+    /// monomorphization (accounting, depletion drains, teardown totals).
+    pub(super) energy: bool,
 }
 
 /// The simulator. Construction borrows the config; [`ClusterSim::run`]
@@ -559,6 +623,11 @@ pub struct ClusterSim {
     /// Per-cell fault runtime (lane cursor, live multipliers, offline
     /// accounting), rebuilt with the cells.
     pub(super) cell_faults: Vec<CellFaults>,
+    /// Energy model compiled per cell at (re)construction.
+    energy_cfg: EnergyConfig,
+    /// Effective dispatch/control energy weight: forced to 0 when the
+    /// config is empty so `cell.energy.score()` is always `OFF`-shaped.
+    energy_weight: f64,
 }
 
 impl ClusterSim {
@@ -599,7 +668,8 @@ impl ClusterSim {
                 deadline_s: cfg.deadline_s,
                 hedge: cfg.hedge,
                 max_retries: cfg.max_retries,
-                faults: fault_lanes.iter().any(|l| !l.is_empty()),
+                faults: fault_lanes.iter().any(|l| !l.is_empty()) || cfg.energy.churn_possible(),
+                energy: !cfg.energy.is_empty(),
             },
             policy_cfg: cfg.policy.clone(),
             control: cfg.control,
@@ -617,6 +687,12 @@ impl ClusterSim {
             sync_window_s: None,
             fault_lanes,
             cell_faults: Vec::new(),
+            energy_cfg: cfg.energy.clone(),
+            energy_weight: if cfg.energy.is_empty() {
+                0.0
+            } else {
+                cfg.energy_weight
+            },
         };
         sim.build_cells()?;
         Ok(sim)
@@ -637,6 +713,11 @@ impl ClusterSim {
                 self.copts.clone(),
             );
             plane.placement().validate()?;
+            // The uniform reference share is read off the plane's initial
+            // split; the effective weight is 0 whenever the config is
+            // empty, so `score()` always degrades to the integer path.
+            let energy =
+                CellEnergy::new(&self.energy_cfg, self.energy_weight, n_dev, plane.bandwidth());
             self.cells.push(Cell {
                 plane,
                 policy: make_policy(
@@ -666,6 +747,7 @@ impl ClusterSim {
                 sel_scratch: SelectScratch::default(),
                 last_solve_backlog_s: 0.0,
                 inflight: Vec::new(),
+                energy,
             });
         }
         self.cell_faults = self
@@ -794,17 +876,21 @@ impl ClusterSim {
         arrivals: &[crate::workload::Arrival],
         probe: &mut P,
     ) -> ClusterOutcome {
-        // An empty fault plan monomorphizes to the exact pre-fault hot
-        // path: `FAULTS = false` compiles the ledger/barrier bookkeeping
-        // away, the same discipline as `NullProbe` for telemetry.
-        if self.fault_lanes.iter().all(|l| l.is_empty()) {
-            self.run_inner::<P, false>(arrivals, probe)
-        } else {
-            self.run_inner::<P, true>(arrivals, probe)
+        // An empty fault plan / energy config monomorphizes to the exact
+        // pre-fault / pre-energy hot path: `FAULTS = false` compiles the
+        // ledger/barrier bookkeeping away and `ENERGY = false` the joule
+        // accounting, the same discipline as `NullProbe` for telemetry.
+        // (`faults` is also armed by a battery that can deplete — a
+        // depletion is a crash and needs the same recovery machinery.)
+        match (self.params.faults, self.params.energy) {
+            (false, false) => self.run_inner::<P, false, false>(arrivals, probe),
+            (true, false) => self.run_inner::<P, true, false>(arrivals, probe),
+            (false, true) => self.run_inner::<P, false, true>(arrivals, probe),
+            (true, true) => self.run_inner::<P, true, true>(arrivals, probe),
         }
     }
 
-    fn run_inner<P: Probe, const FAULTS: bool>(
+    fn run_inner<P: Probe, const FAULTS: bool, const ENERGY: bool>(
         &mut self,
         arrivals: &[crate::workload::Arrival],
         probe: &mut P,
@@ -897,6 +983,77 @@ impl ClusterSim {
         // detlint: allow(hotpath-alloc) capacity-0 construction; grows only under a sampling probe, then reused
         let mut samples: Vec<CellSample> = Vec::new();
 
+        // Drain one cell's freshly depleted batteries: each becomes a
+        // deterministic `Crash` through the exact fault path (ledger
+        // sweep, re-dispatch / drop / shed, barrier chase), plus an
+        // optional recharge episode. FIFO over the order batteries died;
+        // a re-dispatch may deplete the *next* battery, which the same
+        // loop then drains — both engines run this at identical
+        // structural points, so the cascade order is canonical.
+        macro_rules! drain_depletions {
+            ($ci:expr, $now:expr) => {{
+                let ci: usize = $ci;
+                let at: Nanos = $now;
+                while let Some(k) = self.cells[ci].energy.pop_depleted() {
+                    probe.on_event(&TelemetryEvent::BatteryDepleted {
+                        cell: ci,
+                        device: k,
+                        t: at,
+                    });
+                    lost.clear();
+                    apply_action(
+                        FaultAction::Crash { device: k },
+                        ci,
+                        at,
+                        &mut self.cells[ci],
+                        &mut self.cell_faults[ci],
+                        &mut self.handover,
+                        &mut lost,
+                        probe,
+                    );
+                    if self.cells[ci].energy.recharge_ns() > 0 {
+                        let done = at.saturating_add(self.cells[ci].energy.recharge_ns());
+                        queue.schedule_at_in_lane(done, ci as u32, Event::Recharge(ci, k));
+                    }
+                    for g in &lost {
+                        let st = &mut states[g.req];
+                        if st.dropped {
+                            continue;
+                        }
+                        match resolve_lost_group(
+                            g,
+                            st,
+                            ci,
+                            at,
+                            &mut self.cells[ci],
+                            &self.dispatcher,
+                            &self.params,
+                            probe,
+                        ) {
+                            LossResolution::Covered => {}
+                            LossResolution::Redispatched { waste } => {
+                                retries += 1;
+                                wasted_tokens += waste;
+                            }
+                            LossResolution::Dropped { waste } => {
+                                wasted_tokens += waste;
+                                dropped += 1;
+                                dropped_tokens += st.tokens as u64;
+                                outstanding[st.cell] -= 1;
+                                if self.params.deadline_s > 0.0 {
+                                    slo_missed += 1;
+                                }
+                            }
+                            LossResolution::Shed { tokens, waste } => {
+                                shed_tokens += tokens;
+                                wasted_tokens += waste;
+                            }
+                        }
+                    }
+                }
+            }};
+        }
+
         while let Some((now, ev)) = queue.pop() {
             while next_sample <= now {
                 self.snapshot_cells(next_sample, &mut samples);
@@ -979,6 +1136,34 @@ impl ClusterSim {
                                 wasted_tokens += waste;
                             }
                         }
+                    }
+                    if ENERGY {
+                        // A crash re-dispatch above debits the surviving
+                        // replica: drain any battery it finished off.
+                        drain_depletions!(ci, now);
+                    }
+                    continue;
+                }
+                Event::Recharge(ci, k) => {
+                    // A recharge episode completes: the energy layer
+                    // clears the depletion (so it no longer blocks
+                    // recovery), then the ordinary fault `Recover` path
+                    // brings the device back online and re-solves.
+                    // Stale pops (reset in between) recharge nothing.
+                    // Recharge pops count in `events` but never advance
+                    // `last_work_ns`.
+                    if ENERGY && self.cells[ci].energy.recharge(k, now) {
+                        lost.clear();
+                        apply_action(
+                            FaultAction::Recover { device: k },
+                            ci,
+                            now,
+                            &mut self.cells[ci],
+                            &mut self.cell_faults[ci],
+                            &mut self.handover,
+                            &mut lost,
+                            probe,
+                        );
                     }
                     continue;
                 }
@@ -1107,6 +1292,16 @@ impl ClusterSim {
                     });
                 }
             }
+            if FAULTS && ENERGY {
+                // Batteries this block's debits finished off crash *now*,
+                // before any later event, in cell index order — a
+                // borrowed group may have drained a neighbor's battery.
+                // (The sharded engine never borrows; it drains its own
+                // cell at the same structural point.)
+                for ci in 0..n_cells {
+                    drain_depletions!(ci, now);
+                }
+            }
         }
 
         // Offline device-seconds: closed outage intervals accumulated at
@@ -1122,6 +1317,31 @@ impl ClusterSim {
                         offline_ns += last_work_ns.saturating_sub(rt.offline_since[k]);
                     }
                 }
+            }
+        }
+
+        // Energy teardown: settle idle draw to the same last-work
+        // instant in both engines, then total joules in cell index
+        // order (f64 sums stay byte-stable because the order is fixed).
+        let mut energy_j = 0.0f64;
+        // detlint: allow(hotpath-alloc) one-time teardown: outcome assembly after the loop drains
+        let mut energy_cells: Vec<f64> = Vec::new();
+        // detlint: allow(hotpath-alloc) one-time teardown: outcome assembly after the loop drains
+        let mut depleted_cells: Vec<usize> = Vec::new();
+        let mut first_depletion: Nanos = 0;
+        let mut last_depletion: Nanos = 0;
+        if ENERGY {
+            for cell in &mut self.cells {
+                cell.energy.settle_idle(last_work_ns);
+                let spent = cell.energy.spent_total();
+                energy_j += spent;
+                energy_cells.push(spent);
+                depleted_cells.push(cell.energy.depleted_count());
+                let f = cell.energy.first_depletion();
+                if f != 0 && (first_depletion == 0 || f < first_depletion) {
+                    first_depletion = f;
+                }
+                last_depletion = last_depletion.max(cell.energy.last_depletion());
             }
         }
 
@@ -1164,6 +1384,11 @@ impl ClusterSim {
             hedges,
             wasted_tokens,
             offline_device_s: secs_from_nanos(offline_ns),
+            energy_j,
+            energy_cells,
+            depleted_cells,
+            first_depletion,
+            last_depletion,
         }
     }
 
@@ -1247,6 +1472,19 @@ pub(super) fn control_tick_at<P: Probe>(cell: &mut Cell, ci: usize, now: Nanos, 
             cell.demand[k] = backlog_tokens.max(cell.dev.served_tokens[k]);
         }
     }
+    // Energy-aware control: scale the demand the P3 re-solve sees away
+    // from drained batteries — a device at fraction `f` keeps
+    // `1 - w·(1-f)` of its demand (floored so a dying device never
+    // reads as zero and starves the solver of its real load). Weight 0
+    // (or energy off) leaves the vector untouched bit-for-bit.
+    if cell.energy.enabled && cell.energy.weight > 0.0 {
+        cell.energy.refresh_scores(cell.plane.bandwidth());
+        let w = cell.energy.weight.min(1.0);
+        let s = cell.energy.score();
+        for k in 0..n_dev {
+            cell.demand[k] *= (1.0 - w * (1.0 - s.frac[k])).max(0.05);
+        }
+    }
     cell.plane.on_epoch(&cell.demand, &cell.expert_tokens);
     // The drift reference resets on every solve attempt (even one
     // hysteresis suppressed), so the trigger measures *new* drift
@@ -1312,6 +1550,13 @@ pub(super) fn start_block_at<P: Probe>(
         &mut cell.gate_spare,
         &mut cell.gate_offsets,
     );
+    // Energy-aware dispatch: refresh the per-device joules/token and
+    // battery-fraction caches from the live bandwidth split once per
+    // block (weight 0 — or energy off — never reads them; the choosers
+    // then take the exact integer path).
+    if cell.energy.enabled && cell.energy.weight > 0.0 {
+        cell.energy.refresh_scores(cell.plane.bandwidth());
+    }
     // Service times and placement come from the control plane *now*:
     // an epoch re-solve between blocks redirects this dispatch.
     let t_per_token = cell.plane.t_per_token();
@@ -1414,6 +1659,7 @@ pub(super) fn start_block_at<P: Probe>(
                 &cell.dev.scratch_busy,
                 t_per_token,
                 &cell.dev.online,
+                cell.energy.score(),
             ) {
                 Some(k) => k,
                 None => {
@@ -1496,6 +1742,7 @@ pub(super) fn start_block_at<P: Probe>(
                 &cell.dev.scratch_busy,
                 t_per_token,
                 &cell.dev.online,
+                cell.energy.score(),
             ) {
                 Some(k) => k,
                 None => {
@@ -1554,6 +1801,7 @@ pub(super) fn start_block_at<P: Probe>(
                     t_per_token,
                     &cell.dev.online,
                     k,
+                    cell.energy.score(),
                 ) {
                     let service2 = q * t_per_token[k2] * cell.dev.service_mult[k2];
                     let start2 = cell.dev.scratch_busy[k2].max(now);
@@ -1606,6 +1854,7 @@ pub(super) fn start_block_at<P: Probe>(
                 &cell.dev.scratch_busy,
                 t_per_token,
                 &cell.dev.online,
+                cell.energy.score(),
             ) {
                 shed -= q;
                 // Un-count the shed-side demand: the commit pass
@@ -1660,6 +1909,16 @@ pub(super) fn start_block_at<P: Probe>(
             done: g.done,
         });
     }
+    // Energy: every committed group debits its serving device under the
+    // live bandwidth split — hedged duplicates burn real joules like
+    // they burn real device time. Depletions queue in the energy FIFO;
+    // the engines drain them into crashes right after this block.
+    if cell.energy.enabled {
+        let bw = cell.plane.bandwidth();
+        for g in &cell.placed {
+            cell.energy.debit(g.device, g.tokens, bw, now);
+        }
+    }
     // Fault runs track committed groups in the in-flight ledger so a
     // device crash can find and re-dispatch them. (Borrowed cross-cell
     // groups are not tracked: `BorrowExpert` runs serial-only and a
@@ -1698,6 +1957,13 @@ pub(super) fn start_block_at<P: Probe>(
         let back_s = handover.backhaul_pair(s.cell, st.cell);
         let serving = super::handover::cell_mut(st.cell, s.cell, &mut *left, &mut *right);
         serving.commit_remote(s.device, s.expert, s.tokens, s.service_s);
+        // The borrowed group's joules land on the *serving* cell's
+        // device, under that cell's bandwidth split — energy follows
+        // the work, like the rest of the remote accounting.
+        if serving.energy.enabled {
+            let bw = serving.plane.bandwidth();
+            serving.energy.debit(s.device, s.tokens, bw, now);
+        }
         cell.policy
             .observe(s.expert, s.service_s / s.tokens + (out_s + back_s));
         cell.expert_tokens[s.expert] += s.tokens;
@@ -2080,6 +2346,76 @@ mod tests {
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.control, b.control);
         assert_eq!(a.latency_ms.steady_values(), b.latency_ms.steady_values());
+    }
+
+    #[test]
+    fn energy_off_outcome_reports_zero() {
+        let out = run_with(small_cfg(), 1.0, 20, 0);
+        assert_eq!(out.energy_j, 0.0);
+        assert_eq!(out.joules_per_token(), 0.0);
+        assert!(out.energy_cells.is_empty());
+        assert_eq!(out.depleted_devices(), 0);
+        assert_eq!(out.first_depletion, 0);
+        assert_eq!(out.fleet_lifetime_s(), out.makespan_s);
+    }
+
+    #[test]
+    fn energy_accounting_totals_are_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.energy.compute_j_per_token = 1e-3;
+        cfg.energy.tx_j_per_token = 2e-4;
+        cfg.energy.rx_j_per_token = 1e-4;
+        let a = run_with(cfg.clone(), 2.0, 30, 3);
+        let b = run_with(cfg, 2.0, 30, 3);
+        assert!(a.energy_j > 0.0, "served tokens billed no joules");
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.energy_cells, b.energy_cells);
+        assert_eq!(a.energy_cells.len(), 1);
+        assert!(a.joules_per_token() > 0.0);
+        assert_eq!(a.depleted_devices(), 0, "no battery configured");
+        assert_eq!(a.fleet_lifetime_s(), a.makespan_s);
+        // Identical traffic, identical event count: billing is passive.
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn battery_depletion_crashes_and_reports_lifetime() {
+        let mut cfg = small_cfg();
+        cfg.cache_capacity = 2; // replicas, so crashed work can re-home
+        cfg.dispatch = DispatchKind::LoadAware;
+        cfg.energy.compute_j_per_token = 1.0;
+        cfg.energy.battery_j = 50.0;
+        let out = run_with(cfg, 4.0, 60, 1);
+        assert!(out.depleted_devices() > 0, "batteries never depleted");
+        assert!(out.first_depletion > 0);
+        assert!(out.last_depletion >= out.first_depletion);
+        assert!(out.fleet_lifetime_s() < out.makespan_s);
+        assert_eq!(out.arrived, 60);
+        assert_eq!(out.completed + out.dropped, 60);
+        assert_eq!(out.in_flight, 0);
+    }
+
+    #[test]
+    fn recharge_brings_devices_back() {
+        let mut cfg = small_cfg();
+        cfg.cache_capacity = 2;
+        cfg.dispatch = DispatchKind::LoadAware;
+        cfg.energy.compute_j_per_token = 1.0;
+        cfg.energy.battery_j = 50.0;
+        let dead = run_with(cfg.clone(), 4.0, 60, 1);
+        cfg.energy.recharge_s = 0.05;
+        let recharged = run_with(cfg, 4.0, 60, 1);
+        assert!(dead.depleted_devices() > 0);
+        assert!(recharged.depleted_devices() > 0);
+        // Recharged devices come back online, so the fleet spends
+        // strictly fewer device-seconds offline than permanent death.
+        assert!(
+            recharged.offline_device_s < dead.offline_device_s,
+            "recharge {} !< permanent {}",
+            recharged.offline_device_s,
+            dead.offline_device_s
+        );
+        assert_eq!(recharged.completed + recharged.dropped, 60);
     }
 
     #[test]

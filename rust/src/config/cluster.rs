@@ -8,6 +8,7 @@
 //! and caching resources" constraint, Eq. (7)); and the dispatch policy
 //! that picks among expert replicas at serving time.
 
+use super::energy::EnergyConfig;
 use super::faults::FaultConfig;
 use super::{AllocatorKind, ChannelConfig, DeviceConfig, ModelDims, PolicyConfig};
 use crate::util::Json;
@@ -262,6 +263,13 @@ pub struct ClusterConfig {
     /// Re-dispatch budget per request when a crash loses its queued or
     /// in-service groups (0 = fall straight through to the drop policy).
     pub max_retries: u32,
+    /// Per-device energy model (joules/token, battery, idle draw). The
+    /// default model is empty and compiles away.
+    pub energy: EnergyConfig,
+    /// Weight of the energy term in the dispatch objective: 0 = pure
+    /// latency (the pre-energy scoring, bit-equal); > 0 trades predicted
+    /// finish time against joules/token and remaining battery.
+    pub energy_weight: f64,
     /// Fraction of completed requests discarded as warm-up before
     /// steady-state latency percentiles are computed.
     pub warmup_frac: f64,
@@ -349,6 +357,8 @@ impl ClusterConfig {
             deadline_s: 0.0,
             hedge: false,
             max_retries: 2,
+            energy: EnergyConfig::default(),
+            energy_weight: 0.0,
             warmup_frac: 0.2,
             gate_sharpness: 1.5,
             gate_bias: 0.4,
@@ -444,6 +454,12 @@ impl ClusterConfig {
         if self.max_retries != 2 {
             fields.push(("max_retries", Json::Num(self.max_retries as f64)));
         }
+        if self.energy != EnergyConfig::default() {
+            fields.push(("energy", self.energy.to_json()));
+        }
+        if self.energy_weight != 0.0 {
+            fields.push(("energy_weight", Json::Num(self.energy_weight)));
+        }
         fields.extend([
             ("warmup_frac", Json::Num(self.warmup_frac)),
             ("gate_sharpness", Json::Num(self.gate_sharpness)),
@@ -516,6 +532,11 @@ impl ClusterConfig {
                 Some(v) => v.as_u64()? as u32,
                 None => 2,
             },
+            energy: match j.opt("energy") {
+                Some(v) => EnergyConfig::from_json(v)?,
+                None => EnergyConfig::default(),
+            },
+            energy_weight: opt_f64("energy_weight", 0.0)?,
             warmup_frac: j.get("warmup_frac")?.as_f64()?,
             gate_sharpness: j.get("gate_sharpness")?.as_f64()?,
             gate_bias: j.get("gate_bias")?.as_f64()?,
@@ -563,6 +584,11 @@ impl ClusterConfig {
         );
         let device_counts: Vec<usize> = self.cells.iter().map(|c| c.devices.len()).collect();
         self.faults.validate(&device_counts)?;
+        self.energy.validate()?;
+        anyhow::ensure!(
+            self.energy_weight.is_finite() && self.energy_weight >= 0.0,
+            "energy_weight must be non-negative and finite (0 = pure latency)"
+        );
         if let Some(m) = &self.backhaul_matrix {
             anyhow::ensure!(
                 m.len() == self.cells.len(),
@@ -888,6 +914,47 @@ mod tests {
             duration_s: 0.0,
             mult: 1.0,
         });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn energy_fields_absent_keep_default_bytes() {
+        let cfg = ClusterConfig::edge_default();
+        let text = cfg.to_json().to_string();
+        // The default (empty) energy model is omitted entirely, so
+        // pre-energy configs serialize byte-identically to before.
+        assert!(!text.contains("\"energy\""));
+        assert!(!text.contains("energy_weight"));
+        let back = ClusterConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn energy_fields_round_trip_through_json() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.energy.compute_j_per_token = 0.02;
+        cfg.energy.tx_j_per_token = 0.004;
+        cfg.energy.battery_j = 150.0;
+        cfg.energy.recharge_s = 5.0;
+        cfg.energy.classes = EnergyConfig::class_preset("mixed").unwrap();
+        cfg.energy_weight = 0.5;
+        cfg.validate().unwrap();
+        let back =
+            ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn validation_rejects_bad_energy_fields() {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.energy.compute_j_per_token = -0.5;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("compute_j_per_token"), "{err}");
+
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.energy_weight = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.energy_weight = -1.0;
         assert!(cfg.validate().is_err());
     }
 

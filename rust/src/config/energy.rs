@@ -1,0 +1,354 @@
+//! Energy-model configuration: per-device joules/token and battery state
+//! for the cluster DES.
+//!
+//! An [`EnergyConfig`] describes *what serving costs* in joules — a compute
+//! cost per token, radio TX/RX costs per token (scaled by the device's
+//! current bandwidth share: a thin slice means longer airtime and more
+//! radio energy), an optional battery capacity (0 = mains powered), idle
+//! draw, and an optional recharge episode length (0 = depletion is
+//! permanent death). Heterogeneous fleets come from [`EnergyClass`]
+//! multipliers assigned round-robin over a cell's devices
+//! (`device k → classes[k % len]`).
+//!
+//! The config layer only holds parameters and validates them;
+//! `cluster::energy` compiles a config into per-cell [`CellEnergy`]
+//! accounting state. An all-default config is *empty*
+//! ([`EnergyConfig::is_empty`]) and the DES monomorphizes it away entirely,
+//! so the zero-energy hot path is bit-equal to the pre-energy engine —
+//! the same discipline as `NullProbe` and empty fault plans.
+//!
+//! [`CellEnergy`]: crate::cluster::energy::CellEnergy
+
+use crate::util::Json;
+use anyhow::Result;
+
+/// One device class in a heterogeneous fleet: multipliers over the base
+/// per-token costs and battery capacity. Device `k` of a cell gets class
+/// `k % classes.len()`; an empty class list means a uniform fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyClass {
+    /// Human-readable name ("jetson", "phone", …).
+    pub name: String,
+    /// Multiplier on `compute_j_per_token`.
+    pub compute_mult: f64,
+    /// Multiplier on `tx_j_per_token` + `rx_j_per_token`.
+    pub radio_mult: f64,
+    /// Multiplier on `battery_j`.
+    pub battery_mult: f64,
+}
+
+impl EnergyClass {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("compute_mult", Json::Num(self.compute_mult)),
+            ("radio_mult", Json::Num(self.radio_mult)),
+            ("battery_mult", Json::Num(self.battery_mult)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let opt = |key: &str| -> Result<f64> {
+            match j.opt(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(1.0),
+            }
+        };
+        Ok(EnergyClass {
+            name: j.get("name")?.as_str()?.to_string(),
+            compute_mult: opt("compute_mult")?,
+            radio_mult: opt("radio_mult")?,
+            battery_mult: opt("battery_mult")?,
+        })
+    }
+}
+
+/// Per-device energy model parameters.
+///
+/// All-zero defaults mean "no energy model": the DES monomorphizes the
+/// accounting away and stays bit-equal to the pre-energy engine. Costs are
+/// per *token*; radio cost scales with the reciprocal of the device's
+/// bandwidth share relative to the cell's uniform split (a device holding
+/// half the uniform share pays twice the radio energy per token).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyConfig {
+    /// Compute energy per served token, joules. 0 disables compute cost.
+    pub compute_j_per_token: f64,
+    /// Uplink (device→BS) radio energy per token at the uniform bandwidth
+    /// share, joules.
+    pub tx_j_per_token: f64,
+    /// Downlink (BS→device) radio energy per token at the uniform bandwidth
+    /// share, joules.
+    pub rx_j_per_token: f64,
+    /// Battery capacity per device, joules. 0 = mains powered (accounting
+    /// only, no depletion, no churn).
+    pub battery_j: f64,
+    /// Idle draw per device, watts (debited over sim time up to the last
+    /// completed work instant).
+    pub idle_w: f64,
+    /// Recharge episode length after depletion, seconds. 0 = depletion is
+    /// permanent (the device never comes back).
+    pub recharge_s: f64,
+    /// Device classes (round-robin over each cell's devices). Empty =
+    /// uniform fleet with unit multipliers.
+    pub classes: Vec<EnergyClass>,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            compute_j_per_token: 0.0,
+            tx_j_per_token: 0.0,
+            rx_j_per_token: 0.0,
+            battery_j: 0.0,
+            idle_w: 0.0,
+            recharge_s: 0.0,
+            classes: Vec::new(),
+        }
+    }
+}
+
+impl EnergyConfig {
+    /// True when the model debits nothing: the DES uses this to
+    /// monomorphize the energy machinery away entirely.
+    pub fn is_empty(&self) -> bool {
+        self.compute_j_per_token == 0.0
+            && self.tx_j_per_token == 0.0
+            && self.rx_j_per_token == 0.0
+            && self.idle_w == 0.0
+    }
+
+    /// True when batteries can actually deplete (and hence emit crashes):
+    /// this arms the DES fault machinery even with no fault plan.
+    pub fn churn_possible(&self) -> bool {
+        !self.is_empty() && self.battery_j > 0.0
+    }
+
+    /// Named class presets for the `device_class` experiment axis.
+    ///
+    /// `uniform` is a single explicit unit class (distinct from the empty
+    /// default, so the axis is never a silent no-op); `mixed` is the
+    /// paper-testbed-flavoured Jetson-vs-phone split: Jetson-class devices
+    /// serve at the base joule cost on a double battery, phone-class
+    /// devices burn 2.5x compute / 1.5x radio joules per token on a
+    /// single battery.
+    pub fn class_preset(name: &str) -> Result<Vec<EnergyClass>> {
+        match name {
+            "uniform" => Ok(vec![EnergyClass {
+                name: "uniform".to_string(),
+                compute_mult: 1.0,
+                radio_mult: 1.0,
+                battery_mult: 1.0,
+            }]),
+            "mixed" => Ok(vec![
+                EnergyClass {
+                    name: "jetson".to_string(),
+                    compute_mult: 1.0,
+                    radio_mult: 1.0,
+                    battery_mult: 2.0,
+                },
+                EnergyClass {
+                    name: "phone".to_string(),
+                    compute_mult: 2.5,
+                    radio_mult: 1.5,
+                    battery_mult: 1.0,
+                },
+            ]),
+            other => anyhow::bail!(
+                "unknown device_class preset '{other}' (expected uniform|mixed)"
+            ),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("compute_j_per_token", self.compute_j_per_token),
+            ("tx_j_per_token", self.tx_j_per_token),
+            ("rx_j_per_token", self.rx_j_per_token),
+            ("battery_j", self.battery_j),
+            ("idle_w", self.idle_w),
+            ("recharge_s", self.recharge_s),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "energy.{name} must be finite and >= 0, got {v}"
+            );
+        }
+        if self.recharge_s > 0.0 {
+            anyhow::ensure!(
+                self.battery_j > 0.0,
+                "energy.recharge_s is set but energy.battery_j is 0 (mains-powered \
+                 devices never deplete, so there is nothing to recharge)"
+            );
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            anyhow::ensure!(
+                !c.name.is_empty(),
+                "energy.classes[{i}].name must be non-empty"
+            );
+            for (field, v) in [
+                ("compute_mult", c.compute_mult),
+                ("radio_mult", c.radio_mult),
+                ("battery_mult", c.battery_mult),
+            ] {
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "energy.classes[{i}].{field} must be finite and >= 0, got {v}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("compute_j_per_token", Json::Num(self.compute_j_per_token)),
+            ("tx_j_per_token", Json::Num(self.tx_j_per_token)),
+            ("rx_j_per_token", Json::Num(self.rx_j_per_token)),
+            ("battery_j", Json::Num(self.battery_j)),
+            ("idle_w", Json::Num(self.idle_w)),
+            ("recharge_s", Json::Num(self.recharge_s)),
+            (
+                "classes",
+                Json::Arr(self.classes.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = EnergyConfig::default();
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            match j.opt(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(default),
+            }
+        };
+        let classes = match j.opt("classes") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(EnergyClass::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(EnergyConfig {
+            compute_j_per_token: opt_f64("compute_j_per_token", d.compute_j_per_token)?,
+            tx_j_per_token: opt_f64("tx_j_per_token", d.tx_j_per_token)?,
+            rx_j_per_token: opt_f64("rx_j_per_token", d.rx_j_per_token)?,
+            battery_j: opt_f64("battery_j", d.battery_j)?,
+            idle_w: opt_f64("idle_w", d.idle_w)?,
+            recharge_s: opt_f64("recharge_s", d.recharge_s)?,
+            classes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_empty_and_valid() {
+        let e = EnergyConfig::default();
+        assert!(e.is_empty());
+        assert!(!e.churn_possible());
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn single_knob_configs_validate() {
+        let mut e = EnergyConfig::default();
+        e.compute_j_per_token = 0.01;
+        e.validate().unwrap();
+        assert!(!e.is_empty());
+        assert!(!e.churn_possible()); // no battery → accounting only
+
+        let mut e = EnergyConfig::default();
+        e.tx_j_per_token = 0.002;
+        e.battery_j = 50.0;
+        e.validate().unwrap();
+        assert!(e.churn_possible());
+    }
+
+    #[test]
+    fn battery_alone_is_inert() {
+        // A battery with nothing debiting it never depletes.
+        let mut e = EnergyConfig::default();
+        e.battery_j = 100.0;
+        e.validate().unwrap();
+        assert!(e.is_empty());
+        assert!(!e.churn_possible());
+    }
+
+    #[test]
+    fn nan_and_negative_rejected_with_field_names() {
+        let mut e = EnergyConfig::default();
+        e.compute_j_per_token = f64::NAN;
+        let err = e.validate().unwrap_err();
+        assert!(err.to_string().contains("compute_j_per_token"), "{err}");
+
+        let mut e = EnergyConfig::default();
+        e.battery_j = -1.0;
+        let err = e.validate().unwrap_err();
+        assert!(err.to_string().contains("battery_j"), "{err}");
+
+        let mut e = EnergyConfig::default();
+        e.idle_w = f64::INFINITY;
+        let err = e.validate().unwrap_err();
+        assert!(err.to_string().contains("idle_w"), "{err}");
+    }
+
+    #[test]
+    fn recharge_without_battery_rejected() {
+        let mut e = EnergyConfig::default();
+        e.compute_j_per_token = 0.01;
+        e.recharge_s = 5.0;
+        let err = e.validate().unwrap_err();
+        assert!(err.to_string().contains("recharge_s"), "{err}");
+    }
+
+    #[test]
+    fn bad_class_rejected_with_index() {
+        let mut e = EnergyConfig::default();
+        e.classes = EnergyConfig::class_preset("mixed").unwrap();
+        e.classes[1].radio_mult = -2.0;
+        let err = e.validate().unwrap_err();
+        assert!(err.to_string().contains("classes[1].radio_mult"), "{err}");
+    }
+
+    #[test]
+    fn class_presets() {
+        let u = EnergyConfig::class_preset("uniform").unwrap();
+        assert_eq!(u.len(), 1);
+        assert_eq!(u[0].compute_mult, 1.0);
+        let m = EnergyConfig::class_preset("mixed").unwrap();
+        assert_eq!(m.len(), 2);
+        assert!(m[1].compute_mult > m[0].compute_mult);
+        assert!(EnergyConfig::class_preset("quantum").is_err());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let mut e = EnergyConfig::default();
+        e.compute_j_per_token = 0.02;
+        e.tx_j_per_token = 0.004;
+        e.rx_j_per_token = 0.001;
+        e.battery_j = 120.0;
+        e.idle_w = 0.25;
+        e.recharge_s = 4.0;
+        e.classes = EnergyConfig::class_preset("mixed").unwrap();
+        let text = e.to_json().to_string();
+        let back = EnergyConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn from_json_defaults_missing_fields() {
+        let back =
+            EnergyConfig::from_json(&Json::parse(r#"{"compute_j_per_token": 0.5}"#).unwrap())
+                .unwrap();
+        assert_eq!(back.compute_j_per_token, 0.5);
+        assert_eq!(back.battery_j, 0.0);
+        assert!(back.classes.is_empty());
+    }
+}

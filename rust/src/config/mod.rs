@@ -12,12 +12,14 @@
 //! over WiFi).
 
 pub mod cluster;
+pub mod energy;
 pub mod faults;
 mod presets; // preset constructors are inherent impls on SystemConfig
 
 pub use cluster::{
     CellConfig, ClusterConfig, ControlKind, DispatchKind, DropPolicy, HandoverPolicy,
 };
+pub use energy::{EnergyClass, EnergyConfig};
 pub use faults::{FaultConfig, FaultKind, ScheduledFault};
 
 use crate::util::Json;

@@ -18,6 +18,13 @@
 //! each plane owns a [`SolverWorkspace`] plus staging buffers: after
 //! construction, a tick (re-solve + service-time refresh + hysteresis
 //! bookkeeping) performs no heap allocation on the solver path.
+//!
+//! The planes are energy-agnostic by design: with
+//! [`crate::config::ClusterConfig::energy_weight`] > 0 the DES biases
+//! the *demand vector* it hands an adaptive tick away from devices with
+//! drained batteries (see [`crate::cluster::energy`]) before calling
+//! in here, so the P3 re-solve shifts bandwidth and placement toward
+//! charged devices without the solver itself learning a joule term.
 
 use super::state::LinkState;
 use crate::cluster::placement::Placement;

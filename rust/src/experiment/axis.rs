@@ -2,7 +2,8 @@
 //!
 //! An [`Axis`] names a scenario knob (arrival rate, control plane,
 //! handover policy, backhaul, queue limit, cache capacity, cell/device
-//! count, seed, epoch cadence, hysteresis, backlog-delta trigger); an
+//! count, seed, epoch cadence, hysteresis, backlog-delta trigger,
+//! energy weight, battery capacity, device-class preset); an
 //! [`AxisValue`] is one setting of it. [`Axis::apply`] is the *single*
 //! place any axis mutates a [`Scenario`] — adding a knob to the
 //! experiment API is one new variant plus one `apply` arm, not a third
@@ -11,7 +12,7 @@
 //! into validated axes.
 
 use super::grid::Scenario;
-use crate::config::{ControlKind, DispatchKind, DropPolicy, HandoverPolicy};
+use crate::config::{ControlKind, DispatchKind, DropPolicy, EnergyConfig, HandoverPolicy};
 use anyhow::Result;
 
 /// A sweepable scenario knob. Numeric axes carry [`AxisValue::Num`]
@@ -64,6 +65,15 @@ pub enum Axis {
     Deadline,
     /// Hedged dispatch on deadline pressure (`on` / `off`).
     Hedge,
+    /// Weight of the energy term in the dispatch objective (0 = pure
+    /// latency); see [`crate::config::ClusterConfig::energy_weight`].
+    EnergyWeight,
+    /// Per-device battery capacity in joules (0 = mains-powered); see
+    /// [`crate::config::EnergyConfig::battery_j`].
+    Battery,
+    /// Device-class preset (`uniform` / `mixed`) assigning heterogeneous
+    /// energy multipliers round-robin across each cell's fleet.
+    DeviceClass,
 }
 
 /// One setting of an axis.
@@ -138,7 +148,7 @@ fn as_seed(v: &AxisValue) -> Result<u64> {
 
 impl Axis {
     /// Every axis, in the order the CLI help lists them.
-    pub fn all() -> [Axis; 19] {
+    pub fn all() -> [Axis; 22] {
         [
             Axis::ArrivalRate,
             Axis::ControlPlane,
@@ -159,6 +169,9 @@ impl Axis {
             Axis::Straggler,
             Axis::Deadline,
             Axis::Hedge,
+            Axis::EnergyWeight,
+            Axis::Battery,
+            Axis::DeviceClass,
         ]
     }
 
@@ -184,6 +197,9 @@ impl Axis {
             Axis::Straggler => "straggler",
             Axis::Deadline => "deadline",
             Axis::Hedge => "hedge",
+            Axis::EnergyWeight => "energy_weight",
+            Axis::Battery => "battery",
+            Axis::DeviceClass => "device_class",
         }
     }
 
@@ -210,6 +226,9 @@ impl Axis {
             Axis::Straggler => "straggler_mtbf_s",
             Axis::Deadline => "deadline_s",
             Axis::Hedge => "hedge",
+            Axis::EnergyWeight => "energy_weight",
+            Axis::Battery => "battery_j",
+            Axis::DeviceClass => "device_class",
         }
     }
 
@@ -217,7 +236,12 @@ impl Axis {
     pub fn is_numeric(&self) -> bool {
         !matches!(
             self,
-            Axis::ControlPlane | Axis::Handover | Axis::Drop | Axis::Dispatch | Axis::Hedge
+            Axis::ControlPlane
+                | Axis::Handover
+                | Axis::Drop
+                | Axis::Dispatch
+                | Axis::Hedge
+                | Axis::DeviceClass
         )
     }
 
@@ -253,6 +277,9 @@ impl Axis {
             "straggler" | "straggler_mtbf_s" => Axis::Straggler,
             "deadline" | "deadline_s" => Axis::Deadline,
             "hedge" => Axis::Hedge,
+            "energy_weight" | "energy" => Axis::EnergyWeight,
+            "battery" | "battery_j" => Axis::Battery,
+            "device_class" | "class" => Axis::DeviceClass,
             other => anyhow::bail!(
                 "unknown axis '{other}' (valid: {})",
                 Axis::all().map(|a| a.as_str()).join(", ")
@@ -281,6 +308,11 @@ impl Axis {
                 "off" | "false" | "0" => AxisValue::word("off"),
                 other => anyhow::bail!("axis hedge: expected on/off, got '{other}'"),
             },
+            Axis::DeviceClass => {
+                let w = s.to_lowercase();
+                EnergyConfig::class_preset(&w)?; // validate the preset name
+                AxisValue::Word(w)
+            }
             _ => unreachable!("numeric axes handled above"),
         })
     }
@@ -343,6 +375,11 @@ impl Axis {
             Axis::Straggler => sc.cluster.faults.straggler_mtbf_s = v.as_num()?,
             Axis::Deadline => sc.cluster.deadline_s = v.as_num()?,
             Axis::Hedge => sc.cluster.hedge = v.as_word()? == "on",
+            Axis::EnergyWeight => sc.cluster.energy_weight = v.as_num()?,
+            Axis::Battery => sc.cluster.energy.battery_j = v.as_num()?,
+            Axis::DeviceClass => {
+                sc.cluster.energy.classes = EnergyConfig::class_preset(v.as_word()?)?;
+            }
         }
         Ok(())
     }
@@ -464,6 +501,14 @@ mod tests {
     }
 
     #[test]
+    fn device_class_axis_validates_presets() {
+        let v = Axis::DeviceClass.parse_value("Mixed").unwrap();
+        assert_eq!(v, AxisValue::word("mixed"));
+        assert!(Axis::DeviceClass.parse_value("bogus").is_err());
+        assert!(!Axis::DeviceClass.is_numeric());
+    }
+
+    #[test]
     fn parse_value_normalises_word_aliases() {
         let v = Axis::Handover.parse_value("rehome").unwrap();
         assert_eq!(v, AxisValue::word("rehome_on_arrival"));
@@ -549,6 +594,9 @@ mod tests {
                 Axis::Straggler => AxisValue::num(20.0),
                 Axis::Deadline => AxisValue::num(2.5),
                 Axis::Hedge => AxisValue::word("on"),
+                Axis::EnergyWeight => AxisValue::num(0.5),
+                Axis::Battery => AxisValue::num(250.0),
+                Axis::DeviceClass => AxisValue::word("mixed"),
             };
             let mut sc = scenario();
             // Devices truncates below 8 experts/cell feasibility at

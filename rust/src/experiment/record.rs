@@ -18,7 +18,7 @@ use anyhow::Result;
 
 /// The full metric schema, in canonical column order. Every sweep CSV's
 /// metric columns are a subsequence of this list.
-pub const METRIC_KEYS: [&str; 22] = [
+pub const METRIC_KEYS: [&str; 26] = [
     "throughput_rps",
     "goodput_tps",
     "drop_rate",
@@ -41,6 +41,10 @@ pub const METRIC_KEYS: [&str; 22] = [
     "hedge_rate",
     "wasted_tokens",
     "availability",
+    "joules_per_token",
+    "energy_j",
+    "fleet_lifetime_s",
+    "depleted_devices",
 ];
 
 /// One sweep row: grid coordinates plus the full metric vector.
@@ -86,6 +90,10 @@ impl Record {
             out.hedge_rate(),
             out.wasted_tokens,
             out.availability(),
+            out.joules_per_token(),
+            out.energy_j,
+            out.fleet_lifetime_s(),
+            out.depleted_devices() as f64,
         ];
         Self {
             label,
@@ -216,6 +224,13 @@ mod tests {
         assert_eq!(r.metric("hedge_rate").unwrap(), out.hedge_rate());
         assert_eq!(r.metric("wasted_tokens").unwrap(), out.wasted_tokens);
         assert_eq!(r.metric("availability").unwrap(), out.availability());
+        assert_eq!(r.metric("joules_per_token").unwrap(), out.joules_per_token());
+        assert_eq!(r.metric("energy_j").unwrap(), out.energy_j);
+        assert_eq!(r.metric("fleet_lifetime_s").unwrap(), out.fleet_lifetime_s());
+        assert_eq!(
+            r.metric("depleted_devices").unwrap(),
+            out.depleted_devices() as f64
+        );
         assert_eq!(r.coord_num(Axis::ArrivalRate), Some(2.0));
         assert_eq!(r.coord_num(Axis::QueueLimit), None);
         assert!(r.metric("bogus").is_err());

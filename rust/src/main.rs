@@ -16,7 +16,8 @@
 //!           [--backhaul S] [--backhaul-matrix M] [--threads N]
 //!           [--faults FILE.json] [--mttf S] [--mttr S]
 //!           [--straggler MTBF[:DUR:MULT]] [--deadline S] [--hedge]
-//!           [--retries N]
+//!           [--retries N] [--energy FILE.json] [--energy-weight W]
+//!           [--battery J]
 //!                 multi-cell discrete-event serving sweep: throughput,
 //!                 goodput, drop rate, p50/p95/p99 latency, per-device
 //!                 utilization, control-plane activity and handover
@@ -30,7 +31,13 @@
 //!                 JSON via --faults) with graceful degradation:
 //!                 crashed work re-dispatches to surviving replicas
 //!                 (bounded by --retries), --deadline turns on SLO
-//!                 accounting and --hedge speculative duplicates; sweep
+//!                 accounting and --hedge speculative duplicates; the
+//!                 energy flags arm per-device battery accounting
+//!                 (--energy loads an EnergyConfig JSON, --battery sets
+//!                 capacity, --energy-weight biases dispatch toward
+//!                 charged devices; depleted batteries crash through the
+//!                 fault path and outcomes gain joules_per_token /
+//!                 fleet_lifetime_s); sweep
 //!                 points run on the parallel engine (--threads 0 =
 //!                 one worker per core, 1 = serial; output is
 //!                 byte-identical either way)
@@ -42,7 +49,8 @@
 //!                 `start:step:end`; axes: rate, control, handover,
 //!                 backhaul, queue_limit, drop, cache, dispatch, cells,
 //!                 devices, seed, epoch, hysteresis, backlog_delta,
-//!                 mttf, mttr, straggler, deadline, hedge)
+//!                 mttf, mttr, straggler, deadline, hedge,
+//!                 energy_weight, battery, device_class)
 //!                 through the parallel engine, one unified-schema
 //!                 CSV (+ JSON with --json) into --out
 //!   trace [--rate R] [--requests N] [--benchmark NAME]
@@ -74,8 +82,8 @@
 use std::path::{Path, PathBuf};
 use wdmoe::cluster::{arrival_rate_sweep, control_plane_sweep, ClusterOutcome, ClusterSim};
 use wdmoe::config::{
-    ClusterConfig, ControlKind, DispatchKind, DropPolicy, FaultConfig, HandoverPolicy,
-    SystemConfig,
+    ClusterConfig, ControlKind, DispatchKind, DropPolicy, EnergyConfig, FaultConfig,
+    HandoverPolicy, SystemConfig,
 };
 use wdmoe::experiment::{AxisSpec, Grid, Scenario};
 use wdmoe::util::Json;
@@ -108,13 +116,18 @@ COMMANDS:
           [--backhaul S] [--backhaul-matrix \"a,b;c,d\"] [--threads N]
           [--faults FILE.json] [--mttf S] [--mttr S]
           [--straggler MTBF[:DUR:MULT]] [--deadline S] [--hedge]
-          [--retries N] [--trace FILE.json] [--timeline FILE.csv]
+          [--retries N] [--energy FILE.json] [--energy-weight W]
+          [--battery J] [--trace FILE.json] [--timeline FILE.csv]
                           (--threads 0 = one worker per core; output is
                            byte-identical at any thread count; fault
                            flags inject deterministic crashes/stragglers
                            with re-dispatch, deadlines and hedging —
                            outcomes gain slo_miss_rate, retries,
                            hedge_rate, wasted_tokens, availability;
+                           energy flags arm per-device battery
+                           accounting and energy-aware dispatch —
+                           outcomes gain joules_per_token, energy_j,
+                           fleet_lifetime_s, depleted_devices;
                            --trace / --timeline additionally export
                            telemetry for the first rate — not with
                            --control compare)
@@ -134,7 +147,8 @@ COMMANDS:
                           rate control handover backhaul queue_limit
                           drop cache dispatch cells devices seed epoch
                           hysteresis backlog_delta mttf mttr straggler
-                          deadline hedge
+                          deadline hedge energy_weight battery
+                          device_class
   bench [--json] [--smoke]
   config [simulation|testbed|serving|cluster]
   fig5 | fig6 | fig7 | fig8 | fig10
@@ -318,6 +332,20 @@ fn cluster_base_config(args: &Args) -> anyhow::Result<ClusterConfig> {
     }
     if let Some(r) = rest_opt(rest, "--retries") {
         cfg.max_retries = r.parse()?;
+    }
+    if let Some(p) = rest_opt(rest, "--energy") {
+        // A full EnergyConfig JSON (per-token joule costs, battery,
+        // classes) — the format `EnergyConfig::to_json` prints. The
+        // scalar flags below override on top of it.
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| anyhow::anyhow!("--energy {p}: {e}"))?;
+        cfg.energy = EnergyConfig::from_json(&Json::parse(&text)?)?;
+    }
+    if let Some(w) = rest_opt(rest, "--energy-weight") {
+        cfg.energy_weight = w.parse()?;
+    }
+    if let Some(b) = rest_opt(rest, "--battery") {
+        cfg.energy.battery_j = b.parse()?;
     }
     Ok(cfg)
 }
@@ -651,6 +679,26 @@ fn print_single_run(rate: f64, out: &ClusterOutcome) {
         );
     } else {
         println!("  solver: no P3 solves (static-uniform plane)");
+    }
+    if out.energy_j > 0.0 {
+        println!(
+            "  energy: {:.1} J total ({:.4} J/token), fleet lifetime {:.3} s, \
+             {} depleted device(s)",
+            out.energy_j,
+            out.joules_per_token(),
+            out.fleet_lifetime_s(),
+            out.depleted_devices()
+        );
+        for (ci, &j) in out.energy_cells.iter().enumerate() {
+            let devices = out.utilization.get(ci).map_or(0, Vec::len);
+            let depleted = out.depleted_cells.get(ci).copied().unwrap_or(0);
+            println!(
+                "    cell {ci}: {:.1} J, {}/{} devices never depleted",
+                j,
+                devices.saturating_sub(depleted),
+                devices
+            );
+        }
     }
 }
 

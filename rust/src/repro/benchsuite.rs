@@ -5,8 +5,9 @@
 //! control plane uses), the adaptive plane's full epoch tick, a
 //! load-aware dispatch decision, and whole-DES throughput in simulated
 //! events per wall second (the 2-cell run with and without a no-op
-//! probe, the same run with an empty fault plan — both contracts say
-//! "free when unused" — plus the 8-cell serial/sharded twin pair whose
+//! probe, the same run with an empty fault plan and with the energy
+//! model off/on — the off contracts all say "free when unused" — plus
+//! the 8-cell serial/sharded twin pair whose
 //! events/sec ratio is the sharding speedup). The `cargo bench` binaries
 //! (`rust/benches/control.rs`, `rust/benches/cluster.rs`) call these
 //! same functions, so the interactive numbers and the
@@ -15,7 +16,7 @@
 //! seeding the perf trajectory with named, comparable numbers; the CI
 //! smoke run keeps the harnesses from rotting.
 
-use crate::cluster::{ClusterSim, Dispatcher};
+use crate::cluster::{ClusterSim, Dispatcher, EnergyScore};
 use crate::telemetry::NullProbe;
 use crate::config::{ClusterConfig, ControlKind, DispatchKind, SystemConfig};
 use crate::control::LinkState;
@@ -130,7 +131,7 @@ pub fn dispatch_harness(budget: Duration) -> BenchResult {
     let online = vec![true; 16];
     let replicas: Vec<usize> = (0..16).collect();
     bench("cluster/dispatch_choose_16rep", budget, || {
-        d.choose(&replicas, 40.0, 500_000, &busy, &t, &online)
+        d.choose(&replicas, 40.0, 500_000, &busy, &t, &online, EnergyScore::OFF)
     })
 }
 
@@ -201,6 +202,56 @@ pub fn des_faultplan_empty_harness(budget: Duration, requests: usize) -> BenchRe
     r
 }
 
+/// The 2-cell DES with the energy model left *off* (the default
+/// config). The energy contract mirrors the telemetry and fault ones:
+/// an empty [`crate::config::EnergyConfig`] monomorphizes the
+/// accounting away (`ENERGY = false`), so this harness should match
+/// `cluster/des_run_2cell` to within noise — a widening gap means the
+/// energy machinery leaked cost onto runs that never asked for it.
+pub fn des_energy_off_harness(budget: Duration, requests: usize) -> BenchResult {
+    let mut dcfg = ClusterConfig::edge_default();
+    dcfg.model.n_blocks = 8;
+    debug_assert!(dcfg.energy.is_empty(), "edge_default must carry no energy model");
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(requests, Benchmark::Piqa, 0);
+    let mut des = ClusterSim::new(&dcfg).expect("preset config is valid");
+    let events_per_run = des.run(&arrivals).events;
+    let mut r = bench_quiet("cluster/des_run_2cell_energy_off", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run(&arrivals).completed
+    });
+    let events_per_sec = events_per_run as f64 * 1e9 / r.mean_ns;
+    r.throughput = Some(("sim_events_per_sec".to_string(), events_per_sec));
+    r.report();
+    r
+}
+
+/// The energy-on twin: the same 2-cell run with per-token joule
+/// accounting and energy-weighted dispatch armed (mains-powered — no
+/// battery churn, so the event count matches the energy-off twin). The
+/// gap between this harness and `cluster/des_run_2cell_energy_off` is
+/// the honest per-event price of the accounting.
+pub fn des_energy_on_harness(budget: Duration, requests: usize) -> BenchResult {
+    let mut dcfg = ClusterConfig::edge_default();
+    dcfg.model.n_blocks = 8;
+    dcfg.energy.compute_j_per_token = 1e-3;
+    dcfg.energy.tx_j_per_token = 2e-4;
+    dcfg.energy.rx_j_per_token = 1e-4;
+    dcfg.energy_weight = 0.5;
+    let arrivals =
+        ArrivalProcess::Poisson { rate_rps: 4.0 }.generate(requests, Benchmark::Piqa, 0);
+    let mut des = ClusterSim::new(&dcfg).expect("preset config is valid");
+    let events_per_run = des.run(&arrivals).events;
+    let mut r = bench_quiet("cluster/des_run_2cell_energy_on", budget, || {
+        des.reset().expect("reset of a valid sim cannot fail");
+        des.run(&arrivals).completed
+    });
+    let events_per_sec = events_per_run as f64 * 1e9 / r.mean_ns;
+    r.throughput = Some(("sim_events_per_sec".to_string(), events_per_sec));
+    r.report();
+    r
+}
+
 /// The serial / sharded twin pair on an 8-cell cluster: the same config,
 /// the same arrival stream, one harness through the serial event loop
 /// and one through `run_sharded` on the worker pool (0 = one worker per
@@ -251,6 +302,8 @@ pub fn run_suite(smoke: bool) -> BenchSuite {
     results.push(des_harness(budget, requests));
     results.push(des_nullprobe_harness(budget, requests));
     results.push(des_faultplan_empty_harness(budget, requests));
+    results.push(des_energy_off_harness(budget, requests));
+    results.push(des_energy_on_harness(budget, requests));
     results.extend(des_8cell_harnesses(budget, requests));
     BenchSuite {
         smoke,
@@ -275,6 +328,8 @@ mod tests {
             "cluster/des_run_2cell",
             "cluster/des_run_2cell_nullprobe",
             "cluster/des_run_2cell_faultplan_empty",
+            "cluster/des_run_2cell_energy_off",
+            "cluster/des_run_2cell_energy_on",
             "cluster/des_run_8cell",
             "cluster/des_run_8cell_sharded",
         ] {
@@ -294,7 +349,7 @@ mod tests {
             back.get("schema").unwrap().as_str().unwrap(),
             "wdmoe-bench-v1"
         );
-        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 9);
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 11);
         // The sharded twin reports the same throughput unit so the
         // bench gate can ratio the pair.
         let sharded = suite

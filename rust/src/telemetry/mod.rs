@@ -212,6 +212,10 @@ pub enum TelemetryEvent {
         tokens: f64,
         t: Nanos,
     },
+    /// `device`'s battery hit zero at `t`: the energy layer crashes it
+    /// through the ordinary fault path (a `DeviceCrashed` event follows
+    /// immediately in the same stream).
+    BatteryDepleted { cell: usize, device: usize, t: Nanos },
 }
 
 /// Per-cell state snapshot handed to [`Probe::on_sample`] on the
@@ -232,6 +236,9 @@ pub struct CellSample {
     /// Devices whose service-time multiplier is currently != 1.0
     /// (straggler episode or link dip in progress).
     pub degraded_devices: usize,
+    /// Minimum remaining battery fraction across the cell's devices
+    /// (1.0 when the energy model is off or batteries are unbounded).
+    pub battery_min: f64,
 }
 
 /// An observer of the serving stack. Every method has a no-op default

@@ -35,6 +35,9 @@ pub struct TimelineRow {
     /// Devices running with a fault-plan service-time multiplier other
     /// than 1.0 (straggler episode and/or link dip in progress).
     pub degraded_devices: usize,
+    /// Minimum remaining battery fraction across the cell's devices
+    /// (1.0 when the energy model is off or batteries are unbounded).
+    pub battery_min: f64,
 }
 
 /// A [`Probe`] recording per-cell load curves on a fixed sim-time
@@ -77,11 +80,11 @@ impl TimelineSampler {
     /// Long-format CSV of the timeline.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices,degraded_devices\n",
+            "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices,degraded_devices,battery_min\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:.6},{},{:.6},{:.6},{:.6},{},{},{}\n",
+                "{:.6},{},{:.6},{:.6},{:.6},{},{},{},{:.6}\n",
                 r.t as f64 / 1e9,
                 r.cell,
                 r.backlog_s,
@@ -89,7 +92,8 @@ impl TimelineSampler {
                 r.drop_rate,
                 r.live_replicas,
                 r.online_devices,
-                r.degraded_devices
+                r.degraded_devices,
+                r.battery_min
             ));
         }
         out
@@ -139,6 +143,7 @@ impl Probe for TimelineSampler {
                 live_replicas: c.live_replicas,
                 online_devices: c.online_devices,
                 degraded_devices: c.degraded_devices,
+                battery_min: c.battery_min,
             });
         }
     }
@@ -156,6 +161,7 @@ mod tests {
             online_devices: 2,
             live_replicas: 8,
             degraded_devices: 0,
+            battery_min: 1.0,
         }
     }
 

@@ -652,6 +652,16 @@ impl Probe for ChromeTracer {
                     ],
                 );
             }
+            TelemetryEvent::BatteryDepleted { cell, device, t } => {
+                let lane = self.control_lane(cell);
+                self.instant(
+                    lane,
+                    t,
+                    format!("battery_depleted dev{device}"),
+                    "fault",
+                    Vec::new(),
+                );
+            }
             // High-volume per-decision events are aggregated elsewhere;
             // the tracer keeps lanes readable.
             TelemetryEvent::DispatchDecision { .. } => {}

@@ -3,7 +3,7 @@
 //! failover re-solves, dispatch under re-allocation, and admission
 //! control — the PR's acceptance claims.
 
-use wdmoe::cluster::{control_plane_sweep, ClusterSim, Dispatcher};
+use wdmoe::cluster::{control_plane_sweep, ClusterSim, Dispatcher, EnergyScore};
 use wdmoe::config::{ClusterConfig, ControlKind, DispatchKind, DropPolicy, PolicyKind};
 use wdmoe::optim::solver::DeviceLink;
 use wdmoe::optim::{
@@ -261,7 +261,7 @@ fn reallocation_flips_best_replica() {
     let online = vec![true; n_dev];
     // Under the initial uniform split, device 0 (near, 20 TFLOPS) beats
     // device 7 (far, 1 TFLOPS) for a shared expert.
-    let before = d.choose(&[0, 7], 50.0, 0, &busy, sim.t_per_token(0), &online);
+    let before = d.choose(&[0, 7], 50.0, 0, &busy, sim.t_per_token(0), &online, EnergyScore::OFF);
     assert_eq!(before, Some(0));
     // Demand observed almost entirely on device 7 → the epoch re-solve
     // hands it nearly all spectrum, starving device 0's link.
@@ -275,7 +275,7 @@ fn reallocation_flips_best_replica() {
         t[7] < t[0],
         "re-solve should make device 7 faster than starved device 0: {t:?}"
     );
-    let after = d.choose(&[0, 7], 50.0, 0, &busy, sim.t_per_token(0), &online);
+    let after = d.choose(&[0, 7], 50.0, 0, &busy, sim.t_per_token(0), &online, EnergyScore::OFF);
     assert_eq!(
         after,
         Some(7),

@@ -1,0 +1,332 @@
+//! Energy-subsystem integration tests: the inert-config
+//! monomorphization contract (no energy model ⇒ bit-equal to the
+//! pre-energy engine, probe artifacts included), exact linearity of the
+//! joule ledger across drop policies and thread counts, byte-identical
+//! energy-on artifacts from the serial and sharded engines (battery
+//! timeline column + depletion trace events), config validation / JSON
+//! round-trips through the full `ClusterConfig`, and the acceptance
+//! claim — energy-aware dispatch extends fleet lifetime on a
+//! heterogeneous battery-powered fleet without blowing up tail latency.
+
+use wdmoe::cluster::{ClusterOutcome, ClusterSim};
+use wdmoe::config::{ClusterConfig, DispatchKind, DropPolicy, EnergyConfig};
+use wdmoe::telemetry::{ChromeTracer, TimelineSampler};
+use wdmoe::util::Json;
+use wdmoe::workload::{Arrival, ArrivalProcess, Benchmark};
+
+fn arrivals(rate: f64, n: usize, seed: u64) -> Vec<Arrival> {
+    ArrivalProcess::Poisson { rate_rps: rate }.generate(n, Benchmark::Piqa, seed)
+}
+
+/// Conservation at drain: every arrival completed or dropped, token
+/// counts partition exactly, nothing left in flight.
+fn assert_conserves(out: &ClusterOutcome, tag: &str) {
+    assert_eq!(
+        out.completed + out.dropped,
+        out.arrived,
+        "{tag}: requests not conserved"
+    );
+    assert_eq!(out.in_flight, 0, "{tag}: work left in flight");
+    assert_eq!(
+        out.completed_tokens + out.dropped_tokens,
+        out.arrived_tokens,
+        "{tag}: tokens not conserved"
+    );
+}
+
+fn assert_bit_identical(a: &ClusterOutcome, b: &ClusterOutcome, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.dropped, b.dropped, "{tag}: dropped");
+    assert_eq!(a.shed_tokens, b.shed_tokens, "{tag}: shed_tokens");
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.makespan_s, b.makespan_s, "{tag}: makespan_s");
+    assert_eq!(
+        a.latency_ms.steady_values(),
+        b.latency_ms.steady_values(),
+        "{tag}: latency stream"
+    );
+    assert_eq!(a.utilization, b.utilization, "{tag}: utilization");
+    assert_eq!(a.control, b.control, "{tag}: control stats");
+    assert_eq!(a.energy_j, b.energy_j, "{tag}: energy_j");
+    assert_eq!(a.energy_cells, b.energy_cells, "{tag}: energy_cells");
+    assert_eq!(a.depleted_cells, b.depleted_cells, "{tag}: depleted_cells");
+    assert_eq!(a.first_depletion, b.first_depletion, "{tag}: first_depletion");
+    assert_eq!(a.last_depletion, b.last_depletion, "{tag}: last_depletion");
+    assert_eq!(a.offline_device_s, b.offline_device_s, "{tag}: offline_device_s");
+}
+
+// ------------------------------------------------ inert-config identity
+
+/// The monomorphization contract: a battery capacity with no per-token
+/// joule costs is inert (`EnergyConfig::is_empty`), and an
+/// `energy_weight` without an energy model never reaches the
+/// dispatcher — outcomes AND probe artifacts stay bit-equal to the
+/// default (pre-energy) configuration, with the energy outcome fields
+/// at their zero fixpoints.
+#[test]
+fn inert_energy_config_is_bit_identical_to_default() {
+    let mut base_cfg = ClusterConfig::edge_default();
+    base_cfg.model.n_blocks = 4;
+    base_cfg.queue_limit_s = 0.25;
+
+    let mut inert_cfg = base_cfg.clone();
+    inert_cfg.energy.battery_j = 500.0; // no costs ⇒ nothing ever debits
+    inert_cfg.energy_weight = 0.75; // no energy model ⇒ never scored
+    assert!(inert_cfg.energy.is_empty());
+    assert!(!inert_cfg.energy.churn_possible());
+
+    let arr = arrivals(8.0, 48, 7);
+    let render = |cfg: &ClusterConfig| {
+        let mut probe = (ChromeTracer::new(), TimelineSampler::new(5_000_000));
+        let mut sim = ClusterSim::new(cfg).unwrap();
+        let out = sim.run_probed(&arr, &mut probe);
+        (out, probe.0.to_json().to_string(), probe.1.to_csv())
+    };
+    let (a, trace_a, tl_a) = render(&base_cfg);
+    let (b, trace_b, tl_b) = render(&inert_cfg);
+    assert_bit_identical(&a, &b, "inert energy");
+    assert_eq!(trace_a, trace_b, "inert energy: trace bytes");
+    assert_eq!(tl_a, tl_b, "inert energy: timeline bytes");
+    // Zero fixpoints of the energy surface.
+    assert_eq!(b.energy_j, 0.0);
+    assert!(b.energy_cells.is_empty());
+    assert!(b.depleted_cells.is_empty());
+    assert_eq!(b.joules_per_token(), 0.0);
+    assert_eq!(b.depleted_devices(), 0);
+    assert_eq!(b.fleet_lifetime_s(), b.makespan_s);
+    // Energy off ⇒ the battery timeline column sits at its 1.0 fixpoint.
+    let header = tl_b.lines().next().unwrap();
+    assert!(
+        header.ends_with(",battery_min"),
+        "timeline should carry the battery_min column: {header}"
+    );
+    for line in tl_b.lines().skip(1) {
+        assert!(
+            line.ends_with(",1.000000"),
+            "energy off must pin battery_min at 1.0: {line}"
+        );
+    }
+
+    // The sharded engine agrees with the serial one on the inert config.
+    let mut sharded = ClusterSim::new(&inert_cfg).unwrap();
+    let out = sharded.run_sharded(&arr, 4);
+    assert_bit_identical(&b, &out, "inert energy sharded");
+}
+
+// ------------------------------------------------ ledger linearity
+
+/// The joule ledger is a pure sum of `tokens x cost` debits: doubling
+/// every per-token cost doubles `energy_j` *exactly* (power-of-two
+/// scaling is lossless in IEEE-754), under both drop policies, and the
+/// sharded engine reproduces every energy field bit-for-bit at any
+/// thread count.
+#[test]
+fn energy_ledger_is_exactly_linear_across_policies_and_threads() {
+    for drop_policy in [DropPolicy::DropRequest, DropPolicy::ShedTokens] {
+        let mut cfg = ClusterConfig::edge_default();
+        cfg.model.n_blocks = 4;
+        cfg.queue_limit_s = 0.25;
+        cfg.drop_policy = drop_policy;
+        cfg.energy.compute_j_per_token = 1e-3;
+        cfg.energy.tx_j_per_token = 2e-4;
+        cfg.energy.rx_j_per_token = 1e-4;
+        let tag = format!("drop={}", drop_policy.as_str());
+
+        let base = ClusterSim::new(&cfg).unwrap().run(&arrivals(10.0, 60, 3));
+        assert_conserves(&base, &tag);
+        assert!(base.energy_j > 0.0, "{tag}: nothing was billed");
+        assert_eq!(
+            base.energy_cells.iter().sum::<f64>(),
+            base.energy_j,
+            "{tag}: per-cell totals must partition the fleet total"
+        );
+        assert!(base.joules_per_token() > 0.0, "{tag}: joules/token");
+        // Mains-powered: accounting without churn leaves faults off.
+        assert_eq!(base.depleted_devices(), 0, "{tag}: no battery, no death");
+        assert_eq!(base.offline_device_s, 0.0, "{tag}: no crashes");
+
+        let mut doubled_cfg = cfg.clone();
+        doubled_cfg.energy.compute_j_per_token *= 2.0;
+        doubled_cfg.energy.tx_j_per_token *= 2.0;
+        doubled_cfg.energy.rx_j_per_token *= 2.0;
+        let doubled = ClusterSim::new(&doubled_cfg)
+            .unwrap()
+            .run(&arrivals(10.0, 60, 3));
+        assert_eq!(
+            doubled.energy_j,
+            2.0 * base.energy_j,
+            "{tag}: the ledger must be exactly linear in the costs"
+        );
+        assert_eq!(doubled.completed, base.completed, "{tag}: accounting perturbed the DES");
+        assert_eq!(doubled.makespan_s, base.makespan_s, "{tag}: makespan");
+
+        for threads in [2usize, 4] {
+            let mut sim = ClusterSim::new(&cfg).unwrap();
+            let out = sim.run_sharded(&arrivals(10.0, 60, 3), threads);
+            assert_bit_identical(&base, &out, &format!("{tag} threads={threads}"));
+        }
+    }
+}
+
+// ------------------------------------------------ energy-on artifacts
+
+/// With batteries, churn and recharge armed, the serial and sharded
+/// engines emit byte-identical probe artifacts — and those artifacts
+/// actually carry the energy story: `battery_depleted` instants in the
+/// trace, a draining `battery_min` column in the timeline.
+#[test]
+fn battery_churn_trace_and_timeline_bytes_match_serial_vs_sharded() {
+    let mut cfg = ClusterConfig::edge_default();
+    cfg.model.n_blocks = 4;
+    cfg.cache_capacity = 2;
+    cfg.dispatch = DispatchKind::LoadAware;
+    cfg.energy.compute_j_per_token = 1.0;
+    cfg.energy.tx_j_per_token = 0.05;
+    cfg.energy.battery_j = 60.0;
+    cfg.energy.recharge_s = 0.5;
+    cfg.energy.classes = EnergyConfig::class_preset("mixed").unwrap();
+    cfg.energy_weight = 0.4;
+    let arr = arrivals(10.0, 48, 5);
+
+    let mut probe = (ChromeTracer::new(), TimelineSampler::new(5_000_000));
+    let mut serial = ClusterSim::new(&cfg).unwrap();
+    let base = serial.run_probed(&arr, &mut probe);
+    let base_trace = probe.0.to_json().to_string();
+    let base_timeline = probe.1.to_csv();
+    assert_conserves(&base, "battery churn");
+    assert!(base.depleted_devices() > 0, "batteries this small must die");
+    assert!(
+        base.first_depletion > 0 && base.first_depletion <= base.last_depletion,
+        "depletion instants must be ordered"
+    );
+    assert!(
+        base.fleet_lifetime_s() < base.makespan_s,
+        "first depletion defines the fleet lifetime"
+    );
+    assert!(
+        base_trace.contains("battery_depleted"),
+        "trace should record depletion instants"
+    );
+    assert!(
+        base_trace.contains("device_crash"),
+        "a depletion crashes through the fault path"
+    );
+    let min_battery = base_timeline
+        .lines()
+        .skip(1)
+        .map(|l| l.rsplit(',').next().unwrap().parse::<f64>().unwrap())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        (0.0..1.0).contains(&min_battery),
+        "the battery_min column should drain below 1.0, got {min_battery}"
+    );
+
+    for threads in [2usize, 4] {
+        let mut probe = (ChromeTracer::new(), TimelineSampler::new(5_000_000));
+        let mut sim = ClusterSim::new(&cfg).unwrap();
+        let out = sim.run_sharded_probed(&arr, threads, &mut probe);
+        assert_bit_identical(&base, &out, &format!("threads={threads}"));
+        assert_eq!(
+            probe.0.to_json().to_string(),
+            base_trace,
+            "threads={threads}: trace bytes"
+        );
+        assert_eq!(
+            probe.1.to_csv(),
+            base_timeline,
+            "threads={threads}: timeline bytes"
+        );
+    }
+}
+
+// ------------------------------------------------ config surface
+
+/// An energy-carrying `ClusterConfig` survives the JSON round-trip, and
+/// `ClusterConfig::validate` rejects a broken energy block with a
+/// field-named message — grid points and `--config`/`--energy` files
+/// share one validation story.
+#[test]
+fn energy_config_round_trips_and_validates_through_cluster_config() {
+    let mut cfg = ClusterConfig::edge_default();
+    cfg.energy.compute_j_per_token = 2.5e-3;
+    cfg.energy.tx_j_per_token = 4e-4;
+    cfg.energy.rx_j_per_token = 2e-4;
+    cfg.energy.battery_j = 150.0;
+    cfg.energy.idle_w = 0.2;
+    cfg.energy.recharge_s = 1.5;
+    cfg.energy.classes = EnergyConfig::class_preset("mixed").unwrap();
+    cfg.energy_weight = 0.3;
+    cfg.validate().unwrap();
+    let back =
+        ClusterConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(back, cfg, "energy fields lost in the JSON round-trip");
+
+    let mut bad = cfg.clone();
+    bad.energy.battery_j = -1.0;
+    let err = bad.validate().unwrap_err().to_string();
+    assert!(err.contains("battery_j"), "unhelpful message: {err}");
+
+    let mut bad = cfg.clone();
+    bad.energy_weight = -0.5;
+    let err = bad.validate().unwrap_err().to_string();
+    assert!(err.contains("energy_weight"), "unhelpful message: {err}");
+}
+
+// ------------------------------------------------ acceptance claim
+
+/// The single cell on a heterogeneous battery fleet the acceptance claim
+/// runs against: phones burn 2.5x joules per token on half the battery
+/// of the jetson-class devices, so a latency-only dispatcher drains them
+/// first.
+fn battery_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::single_cell();
+    cfg.model.n_blocks = 4;
+    cfg.cache_capacity = 4;
+    cfg.dispatch = DispatchKind::LoadAware;
+    cfg.energy.compute_j_per_token = 1.0;
+    cfg.energy.tx_j_per_token = 0.05;
+    cfg.energy.battery_j = 60.0;
+    cfg.energy.classes = EnergyConfig::class_preset("mixed").unwrap();
+    cfg
+}
+
+/// The acceptance claim: on the heterogeneous battery fleet, weighting
+/// the dispatch objective toward charged, cheap devices extends the
+/// fleet lifetime (first depletion) versus the latency-only dispatcher,
+/// while tail latency stays within a bounded multiple.
+#[test]
+fn energy_aware_dispatch_extends_fleet_lifetime() {
+    let arr = arrivals(6.0, 80, 13);
+
+    let mut blind_cfg = battery_cfg();
+    blind_cfg.energy_weight = 0.0;
+    let blind = ClusterSim::new(&blind_cfg).unwrap().run(&arr);
+    assert_conserves(&blind, "latency-only arm");
+    assert!(
+        blind.depleted_devices() > 0,
+        "the scenario must actually kill batteries"
+    );
+
+    let mut aware_cfg = battery_cfg();
+    aware_cfg.energy_weight = 0.6;
+    let aware = ClusterSim::new(&aware_cfg).unwrap().run(&arr);
+    assert_conserves(&aware, "energy-aware arm");
+
+    assert!(
+        aware.fleet_lifetime_s() >= blind.fleet_lifetime_s(),
+        "energy-aware dispatch should not shorten the fleet lifetime: \
+         {:.4} s (weighted) vs {:.4} s (latency-only)",
+        aware.fleet_lifetime_s(),
+        blind.fleet_lifetime_s()
+    );
+    // The weighted arm trades latency for lifetime, but boundedly so.
+    assert!(
+        aware.p99_ms() <= 100.0 * blind.p99_ms().max(1.0),
+        "energy weighting blew up tail latency: {:.2} ms vs {:.2} ms",
+        aware.p99_ms(),
+        blind.p99_ms()
+    );
+    // Both arms bill real joules.
+    assert!(blind.energy_j > 0.0 && aware.energy_j > 0.0);
+}

@@ -220,7 +220,7 @@ fn timeline_rows_are_strictly_increasing_per_cell() {
     let mut lines = csv.lines();
     assert_eq!(
         lines.next().unwrap(),
-        "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices,degraded_devices"
+        "t_s,cell,backlog_s,utilization,drop_rate,live_replicas,online_devices,degraded_devices,battery_min"
     );
     assert_eq!(csv.lines().count(), rows.len() + 1);
     for r in rows {

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Validate `repro trace` artifacts.
 
-Usage: check_trace.py [--expect-faults] TRACE.json [TIMELINE.csv]
+Usage: check_trace.py [--expect-faults] [--expect-depletion] TRACE.json [TIMELINE.csv]
 
 Checks the Chrome trace-event JSON the telemetry layer exports:
 
@@ -17,13 +17,20 @@ And, when given, the timeline CSV:
 
 * the pinned header;
 * sample times strictly increasing per cell;
-* finite, non-negative backlog/utilization and drop_rate in [0, 1].
+* finite, non-negative backlog/utilization and drop_rate in [0, 1];
+* battery_min finite and in [0, 1].
 
 With `--expect-faults`, additionally require the trace to carry the
 fault-injection lanes: at least one event in the "fault" category
-(device_crash / device_recover / slowdown / backhaul / redispatch) and,
-if hedging fired, matching "hedge" events — CI's chaos smoke uses this
-to prove the fault plan actually reached the artifact.
+(device_crash / device_recover / slowdown / backhaul / redispatch /
+battery_depleted) and, if hedging fired, matching "hedge" events —
+CI's chaos smoke uses this to prove the fault plan actually reached
+the artifact.
+
+With `--expect-depletion`, require the energy story to reach both
+artifacts: at least one battery_depleted instant in the trace, and a
+battery_min timeline value that actually drains below 1.0 — CI's
+energy smoke uses this to prove battery churn fired.
 
 Exits non-zero with a message on the first violation — CI runs this
 against a fresh `repro trace` smoke artifact.
@@ -40,7 +47,17 @@ def fail(msg):
     sys.exit(1)
 
 
-def check_trace(path, expect_faults=False):
+FAULT_NAMES = {
+    "device_crash",
+    "device_recover",
+    "slowdown",
+    "backhaul",
+    "redispatch",
+    "battery_depleted",
+}
+
+
+def check_trace(path, expect_faults=False, expect_depletion=False):
     with open(path) as f:
         doc = json.load(f)
     events = doc.get("traceEvents")
@@ -100,19 +117,29 @@ def check_trace(path, expect_faults=False):
             fail(f"{path}: async span {aid} never closed")
     if counts.get("B", 0) == 0:
         fail(f"{path}: no duration spans at all")
+    fault_names = {
+        e.get("name", "").split()[0]
+        for e in events
+        if e.get("cat") == "fault" and e.get("name")
+    }
     if expect_faults:
         n_fault = cat_counts.get("fault", 0)
         if n_fault == 0:
             fail(f"{path}: --expect-faults, but no 'fault'-category events")
-        fault_names = {
-            e.get("name", "").split()[0]
-            for e in events
-            if e.get("cat") == "fault" and e.get("name")
-        }
-        if not fault_names & {"device_crash", "device_recover", "slowdown", "backhaul", "redispatch"}:
+        if not fault_names & FAULT_NAMES:
             fail(f"{path}: fault events carry unrecognized names: {sorted(fault_names)}")
         n_hedge = cat_counts.get("hedge", 0)
         print(f"check_trace: {path} fault lanes OK — {n_fault} fault, {n_hedge} hedge")
+    if expect_depletion:
+        n_depleted = sum(
+            1
+            for e in events
+            if e.get("cat") == "fault"
+            and e.get("name", "").split()[0] == "battery_depleted"
+        )
+        if n_depleted == 0:
+            fail(f"{path}: --expect-depletion, but no battery_depleted events")
+        print(f"check_trace: {path} energy lane OK — {n_depleted} battery_depleted")
     print(
         f"check_trace: {path} OK — "
         + ", ".join(f"{counts.get(p, 0)} {p}" for p in ["M", "B", "E", "b", "e", "i"])
@@ -128,10 +155,11 @@ TIMELINE_HEADER = [
     "live_replicas",
     "online_devices",
     "degraded_devices",
+    "battery_min",
 ]
 
 
-def check_timeline(path):
+def check_timeline(path, expect_depletion=False):
     with open(path, newline="") as f:
         rows = list(csv.reader(f))
     if not rows or rows[0] != TIMELINE_HEADER:
@@ -139,9 +167,11 @@ def check_timeline(path):
     if len(rows) < 2:
         fail(f"{path}: no samples")
     last_t = {}
+    battery_floor = 1.0
     for i, row in enumerate(rows[1:], start=2):
         t, cell = float(row[0]), int(row[1])
         backlog, util, drop = float(row[2]), float(row[3]), float(row[4])
+        battery = float(row[8])
         if cell in last_t and t <= last_t[cell]:
             fail(f"{path}:{i}: cell {cell} t {t} not after {last_t[cell]}")
         last_t[cell] = t
@@ -150,19 +180,25 @@ def check_timeline(path):
                 fail(f"{path}:{i}: {name} = {v}")
         if not 0.0 <= drop <= 1.0:
             fail(f"{path}:{i}: drop_rate = {drop}")
+        if not (math.isfinite(battery) and 0.0 <= battery <= 1.0):
+            fail(f"{path}:{i}: battery_min = {battery}")
+        battery_floor = min(battery_floor, battery)
+    if expect_depletion and battery_floor >= 1.0:
+        fail(f"{path}: --expect-depletion, but battery_min never dropped below 1.0")
     print(f"check_trace: {path} OK — {len(rows) - 1} samples, {len(last_t)} cells")
 
 
 def main():
     args = sys.argv[1:]
     expect_faults = "--expect-faults" in args
-    args = [a for a in args if a != "--expect-faults"]
+    expect_depletion = "--expect-depletion" in args
+    args = [a for a in args if a not in ("--expect-faults", "--expect-depletion")]
     if len(args) < 1 or len(args) > 2:
         print(__doc__)
         sys.exit(2)
-    check_trace(args[0], expect_faults=expect_faults)
+    check_trace(args[0], expect_faults=expect_faults, expect_depletion=expect_depletion)
     if len(args) == 2:
-        check_timeline(args[1])
+        check_timeline(args[1], expect_depletion=expect_depletion)
 
 
 if __name__ == "__main__":
